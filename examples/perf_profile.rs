@@ -1,0 +1,151 @@
+//! Whole-stack profiling harness for the §Perf pass (EXPERIMENTS.md).
+//!
+//! Decomposes the FL hot path into its unit costs and reports where wall
+//! time goes, so each optimization iteration has a before/after number:
+//!
+//! * L3 epoch-loop overhead: `run_epoch` (gather + literal + dispatch)
+//!   vs raw artifact execution.
+//! * Distance-matrix crossover: Pallas-tiled vs CPU at several m.
+//! * FasterPAM init crossover: BUILD vs D² sampling.
+//! * End-to-end round decomposition: train / features / distances /
+//!   k-medoids / eval.
+//!
+//! ```text
+//! cargo run --release --example perf_profile
+//! ```
+
+use std::time::Instant;
+
+use fedcore::coreset::{self, distance, Method};
+use fedcore::data::{self, Benchmark};
+use fedcore::fl::client::gather_features;
+use fedcore::runtime::Runtime;
+use fedcore::util::rng::Rng;
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    rt.warmup()?;
+    let mut rng = Rng::new(5);
+
+    // ---------- 1. L3 overhead around one train step ----------
+    println!("== 1. L3 overhead: run_epoch vs raw train_step (logreg, m=256) ==");
+    let ds = data::generate(Benchmark::Synthetic { alpha: 1.0, beta: 1.0 }, 0.3, &rt.manifest().vocab, 7);
+    let model = rt.manifest().model("logreg")?.clone();
+    let big = (0..ds.num_clients()).max_by_key(|&i| ds.clients[i].len()).unwrap();
+    let shard = &ds.clients[big];
+    let m = shard.len().min(256);
+    let idxs: Vec<usize> = (0..m).collect();
+    let b = rt.manifest().train_batch;
+
+    // raw: reuse one gathered batch (warm the executable + caches first so
+    // the first-timed loop is not paying one-time costs)
+    let (x, y, w) = shard.gather_batch(&idxs[0..b], None, b);
+    let mut params = model.init_params.clone();
+    for _ in 0..100 {
+        params = rt.train_step(&model, &params, &params, &x, &y, &w, 0.01, 0.0)?.params;
+    }
+    let reps = 200;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        params = rt.train_step(&model, &params, &params, &x, &y, &w, 0.01, 0.0)?.params;
+    }
+    let raw_ms = ms(t0) / reps as f64;
+
+    // full path: gather every batch (what an epoch really does)
+    let t0 = Instant::now();
+    let mut params2 = model.init_params.clone();
+    let mut steps = 0usize;
+    for _ in 0..(reps / (m / b)).max(1) {
+        for chunk in idxs.chunks(b) {
+            let (x, y, w) = shard.gather_batch(chunk, None, b);
+            params2 = rt.train_step(&model, &params2, &params2, &x, &y, &w, 0.01, 0.0)?.params;
+            steps += 1;
+        }
+    }
+    let full_ms = ms(t0) / steps as f64;
+    println!("raw step     {raw_ms:.3} ms");
+    println!("epoch path   {full_ms:.3} ms  (overhead {:+.1}%)", 100.0 * (full_ms / raw_ms - 1.0));
+
+    // ---------- 2. distance-matrix crossover ----------
+    println!("\n== 2. distance matrix: Pallas-tiled vs CPU ==");
+    let dim = rt.manifest().feature_dim;
+    println!("{:>6} {:>12} {:>12} {:>8}", "m", "tiled (ms)", "cpu (ms)", "winner");
+    for m in [128usize, 256, 512, 1024, 2048] {
+        let f: Vec<f32> = (0..m * dim).map(|_| rng.normal() as f32).collect();
+        let t0 = Instant::now();
+        let dt = distance::from_features_tiled(&rt, &f, m)?;
+        let tiled_ms = ms(t0);
+        let t0 = Instant::now();
+        let dc = distance::from_features_cpu(&f, m, dim);
+        let cpu_ms = ms(t0);
+        let dev = dt.d.iter().zip(&dc.d).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        println!(
+            "{m:>6} {tiled_ms:>12.1} {cpu_ms:>12.1} {:>8}   (max|Δ| {dev:.1e})",
+            if tiled_ms < cpu_ms { "tiled" } else { "cpu" }
+        );
+    }
+
+    // ---------- 3. FasterPAM init crossover ----------
+    println!("\n== 3. FasterPAM init: BUILD vs D² sampling (k = m/10) ==");
+    println!("{:>6} {:>12} {:>12} {:>14} {:>14}", "m", "build (ms)", "d2 (ms)", "cost(build)", "cost(d2)");
+    for m in [128usize, 256, 512, 1024] {
+        let f: Vec<f32> = (0..m * dim).map(|_| rng.normal() as f32).collect();
+        let dist = distance::from_features_cpu(&f, m, dim);
+        let k = m / 10;
+        let t0 = Instant::now();
+        let mb = coreset::fasterpam::solve_with_init(&dist, k, &mut rng, true);
+        let build_ms = ms(t0);
+        let t0 = Instant::now();
+        let md = coreset::fasterpam::solve_with_init(&dist, k, &mut rng, false);
+        let d2_ms = ms(t0);
+        println!(
+            "{m:>6} {build_ms:>12.1} {d2_ms:>12.1} {:>14.3} {:>14.3}",
+            coreset::objective(&dist, &mb),
+            coreset::objective(&dist, &md)
+        );
+    }
+
+    // ---------- 4. round decomposition (FedCore straggler client) ----------
+    println!("\n== 4. FedCore straggler round decomposition (m = {}) ==", shard.len());
+    let m = shard.len();
+    let budget = (m / 5).max(1);
+    let t_train = {
+        let t0 = Instant::now();
+        let mut p = model.init_params.clone();
+        let all: Vec<usize> = (0..m).collect();
+        for chunk in all.chunks(b) {
+            let (x, y, w) = shard.gather_batch(chunk, None, b);
+            p = rt.train_step(&model, &p, &p, &x, &y, &w, 0.01, 0.0)?.params;
+        }
+        ms(t0)
+    };
+    let t0 = Instant::now();
+    let feats = gather_features(&rt, &model, shard, &model.init_params)?;
+    let t_feat = ms(t0);
+    let t0 = Instant::now();
+    let dist_cpu = fedcore::fl::client::build_dist(&rt, &feats, m)?; // production dispatch
+    let t_dist = ms(t0);
+    let t0 = Instant::now();
+    let _cs = coreset::select(&dist_cpu, budget, Method::FasterPam, &mut rng);
+    let t_kmed = ms(t0);
+    let total = t_train + t_feat + t_dist + t_kmed;
+    println!("full-set epoch   {t_train:>8.1} ms  ({:>4.1}%)", 100.0 * t_train / total);
+    println!("grad features    {t_feat:>8.1} ms  ({:>4.1}%)", 100.0 * t_feat / total);
+    println!("distance matrix  {t_dist:>8.1} ms  ({:>4.1}%)", 100.0 * t_dist / total);
+    println!("FasterPAM        {t_kmed:>8.1} ms  ({:>4.1}%)", 100.0 * t_kmed / total);
+    println!("coreset overhead vs one epoch: {:+.1}%", 100.0 * (t_feat + t_dist + t_kmed) / t_train);
+
+    let stats = rt.stats();
+    println!(
+        "\nruntime: {} execs, mean {:.2} ms/exec",
+        stats.executions,
+        stats.exec_nanos as f64 / stats.executions.max(1) as f64 / 1e6
+    );
+    println!("\n== 5. per-artifact breakdown (this process) ==");
+    print!("{}", rt.artifact_stats().report());
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! End-to-end validation driver (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Exercises the complete three-layer stack on a real workload: generates a
+//! full benchmark federation, runs all four strategies through the PJRT
+//! runtime (L2 JAX models + L1 Pallas distance kernel via AOT HLO), and
+//! reports loss curves, accuracies and normalized round times side by side
+//! — the Table 2 / Fig. 3 experiment in one binary.
+//!
+//! ```text
+//! cargo run --release --example train_e2e -- --bench mnist --scale 0.08 \
+//!     --rounds 20 --stragglers 30
+//! ```
+
+use fedcore::config::ExperimentConfig;
+use fedcore::data::{self, Benchmark};
+use fedcore::fl::{all_strategies, Engine};
+use fedcore::metrics::{table2_rows, RunResult};
+use fedcore::runtime::Runtime;
+use fedcore::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("train_e2e", "end-to-end driver: all four strategies on one benchmark")
+        .opt("bench", "mnist", "mnist | shakespeare | synthetic(a,b)")
+        .opt("scale", "0.08", "dataset scale (1.0 = paper)")
+        .opt("rounds", "0", "rounds override (0 = preset · scale)")
+        .opt("stragglers", "30", "straggler percentage")
+        .opt("lr", "0", "learning-rate override")
+        .opt("seed", "7", "root seed")
+        .opt("out", "results/e2e", "output dir for per-strategy CSVs")
+        .parse();
+
+    let bench = Benchmark::parse(args.get("bench")).expect("benchmark");
+    let rt = Runtime::load("artifacts")?;
+    let mut base = ExperimentConfig::scaled_preset(bench, args.get_f64("scale"));
+    base.run.straggler_pct = args.get_f64("stragglers");
+    base.run.seed = args.get_u64("seed");
+    if args.get_usize("rounds") > 0 {
+        base.run.rounds = args.get_usize("rounds");
+    }
+    if args.get_f64("lr") > 0.0 {
+        base.run.lr = args.get_f64("lr") as f32;
+    }
+
+    let ds = data::generate(bench, base.scale, &rt.manifest().vocab, base.data_seed);
+    let stats = data::partition::size_stats(&ds.sizes());
+    println!(
+        "=== {} | {} clients | {} samples (mean {:.0}, std {:.0}) | {} rounds × {} epochs | {}% stragglers ===",
+        bench.label(),
+        stats.clients,
+        stats.total,
+        stats.mean,
+        stats.std,
+        base.run.rounds,
+        base.run.epochs,
+        base.run.straggler_pct
+    );
+
+    let mut results: Vec<RunResult> = Vec::new();
+    for strategy in all_strategies(base.prox_mu) {
+        let cfg = base.clone().with_strategy(strategy);
+        let engine = Engine::new(&rt, &ds, cfg.run.clone())?;
+        let t0 = std::time::Instant::now();
+        let result = engine.run()?;
+        println!(
+            "{:<10} wall {:>6.1}s | best acc {:>5.1}% | final loss {:.4} | mean t/τ {:.2}",
+            strategy.label(),
+            t0.elapsed().as_secs_f64(),
+            100.0 * result.best_accuracy(),
+            result.final_train_loss(),
+            result.mean_normalized_round_time(),
+        );
+        results.push(result);
+    }
+
+    // Loss-curve table (Fig. 3 data, printed).
+    println!("\nloss curves (train loss per round):");
+    print!("round");
+    for r in &results {
+        print!("  {:>10}", r.strategy);
+    }
+    println!();
+    let rounds = results[0].rounds.len();
+    for i in 0..rounds {
+        print!("{i:>5}");
+        for r in &results {
+            print!("  {:>10.4}", r.rounds[i].train_loss);
+        }
+        println!();
+    }
+
+    println!("\nTable-2 style summary:");
+    for row in table2_rows(&results) {
+        let mark = if row.exceeded_deadline { " ← exceeds deadline" } else { "" };
+        println!(
+            "{:<10} acc {:>5.1}%  mean t/τ {:>5.2}{mark}",
+            row.strategy, row.accuracy_pct, row.mean_norm_time
+        );
+    }
+
+    let out = args.get("out");
+    std::fs::create_dir_all(out)?;
+    for r in &results {
+        let path = format!("{out}/{}_{}_s{}.csv", r.benchmark, r.strategy.replace('-', ""), base.run.straggler_pct);
+        r.write_csv(&path)?;
+    }
+
+    // SVG figures: Fig-3-style loss curves + Fig-4-style round histogram.
+    use fedcore::metrics::svg::{self, Series};
+    let loss_series: Vec<Series> = results
+        .iter()
+        .map(|r| {
+            Series::new(
+                r.strategy.clone(),
+                r.rounds.iter().map(|x| (x.round as f64, x.train_loss)).collect(),
+            )
+        })
+        .collect();
+    let fig3 = svg::line_chart(
+        &format!("{} @ {}% stragglers — train loss", bench.label(), base.run.straggler_pct),
+        "round",
+        "train loss",
+        &loss_series,
+    );
+    svg::write_svg(format!("{out}/fig3_loss.svg"), &fig3)?;
+
+    let edges: Vec<f64> = (0..16).map(|i| i as f64 * 0.25).collect();
+    let hist_series: Vec<Series> = results
+        .iter()
+        .map(|r| {
+            let h = fedcore::metrics::Histogram::new(&r.client_times_normalized(), 0.25, 3.75);
+            Series::new(
+                r.strategy.clone(),
+                h.edges.iter().zip(&h.counts).map(|(&e, &c)| (e, c as f64)).collect(),
+            )
+        })
+        .collect();
+    let fig4 = svg::log_histogram(
+        &format!("{} @ {}% — client round times", bench.label(), base.run.straggler_pct),
+        "t/τ",
+        &edges,
+        &hist_series,
+    );
+    svg::write_svg(format!("{out}/fig4_hist.svg"), &fig4)?;
+
+    println!("\nwrote per-strategy CSVs + fig3_loss.svg + fig4_hist.svg to {out}/");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT compile path: lower every (model × function) pair plus the L1
+pairwise-distance kernel to HLO *text* artifacts the rust runtime loads.
+
+Why text, not `lowered.compile().serialize()` / serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids, which the xla crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The HLO text
+parser reassigns ids on load, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Also emits ``artifacts/manifest.json`` — the single source of truth for
+shapes, dtypes, parameter sizes, initial parameter vectors and the char
+vocabulary that the rust side consumes. Python never runs after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import DEFAULT_C, DEFAULT_T, pairwise_tile
+from .model import ALL_MODELS, FEATURE_DIM, FN_FACTORIES, example_args
+from .models.base import init_flat
+from .vocab import VOCAB
+
+# Paper Table 3: batch size 8 for local SGD. F is the batch used for
+# feature extraction / evaluation (throughput-oriented, any size works).
+TRAIN_BATCH = 8
+FEAT_BATCH = 64
+INIT_SEED = 17
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn: Callable, args: Tuple) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def _write(path: str, text: str) -> str:
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def build_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "format": "hlo-text",
+        "train_batch": TRAIN_BATCH,
+        "feat_batch": FEAT_BATCH,
+        "feature_dim": FEATURE_DIM,
+        "pairwise": {"tile": DEFAULT_T, "dim": DEFAULT_C},
+        "vocab": VOCAB,
+        "models": {},
+        "artifacts": {},
+    }
+
+    for name, model in ALL_MODELS.items():
+        entry = {
+            "param_size": model.PARAM_SIZE,
+            "num_classes": model.NUM_CLASSES,
+            "x_shape": list(model.X_SHAPE),
+            "x_dtype": model.X_DTYPE,
+            "seq_len": getattr(model, "SEQ_LEN", 0),
+            "functions": {},
+        }
+        for fn_name, factory in FN_FACTORIES.items():
+            batch = TRAIN_BATCH if fn_name == "train" else FEAT_BATCH
+            fname = f"{name}_{fn_name}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = lower_fn(factory(model), example_args(model, fn_name, batch))
+            digest = _write(path, text)
+            entry["functions"][fn_name] = {"file": fname, "batch": batch}
+            manifest["artifacts"][fname] = digest
+            if verbose:
+                print(f"  {fname:24s} {len(text):>9d} chars  sha={digest}")
+        # Deterministic initial parameter vector, shipped in the manifest so
+        # rust and python agree bit-for-bit on w_0.
+        init = init_flat(model.SPECS, jax.random.PRNGKey(INIT_SEED), model.INIT_SCALES)
+        entry["init_params"] = [float(v) for v in jnp.asarray(init)]
+        manifest["models"][name] = entry
+
+    # L1 Pallas kernel: one T x T distance tile (rust tiles the full matrix).
+    tile_fn = pairwise_tile(DEFAULT_T, DEFAULT_C)
+    spec = jax.ShapeDtypeStruct((DEFAULT_T, DEFAULT_C), jnp.float32)
+    fname = "pairwise_dist.hlo.txt"
+    text = lower_fn(tile_fn, (spec, spec))
+    digest = _write(os.path.join(out_dir, fname), text)
+    manifest["artifacts"][fname] = digest
+    if verbose:
+        print(f"  {fname:24s} {len(text):>9d} chars  sha={digest}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if verbose:
+        print(f"  manifest.json            ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Lower FedCore artifacts to HLO text")
+    ap.add_argument("--out", default="../artifacts", help="output dir (or model.hlo.txt path)")
+    args = ap.parse_args()
+    out = args.out
+    # Makefile passes a file path ending in .hlo.txt; treat its dir as out_dir.
+    out_dir = os.path.dirname(out) if out.endswith(".txt") else out
+    build_all(out_dir or ".")
+    # Sentinel for make's dependency tracking.
+    if out.endswith(".txt") and not os.path.exists(out):
+        with open(out, "w") as f:
+            f.write("# sentinel; see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for FedCore's compute hot-spot (pairwise gradient
+distances feeding the k-medoids coreset selection)."""
+
+from .pairwise import DEFAULT_C, DEFAULT_T, pairwise_full, pairwise_tile  # noqa: F401
+from .ref import grad_feature_ref, pairwise_dist_ref  # noqa: F401

@@ -1,0 +1,29 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (assert_allclose). They are deliberately written in the most
+obvious way possible — broadcasting, no tiling tricks — so a bug in the
+kernel cannot be mirrored here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_dist_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Naive O(n*m*c) pairwise L2 distance: out[i, j] = ||a[i] - b[j]||."""
+    diff = a[:, None, :] - b[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def grad_feature_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Last-layer gradient of softmax cross-entropy: softmax(z) - onehot(y).
+
+    This is the paper's section 4.3 ``d_hat`` feature, for which the
+    distance kernel computes pairwise norms.
+    """
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    onehot = jnp.eye(logits.shape[-1], dtype=logits.dtype)[labels]
+    return probs - onehot

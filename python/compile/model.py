@@ -1,0 +1,143 @@
+"""L2: the jax functions that become the AOT artifacts.
+
+For every benchmark model (logreg / mnist / shake) three functions are
+lowered to HLO text and executed from the rust coordinator:
+
+* ``train_step``  — one weighted SGD step on a fixed-size batch. The per-
+  sample weight vector ``w`` carries (a) the coreset weights δ* from the
+  k-medoids assignment (paper Eq. 5), (b) plain 1s for full-set epochs,
+  and (c) 0s for padding in the ragged last batch. A ``mu > 0`` scalar adds
+  the FedProx proximal term μ/2‖p − p_global‖² so the same artifact serves
+  the FedProx baseline.
+* ``grad_features`` — per-sample last-layer gradients softmax(z)−onehot(y)
+  (paper §4.3's d̂ approximation), zero-padded to the shared feature width
+  C=64, plus per-sample losses. The coordinator collects these during the
+  round's first full-set epoch, then feeds them to the L1 pairwise-distance
+  kernel and FasterPAM.
+* ``evaluate`` — masked sum-loss and correct-count for test metrics.
+
+All functions take/return the model parameters as ONE flat f32[P] vector
+(see models/base.py) and return tuples, matching the rust runtime's
+``to_tupleN`` unwrapping.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import DEFAULT_C
+from .models import ALL_MODELS
+from .models.base import grad_feature, softmax_xent
+
+FEATURE_DIM = DEFAULT_C  # padded feature width shared with the L1 kernel
+
+
+def _per_sample_loss(model, logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample CE; sequence models average over positions -> [B]."""
+    ce = softmax_xent(logits, y)
+    if ce.ndim == 2:  # [B, S] sequence task
+        ce = jnp.mean(ce, axis=-1)
+    return ce
+
+
+def make_train_step(model):
+    """(params[P], gparams[P], x, y, w[B], lr[], mu[]) -> (params'[P], loss[])."""
+
+    def train_step(params, gparams, x, y, w, lr, mu):
+        def loss_fn(p):
+            logits = model.apply(p, x)
+            ce = _per_sample_loss(model, logits, y)  # [B]
+            wsum = jnp.maximum(jnp.sum(w), 1e-8)
+            data_loss = jnp.sum(w * ce) / wsum
+            prox = 0.5 * mu * jnp.sum((p - gparams) ** 2)
+            return data_loss + prox, data_loss
+
+        (_, data_loss), grad = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return params - lr * grad, data_loss
+
+    return train_step
+
+
+def make_grad_features(model):
+    """(params[P], x[F,…], y[F]) -> (feat[F, FEATURE_DIM], loss[F]).
+
+    feat rows are the paper's d̂ gradient proxies; the pairwise L2 norms of
+    these rows are exactly the k-medoids distances of Eq. (5). Sequence
+    models average the per-position last-layer gradient over positions.
+    """
+
+    def grad_features(params, x, y):
+        logits = model.apply(params, x)
+        g = grad_feature(logits, y)  # [..., C_model]
+        if g.ndim == 3:  # [B, S, V] -> mean over positions
+            g = jnp.mean(g, axis=1)
+        ce = _per_sample_loss(model, logits, y)
+        pad = FEATURE_DIM - g.shape[-1]
+        if pad < 0:
+            raise ValueError(f"model feature dim {g.shape[-1]} > {FEATURE_DIM}")
+        if pad:
+            g = jnp.pad(g, ((0, 0), (0, pad)))
+        return g, ce
+
+    return grad_features
+
+
+def make_evaluate(model):
+    """(params[P], x[F,…], y[F], m[F]) -> (loss_sum[], correct[], weight[]).
+
+    ``m`` masks padding rows. For sequence models ``correct`` counts the
+    per-sample fraction of positions predicted right, so that global
+    accuracy = Σcorrect / Σm matches next-char accuracy.
+    """
+
+    def evaluate(params, x, y, m):
+        logits = model.apply(params, x)
+        ce = _per_sample_loss(model, logits, y)
+        pred = jnp.argmax(logits, axis=-1)
+        hit = (pred == y).astype(jnp.float32)
+        if hit.ndim == 2:
+            hit = jnp.mean(hit, axis=-1)
+        return jnp.sum(ce * m), jnp.sum(hit * m), jnp.sum(m)
+
+    return evaluate
+
+
+def example_args(model, fn: str, batch: int) -> Tuple[jnp.ndarray, ...]:
+    """ShapeDtypeStructs used to trace each artifact."""
+    f32, i32 = jnp.float32, jnp.int32
+    p = jax.ShapeDtypeStruct((model.PARAM_SIZE,), f32)
+    xdt = i32 if model.X_DTYPE == "i32" else f32
+    x = jax.ShapeDtypeStruct((batch,) + model.X_SHAPE, xdt)
+    if getattr(model, "SEQ_LEN", None):
+        y = jax.ShapeDtypeStruct((batch, model.SEQ_LEN), i32)
+    else:
+        y = jax.ShapeDtypeStruct((batch,), i32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    vec = jax.ShapeDtypeStruct((batch,), f32)
+    if fn == "train":
+        return (p, p, x, y, vec, scalar, scalar)
+    if fn == "feat":
+        return (p, x, y)
+    if fn == "eval":
+        return (p, x, y, vec)
+    raise ValueError(fn)
+
+
+FN_FACTORIES = {
+    "train": make_train_step,
+    "feat": make_grad_features,
+    "eval": make_evaluate,
+}
+
+__all__ = [
+    "ALL_MODELS",
+    "FEATURE_DIM",
+    "FN_FACTORIES",
+    "example_args",
+    "make_evaluate",
+    "make_grad_features",
+    "make_train_step",
+]

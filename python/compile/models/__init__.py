@@ -1,0 +1,9 @@
+"""L2 model zoo: one module per paper benchmark (section 6.1)."""
+
+from . import logreg, mnist_cnn, shake_lstm
+
+ALL_MODELS = {
+    logreg.NAME: logreg,
+    mnist_cnn.NAME: mnist_cnn,
+    shake_lstm.NAME: shake_lstm,
+}

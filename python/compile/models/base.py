@@ -1,0 +1,77 @@
+"""Shared machinery for the L2 models.
+
+Every model exposes its parameters to the rust coordinator as ONE flat
+f32[P] vector. The helpers here unflatten that vector into the model's
+named tensors inside the jitted function, so that:
+
+* the rust side ships exactly one `Literal` per call for the parameters,
+* FedAvg aggregation / FedProx prox distance are plain Vec<f32> math in L3,
+* `jax.grad` over the flat vector is itself flat — no pytree crosses the
+  HLO boundary.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Name + shape of one parameter tensor inside the flat vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def total_size(specs: Sequence[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def unflatten(flat: jnp.ndarray, specs: Sequence[ParamSpec]) -> Dict[str, jnp.ndarray]:
+    """Slice the flat f32[P] vector into the model's named tensors."""
+    out: Dict[str, jnp.ndarray] = {}
+    offset = 0
+    for s in specs:
+        out[s.name] = jax.lax.dynamic_slice_in_dim(flat, offset, s.size).reshape(s.shape)
+        offset += s.size
+    return out
+
+
+def flatten(params: Dict[str, jnp.ndarray], specs: Sequence[ParamSpec]) -> jnp.ndarray:
+    return jnp.concatenate([params[s.name].reshape(-1) for s in specs])
+
+
+def init_flat(specs: Sequence[ParamSpec], key: jax.Array, scales: Dict[str, float]) -> jnp.ndarray:
+    """Gaussian init with per-tensor scale; biases (scale 0) start at zero."""
+    chunks: List[jnp.ndarray] = []
+    for s in specs:
+        key, sub = jax.random.split(key)
+        scale = scales.get(s.name, 0.0)
+        if scale == 0.0:
+            chunks.append(jnp.zeros(s.size, jnp.float32))
+        else:
+            chunks.append(scale * jax.random.normal(sub, (s.size,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example softmax cross-entropy. logits [..., C], labels [...] i32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def grad_feature(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Last-layer gradient of softmax CE: softmax(z) - onehot(y) (paper 4.3)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return probs - onehot

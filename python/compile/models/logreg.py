@@ -1,0 +1,34 @@
+"""Synthetic-benchmark model: multinomial logistic regression 60 -> 10.
+
+Matches the FedProx synthetic benchmark (paper section 6.1, dataset 3):
+x in R^60, 10 classes, trained with SGD. Strongly convex once L2-regularized,
+which is the regime of the paper's Theorem 5.1; the convergence-check
+example leans on this model.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from .base import ParamSpec, total_size, unflatten
+
+NAME = "logreg"
+INPUT_DIM = 60
+NUM_CLASSES = 10
+
+SPECS = (
+    ParamSpec("w", (INPUT_DIM, NUM_CLASSES)),
+    ParamSpec("b", (NUM_CLASSES,)),
+)
+PARAM_SIZE = total_size(SPECS)
+INIT_SCALES = {"w": 0.0, "b": 0.0}  # FedProx inits LR at zero
+X_SHAPE = (INPUT_DIM,)  # per-sample input shape (batch dim prepended)
+X_DTYPE = "f32"
+
+
+def apply(flat_params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x [B, 60] -> logits [B, 10]."""
+    p: Dict[str, jnp.ndarray] = unflatten(flat_params, SPECS)
+    return x @ p["w"] + p["b"]

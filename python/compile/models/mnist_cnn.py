@@ -1,0 +1,63 @@
+"""MNIST-benchmark model: three-layer CNN for 10-way digit classification.
+
+Mirrors the paper's "three-layer CNN" (section 6.1, dataset 1): two small
+convolutions with 2x2 max-pooling, one dense classifier head. Kept compact
+(~9k parameters) so the AOT-compiled HLO executes fast on the CPU PJRT
+client while remaining a genuine convolutional workload.
+
+Input crosses the HLO boundary as a flat f32[B, 784] row (the rust data
+layer stores images as flat vectors); the model reshapes to NHWC inside.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ParamSpec, total_size, unflatten
+
+NAME = "mnist"
+IMG = 28
+NUM_CLASSES = 10
+C1, C2 = 8, 16
+
+SPECS = (
+    ParamSpec("conv1", (3, 3, 1, C1)),
+    ParamSpec("bias1", (C1,)),
+    ParamSpec("conv2", (3, 3, C1, C2)),
+    ParamSpec("bias2", (C2,)),
+    ParamSpec("dense", (7 * 7 * C2, NUM_CLASSES)),
+    ParamSpec("bias3", (NUM_CLASSES,)),
+)
+PARAM_SIZE = total_size(SPECS)
+INIT_SCALES = {"conv1": 0.3, "conv2": 0.1, "dense": 0.03}
+X_SHAPE = (IMG * IMG,)
+X_DTYPE = "f32"
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME", dimension_numbers=_DN
+    )
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def apply(flat_params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x [B, 784] -> logits [B, 10]."""
+    p: Dict[str, jnp.ndarray] = unflatten(flat_params, SPECS)
+    h = x.reshape(-1, IMG, IMG, 1)
+    h = jax.nn.relu(_conv(h, p["conv1"]) + p["bias1"])
+    h = _maxpool2(h)  # 14x14xC1
+    h = jax.nn.relu(_conv(h, p["conv2"]) + p["bias2"])
+    h = _maxpool2(h)  # 7x7xC2
+    h = h.reshape(h.shape[0], -1)
+    return h @ p["dense"] + p["bias3"]

@@ -1,0 +1,75 @@
+"""Shakespeare-benchmark model: character-level LSTM for next-char prediction.
+
+Mirrors the paper's LSTM on the Complete Works of Shakespeare (section 6.1,
+dataset 2): embed -> single LSTM layer (lax.scan over the sequence) ->
+dense head over the character vocabulary. The loss/feature/accuracy are
+averaged over sequence positions, so one (sequence, shifted-sequence) pair
+is one "sample" for coreset purposes — matching how the LEAF/FedProx
+Shakespeare task counts samples.
+
+The vocabulary (64 symbols) is shared with the rust data layer via the
+artifact manifest; see ``python/compile/vocab.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ParamSpec, total_size, unflatten
+from ..vocab import VOCAB_SIZE
+
+NAME = "shake"
+SEQ_LEN = 20
+EMBED = 32
+HIDDEN = 64
+NUM_CLASSES = VOCAB_SIZE  # 64
+
+SPECS = (
+    ParamSpec("embed", (VOCAB_SIZE, EMBED)),
+    # Fused LSTM weights: [x; h] @ W + b -> gates (i, f, g, o).
+    ParamSpec("lstm_w", (EMBED + HIDDEN, 4 * HIDDEN)),
+    ParamSpec("lstm_b", (4 * HIDDEN,)),
+    ParamSpec("head_w", (HIDDEN, VOCAB_SIZE)),
+    ParamSpec("head_b", (VOCAB_SIZE,)),
+)
+PARAM_SIZE = total_size(SPECS)
+INIT_SCALES = {"embed": 0.1, "lstm_w": 0.08, "head_w": 0.08}
+X_SHAPE = (SEQ_LEN,)
+X_DTYPE = "i32"
+
+
+def _cell(
+    p: Dict[str, jnp.ndarray],
+    carry: Tuple[jnp.ndarray, jnp.ndarray],
+    xt: jnp.ndarray,
+) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    h, c = carry
+    z = jnp.concatenate([xt, h], axis=-1) @ p["lstm_w"] + p["lstm_b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def apply(flat_params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x [B, SEQ_LEN] i32 token ids -> logits [B, SEQ_LEN, VOCAB_SIZE].
+
+    Position t predicts the *next* character; the data layer supplies the
+    shifted targets y [B, SEQ_LEN].
+    """
+    p: Dict[str, jnp.ndarray] = unflatten(flat_params, SPECS)
+    emb = p["embed"][x]  # [B, S, E]
+    batch = emb.shape[0]
+    h0 = jnp.zeros((batch, HIDDEN), jnp.float32)
+    c0 = jnp.zeros((batch, HIDDEN), jnp.float32)
+
+    def step(carry, xt):
+        return _cell(p, carry, xt)
+
+    # scan over time: emb -> [S, B, E]
+    _, hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(emb, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)  # [B, S, H]
+    return hs @ p["head_w"] + p["head_b"]

@@ -1,0 +1,13 @@
+"""Character vocabulary shared between the python compile path and the rust
+data layer (via artifacts/manifest.json).
+
+64 symbols: lowercase, uppercase folds to lowercase on the rust side before
+lookup, so the table covers lowercase letters, digits-as-one-bucket is not
+needed for Shakespeare, plus the punctuation that actually occurs in the
+corpus. Index 0 is the unknown/pad symbol.
+"""
+
+VOCAB = "\x00 abcdefghijklmnopqrstuvwxyz.,;:!?'-\n\"()[]0123456789&_ABCDEFGHIJ"
+VOCAB_SIZE = 64
+
+assert len(VOCAB) == VOCAB_SIZE, len(VOCAB)

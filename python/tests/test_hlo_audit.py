@@ -1,0 +1,127 @@
+"""HLO audit of the AOT artifacts — the L2 performance/portability checks
+from DESIGN.md §6: every artifact must be CPU-executable (no custom-calls),
+loops must stay rolled (scan -> while, not 20x unrolled LSTM cells), and
+module sizes must stay in the regime the rust runtime compiles in
+milliseconds. Skips when artifacts/ has not been built."""
+
+from __future__ import annotations
+
+import os
+import re
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+ARTIFACTS = [
+    "logreg_train.hlo.txt",
+    "logreg_feat.hlo.txt",
+    "logreg_eval.hlo.txt",
+    "mnist_train.hlo.txt",
+    "mnist_feat.hlo.txt",
+    "mnist_eval.hlo.txt",
+    "shake_train.hlo.txt",
+    "shake_feat.hlo.txt",
+    "shake_eval.hlo.txt",
+    "pairwise_dist.hlo.txt",
+]
+
+
+def read(name: str) -> str:
+    path = os.path.join(ART, name)
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return f.read()
+
+
+@pytest.mark.parametrize("name", ARTIFACTS)
+class TestEveryArtifact:
+    def test_is_an_hlo_module(self, name):
+        text = read(name)
+        assert text.startswith("HloModule"), f"{name} missing HloModule header"
+        assert "ROOT" in text
+
+    def test_no_custom_calls(self, name):
+        # A Mosaic/TPU custom-call would make the artifact non-executable on
+        # the CPU PJRT client (the aot_recipe gotcha).
+        text = read(name)
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+
+    def test_no_float64(self, name):
+        # The runtime moves f32/s32 literals only; f64 would mean jax
+        # x64 mode leaked into the lowering.
+        text = read(name)
+        assert " f64[" not in text, f"{name} contains f64 values"
+
+    def test_instruction_count_in_compile_friendly_regime(self, name):
+        # Catches accidental unrolling (e.g. the LSTM scan exploding into
+        # 20 copies of the cell): the biggest module (shake_train bwd) sits
+        # around 1.5k instructions; 8k is far beyond anything intended.
+        text = read(name)
+        instructions = len(re.findall(r"^\s+\S+ = ", text, re.MULTILINE))
+        assert 3 <= instructions < 8000, f"{name}: {instructions} instructions"
+
+
+class TestStructure:
+    def test_lstm_scan_stays_rolled(self):
+        # jax.lax.scan lowers to a while loop; an unrolled LSTM would have
+        # no while op and ~20x the instructions (the kept scan-vs-unroll
+        # decision in EXPERIMENTS.md SPerf iteration 4).
+        text = read("shake_train.hlo.txt")
+        assert "while(" in text or "while (" in text.lower() or " while" in text, (
+            "shake_train lost its while loop (scan unrolled?)"
+        )
+
+    def test_train_returns_params_and_loss(self):
+        for model in ["logreg", "mnist", "shake"]:
+            text = read(f"{model}_train.hlo.txt")
+            root = [l for l in text.splitlines() if "ROOT" in l]
+            assert root, model
+            # tuple of (params f32[P], loss f32[])
+            assert "tuple(" in root[-1] or "(f32[" in root[-1], root[-1]
+
+    def test_pairwise_has_a_dot(self):
+        # The MXU rethink: the kernel must lower to a dot (a @ b^T), not an
+        # elementwise broadcast-subtract pyramid.
+        text = read("pairwise_dist.hlo.txt")
+        assert re.search(r"\bdot\(", text), "pairwise kernel lost its matmul"
+
+    def test_conv_present_in_mnist(self):
+        text = read("mnist_train.hlo.txt")
+        assert "convolution" in text, "mnist model lost its convolutions"
+
+    def test_parameter_counts_match_manifest(self):
+        import json
+
+        path = os.path.join(ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            manifest = json.load(f)
+        for model, entry in manifest["models"].items():
+            text = read(f"{model}_train.hlo.txt")
+            p = entry["param_size"]
+            assert f"f32[{p}]" in text, f"{model}: no f32[{p}] parameter in HLO"
+
+
+class TestFusionQuality:
+    """Coarse L2 efficiency audit: the CPU backend fuses elementwise chains;
+    a pathological lowering shows up as an instruction-count blowup relative
+    to the model's parameter count, not as a micro-metric."""
+
+    def test_logreg_modules_are_small(self):
+        # Linear model: train fwd+bwd should be on the order of dozens of
+        # ops, not hundreds.
+        text = read("logreg_train.hlo.txt")
+        instructions = len(re.findall(r"^\s+\S+ = ", text, re.MULTILINE))
+        assert instructions < 400, f"logreg_train has {instructions} instructions"
+
+    def test_feat_cheaper_than_train(self):
+        # grad_features is forward + last-layer gradient only — it must not
+        # drag the full backward pass along (the SS4.3 'almost as cheap as
+        # the loss' property).
+        for model in ["logreg", "mnist", "shake"]:
+            train = len(re.findall(r"^\s+\S+ = ", read(f"{model}_train.hlo.txt"), re.MULTILINE))
+            feat = len(re.findall(r"^\s+\S+ = ", read(f"{model}_feat.hlo.txt"), re.MULTILINE))
+            assert feat <= train, f"{model}: feat ({feat}) heavier than train ({train})"

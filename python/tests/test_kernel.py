@@ -1,0 +1,182 @@
+"""L1 kernel correctness: Pallas pairwise-distance vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot: the distances
+that drive k-medoids coreset selection must match the naive broadcast
+reference to float tolerance, across shapes, dtypes and data regimes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    DEFAULT_C,
+    DEFAULT_T,
+    grad_feature_ref,
+    pairwise_dist_ref,
+    pairwise_full,
+    pairwise_tile,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, scale=1.0, dtype=np.float32):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+class TestPairwiseTile:
+    def test_default_tile_matches_ref(self):
+        a = _rand((DEFAULT_T, DEFAULT_C))
+        b = _rand((DEFAULT_T, DEFAULT_C))
+        (out,) = pairwise_tile(DEFAULT_T, DEFAULT_C)(a, b)
+        np.testing.assert_allclose(out, pairwise_dist_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_self_distance_diagonal_zero(self):
+        a = _rand((32, 16))
+        (out,) = pairwise_tile(32, 16)(a, a)
+        np.testing.assert_allclose(np.diag(out), np.zeros(32), atol=2e-3)
+
+    def test_symmetry_on_self(self):
+        a = _rand((64, 8))
+        (out,) = pairwise_tile(64, 8)(a, a)
+        np.testing.assert_allclose(out, np.asarray(out).T, rtol=1e-4, atol=1e-4)
+
+    def test_zero_inputs(self):
+        z = np.zeros((16, 8), np.float32)
+        (out,) = pairwise_tile(16, 8)(z, z)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((16, 16)))
+
+    def test_known_values(self):
+        # d([0,0],[3,4]) = 5 etc.
+        a = np.array([[0.0, 0.0], [1.0, 0.0]], np.float32)
+        b = np.array([[3.0, 4.0], [0.0, 0.0]], np.float32)
+        (out,) = pairwise_tile(2, 2)(a, b)
+        np.testing.assert_allclose(out, [[5.0, 0.0], [np.sqrt(20.0), 1.0]], rtol=1e-6)
+
+    def test_zero_pad_columns_do_not_change_distance(self):
+        """The artifact pads feature dim to C=64; padding must be inert."""
+        a = _rand((32, 10))
+        b = _rand((32, 10))
+        ap = np.zeros((32, 64), np.float32)
+        bp = np.zeros((32, 64), np.float32)
+        ap[:, :10], bp[:, :10] = a, b
+        (out,) = pairwise_tile(32, 64)(ap, bp)
+        np.testing.assert_allclose(out, pairwise_dist_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_large_magnitude_stability(self):
+        # The MXU-friendly ||a||^2+||b||^2-2ab expansion loses ~sqrt(eps)*scale
+        # of absolute precision on near-zero distances (cancellation); that is
+        # inherent to the formulation, and harmless for k-medoids, which only
+        # ranks distances. Tolerance is therefore scale-aware.
+        scale = 1e3
+        a = _rand((16, 8), scale=scale)
+        (out,) = pairwise_tile(16, 8)(a, a)
+        ref = pairwise_dist_ref(a, a)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=5e-3 * scale)
+
+    def test_tiny_magnitude_stability(self):
+        a = _rand((16, 8), scale=1e-4)
+        (out,) = pairwise_tile(16, 8)(a, a)
+        np.testing.assert_allclose(out, pairwise_dist_ref(a, a), rtol=1e-3, atol=2e-7)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.sampled_from([8, 16, 32, 128]),
+        c=st.sampled_from([4, 8, 10, 64]),
+        scale=st.floats(0.01, 10.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, t, c, scale, seed):
+        rng = np.random.default_rng(seed)
+        a = (rng.standard_normal((t, c)) * scale).astype(np.float32)
+        b = (rng.standard_normal((t, c)) * scale).astype(np.float32)
+        (out,) = pairwise_tile(t, c)(a, b)
+        ref = pairwise_dist_ref(a, b)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4 * max(scale, 1.0))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_bf16_inputs_upcast(self, seed):
+        """Kernel accepts bf16 inputs (TPU-native) and accumulates in f32."""
+        rng = np.random.default_rng(seed)
+        a32 = rng.standard_normal((32, 16)).astype(np.float32)
+        a16 = jnp.asarray(a32, jnp.bfloat16)
+        (out,) = pairwise_tile(32, 16)(a16, a16)
+        ref = pairwise_dist_ref(np.asarray(a16, np.float32), np.asarray(a16, np.float32))
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-2, atol=1e-2)
+
+
+class TestPairwiseFull:
+    def test_gridded_matches_ref(self):
+        n, t, c = 256, 128, 64
+        a = _rand((n, c))
+        (out,) = pairwise_full(n, t, c)(a, a)
+        # atol covers the expansion's cancellation residue on the diagonal
+        # (self-distances), ~sqrt(eps * C).
+        np.testing.assert_allclose(out, pairwise_dist_ref(a, a), rtol=1e-4, atol=1e-2)
+
+    def test_gridded_matches_tilewise_assembly(self):
+        """The rust driver assembles the matrix tile-by-tile; both paths agree."""
+        n, t, c = 64, 32, 8
+        a = _rand((n, c))
+        (full,) = pairwise_full(n, t, c)(a, a)
+        tile = pairwise_tile(t, c)
+        assembled = np.zeros((n, n), np.float32)
+        for i in range(0, n, t):
+            for j in range(0, n, t):
+                (blk,) = tile(a[i : i + t], a[j : j + t])
+                assembled[i : i + t, j : j + t] = np.asarray(blk)
+        np.testing.assert_allclose(np.asarray(full), assembled, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_non_multiple(self):
+        with pytest.raises(ValueError):
+            pairwise_full(100, 32, 8)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        t=st.sampled_from([16, 32]),
+        c=st.sampled_from([8, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_grid_sweep(self, blocks, t, c, seed):
+        n = blocks * t
+        rng = np.random.default_rng(seed)
+        a = rng.standard_normal((n, c)).astype(np.float32)
+        b = rng.standard_normal((n, c)).astype(np.float32)
+        (out,) = pairwise_full(n, t, c)(a, b)
+        np.testing.assert_allclose(out, pairwise_dist_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+class TestGradFeatureRef:
+    def test_matches_autodiff(self):
+        """softmax(z)-onehot(y) IS d(CE)/d(logits): check against jax.grad."""
+        logits = jnp.asarray(_rand((5, 10)))
+        labels = jnp.asarray(RNG.integers(0, 10, size=5), jnp.int32)
+
+        def total_ce(z):
+            logz = jax.nn.logsumexp(z, axis=-1)
+            gold = jnp.take_along_axis(z, labels[:, None], axis=-1)[:, 0]
+            return jnp.sum(logz - gold)
+
+        autodiff = jax.grad(total_ce)(logits)
+        np.testing.assert_allclose(
+            grad_feature_ref(logits, labels), autodiff, rtol=1e-5, atol=1e-6
+        )
+
+    def test_rows_sum_to_zero(self):
+        logits = jnp.asarray(_rand((7, 10)))
+        labels = jnp.zeros(7, jnp.int32)
+        g = grad_feature_ref(logits, labels)
+        np.testing.assert_allclose(jnp.sum(g, axis=-1), np.zeros(7), atol=1e-6)
+
+    def test_norm_bounded_by_sqrt2(self):
+        """||softmax - onehot|| <= sqrt(2): the d-hat features live in a ball."""
+        logits = jnp.asarray(_rand((50, 10), scale=25.0))
+        labels = jnp.asarray(RNG.integers(0, 10, size=50), jnp.int32)
+        g = grad_feature_ref(logits, labels)
+        assert float(jnp.max(jnp.linalg.norm(g, axis=-1))) <= np.sqrt(2.0) + 1e-5

@@ -1,0 +1,254 @@
+"""L2 model correctness: shapes, gradients, train-step/feat/eval semantics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.model import (
+    ALL_MODELS,
+    FEATURE_DIM,
+    example_args,
+    make_evaluate,
+    make_grad_features,
+    make_train_step,
+)
+from compile.models import logreg, mnist_cnn, shake_lstm
+from compile.models.base import (
+    ParamSpec,
+    flatten,
+    grad_feature,
+    init_flat,
+    softmax_xent,
+    total_size,
+    unflatten,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _params(model, seed=0):
+    return init_flat(model.SPECS, jax.random.PRNGKey(seed), model.INIT_SCALES)
+
+
+def _batch(model, n, seed=1):
+    rng = np.random.default_rng(seed)
+    if model.X_DTYPE == "i32":
+        x = jnp.asarray(rng.integers(0, model.NUM_CLASSES, (n,) + model.X_SHAPE), jnp.int32)
+        y = jnp.asarray(rng.integers(0, model.NUM_CLASSES, (n, model.SEQ_LEN)), jnp.int32)
+    else:
+        x = jnp.asarray(rng.standard_normal((n,) + model.X_SHAPE), jnp.float32)
+        y = jnp.asarray(rng.integers(0, model.NUM_CLASSES, n), jnp.int32)
+    return x, y
+
+
+class TestFlattenRoundtrip:
+    @pytest.mark.parametrize("model", list(ALL_MODELS.values()), ids=list(ALL_MODELS))
+    def test_unflatten_flatten_roundtrip(self, model):
+        flat = jnp.asarray(RNG.standard_normal(model.PARAM_SIZE), jnp.float32)
+        back = flatten(unflatten(flat, model.SPECS), model.SPECS)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+    def test_total_size(self):
+        specs = (ParamSpec("a", (2, 3)), ParamSpec("b", (4,)))
+        assert total_size(specs) == 10
+
+    def test_param_sizes_match_paper_scale(self):
+        assert logreg.PARAM_SIZE == 60 * 10 + 10
+        assert mnist_cnn.PARAM_SIZE > 5_000
+        assert shake_lstm.PARAM_SIZE > 20_000
+
+
+class TestApply:
+    @pytest.mark.parametrize("model", list(ALL_MODELS.values()), ids=list(ALL_MODELS))
+    def test_logits_shape(self, model):
+        x, y = _batch(model, 4)
+        logits = model.apply(_params(model), x)
+        if model.X_DTYPE == "i32":
+            assert logits.shape == (4, model.SEQ_LEN, model.NUM_CLASSES)
+        else:
+            assert logits.shape == (4, model.NUM_CLASSES)
+
+    def test_logreg_is_linear(self):
+        p = jnp.asarray(RNG.standard_normal(logreg.PARAM_SIZE), jnp.float32)
+        x1, _ = _batch(logreg, 3, seed=2)
+        x2, _ = _batch(logreg, 3, seed=3)
+        lhs = logreg.apply(p, x1 + x2)
+        rhs = logreg.apply(p, x1) + logreg.apply(p, x2) - logreg.apply(p, jnp.zeros_like(x1))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    def test_logreg_finite_difference_gradient(self):
+        """Strongly-convex case: autodiff grad vs central differences."""
+        x, y = _batch(logreg, 8)
+        p = jnp.asarray(RNG.standard_normal(logreg.PARAM_SIZE) * 0.1, jnp.float32)
+
+        def loss(q):
+            return jnp.mean(softmax_xent(logreg.apply(q, x), y))
+
+        g = np.asarray(jax.grad(loss)(p))
+        eps = 1e-3
+        for idx in RNG.choice(logreg.PARAM_SIZE, 12, replace=False):
+            e = np.zeros(logreg.PARAM_SIZE, np.float32)
+            e[idx] = eps
+            fd = (float(loss(p + e)) - float(loss(p - e))) / (2 * eps)
+            assert abs(fd - g[idx]) < 5e-3, (idx, fd, g[idx])
+
+    def test_mnist_translation_sensitivity(self):
+        """CNN is not constant: distinct inputs give distinct logits."""
+        p = _params(mnist_cnn, seed=4)
+        x, _ = _batch(mnist_cnn, 2, seed=5)
+        logits = mnist_cnn.apply(p, x)
+        assert float(jnp.max(jnp.abs(logits[0] - logits[1]))) > 1e-4
+
+    def test_lstm_causality(self):
+        """Changing token t must not affect logits at positions < t."""
+        p = _params(shake_lstm, seed=6)
+        x, _ = _batch(shake_lstm, 1, seed=7)
+        logits_a = shake_lstm.apply(p, x)
+        x2 = x.at[0, 10].set((x[0, 10] + 1) % shake_lstm.NUM_CLASSES)
+        logits_b = shake_lstm.apply(p, x2)
+        np.testing.assert_allclose(logits_a[0, :10], logits_b[0, :10], atol=1e-5)
+        assert float(jnp.max(jnp.abs(logits_a[0, 10:] - logits_b[0, 10:]))) > 1e-7
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("model", list(ALL_MODELS.values()), ids=list(ALL_MODELS))
+    def test_step_reduces_loss_on_fixed_batch(self, model):
+        step = jax.jit(make_train_step(model))
+        p = _params(model)
+        x, y = _batch(model, 8)
+        w = jnp.ones(8, jnp.float32)
+        lr, mu = jnp.float32(0.1), jnp.float32(0.0)
+        _, loss0 = step(p, p, x, y, w, lr, mu)
+        for _ in range(20):
+            p, loss = step(p, p, x, y, w, lr, mu)
+        assert float(loss) < float(loss0)
+
+    def test_zero_weight_rows_are_ignored(self):
+        """Padding semantics: a δ=0 row must not influence the step."""
+        model = logreg
+        step = make_train_step(model)
+        p = _params(model)
+        x, y = _batch(model, 8)
+        w_full = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+        p1, _ = step(p, p, x, y, w_full, jnp.float32(0.5), jnp.float32(0.0))
+        x_junk = x.at[4:].set(999.0)
+        p2, _ = step(p, p, x_junk, y, w_full, jnp.float32(0.5), jnp.float32(0.0))
+        np.testing.assert_allclose(p1, p2, atol=1e-6)
+
+    def test_coreset_weights_reweight_gradient(self):
+        """δ-weighted batch equals duplicating samples δ times (normalized)."""
+        model = logreg
+        step = make_train_step(model)
+        p = jnp.asarray(RNG.standard_normal(model.PARAM_SIZE) * 0.1, jnp.float32)
+        x, y = _batch(model, 8)
+        # weight sample 0 three times, mask the rest except 1
+        w = jnp.asarray([3, 1, 0, 0, 0, 0, 0, 0], jnp.float32)
+        p_w, _ = step(p, p, x, y, w, jnp.float32(0.2), jnp.float32(0.0))
+        x_dup = jnp.stack([x[0], x[0], x[0], x[1], x[0], x[0], x[0], x[1]])
+        y_dup = jnp.stack([y[0], y[0], y[0], y[1], y[0], y[0], y[0], y[1]])
+        p_d, _ = step(p, p, x_dup, y_dup, jnp.ones(8, jnp.float32), jnp.float32(0.2), jnp.float32(0.0))
+        np.testing.assert_allclose(p_w, p_d, rtol=1e-4, atol=1e-5)
+
+    def test_prox_term_pulls_toward_global(self):
+        """With huge μ the step must move params toward gparams."""
+        model = logreg
+        step = make_train_step(model)
+        p = jnp.ones(model.PARAM_SIZE, jnp.float32)
+        g = jnp.zeros(model.PARAM_SIZE, jnp.float32)
+        x, y = _batch(model, 8)
+        w = jnp.ones(8, jnp.float32)
+        # keep lr*mu < 1 so the prox pull contracts rather than overshoots
+        p1, _ = step(p, g, x, y, w, jnp.float32(0.1), jnp.float32(5.0))
+        assert float(jnp.linalg.norm(p1)) < float(jnp.linalg.norm(p))
+
+    def test_prox_gradient_exact(self):
+        """μ>0 adds exactly μ(p - g) to the gradient."""
+        model = logreg
+        step = make_train_step(model)
+        x, y = _batch(model, 8)
+        w = jnp.ones(8, jnp.float32)
+        p = jnp.asarray(RNG.standard_normal(model.PARAM_SIZE) * 0.1, jnp.float32)
+        g = jnp.asarray(RNG.standard_normal(model.PARAM_SIZE) * 0.1, jnp.float32)
+        lr = jnp.float32(1.0)
+        p_nomu, _ = step(p, g, x, y, w, lr, jnp.float32(0.0))
+        p_mu, _ = step(p, g, x, y, w, lr, jnp.float32(0.7))
+        np.testing.assert_allclose(
+            np.asarray(p_nomu - p_mu), 0.7 * np.asarray(p - g), rtol=1e-4, atol=1e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(lr=st.floats(1e-4, 0.5), seed=st.integers(0, 1000))
+    def test_hypothesis_step_is_descent_direction_logreg(self, lr, seed):
+        model = logreg
+        step = make_train_step(model)
+        x, y = _batch(model, 8, seed=seed)
+        p = jnp.asarray(np.random.default_rng(seed).standard_normal(model.PARAM_SIZE) * 0.2, jnp.float32)
+        w = jnp.ones(8, jnp.float32)
+        p1, l0 = step(p, p, x, y, w, jnp.float32(lr), jnp.float32(0.0))
+        _, l1 = step(p1, p1, x, y, w, jnp.float32(0.0), jnp.float32(0.0))
+        # convex + small lr: loss non-increasing
+        assert float(l1) <= float(l0) + 1e-6
+
+
+class TestGradFeatures:
+    @pytest.mark.parametrize("model", list(ALL_MODELS.values()), ids=list(ALL_MODELS))
+    def test_shape_and_padding(self, model):
+        feat_fn = make_grad_features(model)
+        x, y = _batch(model, 16)
+        f, ce = feat_fn(_params(model), x, y)
+        assert f.shape == (16, FEATURE_DIM)
+        assert ce.shape == (16,)
+        # columns beyond the model's class count are zero padding
+        np.testing.assert_array_equal(
+            np.asarray(f[:, model.NUM_CLASSES :]), 0.0
+        )
+
+    def test_logreg_feature_is_exact_lastlayer_grad(self):
+        x, y = _batch(logreg, 8)
+        p = jnp.asarray(RNG.standard_normal(logreg.PARAM_SIZE) * 0.1, jnp.float32)
+        f, _ = make_grad_features(logreg)(p, x, y)
+        expected = grad_feature(logreg.apply(p, x), y)
+        np.testing.assert_allclose(f[:, :10], expected, rtol=1e-5, atol=1e-6)
+
+    def test_feature_distance_bounds_for_identical_samples(self):
+        """Identical samples must have identical features (distance 0)."""
+        x, y = _batch(logreg, 8)
+        x = x.at[1].set(x[0])
+        y = y.at[1].set(y[0])
+        f, _ = make_grad_features(logreg)(_params(logreg), x, y)
+        np.testing.assert_allclose(f[0], f[1], atol=1e-6)
+
+
+class TestEvaluate:
+    @pytest.mark.parametrize("model", list(ALL_MODELS.values()), ids=list(ALL_MODELS))
+    def test_mask_zeroes_rows(self, model):
+        ev = make_evaluate(model)
+        x, y = _batch(model, 8)
+        p = _params(model)
+        m_half = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+        l_half, c_half, n_half = ev(p, x, y, m_half)
+        l_full, c_full, n_full = ev(p, x, y, jnp.ones(8, jnp.float32))
+        assert float(n_half) == 4.0 and float(n_full) == 8.0
+        assert float(l_half) <= float(l_full) + 1e-5
+
+    def test_perfect_predictions_counted(self):
+        # craft logreg params that trivially classify y = argmax(x[:10])
+        x = jnp.eye(10, 60, dtype=jnp.float32) * 10.0
+        y = jnp.arange(10, dtype=jnp.int32)
+        w = np.zeros((60, 10), np.float32)
+        w[:10, :10] = np.eye(10)
+        p = jnp.asarray(np.concatenate([w.reshape(-1), np.zeros(10, np.float32)]))
+        _, correct, n = make_evaluate(logreg)(p, x, y, jnp.ones(10, jnp.float32))
+        assert float(correct) == 10.0 and float(n) == 10.0
+
+
+class TestExampleArgs:
+    @pytest.mark.parametrize("model", list(ALL_MODELS.values()), ids=list(ALL_MODELS))
+    @pytest.mark.parametrize("fn", ["train", "feat", "eval"])
+    def test_traceable(self, model, fn):
+        from compile.model import FN_FACTORIES
+
+        jax.eval_shape(FN_FACTORIES[fn](model), *example_args(model, fn, 8))

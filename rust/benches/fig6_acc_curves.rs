@@ -1,0 +1,55 @@
+//! Reproduces **Figure 6** (appendix B.2): test-accuracy curves for
+//! FedAvg-DS, FedProx and FedCore at 10% and 30% stragglers.
+//!
+//! Same runs as Fig. 3 but plotting the accuracy trace; the paper's shape
+//! is FedCore on top or tied, FedAvg-DS lowest on heterogeneous synthetic.
+
+use fedcore::data::{paper_benchmarks, Benchmark};
+use fedcore::expt;
+
+fn main() {
+    let rt = expt::runtime_or_exit();
+    let benches: Vec<Benchmark> = if expt::full_scale() {
+        paper_benchmarks()
+    } else {
+        vec![Benchmark::Synthetic { alpha: 0.5, beta: 0.5 }, Benchmark::Mnist]
+    };
+
+    for bench in benches {
+        for s in [10.0, 30.0] {
+            let runs = expt::run_cell(&rt, bench, s, 7).expect("cell");
+            println!(
+                "\n== Fig 6: {} @ {}% stragglers — test accuracy (%) per round ==",
+                bench.label(),
+                s
+            );
+            print!("{:>5}", "round");
+            for r in &runs {
+                print!(" {:>10}", r.strategy);
+            }
+            println!();
+            for i in 0..runs[0].rounds.len() {
+                print!("{i:>5}");
+                for r in &runs {
+                    print!(" {:>10.1}", 100.0 * r.rounds[i].test_acc);
+                }
+                println!();
+            }
+            let best = |name: &str| {
+                100.0
+                    * runs
+                        .iter()
+                        .find(|r| r.strategy == name)
+                        .unwrap()
+                        .best_accuracy()
+            };
+            println!(
+                "best: FedCore {:.1} | FedProx {:.1} | FedAvg-DS {:.1} | FedAvg {:.1}",
+                best("FedCore"),
+                best("FedProx"),
+                best("FedAvg-DS"),
+                best("FedAvg")
+            );
+        }
+    }
+}

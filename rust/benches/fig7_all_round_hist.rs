@@ -1,0 +1,54 @@
+//! Reproduces **Figure 7** (appendix B.2): round-duration distributions
+//! across clients and rounds for every benchmark at 10% and 30% straggler
+//! settings (log-scale counts).
+//!
+//! Default covers the three Synthetic columns + MNIST; `FEDCORE_FULL=1`
+//! adds Shakespeare (slow under the LSTM).
+
+use fedcore::data::{paper_benchmarks, Benchmark};
+use fedcore::expt;
+use fedcore::metrics::Histogram;
+
+fn main() {
+    let rt = expt::runtime_or_exit();
+    let benches: Vec<Benchmark> = if expt::full_scale() {
+        paper_benchmarks()
+    } else {
+        vec![
+            Benchmark::Mnist,
+            Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+            Benchmark::Synthetic { alpha: 0.5, beta: 0.5 },
+            Benchmark::Synthetic { alpha: 0.0, beta: 0.0 },
+        ]
+    };
+
+    for bench in benches {
+        for s in [10.0, 30.0] {
+            let runs = expt::run_cell(&rt, bench, s, 7).expect("cell");
+            println!("\n== Fig 7: {} @ {}% stragglers (x = t/τ) ==", bench.label(), s);
+            for r in &runs {
+                let times = r.client_times_normalized();
+                let h = Histogram::new(&times, 0.5, 6.0);
+                let max_t = times.iter().copied().fold(0.0f64, f64::max);
+                // compressed row view: bucket counts + max
+                let counts: Vec<String> = h.counts.iter().map(|c| format!("{c:>4}")).collect();
+                println!(
+                    "{:<12} max {max_t:>5.2}τ | {}",
+                    r.strategy,
+                    counts.join(" ")
+                );
+                // shape: deadline-aware strategies never pass τ
+                if r.strategy != "FedAvg" {
+                    assert!(
+                        max_t <= 1.05,
+                        "{} @ {}: {} exceeded τ ({max_t})",
+                        bench.label(),
+                        s,
+                        r.strategy
+                    );
+                }
+            }
+        }
+    }
+    println!("\nshape check passed: only FedAvg's distribution crosses τ in every panel");
+}

@@ -1,0 +1,72 @@
+//! Runtime micro-bench: per-artifact PJRT execution latency — the L3 hot
+//! path's unit costs (train step / feature batch / eval batch per model,
+//! plus the L1 Pallas distance tile). Feeds EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use fedcore::expt;
+use fedcore::runtime::XBatch;
+use fedcore::util::bench::{bench, run_group};
+use fedcore::util::rng::Rng;
+
+fn main() {
+    let rt = expt::runtime_or_exit();
+    rt.warmup().expect("warmup");
+    let mut rng = Rng::new(1);
+    let b = rt.manifest().train_batch;
+    let f = rt.manifest().feat_batch;
+    let budget = Duration::from_secs(3);
+    let mut results = Vec::new();
+
+    for name in ["logreg", "mnist", "shake"] {
+        let model = rt.manifest().model(name).unwrap().clone();
+        let xe = model.x_elems();
+        let ye = model.y_elems();
+        let params = model.init_params.clone();
+
+        let make_x = |rng: &mut Rng, batch: usize| -> XBatch {
+            match model.x_dtype {
+                fedcore::runtime::XDtype::F32 => {
+                    XBatch::F32((0..batch * xe).map(|_| rng.f32()).collect())
+                }
+                fedcore::runtime::XDtype::I32 => {
+                    XBatch::I32((0..batch * xe).map(|_| rng.below(64) as i32).collect())
+                }
+            }
+        };
+        let y_train: Vec<i32> = (0..b * ye).map(|_| rng.below(model.num_classes) as i32).collect();
+        let y_feat: Vec<i32> = (0..f * ye).map(|_| rng.below(model.num_classes) as i32).collect();
+        let w = vec![1.0f32; b];
+        let mask = vec![1.0f32; f];
+        let x_train = make_x(&mut rng, b);
+        let x_feat = make_x(&mut rng, f);
+
+        results.push(bench(&format!("{name}: train_step (B={b})"), 400, budget, || {
+            rt.train_step(&model, &params, &params, &x_train, &y_train, &w, 0.01, 0.0)
+                .unwrap()
+        }));
+        results.push(bench(&format!("{name}: grad_features (F={f})"), 200, budget, || {
+            rt.grad_features(&model, &params, &x_feat, &y_feat).unwrap()
+        }));
+        results.push(bench(&format!("{name}: evaluate (F={f})"), 200, budget, || {
+            rt.evaluate(&model, &params, &x_feat, &y_feat, &mask).unwrap()
+        }));
+    }
+
+    let t = rt.manifest().pairwise_tile;
+    let c = rt.manifest().pairwise_dim;
+    let a: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+    let bb: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+    results.push(bench(&format!("pallas pairwise tile ({t}×{t})"), 200, budget, || {
+        rt.pairwise_tile(&a, &bb).unwrap()
+    }));
+
+    run_group("PJRT artifact execution latency", results);
+    let stats = rt.stats();
+    println!(
+        "\ntotal: {} executions, {} compiles, {:.1} ms mean exec",
+        stats.executions,
+        stats.compile_count,
+        stats.exec_nanos as f64 / stats.executions.max(1) as f64 / 1e6
+    );
+}

@@ -1,0 +1,160 @@
+//! Pairwise gradient-distance matrix — the k-medoids input (paper §4.3).
+//!
+//! The m×m matrix d̂ⱼₖ = ‖fⱼ − fₖ‖₂ over per-sample gradient features is
+//! produced two ways:
+//!
+//! * [`from_features_tiled`] — the production path: tiles the matrix with
+//!   the L1 **Pallas** artifact (`pairwise_dist.hlo.txt`, one T×T block per
+//!   PJRT call), exploiting symmetry by computing only the upper-triangle
+//!   blocks and mirroring.
+//! * [`from_features_cpu`] — a pure-rust reference used for cross-checking
+//!   the kernel and for configurations without artifacts.
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+/// Dense symmetric distance matrix, row-major `n × n`.
+#[derive(Clone, Debug)]
+pub struct DistMatrix {
+    pub n: usize,
+    pub d: Vec<f32>,
+}
+
+impl DistMatrix {
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.d[i * self.n + j]
+    }
+
+    /// Max |d(i,j) − d(j,i)| — sanity metric for the tiled path.
+    pub fn asymmetry(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                worst = worst.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        worst
+    }
+}
+
+/// Exact CPU reference: d(i,j) = ‖fᵢ − fⱼ‖₂ with f64 accumulation.
+pub fn from_features_cpu(features: &[f32], n: usize, dim: usize) -> DistMatrix {
+    assert_eq!(features.len(), n * dim, "features shape");
+    let mut d = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut acc = 0.0f64;
+            let (fi, fj) = (&features[i * dim..(i + 1) * dim], &features[j * dim..(j + 1) * dim]);
+            for k in 0..dim {
+                let diff = (fi[k] - fj[k]) as f64;
+                acc += diff * diff;
+            }
+            let v = acc.sqrt() as f32;
+            d[i * n + j] = v;
+            d[j * n + i] = v;
+        }
+    }
+    DistMatrix { n, d }
+}
+
+/// Production path: tile the n×n matrix with the T×T Pallas artifact.
+///
+/// Features are padded with zero rows to a multiple of T; padded distances
+/// are computed but never copied out. Symmetric blocks (i > j) are mirrored
+/// from their transpose instead of re-executed, halving PJRT calls.
+pub fn from_features_tiled(rt: &Runtime, features: &[f32], n: usize) -> Result<DistMatrix> {
+    let t = rt.manifest().pairwise_tile;
+    let dim = rt.manifest().pairwise_dim;
+    assert_eq!(features.len(), n * dim, "features must be n × pairwise_dim");
+    if n == 0 {
+        return Ok(DistMatrix { n: 0, d: vec![] });
+    }
+
+    let blocks = n.div_ceil(t);
+    // One reusable zero-padded tile buffer per side.
+    let mut a_tile = vec![0.0f32; t * dim];
+    let mut b_tile = vec![0.0f32; t * dim];
+    let mut d = vec![0.0f32; n * n];
+
+    let fill = |buf: &mut [f32], block: usize| {
+        buf.fill(0.0);
+        let start = block * t;
+        let rows = (n - start).min(t);
+        buf[..rows * dim].copy_from_slice(&features[start * dim..(start + rows) * dim]);
+        rows
+    };
+
+    for bi in 0..blocks {
+        let rows_i = fill(&mut a_tile, bi);
+        for bj in bi..blocks {
+            let rows_j = fill(&mut b_tile, bj);
+            let tile = rt.pairwise_tile(&a_tile, &b_tile)?;
+            // copy the valid region; mirror into the lower triangle
+            for r in 0..rows_i {
+                let gi = bi * t + r;
+                for c in 0..rows_j {
+                    let gj = bj * t + c;
+                    let v = tile[r * t + c];
+                    d[gi * n + gj] = v;
+                    d[gj * n + gi] = v;
+                }
+            }
+        }
+    }
+    Ok(DistMatrix { n, d })
+}
+
+/// Convex-model shortcut (§4.3): distances in the *input* space,
+/// d̃ⱼₖ = ‖xⱼ − xₖ‖ — computable once, before training starts. Same math
+/// as [`from_features_cpu`] but documented as the static-coreset path.
+pub fn from_inputs_static(inputs: &[f32], n: usize, dim: usize) -> DistMatrix {
+    from_features_cpu(inputs, n, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cpu_matrix_is_metriclike() {
+        let mut rng = Rng::new(5);
+        let n = 17;
+        let dim = 8;
+        let f: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let d = from_features_cpu(&f, n, dim);
+        assert_eq!(d.asymmetry(), 0.0);
+        for i in 0..n {
+            assert_eq!(d.get(i, i), 0.0);
+            for j in 0..n {
+                assert!(d.get(i, j) >= 0.0);
+            }
+        }
+        // spot triangle inequality
+        for (i, j, k) in [(0, 5, 11), (2, 9, 16), (1, 3, 4)] {
+            assert!(d.get(i, k) <= d.get(i, j) + d.get(j, k) + 1e-5);
+        }
+    }
+
+    #[test]
+    fn known_distances() {
+        // unit square in 2-D
+        let f = vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let d = from_features_cpu(&f, 4, 2);
+        assert!((d.get(0, 1) - 1.0).abs() < 1e-6);
+        assert!((d.get(0, 2) - 1.0).abs() < 1e-6);
+        assert!((d.get(0, 3) - 2.0f32.sqrt()).abs() < 1e-6);
+        assert!((d.get(1, 2) - 2.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn static_input_path_equals_cpu() {
+        let mut rng = Rng::new(6);
+        let f: Vec<f32> = (0..12 * 4).map(|_| rng.f32()).collect();
+        let a = from_features_cpu(&f, 12, 4);
+        let b = from_inputs_static(&f, 12, 4);
+        assert_eq!(a.d, b.d);
+    }
+}

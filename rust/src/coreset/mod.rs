@@ -1,0 +1,233 @@
+//! Distributed coreset construction — the paper's core contribution
+//! (sections 3.2, 4.2, 4.3).
+//!
+//! Given per-sample gradient features fⱼ (the §4.3 d̂ proxies, produced by
+//! the L2 `grad_features` artifact), the coreset problem Eq. (2) is upper-
+//! bounded by the k-medoids objective Eq. (5):
+//!
+//! ```text
+//!   min_{S ⊆ V, |S| ≤ b}  Σ_{j ∈ V}  min_{k ∈ S} ‖fⱼ − fₖ‖
+//! ```
+//!
+//! with weights δₖ = |{j : Φ(j) = k}| counting the points assigned to each
+//! medoid. [`fasterpam`] is the paper's solver; [`pam`], [`random`] and
+//! [`greedy_kcenter`] are ablation baselines (DESIGN.md §3).
+
+pub mod distance;
+pub mod fasterpam;
+pub mod greedy_kcenter;
+pub mod pam;
+pub mod random;
+
+pub use distance::DistMatrix;
+
+use crate::util::rng::Rng;
+
+/// A selected coreset: sample indices (into the client's local set), their
+/// integer weights δ*, and the k-medoids objective value achieved.
+#[derive(Clone, Debug)]
+pub struct Coreset {
+    /// Medoid sample indices S*, ascending.
+    pub indices: Vec<usize>,
+    /// δ*ₖ = number of samples assigned to medoid k (aligned with `indices`).
+    pub deltas: Vec<f32>,
+    /// Σⱼ minₖ d(j, k) — the Eq. (5) objective at the returned S*.
+    pub cost: f64,
+}
+
+impl Coreset {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Σ δₖ — must equal the client's full-set size m (every point is
+    /// assigned to exactly one medoid).
+    pub fn total_weight(&self) -> f64 {
+        self.deltas.iter().map(|&d| d as f64).sum()
+    }
+
+    /// The degenerate "coreset = full set" used when b ≥ m.
+    pub fn identity(m: usize) -> Coreset {
+        Coreset {
+            indices: (0..m).collect(),
+            deltas: vec![1.0; m],
+            cost: 0.0,
+        }
+    }
+}
+
+/// Which k-medoids solver to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// FasterPAM (Schubert & Rousseeuw 2021) — the paper's choice (§4.2).
+    FasterPam,
+    /// Classic PAM BUILD + SWAP — ablation baseline.
+    Pam,
+    /// Uniform random subset — ablation baseline.
+    Random,
+    /// Greedy k-center (farthest-point) — geometry-based ablation baseline.
+    GreedyKCenter,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fasterpam" | "faster-pam" => Some(Method::FasterPam),
+            "pam" => Some(Method::Pam),
+            "random" => Some(Method::Random),
+            "kcenter" | "k-center" | "greedy" | "greedykcenter" => Some(Method::GreedyKCenter),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::FasterPam => "FasterPAM",
+            Method::Pam => "PAM",
+            Method::Random => "Random",
+            Method::GreedyKCenter => "GreedyKCenter",
+        }
+    }
+}
+
+/// Solve Eq. (5): pick ≤ `k` medoids from the `dist.n` points.
+///
+/// Returns the full-set identity when `k ≥ n` (no compression needed) and
+/// clamps `k` to ≥ 1 otherwise.
+pub fn select(dist: &DistMatrix, k: usize, method: Method, rng: &mut Rng) -> Coreset {
+    let n = dist.n;
+    if n == 0 {
+        return Coreset { indices: vec![], deltas: vec![], cost: 0.0 };
+    }
+    if k >= n {
+        return Coreset::identity(n);
+    }
+    let k = k.max(1);
+    let medoids = match method {
+        Method::FasterPam => fasterpam::solve(dist, k, rng),
+        Method::Pam => pam::solve(dist, k, rng),
+        Method::Random => random::solve(dist, k, rng),
+        Method::GreedyKCenter => greedy_kcenter::solve(dist, k, rng),
+    };
+    finalize(dist, medoids)
+}
+
+/// Assign every point to its nearest medoid and compute (δ*, cost).
+pub fn finalize(dist: &DistMatrix, mut medoids: Vec<usize>) -> Coreset {
+    medoids.sort_unstable();
+    medoids.dedup();
+    let n = dist.n;
+    let mut deltas = vec![0.0f32; medoids.len()];
+    let mut cost = 0.0f64;
+    for j in 0..n {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (mi, &m) in medoids.iter().enumerate() {
+            let d = dist.get(j, m);
+            if d < best_d {
+                best_d = d;
+                best = mi;
+            }
+        }
+        deltas[best] += 1.0;
+        cost += best_d as f64;
+    }
+    Coreset { indices: medoids, deltas, cost }
+}
+
+/// Objective value Σⱼ minₖ d(j, k) for an arbitrary medoid set (used by
+/// tests and ablations to compare solvers).
+pub fn objective(dist: &DistMatrix, medoids: &[usize]) -> f64 {
+    let mut cost = 0.0f64;
+    for j in 0..dist.n {
+        let mut best = f32::INFINITY;
+        for &m in medoids {
+            best = best.min(dist.get(j, m));
+        }
+        cost += best as f64;
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated 1-D clusters; medoids must pick one per cluster.
+    pub(crate) fn clustered_dist() -> (DistMatrix, Vec<usize>) {
+        let pts: Vec<f32> = vec![0.0, 0.1, 0.2, 10.0, 10.1, 10.2, 20.0, 20.1, 20.2];
+        let n = pts.len();
+        let mut d = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                d[i * n + j] = (pts[i] - pts[j]).abs();
+            }
+        }
+        (DistMatrix { n, d }, vec![1, 4, 7]) // cluster centers
+    }
+
+    #[test]
+    fn select_clamps_and_identity() {
+        let (dist, _) = clustered_dist();
+        let mut rng = Rng::new(1);
+        let id = select(&dist, 100, Method::FasterPam, &mut rng);
+        assert_eq!(id.len(), 9);
+        assert_eq!(id.total_weight(), 9.0);
+        assert_eq!(id.cost, 0.0);
+    }
+
+    #[test]
+    fn every_method_solves_plantable_clusters() {
+        let (dist, want) = clustered_dist();
+        for method in [Method::FasterPam, Method::Pam, Method::GreedyKCenter] {
+            let mut rng = Rng::new(2);
+            let cs = select(&dist, 3, method, &mut rng);
+            assert_eq!(cs.len(), 3, "{method:?}");
+            // One medoid per cluster (any member of the cluster is fine for
+            // k-center; PAM/FasterPAM should find the exact centers).
+            let clusters: Vec<usize> = cs.indices.iter().map(|&i| i / 3).collect();
+            let mut c = clusters.clone();
+            c.dedup();
+            assert_eq!(c.len(), 3, "{method:?}: {:?}", cs.indices);
+            if method != Method::GreedyKCenter {
+                assert_eq!(cs.indices, want, "{method:?}");
+            }
+            assert_eq!(cs.total_weight(), 9.0, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn deltas_count_assignments() {
+        let (dist, _) = clustered_dist();
+        let cs = finalize(&dist, vec![1, 4, 7]);
+        assert_eq!(cs.deltas, vec![3.0, 3.0, 3.0]);
+        assert!((cs.cost - 6.0 * 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn objective_matches_finalize_cost() {
+        let (dist, _) = clustered_dist();
+        let cs = finalize(&dist, vec![0, 3, 8]);
+        assert!((objective(&dist, &cs.indices) - cs.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::FasterPam, Method::Pam, Method::Random, Method::GreedyKCenter] {
+            assert_eq!(Method::parse(m.label()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn empty_input() {
+        let dist = DistMatrix { n: 0, d: vec![] };
+        let mut rng = Rng::new(3);
+        let cs = select(&dist, 4, Method::FasterPam, &mut rng);
+        assert!(cs.is_empty());
+    }
+}

@@ -1,0 +1,120 @@
+//! Classic PAM (Kaufman & Rousseeuw) — BUILD + best-improvement SWAP.
+//!
+//! Ablation baseline against [`super::fasterpam`]: same BUILD, but each
+//! SWAP iteration evaluates all (medoid, candidate) pairs and applies only
+//! the single best improving swap — O(n²k) per iteration. Kept for the
+//! `ablation_coreset` bench (solution quality parity, runtime gap) and as
+//! a correctness oracle for FasterPAM on mid-size instances.
+
+use super::fasterpam::build_init;
+use super::DistMatrix;
+use crate::util::rng::Rng;
+
+/// ΔTD of swapping `medoids[mi]` out for candidate `c`.
+fn swap_delta(dist: &DistMatrix, medoids: &[usize], mi: usize, c: usize) -> f64 {
+    let n = dist.n;
+    let mut delta = 0.0f64;
+    for j in 0..n {
+        // current nearest distance, and nearest excluding the removed medoid
+        let mut d1 = f32::INFINITY;
+        let mut d1_wo = f32::INFINITY;
+        for (idx, &m) in medoids.iter().enumerate() {
+            let d = dist.get(j, m);
+            d1 = d1.min(d);
+            if idx != mi {
+                d1_wo = d1_wo.min(d);
+            }
+        }
+        let new = d1_wo.min(dist.get(j, c));
+        delta += (new - d1) as f64;
+    }
+    delta
+}
+
+/// Run PAM; returns medoid indices.
+pub fn solve(dist: &DistMatrix, k: usize, _rng: &mut Rng) -> Vec<usize> {
+    let n = dist.n;
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut medoids = build_init(dist, k);
+    let max_iters = 20 * k + 10;
+    for _ in 0..max_iters {
+        let mut best = (0usize, 0usize, -1e-9f64);
+        for c in 0..n {
+            if medoids.contains(&c) {
+                continue;
+            }
+            for mi in 0..k {
+                let d = swap_delta(dist, &medoids, mi, c);
+                if d < best.2 {
+                    best = (mi, c, d);
+                }
+            }
+        }
+        if best.2 >= -1e-9 {
+            break;
+        }
+        medoids[best.0] = best.1;
+    }
+    medoids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{distance::from_features_cpu, objective};
+
+    fn random_dist(rng: &mut Rng, n: usize, dim: usize) -> DistMatrix {
+        let f: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        from_features_cpu(&f, n, dim)
+    }
+
+    #[test]
+    fn pam_never_worse_than_build() {
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let dist = random_dist(&mut rng, 40, 4);
+            let build_cost = objective(&dist, &build_init(&dist, 5));
+            let pam_cost = objective(&dist, &solve(&dist, 5, &mut rng));
+            assert!(pam_cost <= build_cost + 1e-9, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pam_and_fasterpam_reach_similar_quality() {
+        for seed in 0..5 {
+            let mut rng = Rng::new(50 + seed);
+            let dist = random_dist(&mut rng, 60, 5);
+            let pam_cost = objective(&dist, &solve(&dist, 6, &mut rng));
+            let fp_cost = objective(&dist, &super::super::fasterpam::solve(&dist, 6, &mut rng));
+            // Both are local optima of the same neighbourhood structure.
+            let ratio = fp_cost / pam_cost;
+            assert!((0.9..=1.1).contains(&ratio), "seed {seed}: ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn swap_delta_matches_objective_difference() {
+        let mut rng = Rng::new(3);
+        let dist = random_dist(&mut rng, 25, 3);
+        let medoids = build_init(&dist, 4);
+        let before = objective(&dist, &medoids);
+        for c in [0usize, 7, 19] {
+            if medoids.contains(&c) {
+                continue;
+            }
+            for mi in 0..4 {
+                let mut swapped = medoids.clone();
+                swapped[mi] = c;
+                let after = objective(&dist, &swapped);
+                let delta = swap_delta(&dist, &medoids, mi, c);
+                assert!(
+                    (delta - (after - before)).abs() < 1e-6,
+                    "mi {mi} c {c}: {delta} vs {}",
+                    after - before
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Uniform-random subset baseline for the coreset ablation.
+//!
+//! Picks k distinct samples uniformly; assignment/weights still come from
+//! [`super::finalize`], so only the *selection* quality differs from the
+//! k-medoids solvers. This is the "coreset = random minibatch" strawman
+//! the gradient-matching literature compares against.
+
+use super::DistMatrix;
+use crate::util::rng::Rng;
+
+pub fn solve(dist: &DistMatrix, k: usize, rng: &mut Rng) -> Vec<usize> {
+    rng.choose_k(dist.n, k.min(dist.n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::objective;
+    use crate::coreset::distance::from_features_cpu;
+
+    #[test]
+    fn picks_k_distinct() {
+        let dist = DistMatrix { n: 30, d: vec![0.0; 900] };
+        let mut rng = Rng::new(1);
+        let m = solve(&dist, 7, &mut rng);
+        let mut s = m.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 7);
+    }
+
+    #[test]
+    fn usually_worse_than_fasterpam_on_clustered_data() {
+        // 4 tight clusters; random often misses one, FasterPAM never does.
+        let mut rng = Rng::new(2);
+        let mut f = Vec::new();
+        for c in 0..4 {
+            for _ in 0..12 {
+                f.push(10.0 * c as f32 + 0.05 * rng.normal() as f32);
+                f.push(10.0 * c as f32 + 0.05 * rng.normal() as f32);
+            }
+        }
+        let dist = from_features_cpu(&f, 48, 2);
+        let fp = objective(&dist, &super::super::fasterpam::solve(&dist, 4, &mut rng));
+        let mut rnd_mean = 0.0;
+        for _ in 0..10 {
+            rnd_mean += objective(&dist, &solve(&dist, 4, &mut rng)) / 10.0;
+        }
+        assert!(fp < rnd_mean, "fp {fp} not below random mean {rnd_mean}");
+    }
+}

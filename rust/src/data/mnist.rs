@@ -1,0 +1,209 @@
+//! FedMNIST benchmark — procedural 28×28 digit images, paper section 6.1
+//! dataset 1.
+//!
+//! **Substitution (see DESIGN.md):** real MNIST is not available offline,
+//! so digits are rendered from 7×5 structural glyph templates, upscaled to
+//! 20×28 with random sub-glyph shifts, stroke-intensity jitter, and pixel
+//! noise. What the experiment needs from MNIST is (a) a learnable 10-class
+//! image task for a small CNN and (b) extreme label heterogeneity across
+//! 1,000 clients (two digits each, power-law sizes). Both are preserved;
+//! coreset behaviour depends on gradient geometry, not pixel provenance.
+
+use super::partition::{label_assignment, power_law_sizes};
+use super::types::{FedDataset, Samples, Shard};
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 28;
+pub const CLASSES: usize = 10;
+
+/// Classic 7-row × 5-col seven-segment-style glyphs.
+const GLYPHS: [[&str; 7]; 10] = [
+    ["01110", "10001", "10011", "10101", "11001", "10001", "01110"], // 0
+    ["00100", "01100", "00100", "00100", "00100", "00100", "01110"], // 1
+    ["01110", "10001", "00001", "00110", "01000", "10000", "11111"], // 2
+    ["01110", "10001", "00001", "00110", "00001", "10001", "01110"], // 3
+    ["00010", "00110", "01010", "10010", "11111", "00010", "00010"], // 4
+    ["11111", "10000", "11110", "00001", "00001", "10001", "01110"], // 5
+    ["01110", "10000", "10000", "11110", "10001", "10001", "01110"], // 6
+    ["11111", "00001", "00010", "00100", "01000", "01000", "01000"], // 7
+    ["01110", "10001", "10001", "01110", "10001", "10001", "01110"], // 8
+    ["01110", "10001", "10001", "01111", "00001", "00001", "01110"], // 9
+];
+
+/// Render one digit: upscale the 7×5 glyph by 3× to 21×15, place it at a
+/// jittered offset inside 28×28, apply stroke intensity and noise.
+pub fn render_digit(rng: &mut Rng, digit: usize) -> Vec<f32> {
+    debug_assert!(digit < 10);
+    let mut img = vec![0.0f32; IMG * IMG];
+    let glyph = &GLYPHS[digit];
+    let scale = 3usize;
+    let gh = 7 * scale; // 21
+    let gw = 5 * scale; // 15
+    // jittered placement, always fully inside the frame
+    let max_dy = IMG - gh; // 7
+    let max_dx = IMG - gw; // 13
+    let dy = rng.below(max_dy + 1);
+    let dx = rng.below(max_dx + 1);
+    let intensity = 0.75 + 0.25 * rng.f32(); // stroke brightness jitter
+
+    for (r, row) in glyph.iter().enumerate() {
+        for (c, ch) in row.bytes().enumerate() {
+            if ch == b'1' {
+                for sy in 0..scale {
+                    for sx in 0..scale {
+                        let y = dy + r * scale + sy;
+                        let x = dx + c * scale + sx;
+                        img[y * IMG + x] = intensity;
+                    }
+                }
+            }
+        }
+    }
+    // additive pixel noise + slight blur-like edge softening via noise
+    for px in img.iter_mut() {
+        let noise = (rng.f32() - 0.5) * 0.2;
+        *px = (*px + noise).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Generation parameters. Paper scale: 1,000 clients, mean 69 samples.
+#[derive(Clone, Copy, Debug)]
+pub struct MnistConfig {
+    pub n_clients: usize,
+    pub mean_samples: f64,
+    pub digits_per_client: usize,
+    pub test_samples: usize,
+    pub seed: u64,
+}
+
+impl Default for MnistConfig {
+    fn default() -> Self {
+        MnistConfig {
+            n_clients: 1000,
+            mean_samples: 69.0,
+            digits_per_client: 2,
+            test_samples: 2048,
+            seed: 7,
+        }
+    }
+}
+
+pub fn generate(cfg: &MnistConfig) -> FedDataset {
+    let mut rng = Rng::new(cfg.seed).split(0x33);
+    let sizes = power_law_sizes(&mut rng, cfg.n_clients, cfg.mean_samples, 1.4, 8);
+    let digit_sets = label_assignment(&mut rng, cfg.n_clients, CLASSES, cfg.digits_per_client);
+
+    let mut clients = Vec::with_capacity(cfg.n_clients);
+    for i in 0..cfg.n_clients {
+        let mut crng = rng.split(i as u64 + 1);
+        let n = sizes[i];
+        let mut xs = Vec::with_capacity(n * IMG * IMG);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let digit = digit_sets[i][crng.below(cfg.digits_per_client)];
+            xs.extend(render_digit(&mut crng, digit));
+            ys.push(digit as i32);
+        }
+        clients.push(Shard {
+            samples: Samples::Dense { x: xs, dim: IMG * IMG },
+            labels: ys,
+        });
+    }
+
+    // Balanced global test set over all 10 digits.
+    let mut trng = rng.split(0x7E57);
+    let mut xs = Vec::with_capacity(cfg.test_samples * IMG * IMG);
+    let mut ys = Vec::with_capacity(cfg.test_samples);
+    for t in 0..cfg.test_samples {
+        let digit = t % CLASSES;
+        xs.extend(render_digit(&mut trng, digit));
+        ys.push(digit as i32);
+    }
+
+    FedDataset {
+        model: "mnist".to_string(),
+        clients,
+        test: Shard {
+            samples: Samples::Dense { x: xs, dim: IMG * IMG },
+            labels: ys,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MnistConfig {
+        MnistConfig {
+            n_clients: 20,
+            mean_samples: 12.0,
+            test_samples: 40,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn render_is_in_unit_range_and_nonempty() {
+        let mut rng = Rng::new(3);
+        for d in 0..10 {
+            let img = render_digit(&mut rng, d);
+            assert_eq!(img.len(), IMG * IMG);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            let lit = img.iter().filter(|&&p| p > 0.5).count();
+            assert!(lit > 30, "digit {d} has only {lit} bright pixels");
+        }
+    }
+
+    #[test]
+    fn digits_are_mutually_distinguishable() {
+        // Mean images of different digits must differ far more than two
+        // renders of the same digit — the task must be learnable.
+        let mut rng = Rng::new(5);
+        let mean_img = |d: usize, rng: &mut Rng| -> Vec<f32> {
+            let mut acc = vec![0.0f32; IMG * IMG];
+            for _ in 0..20 {
+                for (a, p) in acc.iter_mut().zip(render_digit(rng, d)) {
+                    *a += p / 20.0;
+                }
+            }
+            acc
+        };
+        let l2 = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        let m1 = mean_img(1, &mut rng);
+        let m1b = mean_img(1, &mut rng);
+        let m8 = mean_img(8, &mut rng);
+        assert!(l2(&m1, &m8) > 1.5 * l2(&m1, &m1b), "1 vs 8 not separable");
+    }
+
+    #[test]
+    fn each_client_has_exactly_two_digits() {
+        let ds = generate(&small());
+        for c in &ds.clients {
+            let mut labels: Vec<i32> = c.labels.clone();
+            labels.sort_unstable();
+            labels.dedup();
+            assert!(labels.len() <= 2, "client has {} digits", labels.len());
+        }
+    }
+
+    #[test]
+    fn test_set_covers_all_digits() {
+        let ds = generate(&small());
+        let mut seen = [false; 10];
+        for &y in &ds.test.labels {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&small());
+        let b = generate(&small());
+        assert_eq!(a.clients[3].labels, b.clients[3].labels);
+    }
+}

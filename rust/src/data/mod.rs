@@ -1,0 +1,177 @@
+//! Datasets: the three paper benchmarks (section 6.1) plus the partitioning
+//! machinery that creates the statistical heterogeneity of Table 1 / Fig. 2.
+//!
+//! * [`synthetic`] — FedProx Synthetic(α, β), 30 clients, logistic regression.
+//! * [`mnist`] — FedMNIST, 1,000 clients, two digits each, small CNN.
+//! * [`shakespeare`] — next-char prediction, 143 speaking-role clients, LSTM.
+//!
+//! Each generator returns a [`FedDataset`] tying shards to the L2 model that
+//! consumes them ("logreg" / "mnist" / "shake" in the artifact manifest).
+
+pub mod mnist;
+pub mod partition;
+pub mod shakespeare;
+pub mod synthetic;
+pub mod types;
+
+pub use types::{FedDataset, Samples, Shard};
+
+use crate::util::rng::Rng;
+
+/// Which paper benchmark to generate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Benchmark {
+    /// Synthetic(α, β) — FedProx generator, logistic regression.
+    Synthetic { alpha: f64, beta: f64 },
+    /// FedMNIST — label-skewed digit images, CNN.
+    Mnist,
+    /// Shakespeare — per-role next-char prediction, LSTM.
+    Shakespeare,
+}
+
+impl Benchmark {
+    /// Parse "synthetic(1,1)" / "synthetic_0.5_0.5" / "mnist" / "shakespeare".
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "mnist" => return Some(Benchmark::Mnist),
+            "shakespeare" | "shake" => return Some(Benchmark::Shakespeare),
+            _ => {}
+        }
+        if let Some(rest) = t.strip_prefix("synthetic") {
+            let args: Vec<f64> = rest
+                .trim_matches(|c: char| "()_ ".contains(c))
+                .split(|c: char| ",_".contains(c))
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect();
+            return match args.as_slice() {
+                [] => Some(Benchmark::Synthetic { alpha: 1.0, beta: 1.0 }),
+                [a, b] => Some(Benchmark::Synthetic { alpha: *a, beta: *b }),
+                _ => None,
+            };
+        }
+        None
+    }
+
+    /// Manifest model key consumed by the runtime.
+    pub fn model_key(&self) -> &'static str {
+        match self {
+            Benchmark::Synthetic { .. } => "logreg",
+            Benchmark::Mnist => "mnist",
+            Benchmark::Shakespeare => "shake",
+        }
+    }
+
+    /// Canonical display name (paper column headers).
+    pub fn label(&self) -> String {
+        match self {
+            Benchmark::Synthetic { alpha, beta } => format!("Synthetic({alpha},{beta})"),
+            Benchmark::Mnist => "MNIST".to_string(),
+            Benchmark::Shakespeare => "Shakespeare".to_string(),
+        }
+    }
+}
+
+/// Scale knob for generation: `1.0` reproduces the paper's Table 1 sizes;
+/// smaller values shrink client counts and per-client sizes proportionally
+/// (used by tests/examples to stay CI-tractable while preserving the
+/// power-law shape and label skew).
+pub fn generate(bench: Benchmark, scale: f64, vocab: &[char], seed: u64) -> FedDataset {
+    assert!(scale > 0.0 && scale <= 1.0, "scale in (0, 1]");
+    let sc = |n: usize, min: usize| ((n as f64 * scale).round() as usize).max(min);
+    match bench {
+        Benchmark::Synthetic { alpha, beta } => synthetic::generate(&synthetic::SyntheticConfig {
+            alpha,
+            beta,
+            n_clients: sc(30, 4),
+            mean_samples: (670.0 * scale).max(24.0),
+            test_samples: sc(1024, 64),
+            seed,
+        }),
+        Benchmark::Mnist => mnist::generate(&mnist::MnistConfig {
+            n_clients: sc(1000, 10),
+            mean_samples: 69.0, // per-client sizes stay paper-shaped
+            digits_per_client: 2,
+            test_samples: sc(2048, 80),
+            seed,
+        }),
+        Benchmark::Shakespeare => shakespeare::generate(&shakespeare::ShakespeareConfig {
+            n_clients: sc(143, 6),
+            mean_samples: (3616.0 * scale).max(48.0),
+            test_samples: sc(1024, 64),
+            seed,
+            vocab: vocab.to_vec(),
+        }),
+    }
+}
+
+/// All five paper benchmark columns of Table 2, in paper order.
+pub fn paper_benchmarks() -> Vec<Benchmark> {
+    vec![
+        Benchmark::Mnist,
+        Benchmark::Shakespeare,
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        Benchmark::Synthetic { alpha: 0.5, beta: 0.5 },
+        Benchmark::Synthetic { alpha: 0.0, beta: 0.0 },
+    ]
+}
+
+/// Deterministic split of a shard index set for local hold-outs.
+pub fn holdout_split(rng: &mut Rng, n: usize, frac: f64) -> (Vec<usize>, Vec<usize>) {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let k = ((n as f64) * frac).round() as usize;
+    let held = idx.split_off(n - k.min(n));
+    (idx, held)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_benchmarks() {
+        assert_eq!(Benchmark::parse("mnist"), Some(Benchmark::Mnist));
+        assert_eq!(Benchmark::parse("Shakespeare"), Some(Benchmark::Shakespeare));
+        assert_eq!(
+            Benchmark::parse("synthetic(0.5, 0.5)"),
+            Some(Benchmark::Synthetic { alpha: 0.5, beta: 0.5 })
+        );
+        assert_eq!(
+            Benchmark::parse("synthetic_1_1"),
+            Some(Benchmark::Synthetic { alpha: 1.0, beta: 1.0 })
+        );
+        assert_eq!(
+            Benchmark::parse("synthetic"),
+            Some(Benchmark::Synthetic { alpha: 1.0, beta: 1.0 })
+        );
+        assert_eq!(Benchmark::parse("cifar"), None);
+    }
+
+    #[test]
+    fn model_keys_match_manifest_names() {
+        for b in paper_benchmarks() {
+            assert!(["logreg", "mnist", "shake"].contains(&b.model_key()));
+        }
+    }
+
+    #[test]
+    fn scaled_generation_shrinks() {
+        let vocab: Vec<char> = "\x00 abc".chars().collect();
+        let small = generate(Benchmark::Synthetic { alpha: 0.0, beta: 0.0 }, 0.2, &vocab, 1);
+        assert_eq!(small.num_clients(), 6);
+        assert_eq!(small.model, "logreg");
+    }
+
+    #[test]
+    fn holdout_split_partitions() {
+        let mut rng = Rng::new(9);
+        let (train, held) = holdout_split(&mut rng, 100, 0.2);
+        assert_eq!(train.len(), 80);
+        assert_eq!(held.len(), 20);
+        let mut all: Vec<usize> = train.iter().chain(&held).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,225 @@
+//! Core dataset types shared by all three benchmarks.
+//!
+//! A federated dataset is a set of per-client shards plus a held-out global
+//! test set. Samples are stored flat (row-major) to match the fixed-shape
+//! HLO batches; `gather_batch` assembles padded training batches directly
+//! into the runtime's `XBatch` representation.
+
+use crate::runtime::XBatch;
+
+/// Per-client (or test) sample storage.
+#[derive(Clone, Debug)]
+pub enum Samples {
+    /// Dense f32 features, `dim` values per sample.
+    Dense { x: Vec<f32>, dim: usize },
+    /// Token sequences, `seq` ids per sample; labels are also per-position.
+    Tokens { x: Vec<i32>, seq: usize },
+}
+
+impl Samples {
+    pub fn num_samples(&self) -> usize {
+        match self {
+            Samples::Dense { x, dim } => {
+                if *dim == 0 {
+                    0
+                } else {
+                    x.len() / dim
+                }
+            }
+            Samples::Tokens { x, seq } => {
+                if *seq == 0 {
+                    0
+                } else {
+                    x.len() / seq
+                }
+            }
+        }
+    }
+
+    /// Elements per sample (x side).
+    pub fn x_elems(&self) -> usize {
+        match self {
+            Samples::Dense { dim, .. } => *dim,
+            Samples::Tokens { seq, .. } => *seq,
+        }
+    }
+}
+
+/// One client's local shard.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub samples: Samples,
+    /// Dense: one label per sample. Tokens: `seq` labels per sample
+    /// (next-char targets).
+    pub labels: Vec<i32>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.samples.num_samples()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Labels per sample.
+    pub fn y_elems(&self) -> usize {
+        match &self.samples {
+            Samples::Dense { .. } => 1,
+            Samples::Tokens { seq, .. } => *seq,
+        }
+    }
+
+    /// Primary label of a sample (Dense: the label; Tokens: first target) —
+    /// used by partition statistics and label-skew checks.
+    pub fn primary_label(&self, i: usize) -> i32 {
+        self.labels[i * self.y_elems()]
+    }
+
+    /// Assemble a padded batch from sample indices. Returns (x, y, weights)
+    /// where `weights[i] = δ_i` for real rows and 0.0 for padding. `deltas`
+    /// supplies coreset weights (None ⇒ every picked sample weighs 1).
+    pub fn gather_batch(
+        &self,
+        idxs: &[usize],
+        deltas: Option<&[f32]>,
+        batch: usize,
+    ) -> (XBatch, Vec<i32>, Vec<f32>) {
+        assert!(idxs.len() <= batch, "{} > batch {}", idxs.len(), batch);
+        let ye = self.y_elems();
+        let mut y = vec![0i32; batch * ye];
+        let mut w = vec![0.0f32; batch];
+        for (row, &i) in idxs.iter().enumerate() {
+            debug_assert!(i < self.len());
+            y[row * ye..(row + 1) * ye].copy_from_slice(&self.labels[i * ye..(i + 1) * ye]);
+            w[row] = deltas.map(|d| d[row]).unwrap_or(1.0);
+        }
+        let x = match &self.samples {
+            Samples::Dense { x, dim } => {
+                let mut out = vec![0.0f32; batch * dim];
+                for (row, &i) in idxs.iter().enumerate() {
+                    out[row * dim..(row + 1) * dim].copy_from_slice(&x[i * dim..(i + 1) * dim]);
+                }
+                XBatch::F32(out)
+            }
+            Samples::Tokens { x, seq } => {
+                let mut out = vec![0i32; batch * seq];
+                for (row, &i) in idxs.iter().enumerate() {
+                    out[row * seq..(row + 1) * seq].copy_from_slice(&x[i * seq..(i + 1) * seq]);
+                }
+                XBatch::I32(out)
+            }
+        };
+        (x, y, w)
+    }
+}
+
+/// A complete federated benchmark: shards + test set + which L2 model runs it.
+#[derive(Clone, Debug)]
+pub struct FedDataset {
+    /// Manifest model key: "logreg" | "mnist" | "shake".
+    pub model: String,
+    pub clients: Vec<Shard>,
+    pub test: Shard,
+}
+
+impl FedDataset {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.clients.iter().map(|c| c.len()).collect()
+    }
+
+    /// Client weights p_i = m_i / Σ m_j (paper Eq. 1).
+    pub fn client_weights(&self) -> Vec<f64> {
+        let total = self.total_samples() as f64;
+        self.clients.iter().map(|c| c.len() as f64 / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_shard(n: usize, dim: usize) -> Shard {
+        Shard {
+            samples: Samples::Dense {
+                x: (0..n * dim).map(|i| i as f32).collect(),
+                dim,
+            },
+            labels: (0..n as i32).collect(),
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let s = dense_shard(5, 3);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.y_elems(), 1);
+        assert_eq!(s.primary_label(2), 2);
+    }
+
+    #[test]
+    fn gather_pads_with_zero_weight() {
+        let s = dense_shard(3, 2);
+        let (x, y, w) = s.gather_batch(&[2, 0], None, 4);
+        match x {
+            XBatch::F32(v) => {
+                assert_eq!(v.len(), 8);
+                assert_eq!(&v[0..2], &[4.0, 5.0]); // sample 2
+                assert_eq!(&v[2..4], &[0.0, 1.0]); // sample 0
+                assert_eq!(&v[4..], &[0.0; 4]); // padding
+            }
+            _ => panic!("dtype"),
+        }
+        assert_eq!(y, vec![2, 0, 0, 0]);
+        assert_eq!(w, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_applies_deltas() {
+        let s = dense_shard(3, 2);
+        let (_, _, w) = s.gather_batch(&[1, 2], Some(&[3.0, 5.0]), 4);
+        assert_eq!(w, vec![3.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn token_shard_roundtrip() {
+        let s = Shard {
+            samples: Samples::Tokens {
+                x: vec![1, 2, 3, 4, 5, 6],
+                seq: 3,
+            },
+            labels: vec![2, 3, 4, 5, 6, 7],
+        };
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.y_elems(), 3);
+        assert_eq!(s.primary_label(1), 5);
+        let (x, y, w) = s.gather_batch(&[1], None, 2);
+        match x {
+            XBatch::I32(v) => assert_eq!(v, vec![4, 5, 6, 0, 0, 0]),
+            _ => panic!("dtype"),
+        }
+        assert_eq!(y, vec![5, 6, 7, 0, 0, 0]);
+        assert_eq!(w, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn dataset_weights_sum_to_one() {
+        let ds = FedDataset {
+            model: "logreg".into(),
+            clients: vec![dense_shard(2, 2), dense_shard(6, 2)],
+            test: dense_shard(2, 2),
+        };
+        let w = ds.client_weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[1] - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Model checkpointing: persist/restore the global parameter vector so
+//! long runs (paper scale: 100 rounds × 1,000 clients) can resume, and so
+//! trained models can be handed to the serving/eval paths.
+//!
+//! Format: little-endian binary, versioned and checksummed —
+//! `FEDC | u32 version | u64 model-name-len | name | u64 round |
+//!  u64 param-count | f32×N | u64 fnv1a-checksum`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"FEDC";
+const VERSION: u32 = 1;
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Manifest model key ("logreg" | "mnist" | "shake").
+    pub model: String,
+    /// Rounds completed when saved.
+    pub round: u64,
+    pub params: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn param_bytes(params: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+impl Checkpoint {
+    pub fn new(model: impl Into<String>, round: u64, params: Vec<f32>) -> Checkpoint {
+        Checkpoint { model: model.into(), round, params }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        let name = self.model.as_bytes();
+        f.write_all(&(name.len() as u64).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&self.round.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        let pb = param_bytes(&self.params);
+        f.write_all(&pb)?;
+        f.write_all(&fnv1a(&pb).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a FedCore checkpoint", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != VERSION {
+            bail!("{}: unsupported checkpoint version {version}", path.display());
+        }
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let name_len = u64::from_le_bytes(u64b) as usize;
+        if name_len > 256 {
+            bail!("{}: implausible model-name length {name_len}", path.display());
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        f.read_exact(&mut u64b)?;
+        let round = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u64b)?;
+        let count = u64::from_le_bytes(u64b) as usize;
+        if count > (1 << 30) {
+            bail!("{}: implausible parameter count {count}", path.display());
+        }
+        let mut pb = vec![0u8; count * 4];
+        f.read_exact(&mut pb)?;
+        f.read_exact(&mut u64b)?;
+        let want = u64::from_le_bytes(u64b);
+        let got = fnv1a(&pb);
+        if want != got {
+            bail!("{}: checksum mismatch (corrupted checkpoint)", path.display());
+        }
+        let params = pb
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            model: String::from_utf8(name).context("model name not utf-8")?,
+            round,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fedcore_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint::new("logreg", 42, vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let path = tmp("roundtrip");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let ck = Checkpoint::new("mnist", 1, vec![1.0; 64]);
+        let path = tmp("corrupt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_params_ok() {
+        let ck = Checkpoint::new("logreg", 0, vec![]);
+        let path = tmp("empty");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().params.len(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,265 @@
+//! Client-side execution: carry out a [`LocalPlan`] against the PJRT
+//! runtime — minibatch SGD epochs, gradient-feature extraction, coreset
+//! construction, and coreset-weighted training (paper Algorithm 1 lines
+//! 6–13).
+
+use anyhow::Result;
+
+use super::plan::LocalPlan;
+use crate::coreset::{self, Coreset, DistMatrix, Method};
+use crate::data::Shard;
+use crate::runtime::{ModelInfo, Runtime};
+use crate::sim::Fleet;
+use crate::util::rng::Rng;
+
+/// Below this set size the pure-CPU distance path beats tile padding; the
+/// Pallas tile is 128×128, so tiny clients would waste >90% of each call.
+pub const TILED_DIST_MIN: usize = 96;
+
+/// What a client hands back to the server at the end of a round.
+#[derive(Clone, Debug)]
+pub struct ClientOutcome {
+    /// Round-end local parameters (None ⇒ dropped, nothing to aggregate).
+    pub params: Option<Vec<f32>>,
+    /// Mean training loss over the final epoch's batches.
+    pub train_loss: f64,
+    /// Simulated seconds spent (from the plan).
+    pub sim_time: f64,
+    /// Whether a coreset was built this round.
+    pub used_coreset: bool,
+    /// Coreset compression b/m (1.0 when training full-set).
+    pub compression: f64,
+    /// k-medoids objective of the built coreset (0 when unused).
+    pub coreset_cost: f64,
+}
+
+/// One epoch of minibatch SGD over `idxs` (with optional per-sample δ
+/// weights aligned to `idxs`). Returns the mean batch loss.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch(
+    rt: &Runtime,
+    model: &ModelInfo,
+    shard: &Shard,
+    global: &[f32],
+    params: &mut Vec<f32>,
+    idxs: &[usize],
+    deltas: Option<&[f32]>,
+    lr: f32,
+    mu: f32,
+    limit: Option<usize>,
+) -> Result<f64> {
+    let b = rt.manifest().train_batch;
+    let take = limit.unwrap_or(idxs.len()).min(idxs.len());
+    let mut loss_sum = 0.0f64;
+    let mut batches = 0usize;
+    let mut start = 0usize;
+    while start < take {
+        let end = (start + b).min(take);
+        let chunk = &idxs[start..end];
+        let chunk_deltas: Option<Vec<f32>> =
+            deltas.map(|d| (start..end).map(|i| d[i]).collect());
+        let (x, y, w) = shard.gather_batch(chunk, chunk_deltas.as_deref(), b);
+        let out = rt.train_step(model, params, global, &x, &y, &w, lr, mu)?;
+        *params = out.params;
+        loss_sum += out.loss as f64;
+        batches += 1;
+        start = end;
+    }
+    Ok(if batches > 0 { loss_sum / batches as f64 } else { f64::NAN })
+}
+
+/// Per-sample gradient features for the whole shard (the §4.3 d̂ inputs),
+/// batched through the `feat` artifact; returns row-major [m, feature_dim].
+pub fn gather_features(
+    rt: &Runtime,
+    model: &ModelInfo,
+    shard: &Shard,
+    params: &[f32],
+) -> Result<Vec<f32>> {
+    let f = rt.manifest().feat_batch;
+    let c = rt.manifest().feature_dim;
+    let m = shard.len();
+    let mut features = vec![0.0f32; m * c];
+    let idxs: Vec<usize> = (0..m).collect();
+    let mut start = 0usize;
+    while start < m {
+        let end = (start + f).min(m);
+        let chunk = &idxs[start..end];
+        let (x, y, _) = shard.gather_batch(chunk, None, f);
+        let out = rt.grad_features(model, params, &x, &y)?;
+        let rows = end - start;
+        features[start * c..end * c].copy_from_slice(&out.features[..rows * c]);
+        start = end;
+    }
+    Ok(features)
+}
+
+/// Build the round's coreset: features → pairwise distances (Pallas-tiled
+/// when the set is big enough to fill tiles) → k-medoids.
+pub fn build_coreset(
+    rt: &Runtime,
+    model: &ModelInfo,
+    shard: &Shard,
+    params: &[f32],
+    budget: usize,
+    method: Method,
+    rng: &mut Rng,
+) -> Result<Coreset> {
+    let m = shard.len();
+    let features = gather_features(rt, model, shard, params)?;
+    let dist = build_dist(rt, &features, m)?;
+    Ok(coreset::select(&dist, budget, method, rng))
+}
+
+/// Distance-matrix dispatch: Pallas tile path for large sets, CPU otherwise.
+pub fn build_dist(rt: &Runtime, features: &[f32], m: usize) -> Result<DistMatrix> {
+    let c = rt.manifest().feature_dim;
+    if m >= TILED_DIST_MIN {
+        coreset::distance::from_features_tiled(rt, features, m)
+    } else {
+        Ok(coreset::distance::from_features_cpu(features, m, c))
+    }
+}
+
+/// §4.3 static (input-space) features for the convex-model path: dense
+/// inputs are used as-is (d̃ⱼₖ = ‖xⱼ − xₖ‖); token sequences are summarized
+/// by their character histogram, the natural input-space geometry for a
+/// bag-of-chars view. Returns (features, dim).
+pub fn static_features(shard: &Shard, vocab_size: usize) -> (Vec<f32>, usize) {
+    match &shard.samples {
+        crate::data::Samples::Dense { x, dim } => (x.clone(), *dim),
+        crate::data::Samples::Tokens { x, seq } => {
+            let m = shard.len();
+            let mut out = vec![0.0f32; m * vocab_size];
+            for s in 0..m {
+                for k in 0..*seq {
+                    let id = x[s * seq + k] as usize;
+                    if id < vocab_size {
+                        out[s * vocab_size + id] += 1.0 / *seq as f32;
+                    }
+                }
+            }
+            (out, vocab_size)
+        }
+    }
+}
+
+/// Build the §4.3 *static* coreset once per client: input-space distances,
+/// no model in the loop, reusable across every round (budgets are fixed
+/// because cᵢ, mᵢ, τ are).
+pub fn build_static_coreset(
+    shard: &Shard,
+    vocab_size: usize,
+    budget: usize,
+    method: Method,
+    rng: &mut Rng,
+) -> Coreset {
+    let m = shard.len();
+    let (features, dim) = static_features(shard, vocab_size);
+    let dist = coreset::distance::from_inputs_static(&features, m, dim);
+    coreset::select(&dist, budget, method, rng)
+}
+
+/// Execute `plan` for one client and return its round outcome.
+///
+/// `precomputed` short-circuits coreset construction with a cached §4.3
+/// static coreset (the engine owns the per-client cache); `None` runs the
+/// paper's default adaptive path — fresh gradient features every round.
+#[allow(clippy::too_many_arguments)]
+pub fn run_client(
+    rt: &Runtime,
+    model: &ModelInfo,
+    shard: &Shard,
+    fleet: &Fleet,
+    client: usize,
+    global: &[f32],
+    plan: &LocalPlan,
+    lr: f32,
+    mu: f32,
+    method: Method,
+    precomputed: Option<&Coreset>,
+    rng: &mut Rng,
+) -> Result<ClientOutcome> {
+    let m = shard.len();
+    let sim_time = plan.sim_time(fleet, client);
+    let epochs = fleet.epochs;
+
+    let mut shuffled: Vec<usize> = (0..m).collect();
+    let mut params = global.to_vec();
+    let mut loss = f64::NAN;
+
+    match *plan {
+        LocalPlan::Dropped => {
+            return Ok(ClientOutcome {
+                params: None,
+                train_loss: f64::NAN,
+                sim_time,
+                used_coreset: false,
+                compression: 1.0,
+                coreset_cost: 0.0,
+            });
+        }
+        LocalPlan::FullSet { epochs: e } => {
+            for _ in 0..e {
+                rng.shuffle(&mut shuffled);
+                loss = run_epoch(rt, model, shard, global, &mut params, &shuffled, None, lr, mu, None)?;
+            }
+        }
+        LocalPlan::Truncated { epochs: e, tail_samples } => {
+            for _ in 0..e {
+                rng.shuffle(&mut shuffled);
+                loss = run_epoch(rt, model, shard, global, &mut params, &shuffled, None, lr, mu, None)?;
+            }
+            if tail_samples > 0 {
+                rng.shuffle(&mut shuffled);
+                let tail_loss = run_epoch(
+                    rt, model, shard, global, &mut params, &shuffled, None, lr, mu,
+                    Some(tail_samples),
+                )?;
+                if loss.is_nan() {
+                    loss = tail_loss;
+                }
+            }
+        }
+        LocalPlan::Coreset { budget, full_first } => {
+            // Epoch 1 (normal path): a comprehensive full-set step — also the
+            // pass whose per-sample gradients feed the coreset (§4.1/Fig. 1).
+            if full_first {
+                rng.shuffle(&mut shuffled);
+                loss = run_epoch(rt, model, shard, global, &mut params, &shuffled, None, lr, mu, None)?;
+            }
+            let cs = match precomputed {
+                Some(c) => c.clone(),
+                None => build_coreset(rt, model, shard, &params, budget, method, rng)?,
+            };
+            // δ-weighted SGD on the coreset for the remaining epochs.
+            let remaining = if full_first { epochs - 1 } else { epochs };
+            let mut order: Vec<usize> = (0..cs.indices.len()).collect();
+            for _ in 0..remaining {
+                rng.shuffle(&mut order);
+                let idxs: Vec<usize> = order.iter().map(|&o| cs.indices[o]).collect();
+                let deltas: Vec<f32> = order.iter().map(|&o| cs.deltas[o]).collect();
+                loss = run_epoch(
+                    rt, model, shard, global, &mut params, &idxs, Some(&deltas), lr, mu, None,
+                )?;
+            }
+            return Ok(ClientOutcome {
+                params: Some(params),
+                train_loss: loss,
+                sim_time,
+                used_coreset: true,
+                compression: (cs.len() as f64 / m.max(1) as f64).min(1.0),
+                coreset_cost: cs.cost,
+            });
+        }
+    }
+
+    Ok(ClientOutcome {
+        params: Some(params),
+        train_loss: loss,
+        sim_time,
+        used_coreset: false,
+        compression: 1.0,
+        coreset_cost: 0.0,
+    })
+}

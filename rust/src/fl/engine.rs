@@ -1,0 +1,314 @@
+//! The FL round engine — paper Algorithm 1.
+//!
+//! Per round: sample K clients with probability ∝ mᵢ (Assumption A.6),
+//! broadcast the global model, execute each client's [`LocalPlan`],
+//! aggregate the round-end parameters wᵣ₊₁ = (1/K) Σ wᵢ, and record
+//! loss/accuracy/timing into a [`RunResult`].
+
+use anyhow::{anyhow, Result};
+
+use super::client::{run_client, ClientOutcome};
+use super::plan::Strategy;
+use crate::coreset::Method;
+use crate::data::FedDataset;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::runtime::{EvalOutput, ModelInfo, Runtime};
+use crate::sim::{clock::RoundTiming, Fleet, SimClock};
+use crate::util::rng::Rng;
+
+/// When FedCore (re)builds coresets (paper §4.3/§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoresetMode {
+    /// The paper's default: new gradient-space coreset every round, from
+    /// the round's first-epoch per-sample gradients (answers Q1).
+    Adaptive,
+    /// The convex-model shortcut: one input-space (d̃) coreset per client,
+    /// built once and reused — zero per-round construction cost.
+    Static,
+}
+
+/// Everything one experiment run needs (strategy × benchmark × straggler%).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub strategy: Strategy,
+    /// R — communication rounds.
+    pub rounds: usize,
+    /// E — local epochs per round (paper Table 3: 10).
+    pub epochs: usize,
+    /// K — clients sampled per round.
+    pub clients_per_round: usize,
+    /// SGD learning rate (paper Table 3 per benchmark).
+    pub lr: f32,
+    /// s — straggler percentage (10 or 30 in the paper).
+    pub straggler_pct: f64,
+    /// Root seed; every random decision in the run derives from it.
+    pub seed: u64,
+    /// k-medoids solver for FedCore.
+    pub coreset_method: Method,
+    /// Adaptive (per-round, gradient-space) vs static (once, input-space).
+    pub coreset_mode: CoresetMode,
+    /// Evaluate the global model every this many rounds (1 = each round).
+    pub eval_every: usize,
+    /// Cap on test samples per evaluation (0 = use the full test set).
+    pub eval_cap: usize,
+    /// Print a progress line per round.
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            strategy: Strategy::FedCore,
+            rounds: 30,
+            epochs: 10,
+            clients_per_round: 10,
+            lr: 0.03,
+            straggler_pct: 30.0,
+            seed: 7,
+            coreset_method: Method::FasterPam,
+            coreset_mode: CoresetMode::Adaptive,
+            eval_every: 1,
+            eval_cap: 512,
+            verbose: false,
+        }
+    }
+}
+
+/// FedAvg aggregation (Algorithm 1 line 15): wᵣ₊₁ = (1/K) Σ wᵢ, computed
+/// in f64 for order-independence up to f32 rounding. Returns None when no
+/// client contributed (all dropped — the server keeps the old model).
+pub fn aggregate(locals: &[&[f32]]) -> Option<Vec<f32>> {
+    let first = locals.first()?;
+    let mut acc = vec![0.0f64; first.len()];
+    for l in locals {
+        assert_eq!(l.len(), acc.len(), "parameter dimension mismatch");
+        for (a, &p) in acc.iter_mut().zip(*l) {
+            *a += p as f64;
+        }
+    }
+    let k = locals.len() as f64;
+    Some(acc.into_iter().map(|a| (a / k) as f32).collect())
+}
+
+/// The engine: owns the fleet simulation, borrows runtime + data.
+pub struct Engine<'a> {
+    rt: &'a Runtime,
+    data: &'a FedDataset,
+    model: ModelInfo,
+    pub fleet: Fleet,
+    cfg: RunConfig,
+    /// §4.3 static-coreset cache (client → coreset); budgets are constant
+    /// per client, so a static coreset never needs rebuilding.
+    static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(rt: &'a Runtime, data: &'a FedDataset, cfg: RunConfig) -> Result<Engine<'a>> {
+        if data.num_clients() == 0 {
+            return Err(anyhow!("dataset has no clients"));
+        }
+        let model = rt.manifest().model(&data.model)?.clone();
+        let mut fleet_rng = Rng::new(cfg.seed).split(0xF1EE7);
+        let fleet = Fleet::new(&mut fleet_rng, data.sizes(), cfg.epochs, cfg.straggler_pct);
+        Ok(Engine {
+            rt,
+            data,
+            model,
+            fleet,
+            cfg,
+            static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Fetch-or-build the §4.3 static coreset for client `i` at `budget`.
+    fn static_coreset(&self, i: usize, budget: usize) -> crate::coreset::Coreset {
+        if let Some(c) = self.static_cache.borrow().get(&i) {
+            return c.clone();
+        }
+        let mut rng = Rng::new(self.cfg.seed).split(0x57A7 ^ i as u64);
+        let cs = super::client::build_static_coreset(
+            &self.data.clients[i],
+            self.rt.manifest().vocab.len(),
+            budget,
+            self.cfg.coreset_method,
+            &mut rng,
+        );
+        self.static_cache.borrow_mut().insert(i, cs.clone());
+        cs
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &ModelInfo {
+        &self.model
+    }
+
+    /// Evaluate `params` on the global test set (masked, batched).
+    pub fn evaluate(&self, params: &[f32]) -> Result<EvalOutput> {
+        let f = self.rt.manifest().feat_batch;
+        let test = &self.data.test;
+        let n = if self.cfg.eval_cap > 0 {
+            test.len().min(self.cfg.eval_cap)
+        } else {
+            test.len()
+        };
+        let mut total = EvalOutput::default();
+        let idxs: Vec<usize> = (0..n).collect();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + f).min(n);
+            let chunk = &idxs[start..end];
+            let (x, y, mask) = test.gather_batch(chunk, None, f);
+            total.merge(self.rt.evaluate(&self.model, params, &x, &y, &mask)?);
+            start = end;
+        }
+        Ok(total)
+    }
+
+    /// Run the full experiment from the model's deterministic w₀.
+    pub fn run(&self) -> Result<RunResult> {
+        self.run_from(self.model.init_params.clone())
+    }
+
+    /// Run from an arbitrary starting point (checkpoint resume).
+    pub fn run_from(&self, init_params: Vec<f32>) -> Result<RunResult> {
+        if init_params.len() != self.model.param_size {
+            return Err(anyhow!(
+                "initial params have {} values, model '{}' wants {}",
+                init_params.len(),
+                self.model.name,
+                self.model.param_size
+            ));
+        }
+        let cfg = &self.cfg;
+        let weights = self.data.client_weights();
+        let mut select_rng = Rng::new(cfg.seed).split(0x5E1EC7);
+        let client_root = Rng::new(cfg.seed).split(0xC11E47);
+        let mut clock = SimClock::new(self.fleet.deadline);
+
+        let mut params = init_params;
+        let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
+
+        for r in 0..cfg.rounds {
+            // --- Algorithm 1 line 3: sample K clients, p ∝ mᵢ ---
+            let selected =
+                select_rng.weighted_with_replacement(&weights, cfg.clients_per_round);
+
+            // --- lines 5–13: local work ---
+            let mut outcomes: Vec<(usize, ClientOutcome)> = Vec::with_capacity(selected.len());
+            for &i in &selected {
+                let plan = cfg.strategy.plan(&self.fleet, i);
+                let mut crng = client_root.split((r as u64) << 20 | i as u64);
+                // §4.3 static mode: serve coresets from the per-client cache.
+                let static_cs = match (&plan, cfg.coreset_mode) {
+                    (super::plan::LocalPlan::Coreset { budget, .. }, CoresetMode::Static) => {
+                        Some(self.static_coreset(i, *budget))
+                    }
+                    _ => None,
+                };
+                let outcome = run_client(
+                    self.rt,
+                    &self.model,
+                    &self.data.clients[i],
+                    &self.fleet,
+                    i,
+                    &params,
+                    &plan,
+                    cfg.lr,
+                    cfg.strategy.mu(),
+                    cfg.coreset_method,
+                    static_cs.as_ref(),
+                    &mut crng,
+                )?;
+                outcomes.push((i, outcome));
+            }
+
+            // --- line 15: aggregate contributing clients ---
+            let contributing: Vec<&ClientOutcome> =
+                outcomes.iter().map(|(_, o)| o).filter(|o| o.params.is_some()).collect();
+            let dropped = outcomes.len() - contributing.len();
+            let locals: Vec<&[f32]> = contributing
+                .iter()
+                .map(|o| o.params.as_deref().unwrap())
+                .collect();
+            if let Some(new_params) = aggregate(&locals) {
+                params = new_params;
+            }
+
+            // --- timing: round ends when the slowest participant finishes;
+            //     an all-dropped round still costs the server the full τ ---
+            let client_times: Vec<f64> =
+                contributing.iter().map(|o| o.sim_time).collect();
+            let timing = if client_times.is_empty() {
+                RoundTiming { client_times: vec![], round_time: self.fleet.deadline }
+            } else {
+                RoundTiming::from_clients(client_times)
+            };
+            let sim_time = timing.round_time;
+            clock.push_round(timing.clone());
+
+            // --- metrics ---
+            let losses: Vec<f64> = contributing
+                .iter()
+                .map(|o| o.train_loss)
+                .filter(|l| l.is_finite())
+                .collect();
+            let train_loss = crate::util::stats::mean(&losses);
+            let coreset_clients = contributing.iter().filter(|o| o.used_coreset).count();
+            let compressions: Vec<f64> = contributing
+                .iter()
+                .filter(|o| o.used_coreset)
+                .map(|o| o.compression)
+                .collect();
+            let mean_compression = if compressions.is_empty() {
+                1.0
+            } else {
+                crate::util::stats::mean(&compressions)
+            };
+
+            let do_eval = r % cfg.eval_every == 0 || r + 1 == cfg.rounds;
+            let (test_loss, test_acc) = if do_eval {
+                let ev = self.evaluate(&params)?;
+                (ev.mean_loss(), ev.accuracy())
+            } else {
+                rounds
+                    .last()
+                    .map(|p: &RoundRecord| (p.test_loss, p.test_acc))
+                    .unwrap_or((f64::NAN, 0.0))
+            };
+
+            if cfg.verbose {
+                eprintln!(
+                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}",
+                    cfg.strategy.label(),
+                    100.0 * test_acc,
+                    sim_time / self.fleet.deadline,
+                );
+            }
+
+            rounds.push(RoundRecord {
+                round: r,
+                train_loss,
+                test_loss,
+                test_acc,
+                sim_time,
+                sim_elapsed: clock.elapsed(),
+                client_times: timing.client_times,
+                dropped,
+                coreset_clients,
+                mean_compression,
+            });
+        }
+
+        Ok(RunResult {
+            strategy: cfg.strategy.label().to_string(),
+            benchmark: self.data.model.clone(),
+            straggler_pct: cfg.straggler_pct,
+            deadline: self.fleet.deadline,
+            rounds,
+            final_params: params,
+        })
+    }
+}

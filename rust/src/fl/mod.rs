@@ -1,0 +1,40 @@
+//! Federated learning core: the paper's Algorithm 1.
+//!
+//! * [`plan`] — per-strategy local-work planning (pure logic).
+//! * [`client`] — plan execution against the PJRT runtime.
+//! * [`engine`] — the round loop: selection, aggregation, metrics.
+
+pub mod checkpoint;
+pub mod client;
+pub mod engine;
+pub mod plan;
+
+pub use checkpoint::Checkpoint;
+
+pub use client::{run_client, ClientOutcome};
+pub use engine::{aggregate, CoresetMode, Engine, RunConfig};
+pub use plan::{LocalPlan, Strategy};
+
+/// All four strategies in paper presentation order.
+pub fn all_strategies(prox_mu: f32) -> Vec<Strategy> {
+    vec![
+        Strategy::FedAvg,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: prox_mu },
+        Strategy::FedCore,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_order_matches_paper_tables() {
+        let s = all_strategies(0.1);
+        assert_eq!(
+            s.iter().map(|x| x.label()).collect::<Vec<_>>(),
+            vec!["FedAvg", "FedAvg-DS", "FedProx", "FedCore"]
+        );
+    }
+}

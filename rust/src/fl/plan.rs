@@ -1,0 +1,266 @@
+//! Local-work planning: what a selected client does within one round,
+//! per strategy, given its capability and the deadline τ.
+//!
+//! This is pure logic (no runtime), so every deadline/budget invariant is
+//! unit- and property-tested exhaustively; the executor in [`super::client`]
+//! just follows the plan.
+
+use crate::sim::Fleet;
+
+/// How a client spends its round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LocalPlan {
+    /// FedAvg-DS: straggler excluded from the round.
+    Dropped,
+    /// E epochs over the full set (fits τ, or FedAvg ignoring τ).
+    FullSet { epochs: usize },
+    /// FedProx: as many full epochs as fit, plus a partial epoch remainder
+    /// of `tail_samples` sample-visits.
+    Truncated { epochs: usize, tail_samples: usize },
+    /// FedCore: coreset of size `budget`. `full_first = true` is the normal
+    /// path (epoch 1 full-set, E−1 coreset epochs); `false` is the §4.4
+    /// extreme-straggler fallback (features from a cheap forward pass, all
+    /// E epochs on the coreset).
+    Coreset { budget: usize, full_first: bool },
+}
+
+impl LocalPlan {
+    /// Total sample-visits of SGD training this plan performs for client
+    /// with full-set size `m` and `epochs` configured epochs.
+    pub fn training_samples(&self, m: usize, epochs: usize) -> usize {
+        match *self {
+            LocalPlan::Dropped => 0,
+            LocalPlan::FullSet { epochs: e } => e * m,
+            LocalPlan::Truncated { epochs: e, tail_samples } => e * m + tail_samples,
+            LocalPlan::Coreset { budget, full_first } => {
+                if full_first {
+                    m + (epochs - 1) * budget.min(m)
+                } else {
+                    epochs * budget.min(m)
+                }
+            }
+        }
+    }
+
+    /// Simulated seconds this plan takes for client `i` of `fleet`.
+    /// The §4.4 fallback's forward-only feature pass costs a fraction
+    /// [`FEATURE_PASS_COST`] of a training pass over the full set.
+    pub fn sim_time(&self, fleet: &Fleet, i: usize) -> f64 {
+        let m = fleet.sizes[i];
+        let visits = self.training_samples(m, fleet.epochs) as f64;
+        let feature_pass = match *self {
+            LocalPlan::Coreset { full_first: false, .. } => FEATURE_PASS_COST * m as f64,
+            _ => 0.0,
+        };
+        (visits + feature_pass) / fleet.profiles[i].capability
+    }
+}
+
+pub use crate::sim::FEATURE_PASS_COST;
+
+/// The four paper strategies (section 6.1 baselines a–c + FedCore).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// FedAvg — deadline-oblivious, always full-set.
+    FedAvg,
+    /// FedAvg-DS — drops clients that cannot finish by τ.
+    FedAvgDS,
+    /// FedProx — proximal term μ, stragglers do fewer epochs.
+    FedProx { mu: f32 },
+    /// FedCore — stragglers train on a k-medoids coreset.
+    FedCore,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.trim().to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "fedavg" => Some(Strategy::FedAvg),
+            "fedavgds" => Some(Strategy::FedAvgDS),
+            "fedprox" => Some(Strategy::FedProx { mu: 0.1 }),
+            "fedcore" => Some(Strategy::FedCore),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::FedAvg => "FedAvg",
+            Strategy::FedAvgDS => "FedAvg-DS",
+            Strategy::FedProx { .. } => "FedProx",
+            Strategy::FedCore => "FedCore",
+        }
+    }
+
+    /// FedProx's μ (0 elsewhere — the train artifact takes μ as data).
+    pub fn mu(&self) -> f32 {
+        match self {
+            Strategy::FedProx { mu } => *mu,
+            _ => 0.0,
+        }
+    }
+
+    /// Decide client `i`'s plan for this round.
+    pub fn plan(&self, fleet: &Fleet, i: usize) -> LocalPlan {
+        let e = fleet.epochs;
+        if !fleet.is_straggler(i) {
+            return LocalPlan::FullSet { epochs: e };
+        }
+        match self {
+            Strategy::FedAvg => LocalPlan::FullSet { epochs: e },
+            Strategy::FedAvgDS => LocalPlan::Dropped,
+            Strategy::FedProx { .. } => {
+                // FedProx truncates at whole-epoch granularity ("fewer
+                // local training epochs", §2/§6) — leaving up to m/cᵢ of
+                // budget slack, which is why its Table 2 round times sit
+                // below FedCore's. A client too slow for even one epoch
+                // contributes the partial work that fits (γ-inexact).
+                let cap = fleet.profiles[i].capability * fleet.deadline;
+                let m = fleet.sizes[i];
+                let full = ((cap / m as f64).floor() as usize).min(e);
+                if full >= 1 {
+                    LocalPlan::Truncated { epochs: full, tail_samples: 0 }
+                } else {
+                    LocalPlan::Truncated {
+                        epochs: 0,
+                        tail_samples: (cap.floor() as usize).clamp(1, m),
+                    }
+                }
+            }
+            Strategy::FedCore => match fleet.coreset_budget(i) {
+                Some(b) => LocalPlan::Coreset { budget: b, full_first: true },
+                None => LocalPlan::Coreset { budget: fleet.fallback_budget(i), full_first: false },
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fleet() -> Fleet {
+        let mut rng = Rng::new(21);
+        let sizes: Vec<usize> = (0..200).map(|i| 30 + (i * 13) % 400).collect();
+        Fleet::new(&mut rng, sizes, 10, 30.0)
+    }
+
+    #[test]
+    fn non_stragglers_always_full_set() {
+        let f = fleet();
+        for s in [
+            Strategy::FedAvg,
+            Strategy::FedAvgDS,
+            Strategy::FedProx { mu: 0.1 },
+            Strategy::FedCore,
+        ] {
+            for i in 0..f.sizes.len() {
+                if !f.is_straggler(i) {
+                    assert_eq!(s.plan(&f, i), LocalPlan::FullSet { epochs: 10 });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fedavg_ignores_deadline() {
+        let f = fleet();
+        let mut exceeded = 0;
+        for i in 0..f.sizes.len() {
+            let p = Strategy::FedAvg.plan(&f, i);
+            let t = p.sim_time(&f, i);
+            if t > f.deadline {
+                exceeded += 1;
+            }
+        }
+        // ~30% of clients run past the deadline under FedAvg.
+        assert!(exceeded >= 40, "only {exceeded} clients exceeded");
+    }
+
+    #[test]
+    fn deadline_aware_plans_fit_tau() {
+        let f = fleet();
+        for s in [Strategy::FedAvgDS, Strategy::FedProx { mu: 0.1 }, Strategy::FedCore] {
+            for i in 0..f.sizes.len() {
+                let p = s.plan(&f, i);
+                let t = p.sim_time(&f, i);
+                // flooring slack (one sample per epoch), plus the clamped
+                // minimum work of pathologically slow clients: both FedProx
+                // (≥1 sample) and FedCore (≥1-sample coreset + feature pass)
+                // insist on a floor of useful work, like the paper's §4.4.
+                let min_work = match p {
+                    LocalPlan::Coreset { full_first: false, .. } => {
+                        (f.epochs as f64 + FEATURE_PASS_COST * f.sizes[i] as f64)
+                            / f.profiles[i].capability
+                    }
+                    _ => 0.0,
+                };
+                let slack = f.epochs as f64 / f.profiles[i].capability;
+                assert!(
+                    t <= (f.deadline + slack).max(min_work + 1e-9),
+                    "{}: client {i} time {t} > τ {} (min_work {min_work})",
+                    s.label(),
+                    f.deadline
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fedcore_stragglers_get_compressed_coresets() {
+        let f = fleet();
+        let mut coreset_count = 0;
+        for i in 0..f.sizes.len() {
+            if let LocalPlan::Coreset { budget, full_first } = Strategy::FedCore.plan(&f, i) {
+                coreset_count += 1;
+                assert!(budget >= 1);
+                if full_first {
+                    assert!(budget < f.sizes[i]);
+                }
+            }
+        }
+        let frac = coreset_count as f64 / f.sizes.len() as f64;
+        assert!((frac - 0.3).abs() < 0.05, "coreset fraction {frac}");
+    }
+
+    #[test]
+    fn fedprox_partial_epochs_monotone_in_capability() {
+        let f = fleet();
+        // A straggler's planned visits never exceed the full-set visits.
+        for i in 0..f.sizes.len() {
+            let p = Strategy::FedProx { mu: 0.1 }.plan(&f, i);
+            let v = p.training_samples(f.sizes[i], f.epochs);
+            assert!(v <= f.epochs * f.sizes[i]);
+            if f.is_straggler(i) {
+                assert!(v < f.epochs * f.sizes[i], "straggler {i} not truncated");
+            }
+        }
+    }
+
+    #[test]
+    fn training_samples_arithmetic() {
+        assert_eq!(LocalPlan::Dropped.training_samples(100, 10), 0);
+        assert_eq!(LocalPlan::FullSet { epochs: 10 }.training_samples(100, 10), 1000);
+        assert_eq!(
+            LocalPlan::Truncated { epochs: 3, tail_samples: 40 }.training_samples(100, 10),
+            340
+        );
+        assert_eq!(
+            LocalPlan::Coreset { budget: 20, full_first: true }.training_samples(100, 10),
+            100 + 9 * 20
+        );
+        assert_eq!(
+            LocalPlan::Coreset { budget: 20, full_first: false }.training_samples(100, 10),
+            200
+        );
+    }
+
+    #[test]
+    fn parse_labels() {
+        for s in ["FedAvg", "fedavg-ds", "FEDPROX", "fed_core"] {
+            assert!(Strategy::parse(s).is_some(), "{s}");
+        }
+        assert_eq!(Strategy::parse("FedAvg-DS"), Some(Strategy::FedAvgDS));
+        assert!(Strategy::parse("sgd").is_none());
+    }
+}

@@ -1,0 +1,28 @@
+//! FedCore: straggler-free federated learning with distributed coresets.
+//!
+//! Rust + JAX + Pallas reproduction of Guo et al., 2024. Three layers:
+//!
+//! * **L3 (this crate)** — the FL coordinator: round engine, client
+//!   selection, deadline simulation, the four strategies (FedAvg,
+//!   FedAvg-DS, FedProx, FedCore), FasterPAM k-medoids coresets, dataset
+//!   generators, metrics and CLI.
+//! * **L2 (python/compile, build-time only)** — JAX models for the three
+//!   paper benchmarks, AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels, build-time only)** — the Pallas
+//!   pairwise gradient-distance kernel feeding coreset selection.
+//!
+//! At run time only this crate executes; artifacts are loaded through the
+//! PJRT CPU client in [`runtime`].
+
+pub mod config;
+pub mod coreset;
+pub mod expt;
+pub mod data;
+pub mod fl;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,246 @@
+//! `fedcore` — launcher CLI for the FedCore reproduction.
+//!
+//! Subcommands (first positional argument):
+//!
+//! * `run`   — one experiment (benchmark × strategy × straggler%), CSV out.
+//! * `sweep` — all four strategies on one benchmark (a Table 2 column pair).
+//! * `data`  — generate a benchmark and print its Table 1 statistics.
+//! * `info`  — show the artifact manifest the runtime would load.
+//!
+//! Example:
+//! ```text
+//! fedcore run --bench synthetic(1,1) --strategy fedcore --stragglers 30 \
+//!             --scale 0.2 --rounds 20 --out results/run.csv
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use fedcore::config::ExperimentConfig;
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark};
+use fedcore::fl::{all_strategies, Engine, Strategy};
+use fedcore::metrics::table2_rows;
+use fedcore::runtime::Runtime;
+use fedcore::util::cli::{Args, Cli};
+
+fn cli() -> Cli {
+    Cli::new(
+        "fedcore",
+        "straggler-free federated learning with distributed coresets (run|sweep|data|info)",
+    )
+    .opt("bench", "synthetic(1,1)", "benchmark: mnist | shakespeare | synthetic(a,b)")
+    .opt("strategy", "fedcore", "fedavg | fedavg-ds | fedprox | fedcore")
+    .opt("stragglers", "30", "straggler percentage s")
+    .opt("scale", "0.15", "dataset scale (1.0 = paper Table 1 sizes)")
+    .opt("rounds", "0", "override communication rounds (0 = preset)")
+    .opt("epochs", "0", "override local epochs (0 = preset, paper: 10)")
+    .opt("clients", "0", "override clients per round K (0 = preset)")
+    .opt("lr", "0", "override learning rate (0 = preset)")
+    .opt("mu", "-1", "override FedProx mu (-1 = preset)")
+    .opt("seed", "7", "root seed")
+    .opt("method", "fasterpam", "coreset solver: fasterpam | pam | random | kcenter")
+    .opt("eval-cap", "512", "max test samples per evaluation (0 = all)")
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .opt("out", "", "CSV output path (empty = stdout summary only)")
+    .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
+    .opt("load-ckpt", "", "resume from a model checkpoint")
+    .opt("save-ckpt", "", "write the final global model to this path")
+    .flag("static-coreset", "§4.3 static input-space coresets (default: adaptive)")
+    .flag("quiet", "suppress per-round progress lines")
+}
+
+fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
+    let from_config = !a.get("config").is_empty();
+    let mut cfg = if from_config {
+        ExperimentConfig::from_file(a.get("config"))?
+    } else {
+        let bench = Benchmark::parse(a.get("bench"))
+            .ok_or_else(|| anyhow!("unknown benchmark '{}'", a.get("bench")))?;
+        ExperimentConfig::scaled_preset(bench, a.get_f64("scale"))
+    };
+    // CLI overrides: applied when given explicitly (i.e. differing from the
+    // declared default), so `--config` files keep their values otherwise.
+    let explicit = |name: &str, default: &str| a.get(name) != default;
+    if !from_config || explicit("stragglers", "30") {
+        cfg.run.straggler_pct = a.get_f64("stragglers");
+    }
+    if !from_config || explicit("seed", "7") {
+        cfg.run.seed = a.get_u64("seed");
+    }
+    if !from_config || explicit("eval-cap", "512") {
+        cfg.run.eval_cap = a.get_usize("eval-cap");
+    }
+    cfg.run.verbose = !a.has("quiet");
+    if a.get_usize("rounds") > 0 {
+        cfg.run.rounds = a.get_usize("rounds");
+    }
+    if a.get_usize("epochs") > 0 {
+        cfg.run.epochs = a.get_usize("epochs");
+    }
+    if a.get_usize("clients") > 0 {
+        cfg.run.clients_per_round = a.get_usize("clients");
+    }
+    if a.get_f64("lr") > 0.0 {
+        cfg.run.lr = a.get_f64("lr") as f32;
+    }
+    if a.get_f64("mu") >= 0.0 {
+        cfg.prox_mu = a.get_f64("mu") as f32;
+    }
+    if !from_config || explicit("method", "fasterpam") {
+        cfg.run.coreset_method = Method::parse(a.get("method"))
+            .ok_or_else(|| anyhow!("unknown coreset method '{}'", a.get("method")))?;
+    }
+    if a.has("static-coreset") {
+        cfg.run.coreset_mode = fedcore::fl::CoresetMode::Static;
+    }
+    Ok(cfg)
+}
+
+fn load_runtime(a: &Args) -> Result<Runtime> {
+    Runtime::load(a.get("artifacts"))
+}
+
+fn cmd_run(a: &Args) -> Result<()> {
+    let strategy = Strategy::parse(a.get("strategy"))
+        .ok_or_else(|| anyhow!("unknown strategy '{}'", a.get("strategy")))?;
+    let cfg = experiment_from_args(a)?.with_strategy(strategy);
+    let rt = load_runtime(a)?;
+    let ds = data::generate(cfg.benchmark, cfg.scale, &rt.manifest().vocab, cfg.data_seed);
+    eprintln!(
+        "benchmark {} | {} clients, {} samples | strategy {} | {} rounds × {} epochs",
+        cfg.benchmark.label(),
+        ds.num_clients(),
+        ds.total_samples(),
+        cfg.run.strategy.label(),
+        cfg.run.rounds,
+        cfg.run.epochs,
+    );
+    let engine = Engine::new(&rt, &ds, cfg.run.clone())?;
+    eprintln!(
+        "fleet: deadline τ = {:.2}s, {:.0}% stragglers observed",
+        engine.fleet.deadline,
+        100.0 * engine.fleet.straggler_fraction()
+    );
+    let result = if !a.get("load-ckpt").is_empty() {
+        let ck = fedcore::fl::Checkpoint::load(a.get("load-ckpt"))?;
+        if ck.model != ds.model {
+            return Err(anyhow!(
+                "checkpoint is for model '{}', benchmark needs '{}'",
+                ck.model,
+                ds.model
+            ));
+        }
+        eprintln!("resuming from checkpoint (round {})", ck.round);
+        engine.run_from(ck.params)?
+    } else {
+        engine.run()?
+    };
+    println!(
+        "{} on {}: best acc {:.2}% | final loss {:.4} | mean t/τ {:.2}",
+        result.strategy,
+        cfg.benchmark.label(),
+        100.0 * result.best_accuracy(),
+        result.final_train_loss(),
+        result.mean_normalized_round_time()
+    );
+    let out = a.get("out");
+    if !out.is_empty() {
+        result.write_csv(out)?;
+        eprintln!("wrote {out}");
+    }
+    if !a.get("save-ckpt").is_empty() {
+        let ck = fedcore::fl::Checkpoint::new(
+            ds.model.clone(),
+            cfg.run.rounds as u64,
+            result.final_params.clone(),
+        );
+        ck.save(a.get("save-ckpt"))?;
+        eprintln!("saved checkpoint to {}", a.get("save-ckpt"));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let base = experiment_from_args(a)?;
+    let rt = load_runtime(a)?;
+    let ds = data::generate(base.benchmark, base.scale, &rt.manifest().vocab, base.data_seed);
+    let mut results = Vec::new();
+    for strategy in all_strategies(base.prox_mu) {
+        let cfg = base.clone().with_strategy(strategy);
+        let engine = Engine::new(&rt, &ds, cfg.run.clone())?;
+        eprintln!("--- {} ---", strategy.label());
+        results.push(engine.run()?);
+    }
+    println!(
+        "\nTable-2 style summary — {} at {}% stragglers:",
+        base.benchmark.label(),
+        base.run.straggler_pct
+    );
+    println!("{:<12} {:>10} {:>12}", "strategy", "acc (%)", "mean t/τ");
+    for row in table2_rows(&results) {
+        let mark = if row.exceeded_deadline { "  (exceeds τ!)" } else { "" };
+        println!(
+            "{:<12} {:>10.2} {:>12.2}{mark}",
+            row.strategy, row.accuracy_pct, row.mean_norm_time
+        );
+    }
+    let out = a.get("out");
+    if !out.is_empty() {
+        for r in &results {
+            let path = format!("{out}/{}_{}.csv", r.benchmark, r.strategy.replace('-', ""));
+            r.write_csv(&path)?;
+        }
+        eprintln!("wrote per-strategy CSVs under {out}/");
+    }
+    Ok(())
+}
+
+fn cmd_data(a: &Args) -> Result<()> {
+    let bench = Benchmark::parse(a.get("bench"))
+        .ok_or_else(|| anyhow!("unknown benchmark '{}'", a.get("bench")))?;
+    let rt = load_runtime(a)?;
+    let ds = data::generate(bench, a.get_f64("scale"), &rt.manifest().vocab, a.get_u64("seed"));
+    let stats = data::partition::size_stats(&ds.sizes());
+    println!("benchmark {}", bench.label());
+    println!("  clients          {}", stats.clients);
+    println!("  samples          {}", stats.total);
+    println!("  samples/client   mean {:.1}  std {:.1}  min {}  max {}",
+        stats.mean, stats.std, stats.min, stats.max);
+    println!("  test samples     {}", ds.test.len());
+    for (edge, count) in data::partition::size_histogram(&ds.sizes(), 12) {
+        println!("  [{edge:>6}+) {}", "▇".repeat(1 + count * 40 / stats.clients.max(1)));
+    }
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let rt = load_runtime(a)?;
+    let m = rt.manifest();
+    println!("artifacts: train_batch={} feat_batch={} feature_dim={}",
+        m.train_batch, m.feat_batch, m.feature_dim);
+    println!("pairwise Pallas tile: {}×{} (dim {})", m.pairwise_tile, m.pairwise_tile, m.pairwise_dim);
+    println!("vocab: {} chars", m.vocab.len());
+    for (name, info) in &m.models {
+        println!(
+            "model {name:<8} params={:<8} classes={:<3} x{:?} ({:?}) seq={}",
+            info.param_size, info.num_classes, info.x_shape, info.x_dtype, info.seq_len
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = cli().parse();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("run");
+    let result = match cmd {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "data" => cmd_data(&args),
+        "info" => cmd_info(&args),
+        other => Err(anyhow!("unknown command '{other}' (run|sweep|data|info)")),
+    };
+    if let Err(e) = result {
+        eprintln!("fedcore: {e:#}");
+        std::process::exit(1);
+    }
+}

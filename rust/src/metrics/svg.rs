@@ -1,0 +1,303 @@
+//! SVG figure rendering: regenerate the paper's figures as actual images
+//! (`results/figures/*.svg`), not just text tables. No external deps —
+//! hand-rolled path/axis emission, enough for line charts (Figs. 3, 5, 6)
+//! and log-y bar histograms (Figs. 4, 7; Fig. 2).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+const W: f64 = 640.0;
+const H: f64 = 400.0;
+const MARGIN: f64 = 54.0;
+/// Paper-ish categorical palette.
+const COLORS: [&str; 6] = ["#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b"];
+
+/// One named data series (x, y).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.into(), points }
+    }
+}
+
+fn finite(v: f64) -> bool {
+    v.is_finite()
+}
+
+fn bounds(series: &[Series]) -> (f64, f64, f64, f64) {
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for s in series {
+        for &(x, y) in &s.points {
+            if finite(x) && finite(y) {
+                x0 = x0.min(x);
+                x1 = x1.max(x);
+                y0 = y0.min(y);
+                y1 = y1.max(y);
+            }
+        }
+    }
+    if x0 > x1 {
+        (0.0, 1.0, 0.0, 1.0)
+    } else {
+        let pad = |a: f64, b: f64| if (b - a).abs() < 1e-12 { (a - 0.5, b + 0.5) } else { (a, b) };
+        let (x0, x1) = pad(x0, x1);
+        let (y0, y1) = pad(y0, y1);
+        (x0, x1, y0, y1)
+    }
+}
+
+fn header(title: &str) -> String {
+    format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{W}\" height=\"{H}\" \
+         viewBox=\"0 0 {W} {H}\" font-family=\"sans-serif\" font-size=\"12\">\n\
+         <rect width=\"{W}\" height=\"{H}\" fill=\"white\"/>\n\
+         <text x=\"{}\" y=\"20\" text-anchor=\"middle\" font-size=\"14\">{}</text>\n",
+        W / 2.0,
+        xml_escape(title)
+    )
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn axes(out: &mut String, x0: f64, x1: f64, y0: f64, y1: f64, xlabel: &str, ylabel: &str) {
+    let _ = writeln!(
+        out,
+        "<rect x=\"{MARGIN}\" y=\"{MARGIN}\" width=\"{}\" height=\"{}\" fill=\"none\" stroke=\"#999\"/>",
+        W - 2.0 * MARGIN,
+        H - 2.0 * MARGIN
+    );
+    // 5 ticks per axis
+    for i in 0..=4 {
+        let fx = i as f64 / 4.0;
+        let gx = MARGIN + fx * (W - 2.0 * MARGIN);
+        let gy = H - MARGIN - fx * (H - 2.0 * MARGIN);
+        let xv = x0 + fx * (x1 - x0);
+        let yv = y0 + fx * (y1 - y0);
+        let _ = writeln!(
+            out,
+            "<text x=\"{gx:.1}\" y=\"{:.1}\" text-anchor=\"middle\" fill=\"#444\">{}</text>",
+            H - MARGIN + 16.0,
+            fmt_tick(xv)
+        );
+        let _ = writeln!(
+            out,
+            "<text x=\"{:.1}\" y=\"{gy:.1}\" text-anchor=\"end\" fill=\"#444\">{}</text>",
+            MARGIN - 6.0,
+            fmt_tick(yv)
+        );
+        let _ = writeln!(
+            out,
+            "<line x1=\"{MARGIN}\" y1=\"{gy:.1}\" x2=\"{:.1}\" y2=\"{gy:.1}\" stroke=\"#eee\"/>",
+            W - MARGIN
+        );
+    }
+    let _ = writeln!(
+        out,
+        "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" fill=\"#222\">{}</text>",
+        W / 2.0,
+        H - 10.0,
+        xml_escape(xlabel)
+    );
+    let _ = writeln!(
+        out,
+        "<text x=\"14\" y=\"{}\" text-anchor=\"middle\" transform=\"rotate(-90 14 {})\" fill=\"#222\">{}</text>",
+        H / 2.0,
+        H / 2.0,
+        xml_escape(ylabel)
+    );
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{:.0}", v)
+    } else if v.abs() >= 1.0 {
+        format!("{:.2}", v)
+    } else {
+        format!("{:.3}", v)
+    }
+}
+
+/// Render a multi-series line chart.
+pub fn line_chart(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    let (x0, x1, y0, y1) = bounds(series);
+    let sx = |x: f64| MARGIN + (x - x0) / (x1 - x0) * (W - 2.0 * MARGIN);
+    let sy = |y: f64| H - MARGIN - (y - y0) / (y1 - y0) * (H - 2.0 * MARGIN);
+    let mut out = header(title);
+    axes(&mut out, x0, x1, y0, y1, xlabel, ylabel);
+    for (i, s) in series.iter().enumerate() {
+        let color = COLORS[i % COLORS.len()];
+        let mut d = String::new();
+        let mut first = true;
+        for &(x, y) in &s.points {
+            if !finite(x) || !finite(y) {
+                first = true;
+                continue;
+            }
+            let _ = write!(d, "{}{:.1},{:.1} ", if first { "M" } else { "L" }, sx(x), sy(y));
+            first = false;
+        }
+        let _ = writeln!(
+            out,
+            "<path d=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"1.8\"/>",
+            d.trim()
+        );
+        // legend
+        let ly = MARGIN + 16.0 * i as f64 + 8.0;
+        let _ = writeln!(
+            out,
+            "<line x1=\"{:.1}\" y1=\"{ly:.1}\" x2=\"{:.1}\" y2=\"{ly:.1}\" stroke=\"{color}\" stroke-width=\"3\"/>\
+             <text x=\"{:.1}\" y=\"{:.1}\" fill=\"#222\">{}</text>",
+            W - MARGIN - 150.0,
+            W - MARGIN - 130.0,
+            W - MARGIN - 124.0,
+            ly + 4.0,
+            xml_escape(&s.label)
+        );
+    }
+    out.push_str("</svg>\n");
+    out
+}
+
+/// Render a grouped log-y histogram (one group of bars per series).
+pub fn log_histogram(title: &str, xlabel: &str, edges: &[f64], series: &[Series]) -> String {
+    // Series points are (edge, count); y is log-scaled via ln(1 + c).
+    let max_count = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.1))
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let ymax = (1.0 + max_count).ln();
+    let n_bins = edges.len().max(1);
+    let group_w = (W - 2.0 * MARGIN) / n_bins as f64;
+    let bar_w = (group_w - 4.0) / series.len().max(1) as f64;
+
+    let mut out = header(title);
+    let _ = writeln!(
+        out,
+        "<rect x=\"{MARGIN}\" y=\"{MARGIN}\" width=\"{}\" height=\"{}\" fill=\"none\" stroke=\"#999\"/>",
+        W - 2.0 * MARGIN,
+        H - 2.0 * MARGIN
+    );
+    for (si, s) in series.iter().enumerate() {
+        let color = COLORS[si % COLORS.len()];
+        for (bi, &(_, c)) in s.points.iter().enumerate() {
+            if c <= 0.0 {
+                continue;
+            }
+            let h = (1.0 + c).ln() / ymax * (H - 2.0 * MARGIN);
+            let x = MARGIN + bi as f64 * group_w + 2.0 + si as f64 * bar_w;
+            let _ = writeln!(
+                out,
+                "<rect x=\"{x:.1}\" y=\"{:.1}\" width=\"{:.1}\" height=\"{h:.1}\" fill=\"{color}\" fill-opacity=\"0.85\"/>",
+                H - MARGIN - h,
+                bar_w.max(1.0)
+            );
+        }
+        let ly = MARGIN + 16.0 * si as f64 + 8.0;
+        let _ = writeln!(
+            out,
+            "<rect x=\"{:.1}\" y=\"{:.1}\" width=\"10\" height=\"10\" fill=\"{color}\"/>\
+             <text x=\"{:.1}\" y=\"{:.1}\" fill=\"#222\">{}</text>",
+            W - MARGIN - 150.0,
+            ly - 8.0,
+            W - MARGIN - 134.0,
+            ly + 2.0,
+            xml_escape(&s.label)
+        );
+    }
+    // x tick labels on bin edges (sparse)
+    for (bi, e) in edges.iter().enumerate() {
+        if bi % 2 == 0 {
+            let x = MARGIN + bi as f64 * group_w;
+            let _ = writeln!(
+                out,
+                "<text x=\"{x:.1}\" y=\"{:.1}\" text-anchor=\"middle\" fill=\"#444\">{}</text>",
+                H - MARGIN + 16.0,
+                fmt_tick(*e)
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" fill=\"#222\">{} (log-scale counts)</text>",
+        W / 2.0,
+        H - 10.0,
+        xml_escape(xlabel)
+    );
+    out.push_str("</svg>\n");
+    out
+}
+
+/// Write an SVG next to the experiment CSVs.
+pub fn write_svg(path: impl AsRef<Path>, svg: &str) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, svg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_series() -> Vec<Series> {
+        vec![
+            Series::new("FedCore", (0..10).map(|i| (i as f64, 1.0 / (i + 1) as f64)).collect()),
+            Series::new("FedProx", (0..10).map(|i| (i as f64, 1.3 / (i + 1) as f64)).collect()),
+        ]
+    }
+
+    #[test]
+    fn line_chart_is_valid_svg_with_all_series() {
+        let svg = line_chart("Fig 3", "round", "loss", &demo_series());
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert!(svg.contains("FedCore") && svg.contains("FedProx"));
+        assert_eq!(svg.matches("<path").count(), 2);
+    }
+
+    #[test]
+    fn handles_nan_and_constant_series() {
+        let s = vec![Series::new("flat", vec![(0.0, 1.0), (1.0, f64::NAN), (2.0, 1.0)])];
+        let svg = line_chart("t", "x", "y", &s);
+        assert!(svg.contains("<path"));
+        assert!(!svg.contains("NaN"));
+    }
+
+    #[test]
+    fn histogram_renders_bars() {
+        let edges = vec![0.0, 0.5, 1.0, 1.5];
+        let s = vec![
+            Series::new("FedAvg", vec![(0.0, 5.0), (0.5, 10.0), (1.0, 3.0), (1.5, 1.0)]),
+            Series::new("FedCore", vec![(0.0, 2.0), (0.5, 30.0), (1.0, 0.0), (1.5, 0.0)]),
+        ];
+        let svg = log_histogram("Fig 4", "t/τ", &edges, &s);
+        assert!(svg.contains("<rect") && svg.contains("FedAvg"));
+        // zero-count bars are skipped: FedCore has 2 bars, FedAvg 4
+        assert!(svg.matches("fill-opacity").count() == 6);
+    }
+
+    #[test]
+    fn escapes_xml() {
+        let svg = line_chart("a<b&c", "x", "y", &demo_series());
+        assert!(svg.contains("a&lt;b&amp;c"));
+    }
+
+    #[test]
+    fn write_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("fedcore_svg_{}", std::process::id()));
+        let path = dir.join("sub/fig.svg");
+        write_svg(&path, "<svg></svg>").unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

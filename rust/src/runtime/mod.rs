@@ -1,0 +1,374 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! hot path. This is the only module that touches the `xla` crate.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once on first use and cached for the process
+//! lifetime; python is never invoked.
+//!
+//! Thread model: `PjRtClient` is `Rc`-backed (not `Send`), so a `Runtime`
+//! is pinned to the thread that created it. Engines that want parallel
+//! client simulation build one `Runtime` per worker thread from the same
+//! artifacts directory (compilation of these small modules is cheap and
+//! the CPU PJRT client shares nothing mutable across instances).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub use manifest::{Manifest, ModelInfo, XDtype};
+
+/// Input batch for a model call: x is either f32 (dense features / images)
+/// or i32 (token ids); y is always i32 (labels / next-token ids).
+#[derive(Clone, Debug)]
+pub enum XBatch {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl XBatch {
+    pub fn len(&self) -> usize {
+        match self {
+            XBatch::F32(v) => v.len(),
+            XBatch::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of one training step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub params: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Result of a feature-extraction call on one batch.
+#[derive(Clone, Debug)]
+pub struct FeatOutput {
+    /// Row-major [feat_batch, feature_dim].
+    pub features: Vec<f32>,
+    /// Per-sample loss, [feat_batch].
+    pub losses: Vec<f32>,
+}
+
+/// Accumulated evaluation numbers for a batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOutput {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub count: f64,
+}
+
+impl EvalOutput {
+    pub fn merge(&mut self, other: EvalOutput) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.count += other.count;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.count > 0.0 {
+            self.loss_sum / self.count
+        } else {
+            0.0
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.count > 0.0 {
+            self.correct / self.count
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Execution statistics (perf instrumentation for EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compile_count: u64,
+    pub exec_nanos: u64,
+}
+
+/// Per-artifact execution breakdown: where PJRT time actually goes.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactStats {
+    /// artifact file → (executions, total nanos).
+    pub per_artifact: HashMap<String, (u64, u64)>,
+}
+
+impl ArtifactStats {
+    /// Render a table sorted by total time, descending.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<(&String, &(u64, u64))> = self.per_artifact.iter().collect();
+        rows.sort_by_key(|(_, (_, ns))| std::cmp::Reverse(*ns));
+        let total: u64 = rows.iter().map(|(_, (_, ns))| *ns).sum();
+        let mut out = format!(
+            "{:<28} {:>8} {:>10} {:>10} {:>6}\n",
+            "artifact", "execs", "total ms", "mean µs", "%"
+        );
+        for (file, (n, ns)) in rows {
+            out.push_str(&format!(
+                "{:<28} {:>8} {:>10.1} {:>10.1} {:>5.1}%\n",
+                file,
+                n,
+                *ns as f64 / 1e6,
+                *ns as f64 / (*n).max(1) as f64 / 1e3,
+                100.0 * *ns as f64 / total.max(1) as f64
+            ));
+        }
+        out
+    }
+}
+
+/// The PJRT-backed runtime. One per thread (see module docs).
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    execs: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+    artifact_stats: RefCell<ArtifactStats>,
+}
+
+impl Runtime {
+    /// Load the manifest and create a CPU PJRT client. Executables are
+    /// compiled lazily on first call; use [`Runtime::warmup`] to front-load.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            execs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+            artifact_stats: RefCell::new(ArtifactStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Per-artifact time breakdown (the §Perf profiling instrument).
+    pub fn artifact_stats(&self) -> ArtifactStats {
+        self.artifact_stats.borrow().clone()
+    }
+
+    /// Compile every artifact up front (useful before timing runs).
+    pub fn warmup(&self) -> Result<()> {
+        let files: Vec<String> = self
+            .manifest
+            .models
+            .values()
+            .flat_map(|m| {
+                [m.train_file.clone(), m.feat_file.clone(), m.eval_file.clone()]
+            })
+            .chain([self.manifest.pairwise_file.clone()])
+            .collect();
+        for f in files {
+            self.ensure_compiled(&f)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, file: &str) -> Result<()> {
+        if self.execs.borrow().contains_key(file) {
+            return Ok(());
+        }
+        let path = self.dir.join(file);
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", file))?;
+        self.execs.borrow_mut().insert(file.to_string(), exe);
+        self.stats.borrow_mut().compile_count += 1;
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    fn exec(&self, file: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.ensure_compiled(file)?;
+        let t0 = std::time::Instant::now();
+        let execs = self.execs.borrow();
+        let exe = execs.get(file).unwrap();
+        let bufs = exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", file))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", file))?;
+        let nanos = t0.elapsed().as_nanos() as u64;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.exec_nanos += nanos;
+        drop(stats);
+        let mut astats = self.artifact_stats.borrow_mut();
+        let entry = astats.per_artifact.entry(file.to_string()).or_insert((0, 0));
+        entry.0 += 1;
+        entry.1 += nanos;
+        drop(astats);
+        // aot.py lowers with return_tuple=True: the single output is a tuple.
+        Ok(out.to_tuple()?)
+    }
+
+    fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let expected: i64 = dims.iter().product();
+        if expected as usize != data.len() {
+            bail!("literal shape {:?} wants {} elems, got {}", dims, expected, data.len());
+        }
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
+
+    fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        let expected: i64 = dims.iter().product();
+        if expected as usize != data.len() {
+            bail!("literal shape {:?} wants {} elems, got {}", dims, expected, data.len());
+        }
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
+
+    fn x_literal(&self, model: &ModelInfo, x: &XBatch, batch: usize) -> Result<Literal> {
+        let mut dims: Vec<i64> = vec![batch as i64];
+        dims.extend(model.x_shape.iter().map(|&d| d as i64));
+        match (model.x_dtype, x) {
+            (XDtype::F32, XBatch::F32(v)) => Self::literal_f32(v, &dims),
+            (XDtype::I32, XBatch::I32(v)) => Self::literal_i32(v, &dims),
+            _ => bail!("model {} x dtype mismatch", model.name),
+        }
+    }
+
+    fn y_literal(&self, model: &ModelInfo, y: &[i32], batch: usize) -> Result<Literal> {
+        let dims: Vec<i64> = if model.seq_len > 0 {
+            vec![batch as i64, model.seq_len as i64]
+        } else {
+            vec![batch as i64]
+        };
+        Self::literal_i32(y, &dims)
+    }
+
+    /// One weighted SGD step (the `{model}_train` artifact).
+    ///
+    /// `weights` carries coreset δ* weights / padding zeros; `mu > 0`
+    /// activates the FedProx proximal term against `gparams`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        gparams: &[f32],
+        x: &XBatch,
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOutput> {
+        let b = self.manifest.train_batch;
+        if weights.len() != b {
+            bail!("weights len {} != train batch {}", weights.len(), b);
+        }
+        let args = [
+            Self::literal_f32(params, &[model.param_size as i64])?,
+            Self::literal_f32(gparams, &[model.param_size as i64])?,
+            self.x_literal(model, x, b)?,
+            self.y_literal(model, y, b)?,
+            Self::literal_f32(weights, &[b as i64])?,
+            Literal::scalar(lr),
+            Literal::scalar(mu),
+        ];
+        let out = self.exec(&model.train_file, &args)?;
+        if out.len() != 2 {
+            bail!("train artifact returned {} outputs, want 2", out.len());
+        }
+        Ok(StepOutput {
+            params: out[0].to_vec::<f32>()?,
+            loss: out[1].get_first_element::<f32>()?,
+        })
+    }
+
+    /// Per-sample gradient features + losses (the `{model}_feat` artifact).
+    pub fn grad_features(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        x: &XBatch,
+        y: &[i32],
+    ) -> Result<FeatOutput> {
+        let b = self.manifest.feat_batch;
+        let args = [
+            Self::literal_f32(params, &[model.param_size as i64])?,
+            self.x_literal(model, x, b)?,
+            self.y_literal(model, y, b)?,
+        ];
+        let out = self.exec(&model.feat_file, &args)?;
+        if out.len() != 2 {
+            bail!("feat artifact returned {} outputs, want 2", out.len());
+        }
+        Ok(FeatOutput {
+            features: out[0].to_vec::<f32>()?,
+            losses: out[1].to_vec::<f32>()?,
+        })
+    }
+
+    /// Masked evaluation (the `{model}_eval` artifact).
+    pub fn evaluate(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        x: &XBatch,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOutput> {
+        let b = self.manifest.feat_batch;
+        let args = [
+            Self::literal_f32(params, &[model.param_size as i64])?,
+            self.x_literal(model, x, b)?,
+            self.y_literal(model, y, b)?,
+            Self::literal_f32(mask, &[b as i64])?,
+        ];
+        let out = self.exec(&model.eval_file, &args)?;
+        if out.len() != 3 {
+            bail!("eval artifact returned {} outputs, want 3", out.len());
+        }
+        Ok(EvalOutput {
+            loss_sum: out[0].get_first_element::<f32>()? as f64,
+            correct: out[1].get_first_element::<f32>()? as f64,
+            count: out[2].get_first_element::<f32>()? as f64,
+        })
+    }
+
+    /// One T×T block of the pairwise gradient-distance matrix (the L1
+    /// Pallas artifact). `a` and `b` are row-major [tile, dim].
+    pub fn pairwise_tile(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let t = self.manifest.pairwise_tile as i64;
+        let c = self.manifest.pairwise_dim as i64;
+        let args = [
+            Self::literal_f32(a, &[t, c])?,
+            Self::literal_f32(b, &[t, c])?,
+        ];
+        let out = self.exec(&self.manifest.pairwise_file, &args)?;
+        if out.len() != 1 {
+            bail!("pairwise artifact returned {} outputs, want 1", out.len());
+        }
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}

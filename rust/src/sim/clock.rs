@@ -1,0 +1,126 @@
+//! Simulated clock: accumulates per-round simulated time and exposes the
+//! paper's normalized-time view (round deadline τ = 1.0).
+//!
+//! Synchronous FL semantics: a round ends when the *slowest participating
+//! client* finishes (or when every deadline-aware client has stopped at τ),
+//! so the round length is the max over per-client times. FedAvg ignores τ
+//! and its rounds stretch to the straggler tail (paper Fig. 4's 11× tail).
+
+/// Per-round simulated timing record.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTiming {
+    /// Per-participating-client simulated times (seconds).
+    pub client_times: Vec<f64>,
+    /// Round length = max(client_times) (0.0 for an empty round).
+    pub round_time: f64,
+}
+
+impl RoundTiming {
+    pub fn from_clients(client_times: Vec<f64>) -> RoundTiming {
+        let round_time = client_times.iter().copied().fold(0.0f64, f64::max);
+        RoundTiming { client_times, round_time }
+    }
+}
+
+/// Accumulates rounds; all queries are O(1)/O(n) over stored records.
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    /// τ used to normalize (1.0 ⇒ no normalization).
+    pub deadline: f64,
+    rounds: Vec<RoundTiming>,
+    elapsed: f64,
+}
+
+impl SimClock {
+    pub fn new(deadline: f64) -> SimClock {
+        assert!(deadline > 0.0);
+        SimClock { deadline, rounds: Vec::new(), elapsed: 0.0 }
+    }
+
+    /// Record one round; returns its simulated length.
+    pub fn push_round(&mut self, timing: RoundTiming) -> f64 {
+        let t = timing.round_time;
+        self.elapsed += t;
+        self.rounds.push(timing);
+        t
+    }
+
+    /// Total simulated seconds so far.
+    pub fn elapsed(&self) -> f64 {
+        self.elapsed
+    }
+
+    /// Cumulative simulated time after each round (for Fig. 5's x-axis).
+    pub fn cumulative(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.rounds
+            .iter()
+            .map(|r| {
+                acc += r.round_time;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Round lengths normalized by τ (paper Table 2: "normalized time of 1
+    /// is round deadline").
+    pub fn normalized_round_times(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.round_time / self.deadline).collect()
+    }
+
+    /// Mean normalized round length — the Table 2 time metric.
+    pub fn mean_normalized_round(&self) -> f64 {
+        let ts = self.normalized_round_times();
+        crate::util::stats::mean(&ts)
+    }
+
+    /// Every participating client's normalized time across all rounds
+    /// (Fig. 4 / Fig. 7 histograms are over *client* round times).
+    pub fn all_client_times_normalized(&self) -> Vec<f64> {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.client_times.iter().map(|t| t / self.deadline))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_time_is_max_of_clients() {
+        let t = RoundTiming::from_clients(vec![1.0, 3.0, 2.0]);
+        assert_eq!(t.round_time, 3.0);
+    }
+
+    #[test]
+    fn empty_round_is_zero() {
+        let t = RoundTiming::from_clients(vec![]);
+        assert_eq!(t.round_time, 0.0);
+    }
+
+    #[test]
+    fn cumulative_and_elapsed_agree() {
+        let mut c = SimClock::new(2.0);
+        c.push_round(RoundTiming::from_clients(vec![2.0]));
+        c.push_round(RoundTiming::from_clients(vec![4.0, 1.0]));
+        assert_eq!(c.elapsed(), 6.0);
+        assert_eq!(c.cumulative(), vec![2.0, 6.0]);
+        assert_eq!(c.num_rounds(), 2);
+    }
+
+    #[test]
+    fn normalization_by_deadline() {
+        let mut c = SimClock::new(2.0);
+        c.push_round(RoundTiming::from_clients(vec![1.0, 2.0]));
+        c.push_round(RoundTiming::from_clients(vec![6.0]));
+        assert_eq!(c.normalized_round_times(), vec![1.0, 3.0]);
+        assert_eq!(c.mean_normalized_round(), 2.0);
+        assert_eq!(c.all_client_times_normalized(), vec![0.5, 1.0, 3.0]);
+    }
+}

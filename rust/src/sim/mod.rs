@@ -1,0 +1,241 @@
+//! Hardware/straggler simulation — paper section 6.1 "Implementations".
+//!
+//! Each client i draws a computational capability cᵢ ~ N(1, 0.25)
+//! (truncated away from zero); training one sample costs 1/cᵢ seconds of
+//! *simulated* time, so a full round of E epochs over mᵢ samples costs
+//! E·mᵢ/cᵢ. The slowest s% of clients are designated stragglers by choosing
+//! the per-round deadline τ as the (100−s)-th percentile of full-round
+//! times — exactly the paper's emulation recipe.
+//!
+//! The simulated clock is what reproduces the paper's *normalized* time
+//! metrics (deadline = 1.0); wall-clock perf of our own stack is measured
+//! separately in EXPERIMENTS.md §Perf.
+
+pub mod clock;
+
+pub use clock::SimClock;
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Variance of the capability distribution. The paper writes cᵢ ~ N(1, 0.25);
+/// reading 0.25 as the *standard deviation* (σ² = 0.0625) reproduces the
+/// Table 2 FedAvg ratios (3–8× τ); σ = 0.5 would make 1/cᵢ diverge far
+/// beyond anything the paper reports.
+pub const CAPABILITY_VAR: f64 = 0.0625;
+/// Capabilities are truncated below: a floor of 0.25 means the slowest
+/// hardware is 4× slower than the mean, which combined with the 10× size
+/// tail yields FedAvg round ratios in the paper's 3–8× τ regime (an
+/// untruncated N(1, 0.25) produces near-zero capabilities whose 1/cᵢ
+/// blows the ratios far past anything in Table 2).
+pub const MIN_CAPABILITY: f64 = 0.25;
+/// Cost of a forward+last-layer-gradient pass relative to a full training
+/// visit (§4.4: "almost as cheap as calculating the loss"; backward ≈ 2×
+/// forward, so forward-only ≈ 1/3 of a training visit).
+pub const FEATURE_PASS_COST: f64 = 1.0 / 3.0;
+
+/// Per-client hardware profile.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientProfile {
+    /// Samples processed per simulated second.
+    pub capability: f64,
+}
+
+impl ClientProfile {
+    /// Simulated seconds to process `samples` training samples once.
+    pub fn time_for(&self, samples: usize) -> f64 {
+        samples as f64 / self.capability
+    }
+
+    /// Max samples processable within `budget` simulated seconds.
+    pub fn samples_within(&self, budget: f64) -> usize {
+        (self.capability * budget).floor().max(0.0) as usize
+    }
+}
+
+/// The simulated fleet: capabilities + dataset sizes + the round deadline.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub profiles: Vec<ClientProfile>,
+    /// mᵢ — per-client training-set sizes.
+    pub sizes: Vec<usize>,
+    /// E — local epochs per round.
+    pub epochs: usize,
+    /// τ — per-round training deadline (simulated seconds).
+    pub deadline: f64,
+    /// s — straggler percentage used to derive τ.
+    pub straggler_pct: f64,
+}
+
+impl Fleet {
+    /// Sample capabilities for `sizes.len()` clients and calibrate τ so the
+    /// slowest `straggler_pct`% cannot finish E full epochs in time.
+    pub fn new(rng: &mut Rng, sizes: Vec<usize>, epochs: usize, straggler_pct: f64) -> Fleet {
+        assert!(epochs >= 1);
+        assert!((0.0..100.0).contains(&straggler_pct));
+        let profiles: Vec<ClientProfile> = (0..sizes.len())
+            .map(|_| ClientProfile {
+                capability: rng
+                    .normal_scaled(1.0, CAPABILITY_VAR.sqrt())
+                    .max(MIN_CAPABILITY),
+            })
+            .collect();
+        let deadline = calibrate_deadline(&profiles, &sizes, epochs, straggler_pct);
+        Fleet { profiles, sizes, epochs, deadline, straggler_pct }
+    }
+
+    /// Full-round (E-epoch, full-set) simulated time of client `i`.
+    pub fn full_round_time(&self, i: usize) -> f64 {
+        self.profiles[i].time_for(self.epochs * self.sizes[i])
+    }
+
+    /// Is client `i` a straggler (cannot finish the full round by τ)?
+    pub fn is_straggler(&self, i: usize) -> bool {
+        self.full_round_time(i) > self.deadline
+    }
+
+    /// Observed straggler fraction (should track `straggler_pct`).
+    pub fn straggler_fraction(&self) -> f64 {
+        let n = self.sizes.len().max(1);
+        (0..self.sizes.len()).filter(|&i| self.is_straggler(i)).count() as f64 / n as f64
+    }
+
+    /// The paper's coreset budget bᵢ = ⌊(cᵢτ − mᵢ)/(E−1)⌋ (section 4.2):
+    /// epoch 1 runs the full set, the remaining E−1 epochs run the coreset.
+    /// Returns None when even one full epoch does not fit (cᵢτ < mᵢ —
+    /// the §4.4 extreme-straggler regime).
+    pub fn coreset_budget(&self, i: usize) -> Option<usize> {
+        let cap = self.profiles[i].capability * self.deadline;
+        let m = self.sizes[i] as f64;
+        if cap < m {
+            return None;
+        }
+        if self.epochs == 1 {
+            return Some(self.sizes[i]); // nothing left to shrink
+        }
+        Some(((cap - m) / (self.epochs - 1) as f64).floor().max(1.0) as usize)
+    }
+
+    /// §4.4 fallback budget when even epoch 1 does not fit: d̂ features come
+    /// from a cheap forward-only pass over the full set (cost
+    /// [`FEATURE_PASS_COST`]·mᵢ visits), then all E epochs run on the
+    /// coreset: bᵢ = ⌊(cᵢτ − mᵢ/3)/E⌋, clamped to ≥ 1 so pathologically
+    /// slow clients still contribute *something* (like FedProx's minimum
+    /// partial work).
+    pub fn fallback_budget(&self, i: usize) -> usize {
+        let cap = self.profiles[i].capability * self.deadline;
+        let feat = FEATURE_PASS_COST * self.sizes[i] as f64;
+        ((cap - feat) / self.epochs as f64).floor().max(1.0) as usize
+    }
+}
+
+/// τ = (100−s)-th percentile of full-round times: exactly s% of clients
+/// become stragglers.
+pub fn calibrate_deadline(
+    profiles: &[ClientProfile],
+    sizes: &[usize],
+    epochs: usize,
+    straggler_pct: f64,
+) -> f64 {
+    let times: Vec<f64> = profiles
+        .iter()
+        .zip(sizes)
+        .map(|(p, &m)| p.time_for(epochs * m))
+        .collect();
+    stats::percentile(&times, 100.0 - straggler_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize, s: f64) -> Fleet {
+        let mut rng = Rng::new(11);
+        let sizes: Vec<usize> = (0..n).map(|i| 20 + (i * 7) % 200).collect();
+        Fleet::new(&mut rng, sizes, 10, s)
+    }
+
+    #[test]
+    fn capability_moments() {
+        let f = fleet(4000, 10.0);
+        let caps: Vec<f64> = f.profiles.iter().map(|p| p.capability).collect();
+        let mean = stats::mean(&caps);
+        // Truncation at MIN_CAPABILITY pulls the mean slightly above 1.
+        assert!((mean - 1.0).abs() < 0.1, "mean {mean}");
+        assert!(caps.iter().all(|&c| c >= MIN_CAPABILITY));
+    }
+
+    #[test]
+    fn straggler_fraction_tracks_setting() {
+        for s in [10.0, 30.0] {
+            let f = fleet(1000, s);
+            let frac = f.straggler_fraction();
+            assert!(
+                (frac - s / 100.0).abs() < 0.02,
+                "s={s}: fraction {frac}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_stragglers_fit_full_round() {
+        let f = fleet(300, 30.0);
+        for i in 0..300 {
+            if !f.is_straggler(i) {
+                assert!(f.full_round_time(i) <= f.deadline + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn coreset_budget_fits_deadline() {
+        let f = fleet(300, 30.0);
+        for i in 0..300 {
+            if let Some(b) = f.coreset_budget(i) {
+                // epoch1 full + (E-1) coreset epochs must fit τ (up to the
+                // floor's one-sample slack per epoch).
+                let work = f.sizes[i] + (f.epochs - 1) * b;
+                let t = f.profiles[i].time_for(work);
+                assert!(
+                    t <= f.deadline + f.profiles[i].time_for(1) * (f.epochs - 1) as f64,
+                    "client {i}: {t} vs τ {}",
+                    f.deadline
+                );
+                if f.is_straggler(i) {
+                    assert!(b < f.sizes[i], "straggler budget {b} >= m {}", f.sizes[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_budget_fits_deadline() {
+        let f = fleet(300, 30.0);
+        for i in 0..300 {
+            let b = f.fallback_budget(i);
+            let t = f.profiles[i].time_for(f.epochs * b);
+            // ≤ τ up to one sample of flooring slack per epoch.
+            assert!(t <= f.deadline + f.profiles[i].time_for(f.epochs), "client {i}");
+        }
+    }
+
+    #[test]
+    fn profile_sample_budget_roundtrip() {
+        let p = ClientProfile { capability: 2.0 };
+        assert_eq!(p.time_for(10), 5.0);
+        assert_eq!(p.samples_within(5.0), 10);
+    }
+
+    #[test]
+    fn deadline_percentile_semantics() {
+        let profiles = vec![ClientProfile { capability: 1.0 }; 10];
+        let sizes: Vec<usize> = (1..=10).collect();
+        // full-round times = 10, 20, ..., 100 at E = 10
+        let tau = calibrate_deadline(&profiles, &sizes, 10, 10.0);
+        let over = sizes
+            .iter()
+            .filter(|&&m| (10 * m) as f64 > tau)
+            .count();
+        assert_eq!(over, 1, "tau {tau}");
+    }
+}

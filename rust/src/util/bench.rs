@@ -1,0 +1,107 @@
+//! Micro-benchmark harness (offline build: no criterion).
+//!
+//! Warmup + timed iterations with mean/p50/p99 reporting and a black-box
+//! sink to stop the optimizer from deleting the measured work. The paper-
+//! table benches use their own experiment drivers; this harness covers the
+//! criterion-style perf benches (k-medoids, runtime exec, distance tiling).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup calls, then timed iterations until
+/// either `max_iters` or `budget` wall time is spent, whichever first.
+pub fn bench<T>(name: &str, max_iters: usize, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..3.min(max_iters) {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(max_iters.min(4096));
+    let start = Instant::now();
+    for _ in 0..max_iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: stats::mean(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p99_ns: stats::percentile(&samples, 99.0),
+        min_ns: stats::min(&samples),
+    }
+}
+
+/// Standard entry point used by the perf benches.
+pub fn run_group(title: &str, benches: Vec<BenchResult>) {
+    println!("\n== {title} ==");
+    for b in &benches {
+        println!("{}", b.report());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 50, Duration::from_millis(200), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

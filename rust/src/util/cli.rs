@@ -1,0 +1,210 @@
+//! Tiny CLI argument parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! plus auto-generated usage text. Each binary declares its options up
+//! front; unknown flags are hard errors so typos don't silently fall
+//! through to defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let default = match o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:<28}{}{default}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse the given argv tail (without the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    args.flags.push(name);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        // defaults + required check
+        for o in &self.opts {
+            if o.is_flag {
+                continue;
+            }
+            if !args.values.contains_key(o.name) {
+                match o.default {
+                    Some(d) => {
+                        args.values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required --{}\n\n{}", o.name, self.usage())),
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args(), exiting with usage on error.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number, got '{}'", self.get(name)))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rounds", "10", "rounds")
+            .req("bench", "benchmark name")
+            .flag("verbose", "chatty")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = cli()
+            .parse_from(argv(&["--bench", "mnist", "--rounds=5", "--verbose", "extra"]))
+            .unwrap();
+        assert_eq!(a.get("bench"), "mnist");
+        assert_eq!(a.get_usize("rounds"), 5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = cli().parse_from(argv(&["--bench", "x"])).unwrap();
+        assert_eq!(a.get_usize("rounds"), 10);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse_from(argv(&["--bench", "x", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cli().parse_from(argv(&["--bench", "x", "--verbose=1"])).is_err());
+    }
+}

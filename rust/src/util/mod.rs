@@ -1,0 +1,13 @@
+//! Infrastructure substrates built in-tree for the offline environment:
+//! RNG, JSON, TOML-subset config, CLI parsing, stats, micro-bench harness,
+//! worker pool, and a property-testing runner. See DESIGN.md
+//! "Offline-build note".
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

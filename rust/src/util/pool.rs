@@ -1,0 +1,96 @@
+//! Scoped worker pool for parallel client simulation (offline: no tokio /
+//! rayon). The FL round loop is compute-bound — each selected client's local
+//! training is an independent chunk of PJRT executions — so OS threads with
+//! a work queue are the right primitive, not an async runtime.
+//!
+//! `parallel_map` preserves input order, propagates panics, and falls back
+//! to sequential execution for tiny inputs where thread spawn costs exceed
+//! the win.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` using up to `threads` OS threads, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 || n == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Work-stealing by atomic cursor over a shared Vec<Option<T>>.
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("slot taken twice");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker died before finishing"))
+        .collect()
+}
+
+/// Number of worker threads to use by default: physical parallelism capped
+/// at 8 (the sim saturates memory bandwidth well before 8 PJRT streams).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map((0..100).collect(), 4, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavier_work_all_items_processed() {
+        let out = parallel_map((0..1000).collect(), 8, |x: u64| {
+            let mut acc = x;
+            for _ in 0..100 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 1000);
+    }
+}

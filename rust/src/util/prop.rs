@@ -1,0 +1,67 @@
+//! Seeded property-testing runner (offline build: no proptest).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it reports the seed and case index so the exact input replays
+//! deterministically. There is no shrinking — generators are written to
+//! produce small cases with reasonable probability instead, which in
+//! practice localizes failures well for the invariant suites in
+//! rust/tests/proptests.rs.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` cases. The property panics (via
+/// assert!) on violation; this wrapper decorates the panic with replay info.
+pub fn check(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).split(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay: seed={seed}, case={case}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check("count", 1, 25, |_rng, _case| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed at case")]
+    fn failing_property_reports_case() {
+        check("boom", 2, 10, |rng, _case| {
+            // fails eventually: u64 below 4 is frequent
+            assert!(rng.below(4) != 0, "hit zero");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = Vec::new();
+        check("collect", 3, 5, |rng, _| {
+            first.push(rng.next_u64());
+        });
+        let mut second = Vec::new();
+        check("collect", 3, 5, |rng, _| {
+            second.push(rng.next_u64());
+        });
+        assert_eq!(first, second);
+    }
+}

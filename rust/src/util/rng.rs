@@ -1,0 +1,254 @@
+//! Deterministic, splittable PRNG for the whole simulation.
+//!
+//! xoshiro256** (Blackman & Vigna) with a splitmix64 seeder. Every random
+//! decision in the system — dataset generation, client speeds, client
+//! selection, minibatch shuffles, k-medoids tie-breaking — flows from one
+//! of these generators, so entire experiments replay bit-for-bit from a
+//! single seed. `split()` derives an independent stream, which is how the
+//! coordinator hands per-client / per-round randomness out without any
+//! cross-coupling between subsystems.
+
+/// xoshiro256** generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed via splitmix64 so even seeds 0,1,2,… give well-mixed states.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream keyed by `salt` without perturbing self.
+    pub fn split(&self, salt: u64) -> Rng {
+        let mut sm = self.s[0] ^ self.s[2] ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's rejection-free-ish method.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps bias below 2^-64 — negligible for sim use.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// statelessness; the sim is not normal-throughput-bound).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// N(mean, sd^2).
+    pub fn normal_scaled(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Power-law (Pareto/Lomax-style) sample: returns x >= xmin with density
+    /// ∝ x^-(alpha+1). Used for per-client dataset sizes (paper Fig. 2).
+    pub fn power_law(&mut self, xmin: f64, alpha: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        xmin * u.powf(-1.0 / alpha)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` indices in [0, n) WITH replacement, weighted by `weights`
+    /// (need not be normalized). This is the paper's Assumption A.6 client
+    /// sampling: probability ∝ p_i, with replacement.
+    pub fn weighted_with_replacement(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        // Build the cumulative distribution once; binary-search per draw.
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            acc += w.max(0.0);
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "all-zero weights");
+        (0..k)
+            .map(|_| {
+                let x = self.f64() * acc;
+                match cdf.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+                    Ok(i) => (i + 1).min(weights.len() - 1),
+                    Err(i) => i.min(weights.len() - 1),
+                }
+            })
+            .collect()
+    }
+
+    /// Sample `k` distinct indices in [0, n) uniformly (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let root = Rng::new(7);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0);
+    }
+
+    #[test]
+    fn uniform_mean_quarter_width() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn power_law_min_respected() {
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            assert!(r.power_law(10.0, 1.5) >= 10.0);
+        }
+    }
+
+    #[test]
+    fn weighted_sampling_matches_weights() {
+        let mut r = Rng::new(17);
+        let w = vec![1.0, 0.0, 3.0];
+        let draws = r.weighted_with_replacement(&w, 40_000);
+        let c0 = draws.iter().filter(|&&i| i == 0).count() as f64;
+        let c1 = draws.iter().filter(|&&i| i == 1).count();
+        let c2 = draws.iter().filter(|&&i| i == 2).count() as f64;
+        assert_eq!(c1, 0, "zero-weight index drawn");
+        let ratio = c2 / c0;
+        assert!((ratio - 3.0).abs() < 0.3, "{ratio}");
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(19);
+        let picks = r.choose_k(100, 30);
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut back = xs.clone();
+        back.sort_unstable();
+        assert_eq!(back, (0..50).collect::<Vec<_>>());
+    }
+}

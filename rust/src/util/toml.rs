@@ -1,0 +1,228 @@
+//! Minimal TOML-subset parser for the benchmark config files.
+//!
+//! Supports exactly what `configs/*.toml` use: `[section]` headers,
+//! `key = value` pairs with string / integer / float / bool / flat-array
+//! values, `#` comments, and blank lines. Anything outside that subset is a
+//! hard error with a line number — configs are hand-written, so strictness
+//! beats permissiveness.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Array(a) => a.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// section name -> key -> value. Keys before any `[section]` land in "".
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        // The config subset needs no escapes beyond \" and \\.
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# benchmark preset
+name = "mnist"          # inline comment
+[fl]
+rounds = 100
+clients_per_round = 10
+lr = 0.03
+deadline_aware = true
+straggler_pcts = [10, 30]
+[data]
+alpha = 0.5
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("mnist"));
+        assert_eq!(doc.get("fl", "rounds").unwrap().as_i64(), Some(100));
+        assert_eq!(doc.get("fl", "lr").unwrap().as_f64(), Some(0.03));
+        assert_eq!(doc.get("fl", "deadline_aware").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("fl", "straggler_pcts").unwrap().as_f64_vec(),
+            Some(vec![10.0, 30.0])
+        );
+        assert_eq!(doc.get("data", "alpha").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float_distinguished() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1e2").unwrap();
+        assert_eq!(doc.get("", "a").unwrap(), &TomlValue::Int(3));
+        assert_eq!(doc.get("", "b").unwrap(), &TomlValue::Float(3.0));
+        assert_eq!(doc.get("", "c").unwrap(), &TomlValue::Float(100.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unclosed").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let doc = TomlDoc::parse("a = -5\nb = 1_000").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get("", "b").unwrap().as_i64(), Some(1000));
+    }
+}

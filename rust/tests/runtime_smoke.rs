@@ -1,0 +1,223 @@
+//! Runtime smoke tests: load every AOT artifact through the PJRT CPU
+//! client and check numerics against known ground truth. This is the
+//! rust half of the python/tests contract — if these pass, the full
+//! python→HLO→rust round-trip is sound.
+//!
+//! Requires `make artifacts` to have run (skips otherwise, like the
+//! python suite does).
+
+use fedcore::runtime::{Runtime, XBatch};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn manifest_models_present() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    assert_eq!(m.train_batch, 8);
+    assert_eq!(m.feat_batch, 64);
+    assert_eq!(m.feature_dim, 64);
+    assert_eq!(m.pairwise_tile, 128);
+    assert_eq!(m.vocab.len(), 64);
+    for name in ["logreg", "mnist", "shake"] {
+        assert!(m.models.contains_key(name), "missing model {name}");
+    }
+}
+
+#[test]
+fn warmup_compiles_all_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    rt.warmup().expect("warmup");
+    assert_eq!(rt.stats().compile_count, 10);
+}
+
+#[test]
+fn pairwise_tile_matches_cpu_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = rt.manifest().pairwise_tile;
+    let c = rt.manifest().pairwise_dim;
+    // Deterministic pseudo-random features.
+    let mut rng = fedcore::util::rng::Rng::new(42);
+    let a: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+    let out = rt.pairwise_tile(&a, &b).expect("pairwise");
+    assert_eq!(out.len(), t * t);
+    // CPU reference distance for a few spot pairs.
+    for &(i, j) in &[(0usize, 0usize), (1, 7), (100, 3), (127, 127)] {
+        let mut d2 = 0.0f64;
+        for k in 0..c {
+            let diff = (a[i * c + k] - b[j * c + k]) as f64;
+            d2 += diff * diff;
+        }
+        let want = d2.sqrt() as f32;
+        let got = out[i * t + j];
+        assert!(
+            (got - want).abs() < 1e-3 * (1.0 + want),
+            "pair ({i},{j}): got {got}, want {want}"
+        );
+    }
+}
+
+#[test]
+fn logreg_train_step_descends_and_matches_shapes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest().model("logreg").unwrap().clone();
+    let b = rt.manifest().train_batch;
+    let mut params = model.init_params.clone();
+    let mut rng = fedcore::util::rng::Rng::new(1);
+    let x: Vec<f32> = (0..b * 60).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+    let w = vec![1.0f32; b];
+
+    let first = rt
+        .train_step(&model, &params, &params, &XBatch::F32(x.clone()), &y, &w, 0.1, 0.0)
+        .expect("step");
+    assert_eq!(first.params.len(), model.param_size);
+    // Zero-init logreg on 10 classes: first loss must be ln(10).
+    assert!(
+        (first.loss - (10.0f32).ln()).abs() < 1e-4,
+        "initial loss {} != ln(10)",
+        first.loss
+    );
+    params = first.params;
+    let mut last = first.loss;
+    for _ in 0..30 {
+        let out = rt
+            .train_step(&model, &params, &params, &XBatch::F32(x.clone()), &y, &w, 0.1, 0.0)
+            .expect("step");
+        params = out.params;
+        last = out.loss;
+    }
+    assert!(last < 0.8 * (10.0f32).ln(), "loss did not descend: {last}");
+}
+
+#[test]
+fn logreg_prox_term_shrinks_update() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest().model("logreg").unwrap().clone();
+    let b = rt.manifest().train_batch;
+    let mut rng = fedcore::util::rng::Rng::new(2);
+    let x: Vec<f32> = (0..b * 60).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+    let w = vec![1.0f32; b];
+    // params away from gparams=0: prox must pull the result toward 0.
+    let params = vec![0.5f32; model.param_size];
+    let gparams = vec![0.0f32; model.param_size];
+    let no_prox = rt
+        .train_step(&model, &params, &gparams, &XBatch::F32(x.clone()), &y, &w, 0.05, 0.0)
+        .unwrap();
+    let with_prox = rt
+        .train_step(&model, &params, &gparams, &XBatch::F32(x), &y, &w, 0.05, 1.0)
+        .unwrap();
+    let norm = |v: &[f32]| v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(norm(&with_prox.params) < norm(&no_prox.params));
+}
+
+#[test]
+fn grad_features_shape_and_pad() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest().model("logreg").unwrap().clone();
+    let f = rt.manifest().feat_batch;
+    let c = rt.manifest().feature_dim;
+    let mut rng = fedcore::util::rng::Rng::new(3);
+    let x: Vec<f32> = (0..f * 60).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..f).map(|_| rng.below(10) as i32).collect();
+    let out = rt
+        .grad_features(&model, &model.init_params, &XBatch::F32(x), &y)
+        .expect("feat");
+    assert_eq!(out.features.len(), f * c);
+    assert_eq!(out.losses.len(), f);
+    // Columns >= 10 are zero padding for logreg.
+    for row in 0..f {
+        for col in 10..c {
+            assert_eq!(out.features[row * c + col], 0.0, "row {row} col {col}");
+        }
+    }
+    // Zero-init params: feature rows are softmax(0) - onehot = 0.1 - e_y.
+    for row in 0..4 {
+        for col in 0..10 {
+            let want = if y[row] as usize == col { 0.1 - 1.0 } else { 0.1 };
+            let got = out.features[row * c + col];
+            assert!((got - want).abs() < 1e-5, "row {row} col {col}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn evaluate_mask_semantics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest().model("logreg").unwrap().clone();
+    let f = rt.manifest().feat_batch;
+    let mut rng = fedcore::util::rng::Rng::new(4);
+    let x: Vec<f32> = (0..f * 60).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..f).map(|_| rng.below(10) as i32).collect();
+    let full = rt
+        .evaluate(&model, &model.init_params, &XBatch::F32(x.clone()), &y, &vec![1.0; f])
+        .unwrap();
+    assert_eq!(full.count as usize, f);
+    let mut mask = vec![0.0f32; f];
+    mask[0] = 1.0;
+    let one = rt
+        .evaluate(&model, &model.init_params, &XBatch::F32(x), &y, &mask)
+        .unwrap();
+    assert_eq!(one.count as usize, 1);
+    assert!(one.loss_sum <= full.loss_sum + 1e-6);
+    // zero-init logreg: loss is exactly ln(10) per sample
+    assert!((one.loss_sum - (10.0f64).ln()).abs() < 1e-4);
+}
+
+#[test]
+fn mnist_cnn_and_shake_lstm_execute() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let b = rt.manifest().train_batch;
+    let mut rng = fedcore::util::rng::Rng::new(5);
+
+    // CNN: one train step must run and return finite loss.
+    let mnist = rt.manifest().model("mnist").unwrap().clone();
+    let x: Vec<f32> = (0..b * 784).map(|_| rng.f32()).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+    let out = rt
+        .train_step(&mnist, &mnist.init_params, &mnist.init_params, &XBatch::F32(x), &y, &vec![1.0; b], 0.03, 0.0)
+        .expect("mnist step");
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+
+    // LSTM: token inputs, per-position labels.
+    let shake = rt.manifest().model("shake").unwrap().clone();
+    let s = shake.seq_len;
+    let x: Vec<i32> = (0..b * s).map(|_| rng.below(64) as i32).collect();
+    let y: Vec<i32> = (0..b * s).map(|_| rng.below(64) as i32).collect();
+    let out = rt
+        .train_step(&shake, &shake.init_params, &shake.init_params, &XBatch::I32(x), &y, &vec![1.0; b], 0.03, 0.0)
+        .expect("shake step");
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    // Random 64-way labels: loss should be near ln(64).
+    assert!((out.loss - (64.0f32).ln()).abs() < 1.0, "loss {}", out.loss);
+}
+
+#[test]
+fn shape_mismatch_is_error_not_ub() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.manifest().model("logreg").unwrap().clone();
+    let bad = rt.train_step(
+        &model,
+        &model.init_params,
+        &model.init_params,
+        &XBatch::F32(vec![0.0; 3]), // wrong length
+        &[0; 8],
+        &[1.0; 8],
+        0.1,
+        0.0,
+    );
+    assert!(bad.is_err());
+}

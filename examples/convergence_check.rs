@@ -40,7 +40,7 @@ fn coreset_epsilon(features: &[f32], dim: usize, m: usize, cs: &coreset::Coreset
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load("artifacts")?;
     let bench = Benchmark::Synthetic { alpha: 0.5, beta: 0.5 };
-    let ds = data::generate(bench, 0.25, &rt.manifest().vocab, 7);
+    let ds = std::sync::Arc::new(data::generate(bench, 0.25, &rt.manifest().vocab, 7));
     let model = rt.manifest().model("logreg")?.clone();
 
     // ---- (a) ε vs budget, on the largest client ----
@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
             coreset_mode: fedcore::fl::CoresetMode::Adaptive,
             eval_every: rounds, // evaluate at the end only
             eval_cap: 512,
+            workers: 1,
             verbose: false,
         };
         let engine = Engine::new(&rt, &ds, cfg)?;
@@ -112,6 +113,7 @@ fn main() -> anyhow::Result<()> {
             coreset_mode: fedcore::fl::CoresetMode::Adaptive,
             eval_every: 32,
             eval_cap: 512,
+            workers: 1,
             verbose: false,
         };
         let engine = Engine::new(&rt, &ds, cfg)?;

@@ -43,7 +43,12 @@ fn main() -> anyhow::Result<()> {
         base.run.lr = args.get_f64("lr") as f32;
         base.run.straggler_pct = args.get_f64("stragglers");
         base.run.eval_every = 2;
-        let ds = data::generate(bench, base.scale, &rt.manifest().vocab, base.data_seed);
+        let ds = std::sync::Arc::new(data::generate(
+            bench,
+            base.scale,
+            &rt.manifest().vocab,
+            base.data_seed,
+        ));
         for (si, strategy) in all_strategies(base.prox_mu).into_iter().enumerate() {
             let cfg = base.clone().with_strategy(strategy);
             let engine = Engine::new(&rt, &ds, cfg.run.clone())?;

@@ -28,7 +28,12 @@ fn main() -> anyhow::Result<()> {
     cfg.run.lr = 0.01; // a few rounds only, so step faster than the paper's 0.001
     cfg.run.straggler_pct = 30.0;
     cfg.run.verbose = false;
-    let ds = data::generate(cfg.benchmark, cfg.scale, &rt.manifest().vocab, cfg.data_seed);
+    let ds = std::sync::Arc::new(data::generate(
+        cfg.benchmark,
+        cfg.scale,
+        &rt.manifest().vocab,
+        cfg.data_seed,
+    ));
     println!(
         "federation: {} clients, {} samples (mean {:.0}/client)",
         ds.num_clients(),

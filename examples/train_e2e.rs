@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         .opt("stragglers", "30", "straggler percentage")
         .opt("lr", "0", "learning-rate override")
         .opt("seed", "7", "root seed")
+        .opt("workers", "1", "exec worker threads (0 = auto, 1 = sequential)")
         .opt("out", "results/e2e", "output dir for per-strategy CSVs")
         .parse();
 
@@ -40,8 +41,14 @@ fn main() -> anyhow::Result<()> {
     if args.get_f64("lr") > 0.0 {
         base.run.lr = args.get_f64("lr") as f32;
     }
+    base.run.workers = args.get_usize("workers");
 
-    let ds = data::generate(bench, base.scale, &rt.manifest().vocab, base.data_seed);
+    let ds = std::sync::Arc::new(data::generate(
+        bench,
+        base.scale,
+        &rt.manifest().vocab,
+        base.data_seed,
+    ));
     let stats = data::partition::size_stats(&ds.sizes());
     println!(
         "=== {} | {} clients | {} samples (mean {:.0}, std {:.0}) | {} rounds × {} epochs | {}% stragglers ===",

@@ -15,7 +15,12 @@ use fedcore::util::rng::Rng;
 fn main() {
     let rt = expt::runtime_or_exit();
     let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
-    let ds = data::generate(bench, expt::bench_scale(bench), &rt.manifest().vocab, 7);
+    let ds = std::sync::Arc::new(data::generate(
+        bench,
+        expt::bench_scale(bench),
+        &rt.manifest().vocab,
+        7,
+    ));
     let model = rt.manifest().model("logreg").unwrap().clone();
 
     // ---- (a) Eq. (5) objective on a real straggler client's features ----

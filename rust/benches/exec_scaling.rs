@@ -1,0 +1,127 @@
+//! Round-throughput scaling of the exec subsystem: the same FL run driven
+//! by 1, 2, 4 and 8 workers, with a warmup run per configuration so every
+//! worker's runtime is built and compiled before the timed run. Verifies
+//! the determinism contract along the way (every worker count must
+//! reproduce the sequential round records bit-for-bit) and emits
+//! `BENCH_exec.json` with seconds / rounds-per-second / speedup rows.
+//!
+//! Knobs: `FEDCORE_SCALE`, `FEDCORE_ROUNDS`, `FEDCORE_CLIENTS`,
+//! `FEDCORE_BENCH_OUT` (output path, default `BENCH_exec.json`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark};
+use fedcore::expt;
+use fedcore::fl::{CoresetMode, Engine, RunConfig, Strategy};
+use fedcore::metrics::RunResult;
+use fedcore::util::json::{write_json, Json};
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn main() {
+    let rt = expt::runtime_or_exit();
+    rt.warmup().expect("warmup");
+
+    let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
+    let scale = expt::env_f64("FEDCORE_SCALE", 1.0) * 0.35;
+    let ds = Arc::new(data::generate(bench, scale, &rt.manifest().vocab, 7));
+    let rounds = expt::env_usize("FEDCORE_ROUNDS", 6);
+    let base = RunConfig {
+        strategy: Strategy::FedCore,
+        rounds,
+        epochs: 6,
+        clients_per_round: expt::env_usize("FEDCORE_CLIENTS", 8),
+        lr: 0.01,
+        straggler_pct: 30.0,
+        seed: 7,
+        coreset_method: Method::FasterPam,
+        coreset_mode: CoresetMode::Adaptive,
+        eval_every: 2,
+        eval_cap: 256,
+        workers: 1,
+        verbose: false,
+    };
+
+    println!(
+        "== exec scaling: {} | {} clients, {} samples | {} rounds × {} epochs, K = {} ==",
+        bench.label(),
+        ds.num_clients(),
+        ds.total_samples(),
+        base.rounds,
+        base.epochs,
+        base.clients_per_round
+    );
+    println!("{:>8} {:>10} {:>12} {:>9}", "workers", "seconds", "rounds/s", "speedup");
+
+    let mut reference: Option<RunResult> = None;
+    let mut baseline = f64::NAN;
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.workers = workers;
+        let engine = Engine::new(&rt, &ds, cfg).expect("engine");
+        // Warmup run: builds + compiles each worker's pinned runtime so the
+        // timed run measures round throughput, not compilation.
+        let warm = engine.run().expect("warmup run");
+        let t0 = Instant::now();
+        let result = engine.run().expect("timed run");
+        let secs = t0.elapsed().as_secs_f64();
+
+        // Determinism contract: identical round records at any worker count
+        // (the warmup must also match the timed run — same seed, same run).
+        assert_eq!(warm.final_params, result.final_params, "run is not replay-deterministic");
+        match &reference {
+            None => reference = Some(result.clone()),
+            Some(seq) => {
+                for (a, b) in seq.rounds.iter().zip(&result.rounds) {
+                    assert_eq!(
+                        a.train_loss.to_bits(),
+                        b.train_loss.to_bits(),
+                        "workers={workers} diverged from sequential at round {}",
+                        a.round
+                    );
+                    assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+                    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+                }
+            }
+        }
+
+        if workers == 1 {
+            baseline = secs;
+        }
+        let speedup = baseline / secs;
+        let rps = rounds as f64 / secs;
+        println!("{workers:>8} {secs:>10.2} {rps:>12.2} {speedup:>8.2}x");
+        rows.push(obj(vec![
+            ("workers", num(workers as f64)),
+            ("seconds", num(secs)),
+            ("rounds_per_sec", num(rps)),
+            ("speedup", num(speedup)),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("bench", Json::Str("exec_scaling".into())),
+        ("benchmark", Json::Str(bench.label())),
+        ("strategy", Json::Str("FedCore".into())),
+        ("rounds", num(rounds as f64)),
+        ("clients_per_round", num(base.clients_per_round as f64)),
+        ("epochs", num(base.epochs as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    let path = std::env::var("FEDCORE_BENCH_OUT").unwrap_or_else(|_| "BENCH_exec.json".into());
+    std::fs::write(&path, text).expect("writing bench output");
+    println!("\nwrote {path}");
+}

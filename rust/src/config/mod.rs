@@ -110,6 +110,9 @@ impl ExperimentConfig {
         if let Some(v) = usize_of("eval_cap") {
             cfg.run.eval_cap = v;
         }
+        if let Some(v) = usize_of("workers") {
+            cfg.run.workers = v;
+        }
         if let Some(v) = doc.get("fl", "lr").and_then(|v| v.as_f64()) {
             cfg.run.lr = v as f32;
         }
@@ -187,6 +190,7 @@ prox_mu = 0.05
 lr = 0.01
 straggler_pct = 10.0
 coreset_method = "pam"
+workers = 3
 "#;
         let cfg = ExperimentConfig::from_toml(text).unwrap();
         assert_eq!(cfg.benchmark, Benchmark::Synthetic { alpha: 0.5, beta: 0.5 });
@@ -196,6 +200,7 @@ coreset_method = "pam"
         assert!((cfg.run.lr - 0.01).abs() < 1e-9);
         assert_eq!(cfg.run.straggler_pct, 10.0);
         assert_eq!(cfg.run.coreset_method, Method::Pam);
+        assert_eq!(cfg.run.workers, 3);
     }
 
     #[test]

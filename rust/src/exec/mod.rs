@@ -1,0 +1,178 @@
+//! Sharded parallel execution for the FL round loop.
+//!
+//! The engine's hot path — K selected clients each running a [`LocalPlan`]
+//! against the PJRT runtime, plus the batched test-set evaluation — is a
+//! set of independent jobs. This module abstracts *where* those jobs run:
+//!
+//! * [`Sequential`] executes them in-thread on the engine's own runtime
+//!   (the original behaviour, and the reference semantics).
+//! * [`Sharded`] owns a persistent pool of worker threads, each pinned to
+//!   its own [`Runtime`] instance built from a
+//!   [`crate::runtime::RuntimeFactory`]
+//!   (`PjRtClient` is `Rc`-backed and `!Send`, so runtimes cannot migrate
+//!   between threads — see `runtime/mod.rs`).
+//!
+//! Determinism contract: executors return results **in job order**,
+//! regardless of completion order, and every job carries its own pre-split
+//! [`Rng`] stream. The engine aggregates in that order with the same f64
+//! arithmetic as the sequential path, so a run's `RunResult` is
+//! bit-identical for any worker count (verified by
+//! `rust/tests/proptest_exec.rs`).
+
+pub mod sequential;
+pub mod sharded;
+
+pub use self::sequential::Sequential;
+pub use self::sharded::Sharded;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coreset::{Coreset, Method};
+use crate::data::FedDataset;
+use crate::fl::client::run_client;
+use crate::fl::plan::LocalPlan;
+use crate::fl::ClientOutcome;
+use crate::runtime::{EvalOutput, ModelInfo, Runtime};
+use crate::sim::Fleet;
+use crate::util::rng::Rng;
+
+/// Everything shared by all jobs of one engine: the dataset, the model
+/// under training, the simulated fleet, and the training hyper-parameters.
+/// `Send + Sync`, handed to workers as an `Arc`.
+pub struct ExecContext {
+    pub data: Arc<FedDataset>,
+    pub model: ModelInfo,
+    /// Shared with the engine (same allocation), so planning and client
+    /// simulation can never see diverging fleets.
+    pub fleet: Arc<Fleet>,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// FedProx proximal μ (0 for the other strategies).
+    pub mu: f32,
+    /// k-medoids solver for adaptive coreset construction.
+    pub method: Method,
+}
+
+/// One selected client's work for one round. The RNG stream is split by
+/// the engine from `(round, client)` before dispatch, so outcomes do not
+/// depend on which worker runs the job or in what order.
+pub struct ClientJob {
+    /// Index into `ctx.data.clients`.
+    pub client: usize,
+    pub plan: LocalPlan,
+    /// The round's global model wᵣ (shared, read-only).
+    pub global: Arc<Vec<f32>>,
+    /// §4.3 static coreset, precomputed by the engine's per-client cache.
+    pub static_coreset: Option<Coreset>,
+    pub rng: Rng,
+}
+
+/// One evaluation batch: test-set rows `start..end` (at most `feat_batch`
+/// of them — exactly one PJRT call, so that merging job outputs in order
+/// reproduces the sequential merge bit-for-bit).
+pub struct EvalJob {
+    pub params: Arc<Vec<f32>>,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Where round jobs execute. Implementations must return results in job
+/// order and must not reorder the per-job RNG streams.
+pub trait Executor {
+    /// Worker parallelism (1 for sequential).
+    fn workers(&self) -> usize;
+
+    /// Execute all client jobs of one round; `out[i]` corresponds to
+    /// `jobs[i]`.
+    fn run_clients(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientOutcome>>;
+
+    /// Execute evaluation batches; `out[i]` corresponds to `jobs[i]`.
+    fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>>;
+}
+
+/// Run one client job against `rt` (shared by both executors).
+pub(crate) fn exec_client(
+    rt: &Runtime,
+    ctx: &ExecContext,
+    job: ClientJob,
+) -> Result<ClientOutcome> {
+    let ClientJob { client, plan, global, static_coreset, mut rng } = job;
+    run_client(
+        rt,
+        &ctx.model,
+        &ctx.data.clients[client],
+        &ctx.fleet,
+        client,
+        global.as_slice(),
+        &plan,
+        ctx.lr,
+        ctx.mu,
+        ctx.method,
+        static_coreset.as_ref(),
+        &mut rng,
+    )
+}
+
+/// Run one evaluation batch against `rt` (shared by both executors).
+pub(crate) fn exec_eval(rt: &Runtime, ctx: &ExecContext, job: &EvalJob) -> Result<EvalOutput> {
+    let f = rt.manifest().feat_batch;
+    let idxs: Vec<usize> = (job.start..job.end).collect();
+    let (x, y, mask) = ctx.data.test.gather_batch(&idxs, None, f);
+    rt.evaluate(&ctx.model, job.params.as_slice(), &x, &y, &mask)
+}
+
+/// The two built-in executors behind one concrete type, so `Engine::new`
+/// can pick at run time from `RunConfig::workers` without making every
+/// caller generic.
+pub enum ExecutorImpl<'a> {
+    Sequential(Sequential<'a>),
+    Sharded(Sharded),
+}
+
+impl<'a> ExecutorImpl<'a> {
+    /// Resolve a worker-count setting: `0` = auto
+    /// ([`crate::util::pool::default_threads`], which honors
+    /// `FEDCORE_THREADS`), `1` = in-thread sequential, `N > 1` = sharded
+    /// pool of N runtime-pinned workers.
+    pub fn from_config(rt: &'a Runtime, workers: usize) -> ExecutorImpl<'a> {
+        let n = if workers == 0 { crate::util::pool::default_threads() } else { workers };
+        if n <= 1 {
+            ExecutorImpl::Sequential(Sequential::new(rt))
+        } else {
+            ExecutorImpl::Sharded(Sharded::new(n, rt.factory()))
+        }
+    }
+}
+
+impl Executor for ExecutorImpl<'_> {
+    fn workers(&self) -> usize {
+        match self {
+            ExecutorImpl::Sequential(e) => e.workers(),
+            ExecutorImpl::Sharded(e) => e.workers(),
+        }
+    }
+
+    fn run_clients(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientOutcome>> {
+        match self {
+            ExecutorImpl::Sequential(e) => e.run_clients(ctx, jobs),
+            ExecutorImpl::Sharded(e) => e.run_clients(ctx, jobs),
+        }
+    }
+
+    fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
+        match self {
+            ExecutorImpl::Sequential(e) => e.run_evals(ctx, jobs),
+            ExecutorImpl::Sharded(e) => e.run_evals(ctx, jobs),
+        }
+    }
+}

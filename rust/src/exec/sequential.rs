@@ -1,0 +1,39 @@
+//! The in-thread executor: runs every job on the engine's own runtime, in
+//! job order. This is the reference implementation the sharded executor
+//! must match bit-for-bit (and the original engine behaviour, unchanged).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{exec_client, exec_eval, ClientJob, EvalJob, ExecContext, Executor};
+use crate::fl::ClientOutcome;
+use crate::runtime::{EvalOutput, Runtime};
+
+pub struct Sequential<'a> {
+    rt: &'a Runtime,
+}
+
+impl<'a> Sequential<'a> {
+    pub fn new(rt: &'a Runtime) -> Sequential<'a> {
+        Sequential { rt }
+    }
+}
+
+impl Executor for Sequential<'_> {
+    fn workers(&self) -> usize {
+        1
+    }
+
+    fn run_clients(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientOutcome>> {
+        jobs.into_iter().map(|job| exec_client(self.rt, ctx, job)).collect()
+    }
+
+    fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
+        jobs.iter().map(|job| exec_eval(self.rt, ctx, job)).collect()
+    }
+}

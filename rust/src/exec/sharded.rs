@@ -1,0 +1,181 @@
+//! The sharded executor: a persistent pool of worker threads, each pinned
+//! to its own [`Runtime`] built lazily from a [`RuntimeFactory`] on first
+//! job (so constructing the pool is cheap and never touches the
+//! filesystem). Jobs are dealt round-robin by job index — deterministic,
+//! and balanced because one round's client jobs have similar cost — and
+//! results are re-ordered by job index before returning, which is what
+//! makes sharded aggregation bit-identical to sequential.
+//!
+//! Failure model: a worker that cannot build its runtime, or whose job
+//! errors, sends the error back and stays alive; a worker that dies
+//! entirely closes its channels, which `collect` surfaces as an error
+//! instead of deadlocking.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::{exec_client, exec_eval, ClientJob, EvalJob, ExecContext, Executor};
+use crate::fl::ClientOutcome;
+use crate::runtime::{EvalOutput, Runtime, RuntimeFactory};
+
+enum WorkerMsg {
+    Client {
+        idx: usize,
+        ctx: Arc<ExecContext>,
+        job: ClientJob,
+        tx: Sender<(usize, Result<ClientOutcome>)>,
+    },
+    Eval {
+        idx: usize,
+        ctx: Arc<ExecContext>,
+        job: EvalJob,
+        tx: Sender<(usize, Result<EvalOutput>)>,
+    },
+    Shutdown,
+}
+
+pub struct Sharded {
+    senders: Vec<Sender<WorkerMsg>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Sharded {
+    /// Spawn `workers` threads immediately; each builds its runtime lazily
+    /// on its first job.
+    pub fn new(workers: usize, factory: RuntimeFactory) -> Sharded {
+        assert!(workers >= 1, "sharded executor needs at least one worker");
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = mpsc::channel();
+            let f = factory.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fedcore-exec-{w}"))
+                .spawn(move || worker_main(rx, f))
+                .expect("spawning exec worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Sharded { senders, handles }
+    }
+
+    /// Deal jobs round-robin by job index and collect results in job
+    /// order. `wrap` builds the per-kind [`WorkerMsg`]; everything else —
+    /// dispatch policy, error surfaces, the order-restoring collect — is
+    /// shared by both job kinds.
+    fn dispatch<J, T>(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<J>,
+        wrap: impl Fn(usize, Arc<ExecContext>, J, Sender<(usize, Result<T>)>) -> WorkerMsg,
+    ) -> Result<Vec<T>> {
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel();
+        for (idx, job) in jobs.into_iter().enumerate() {
+            let w = idx % self.senders.len();
+            self.senders[w]
+                .send(wrap(idx, Arc::clone(ctx), job, tx.clone()))
+                .map_err(|_| anyhow!("exec worker {w} is gone"))?;
+        }
+        drop(tx);
+        Self::collect(rx, n)
+    }
+
+    /// Receive exactly `n` `(idx, result)` pairs and restore job order.
+    fn collect<T>(rx: Receiver<(usize, Result<T>)>, n: usize) -> Result<Vec<T>> {
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        for _ in 0..n {
+            let (idx, res) = rx
+                .recv()
+                .map_err(|_| anyhow!("exec worker died before finishing its jobs"))?;
+            out[idx] = Some(res?);
+        }
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow!("exec worker reported a duplicate job index")))
+            .collect()
+    }
+}
+
+impl Executor for Sharded {
+    fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn run_clients(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientOutcome>> {
+        self.dispatch(ctx, jobs, |idx, ctx, job, tx| WorkerMsg::Client { idx, ctx, job, tx })
+    }
+
+    fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
+        self.dispatch(ctx, jobs, |idx, ctx, job, tx| WorkerMsg::Eval { idx, ctx, job, tx })
+    }
+}
+
+impl Drop for Sharded {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::Shutdown);
+        }
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(rx: Receiver<WorkerMsg>, factory: RuntimeFactory) {
+    // The worker's pinned runtime: built on first use, reused for every
+    // subsequent job (executable compilation is cached inside `Runtime`).
+    let mut rt: Option<Runtime> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Client { idx, ctx, job, tx } => {
+                let res = caught(|| {
+                    pinned_runtime(&mut rt, &factory).and_then(|rt| exec_client(rt, &ctx, job))
+                });
+                let _ = tx.send((idx, res));
+            }
+            WorkerMsg::Eval { idx, ctx, job, tx } => {
+                let res = caught(|| {
+                    pinned_runtime(&mut rt, &factory).and_then(|rt| exec_eval(rt, &ctx, &job))
+                });
+                let _ = tx.send((idx, res));
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Run one job, converting a panic into the job's `Err` — matching the
+/// Sequential executor's failure surface (the panic message reaches the
+/// caller) and keeping the worker alive for subsequent rounds.
+fn caught<T>(job: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+        Ok(res) => res,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            Err(anyhow!("exec worker job panicked: {msg}"))
+        }
+    }
+}
+
+fn pinned_runtime<'r>(
+    slot: &'r mut Option<Runtime>,
+    factory: &RuntimeFactory,
+) -> Result<&'r Runtime> {
+    if slot.is_none() {
+        *slot = Some(factory.build()?);
+    }
+    Ok(slot.as_ref().expect("runtime slot just filled"))
+}

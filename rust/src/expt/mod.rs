@@ -6,9 +6,12 @@
 //! Bench knobs come from the environment so `cargo bench` stays a single
 //! command (paper-shape defaults) while full-scale runs remain available:
 //!
-//! * `FEDCORE_SCALE`  — dataset scale multiplier (default per bench)
-//! * `FEDCORE_ROUNDS` — round-count override
-//! * `FEDCORE_FULL=1` — paper-scale everything (slow)
+//! * `FEDCORE_SCALE`   — dataset scale multiplier (default per bench)
+//! * `FEDCORE_ROUNDS`  — round-count override
+//! * `FEDCORE_FULL=1`  — paper-scale everything (slow)
+//! * `FEDCORE_WORKERS` — exec worker threads (0 = auto, default 1)
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -84,7 +87,7 @@ pub fn run_one(
     straggler_pct: f64,
     seed: u64,
 ) -> Result<RunResult> {
-    let ds = data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7);
+    let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
     let mut cfg = ExperimentConfig::scaled_preset(bench, bench_scale(bench))
         .with_strategy(strategy);
     cfg.run.rounds = bench_rounds(bench);
@@ -92,6 +95,7 @@ pub fn run_one(
     cfg.run.straggler_pct = straggler_pct;
     cfg.run.seed = seed;
     cfg.run.eval_every = 2;
+    cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
     Engine::new(rt, &ds, cfg.run.clone())?.run()
 }
 
@@ -103,7 +107,7 @@ pub fn run_cell(
     straggler_pct: f64,
     seed: u64,
 ) -> Result<Vec<RunResult>> {
-    let ds = data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7);
+    let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
     let base = {
         let mut cfg = ExperimentConfig::scaled_preset(bench, bench_scale(bench));
         cfg.run.rounds = bench_rounds(bench);
@@ -111,6 +115,7 @@ pub fn run_cell(
         cfg.run.straggler_pct = straggler_pct;
         cfg.run.seed = seed;
         cfg.run.eval_every = 2;
+        cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
         cfg
     };
     let mut out = Vec::new();
@@ -187,15 +192,38 @@ pub fn timing_projection(
         .collect()
 }
 
-/// Load the runtime or exit 0 with a message (benches must not fail when
-/// artifacts are absent — mirrors the test suites' skip behaviour).
-pub fn runtime_or_exit() -> Runtime {
+/// Load the runtime if this environment can: artifacts present AND a
+/// backend able to execute them. Returns `None` (with an explanatory line
+/// on stderr) when artifacts are missing or the build uses the stub
+/// backend; panics only when a real (`pjrt`) backend fails on existing
+/// artifacts. The single skip policy shared by the test suites and the
+/// benches.
+pub fn try_runtime() -> Option<Runtime> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("no artifacts found — run `make artifacts` first; skipping bench");
-        std::process::exit(0);
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
     }
-    Runtime::load(&dir).expect("runtime load")
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        // The stub-backend build cannot execute artifacts even when they
+        // exist; skip like the missing-artifacts case instead of failing.
+        Err(e) if !cfg!(feature = "pjrt") => {
+            eprintln!("skipping: artifacts present but no pjrt backend ({e:#})");
+            None
+        }
+        Err(e) => panic!("runtime load: {e:#}"),
+    }
+}
+
+/// Load the runtime or exit 0 with a message (benches must not fail when
+/// the environment cannot execute artifacts — same policy as the test
+/// suites' skip behaviour, via [`try_runtime`]).
+pub fn runtime_or_exit() -> Runtime {
+    match try_runtime() {
+        Some(rt) => rt,
+        None => std::process::exit(0),
+    }
 }
 
 /// Render a Table-2-style block for one (benchmark, s%) cell.

@@ -2,6 +2,11 @@
 //! runtime — minibatch SGD epochs, gradient-feature extraction, coreset
 //! construction, and coreset-weighted training (paper Algorithm 1 lines
 //! 6–13).
+//!
+//! [`run_client`] is thread-agnostic: it takes the runtime to execute
+//! against as an argument and owns no global state, which is what lets
+//! [`crate::exec::Sharded`] run many clients concurrently, each on its
+//! worker's pinned runtime, with per-job RNG streams.
 
 use anyhow::Result;
 

@@ -1,16 +1,25 @@
 //! The FL round engine — paper Algorithm 1.
 //!
 //! Per round: sample K clients with probability ∝ mᵢ (Assumption A.6),
-//! broadcast the global model, execute each client's [`LocalPlan`],
-//! aggregate the round-end parameters wᵣ₊₁ = (1/K) Σ wᵢ, and record
-//! loss/accuracy/timing into a [`RunResult`].
+//! broadcast the global model, execute each client's [`LocalPlan`] through
+//! the configured [`Executor`] (in-thread or sharded across runtime-pinned
+//! workers — see [`crate::exec`]), aggregate the round-end parameters
+//! wᵣ₊₁ = (1/K) Σ wᵢ in selection order, and record loss/accuracy/timing
+//! into a [`RunResult`].
+//!
+//! Determinism: every job's RNG stream is split from `(round, client)`
+//! before dispatch and results are aggregated in selection order, so a run
+//! is bit-identical for any worker count.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::client::{run_client, ClientOutcome};
-use super::plan::Strategy;
+use super::client::ClientOutcome;
+use super::plan::{LocalPlan, Strategy};
 use crate::coreset::Method;
 use crate::data::FedDataset;
+use crate::exec::{ClientJob, EvalJob, ExecContext, Executor, ExecutorImpl};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
 use crate::sim::{clock::RoundTiming, Fleet, SimClock};
@@ -51,6 +60,10 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Cap on test samples per evaluation (0 = use the full test set).
     pub eval_cap: usize,
+    /// Client-execution worker threads: 1 = sequential (in-thread), N > 1
+    /// = sharded pool of N runtime-pinned workers, 0 = auto
+    /// (`util::pool::default_threads`, honors `FEDCORE_THREADS`).
+    pub workers: usize,
     /// Print a progress line per round.
     pub verbose: bool,
 }
@@ -69,6 +82,7 @@ impl Default for RunConfig {
             coreset_mode: CoresetMode::Adaptive,
             eval_every: 1,
             eval_cap: 512,
+            workers: 1,
             verbose: false,
         }
     }
@@ -90,44 +104,76 @@ pub fn aggregate(locals: &[&[f32]]) -> Option<Vec<f32>> {
     Some(acc.into_iter().map(|a| (a / k) as f32).collect())
 }
 
-/// The engine: owns the fleet simulation, borrows runtime + data.
-pub struct Engine<'a> {
+/// The engine: owns the fleet simulation and the executor, borrows the
+/// runtime, shares the dataset (`Arc`, so sharded workers can hold it).
+pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     rt: &'a Runtime,
-    data: &'a FedDataset,
     model: ModelInfo,
-    pub fleet: Fleet,
+    /// Shared with `ctx` (same allocation — planning and worker-side
+    /// simulation always see the same fleet).
+    pub fleet: Arc<Fleet>,
     cfg: RunConfig,
+    exec: E,
+    /// Shared job context handed to executor workers.
+    ctx: Arc<ExecContext>,
     /// §4.3 static-coreset cache (client → coreset); budgets are constant
     /// per client, so a static coreset never needs rebuilding.
     static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
 }
 
 impl<'a> Engine<'a> {
-    pub fn new(rt: &'a Runtime, data: &'a FedDataset, cfg: RunConfig) -> Result<Engine<'a>> {
+    /// Build an engine with the executor implied by `cfg.workers`.
+    pub fn new(rt: &'a Runtime, data: &Arc<FedDataset>, cfg: RunConfig) -> Result<Engine<'a>> {
+        let exec = ExecutorImpl::from_config(rt, cfg.workers);
+        Engine::with_executor(rt, data, cfg, exec)
+    }
+}
+
+impl<'a, E: Executor> Engine<'a, E> {
+    /// Build an engine around an explicit executor (tests and benches use
+    /// this to compare implementations directly).
+    pub fn with_executor(
+        rt: &'a Runtime,
+        data: &Arc<FedDataset>,
+        cfg: RunConfig,
+        exec: E,
+    ) -> Result<Engine<'a, E>> {
         if data.num_clients() == 0 {
             return Err(anyhow!("dataset has no clients"));
         }
         let model = rt.manifest().model(&data.model)?.clone();
         let mut fleet_rng = Rng::new(cfg.seed).split(0xF1EE7);
-        let fleet = Fleet::new(&mut fleet_rng, data.sizes(), cfg.epochs, cfg.straggler_pct);
+        let fleet =
+            Arc::new(Fleet::new(&mut fleet_rng, data.sizes(), cfg.epochs, cfg.straggler_pct));
+        let ctx = Arc::new(ExecContext {
+            data: Arc::clone(data),
+            model: model.clone(),
+            fleet: Arc::clone(&fleet),
+            lr: cfg.lr,
+            mu: cfg.strategy.mu(),
+            method: cfg.coreset_method,
+        });
         Ok(Engine {
             rt,
-            data,
             model,
             fleet,
             cfg,
+            exec,
+            ctx,
             static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
         })
     }
 
     /// Fetch-or-build the §4.3 static coreset for client `i` at `budget`.
+    /// Static coresets are input-space (no runtime involved), so they are
+    /// built on the coordinator thread and shipped to workers inside jobs.
     fn static_coreset(&self, i: usize, budget: usize) -> crate::coreset::Coreset {
         if let Some(c) = self.static_cache.borrow().get(&i) {
             return c.clone();
         }
         let mut rng = Rng::new(self.cfg.seed).split(0x57A7 ^ i as u64);
         let cs = super::client::build_static_coreset(
-            &self.data.clients[i],
+            &self.ctx.data.clients[i],
             self.rt.manifest().vocab.len(),
             budget,
             self.cfg.coreset_method,
@@ -145,24 +191,36 @@ impl<'a> Engine<'a> {
         &self.model
     }
 
-    /// Evaluate `params` on the global test set (masked, batched).
+    /// The executor driving this engine's rounds.
+    pub fn executor(&self) -> &E {
+        &self.exec
+    }
+
+    /// Evaluate `params` on the global test set (masked, batched). Batches
+    /// are sharded across the executor one PJRT call per job and merged in
+    /// batch order, reproducing the sequential merge exactly.
     pub fn evaluate(&self, params: &[f32]) -> Result<EvalOutput> {
         let f = self.rt.manifest().feat_batch;
-        let test = &self.data.test;
+        if f == 0 {
+            return Err(anyhow!("manifest feat_batch is 0 — cannot batch evaluation"));
+        }
+        let test = &self.ctx.data.test;
         let n = if self.cfg.eval_cap > 0 {
             test.len().min(self.cfg.eval_cap)
         } else {
             test.len()
         };
-        let mut total = EvalOutput::default();
-        let idxs: Vec<usize> = (0..n).collect();
+        let shared = Arc::new(params.to_vec());
+        let mut jobs = Vec::with_capacity(n.div_ceil(f));
         let mut start = 0usize;
         while start < n {
             let end = (start + f).min(n);
-            let chunk = &idxs[start..end];
-            let (x, y, mask) = test.gather_batch(chunk, None, f);
-            total.merge(self.rt.evaluate(&self.model, params, &x, &y, &mask)?);
+            jobs.push(EvalJob { params: Arc::clone(&shared), start, end });
             start = end;
+        }
+        let mut total = EvalOutput::default();
+        for out in self.exec.run_evals(&self.ctx, jobs)? {
+            total.merge(out);
         }
         Ok(total)
     }
@@ -183,7 +241,7 @@ impl<'a> Engine<'a> {
             ));
         }
         let cfg = &self.cfg;
-        let weights = self.data.client_weights();
+        let weights = self.ctx.data.client_weights();
         let mut select_rng = Rng::new(cfg.seed).split(0x5E1EC7);
         let client_root = Rng::new(cfg.seed).split(0xC11E47);
         let mut clock = SimClock::new(self.fleet.deadline);
@@ -196,38 +254,31 @@ impl<'a> Engine<'a> {
             let selected =
                 select_rng.weighted_with_replacement(&weights, cfg.clients_per_round);
 
-            // --- lines 5–13: local work ---
-            let mut outcomes: Vec<(usize, ClientOutcome)> = Vec::with_capacity(selected.len());
+            // --- lines 5–13: local work, sharded across the executor ---
+            let global = Arc::new(params.clone());
+            let mut jobs: Vec<ClientJob> = Vec::with_capacity(selected.len());
             for &i in &selected {
                 let plan = cfg.strategy.plan(&self.fleet, i);
-                let mut crng = client_root.split((r as u64) << 20 | i as u64);
                 // §4.3 static mode: serve coresets from the per-client cache.
                 let static_cs = match (&plan, cfg.coreset_mode) {
-                    (super::plan::LocalPlan::Coreset { budget, .. }, CoresetMode::Static) => {
+                    (LocalPlan::Coreset { budget, .. }, CoresetMode::Static) => {
                         Some(self.static_coreset(i, *budget))
                     }
                     _ => None,
                 };
-                let outcome = run_client(
-                    self.rt,
-                    &self.model,
-                    &self.data.clients[i],
-                    &self.fleet,
-                    i,
-                    &params,
-                    &plan,
-                    cfg.lr,
-                    cfg.strategy.mu(),
-                    cfg.coreset_method,
-                    static_cs.as_ref(),
-                    &mut crng,
-                )?;
-                outcomes.push((i, outcome));
+                jobs.push(ClientJob {
+                    client: i,
+                    plan,
+                    global: Arc::clone(&global),
+                    static_coreset: static_cs,
+                    rng: client_root.split((r as u64) << 20 | i as u64),
+                });
             }
+            let outcomes = self.exec.run_clients(&self.ctx, jobs)?;
 
-            // --- line 15: aggregate contributing clients ---
+            // --- line 15: aggregate contributing clients (selection order) ---
             let contributing: Vec<&ClientOutcome> =
-                outcomes.iter().map(|(_, o)| o).filter(|o| o.params.is_some()).collect();
+                outcomes.iter().filter(|o| o.params.is_some()).collect();
             let dropped = outcomes.len() - contributing.len();
             let locals: Vec<&[f32]> = contributing
                 .iter()
@@ -304,7 +355,7 @@ impl<'a> Engine<'a> {
 
         Ok(RunResult {
             strategy: cfg.strategy.label().to_string(),
-            benchmark: self.data.model.clone(),
+            benchmark: self.ctx.data.model.clone(),
             straggler_pct: cfg.straggler_pct,
             deadline: self.fleet.deadline,
             rounds,

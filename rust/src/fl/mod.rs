@@ -2,7 +2,9 @@
 //!
 //! * [`plan`] — per-strategy local-work planning (pure logic).
 //! * [`client`] — plan execution against the PJRT runtime.
-//! * [`engine`] — the round loop: selection, aggregation, metrics.
+//! * [`engine`] — the round loop: selection, aggregation, metrics;
+//!   dispatches client work through a [`crate::exec::Executor`]
+//!   (sequential or sharded across runtime-pinned workers).
 
 pub mod checkpoint;
 pub mod client;

@@ -5,7 +5,8 @@
 //! * **L3 (this crate)** — the FL coordinator: round engine, client
 //!   selection, deadline simulation, the four strategies (FedAvg,
 //!   FedAvg-DS, FedProx, FedCore), FasterPAM k-medoids coresets, dataset
-//!   generators, metrics and CLI.
+//!   generators, metrics and CLI — plus the [`exec`] subsystem that
+//!   shards a round's client work across runtime-pinned worker threads.
 //! * **L2 (python/compile, build-time only)** — JAX models for the three
 //!   paper benchmarks, AOT-lowered to HLO text artifacts.
 //! * **L1 (python/compile/kernels, build-time only)** — the Pallas
@@ -13,11 +14,27 @@
 //!
 //! At run time only this crate executes; artifacts are loaded through the
 //! PJRT CPU client in [`runtime`].
+//!
+//! # Execution / thread model
+//!
+//! `PjRtClient` is `Rc`-backed and `!Send`, so a [`runtime::Runtime`] is
+//! pinned to the thread that created it. Parallelism therefore follows a
+//! one-runtime-per-worker model: [`exec::Sharded`] owns a persistent pool
+//! of worker threads, each of which builds its own `Runtime` from a
+//! [`runtime::RuntimeFactory`] (shared artifacts, per-thread compilation
+//! cache) and keeps it for the pool's lifetime. The engine shards each
+//! round's K selected clients — and the test-set evaluation batches —
+//! across the pool, then reduces results in job order with the same f64
+//! arithmetic as the sequential path, so a `RunResult` is **bit-identical
+//! for any worker count** (`--workers N` on the CLI, `workers` in
+//! [`fl::RunConfig`]; 0 = auto via `FEDCORE_THREADS` /
+//! `util::pool::default_threads`).
 
 pub mod config;
 pub mod coreset;
-pub mod expt;
 pub mod data;
+pub mod exec;
+pub mod expt;
 pub mod fl;
 pub mod metrics;
 pub mod runtime;

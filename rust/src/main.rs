@@ -18,6 +18,7 @@ use anyhow::{anyhow, Result};
 use fedcore::config::ExperimentConfig;
 use fedcore::coreset::Method;
 use fedcore::data::{self, Benchmark};
+use fedcore::exec::Executor as _;
 use fedcore::fl::{all_strategies, Engine, Strategy};
 use fedcore::metrics::table2_rows;
 use fedcore::runtime::Runtime;
@@ -40,6 +41,7 @@ fn cli() -> Cli {
     .opt("seed", "7", "root seed")
     .opt("method", "fasterpam", "coreset solver: fasterpam | pam | random | kcenter")
     .opt("eval-cap", "512", "max test samples per evaluation (0 = all)")
+    .opt("workers", "", "client-execution worker threads (0 = auto, 1 = sequential; default 1)")
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("out", "", "CSV output path (empty = stdout summary only)")
     .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
@@ -69,6 +71,11 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     }
     if !from_config || explicit("eval-cap", "512") {
         cfg.run.eval_cap = a.get_usize("eval-cap");
+    }
+    // Empty = not given (so `--workers 1` can force the sequential
+    // reference path even over a config file's setting).
+    if !a.get("workers").is_empty() {
+        cfg.run.workers = a.get_usize("workers");
     }
     cfg.run.verbose = !a.has("quiet");
     if a.get_usize("rounds") > 0 {
@@ -105,7 +112,12 @@ fn cmd_run(a: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown strategy '{}'", a.get("strategy")))?;
     let cfg = experiment_from_args(a)?.with_strategy(strategy);
     let rt = load_runtime(a)?;
-    let ds = data::generate(cfg.benchmark, cfg.scale, &rt.manifest().vocab, cfg.data_seed);
+    let ds = std::sync::Arc::new(data::generate(
+        cfg.benchmark,
+        cfg.scale,
+        &rt.manifest().vocab,
+        cfg.data_seed,
+    ));
     eprintln!(
         "benchmark {} | {} clients, {} samples | strategy {} | {} rounds × {} epochs",
         cfg.benchmark.label(),
@@ -117,9 +129,10 @@ fn cmd_run(a: &Args) -> Result<()> {
     );
     let engine = Engine::new(&rt, &ds, cfg.run.clone())?;
     eprintln!(
-        "fleet: deadline τ = {:.2}s, {:.0}% stragglers observed",
+        "fleet: deadline τ = {:.2}s, {:.0}% stragglers observed | exec workers: {}",
         engine.fleet.deadline,
-        100.0 * engine.fleet.straggler_fraction()
+        100.0 * engine.fleet.straggler_fraction(),
+        engine.executor().workers(),
     );
     let result = if !a.get("load-ckpt").is_empty() {
         let ck = fedcore::fl::Checkpoint::load(a.get("load-ckpt"))?;
@@ -163,7 +176,12 @@ fn cmd_run(a: &Args) -> Result<()> {
 fn cmd_sweep(a: &Args) -> Result<()> {
     let base = experiment_from_args(a)?;
     let rt = load_runtime(a)?;
-    let ds = data::generate(base.benchmark, base.scale, &rt.manifest().vocab, base.data_seed);
+    let ds = std::sync::Arc::new(data::generate(
+        base.benchmark,
+        base.scale,
+        &rt.manifest().vocab,
+        base.data_seed,
+    ));
     let mut results = Vec::new();
     for strategy in all_strategies(base.prox_mu) {
         let cfg = base.clone().with_strategy(strategy);

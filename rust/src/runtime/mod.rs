@@ -9,9 +9,12 @@
 //! Thread model: `PjRtClient` is `Rc`-backed (not `Send`), so a `Runtime`
 //! is pinned to the thread that created it. Engines that want parallel
 //! client simulation build one `Runtime` per worker thread from the same
-//! artifacts directory (compilation of these small modules is cheap and
-//! the CPU PJRT client shares nothing mutable across instances).
+//! artifacts directory via [`RuntimeFactory`] (compilation of these small
+//! modules is cheap and the CPU PJRT client shares nothing mutable across
+//! instances). The [`crate::exec::Sharded`] executor is exactly that: a
+//! pool of worker threads, each owning the `Runtime` it built.
 
+pub mod backend;
 pub mod manifest;
 
 use std::cell::RefCell;
@@ -19,9 +22,35 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use self::backend::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 pub use manifest::{Manifest, ModelInfo, XDtype};
+
+/// A recipe for building [`Runtime`]s on other threads. `Runtime` itself is
+/// pinned to its creating thread (the PJRT client is `Rc`-backed), but the
+/// factory is just the artifacts path — `Send + Sync + Clone` — so worker
+/// threads can each materialize their own pinned runtime from shared
+/// artifacts.
+#[derive(Clone, Debug)]
+pub struct RuntimeFactory {
+    dir: PathBuf,
+}
+
+impl RuntimeFactory {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> RuntimeFactory {
+        RuntimeFactory { dir: artifacts_dir.as_ref().to_path_buf() }
+    }
+
+    /// The artifacts directory this factory loads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Build a fresh runtime on the calling thread.
+    pub fn build(&self) -> Result<Runtime> {
+        Runtime::load(&self.dir)
+    }
+}
 
 /// Input batch for a model call: x is either f32 (dense features / images)
 /// or i32 (token ids); y is always i32 (labels / next-token ids).
@@ -160,6 +189,16 @@ impl Runtime {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// The artifacts directory this runtime was loaded from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// A factory that rebuilds this runtime's configuration on any thread.
+    pub fn factory(&self) -> RuntimeFactory {
+        RuntimeFactory::new(&self.dir)
     }
 
     pub fn stats(&self) -> RuntimeStats {

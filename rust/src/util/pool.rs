@@ -51,9 +51,21 @@ where
         .collect()
 }
 
-/// Number of worker threads to use by default: physical parallelism capped
-/// at 8 (the sim saturates memory bandwidth well before 8 PJRT streams).
+/// Number of worker threads to use by default. A `FEDCORE_THREADS`
+/// environment override wins outright and is *not* capped — when the user
+/// asks for more threads they get them; otherwise physical parallelism
+/// capped at 8 (the sim saturates memory bandwidth well before 8 PJRT
+/// streams).
 pub fn default_threads() -> usize {
+    threads_from(std::env::var("FEDCORE_THREADS").ok().as_deref())
+}
+
+/// Pure resolution logic behind [`default_threads`], split out so tests
+/// need not mutate process-global environment state.
+pub fn threads_from(override_var: Option<&str>) -> usize {
+    if let Some(n) = override_var.and_then(|v| v.trim().parse::<usize>().ok()) {
+        return n.max(1);
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
@@ -80,6 +92,18 @@ mod tests {
     fn empty_input() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn threads_env_override_uncapped() {
+        // No override: bounded by the hard cap.
+        assert!((1..=8).contains(&threads_from(None)));
+        // Explicit override: honored verbatim, even above the cap.
+        assert_eq!(threads_from(Some("24")), 24);
+        assert_eq!(threads_from(Some(" 12 ")), 12);
+        // Garbage and zero fall back safely.
+        assert_eq!(threads_from(Some("0")), 1);
+        assert!((1..=8).contains(&threads_from(Some("lots"))));
     }
 
     #[test]

@@ -9,6 +9,25 @@
 
 use super::rng::Rng;
 
+/// Case-count override, proptest-compatible: `PROPTEST_CASES=5000 cargo
+/// test proptest_` scales every suite up for hardening runs.
+pub fn env_cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(default)
+}
+
+/// Seed override, proptest-compatible: `PROPTEST_SEED=…` replays a failing
+/// run exactly (the failure message reports the seed to use).
+pub fn env_seed(default: u64) -> u64 {
+    std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
 /// Run `prop(rng, case_index)` for `cases` cases. The property panics (via
 /// assert!) on violation; this wrapper decorates the panic with replay info.
 pub fn check(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng, usize)) {

@@ -4,6 +4,8 @@
 //! Requires `make artifacts` (skips cleanly otherwise, mirroring the
 //! python suite's behaviour).
 
+use std::sync::Arc;
+
 use fedcore::config::ExperimentConfig;
 use fedcore::coreset::Method;
 use fedcore::data::{self, Benchmark};
@@ -12,12 +14,7 @@ use fedcore::metrics::RunResult;
 use fedcore::runtime::Runtime;
 
 fn runtime_or_skip() -> Option<Runtime> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::load(&dir).expect("runtime load"))
+    fedcore::expt::try_runtime()
 }
 
 fn tiny_cfg(strategy: Strategy, rounds: usize) -> RunConfig {
@@ -30,16 +27,21 @@ fn tiny_cfg(strategy: Strategy, rounds: usize) -> RunConfig {
         straggler_pct: 30.0,
         seed: 7,
         coreset_method: Method::FasterPam,
-            coreset_mode: fedcore::fl::CoresetMode::Adaptive,
+        coreset_mode: fedcore::fl::CoresetMode::Adaptive,
         eval_every: 2,
         eval_cap: 256,
+        workers: 1,
         verbose: false,
     }
 }
 
-fn run_synth(rt: &Runtime, strategy: Strategy, rounds: usize, seed: u64) -> RunResult {
+fn synth_ds(rt: &Runtime) -> Arc<data::FedDataset> {
     let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
-    let ds = data::generate(bench, 0.18, &rt.manifest().vocab, 7);
+    Arc::new(data::generate(bench, 0.18, &rt.manifest().vocab, 7))
+}
+
+fn run_synth(rt: &Runtime, strategy: Strategy, rounds: usize, seed: u64) -> RunResult {
+    let ds = synth_ds(rt);
     let mut cfg = tiny_cfg(strategy, rounds);
     cfg.seed = seed;
     let engine = Engine::new(rt, &ds, cfg).expect("engine");
@@ -163,9 +165,34 @@ fn runs_replay_deterministically_from_seed() {
 }
 
 #[test]
+fn sharded_engine_matches_sequential_bitwise() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = synth_ds(&rt);
+    let mut cfg = tiny_cfg(Strategy::FedCore, 4);
+    cfg.eval_every = 1;
+    let seq = Engine::new(&rt, &ds, cfg.clone()).expect("engine").run().expect("run");
+    for workers in [2usize, 4] {
+        let mut pcfg = cfg.clone();
+        pcfg.workers = workers;
+        let par = Engine::new(&rt, &ds, pcfg).expect("engine").run().expect("run");
+        assert_eq!(seq.final_params, par.final_params, "{workers} workers: params diverged");
+        assert_eq!(seq.rounds.len(), par.rounds.len());
+        for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+            assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "round {}", a.round);
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "round {}", a.round);
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {}", a.round);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.coreset_clients, b.coreset_clients);
+            assert_eq!(a.client_times, b.client_times);
+        }
+    }
+}
+
+#[test]
 fn mnist_cnn_short_run_learns() {
     let Some(rt) = runtime_or_skip() else { return };
-    let ds = data::generate(Benchmark::Mnist, 0.03, &rt.manifest().vocab, 7);
+    let ds = Arc::new(data::generate(Benchmark::Mnist, 0.03, &rt.manifest().vocab, 7));
     let mut cfg = tiny_cfg(Strategy::FedCore, 6);
     cfg.lr = 0.05;
     let engine = Engine::new(&rt, &ds, cfg).expect("engine");
@@ -180,7 +207,7 @@ fn mnist_cnn_short_run_learns() {
 #[test]
 fn shakespeare_lstm_short_run_descends() {
     let Some(rt) = runtime_or_skip() else { return };
-    let ds = data::generate(Benchmark::Shakespeare, 0.02, &rt.manifest().vocab, 7);
+    let ds = Arc::new(data::generate(Benchmark::Shakespeare, 0.02, &rt.manifest().vocab, 7));
     let mut cfg = tiny_cfg(Strategy::FedCore, 3);
     cfg.epochs = 4;
     cfg.lr = 0.5; // plain SGD on an LSTM needs a hot rate for 3 rounds
@@ -218,7 +245,7 @@ fn table2_paper_preset_hyperparams_flow_through() {
         .with_strategy(Strategy::FedProx { mu: 999.0 });
     assert_eq!(cfg.run.epochs, 10);
     assert_eq!(cfg.run.strategy, Strategy::FedProx { mu: 0.1 });
-    let ds = data::generate(cfg.benchmark, cfg.scale, &rt.manifest().vocab, cfg.data_seed);
+    let ds = Arc::new(data::generate(cfg.benchmark, cfg.scale, &rt.manifest().vocab, cfg.data_seed));
     let mut run_cfg = cfg.run.clone();
     run_cfg.rounds = 2;
     run_cfg.eval_every = 2;
@@ -230,8 +257,7 @@ fn table2_paper_preset_hyperparams_flow_through() {
 #[test]
 fn static_coreset_mode_runs_and_learns() {
     let Some(rt) = runtime_or_skip() else { return };
-    let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
-    let ds = data::generate(bench, 0.18, &rt.manifest().vocab, 7);
+    let ds = synth_ds(&rt);
     let mut cfg = tiny_cfg(Strategy::FedCore, 8);
     cfg.coreset_mode = fedcore::fl::CoresetMode::Static;
     let engine = Engine::new(&rt, &ds, cfg).expect("engine");
@@ -244,8 +270,7 @@ fn static_coreset_mode_runs_and_learns() {
 #[test]
 fn checkpoint_resume_matches_model() {
     let Some(rt) = runtime_or_skip() else { return };
-    let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
-    let ds = data::generate(bench, 0.18, &rt.manifest().vocab, 7);
+    let ds = synth_ds(&rt);
     let engine = Engine::new(&rt, &ds, tiny_cfg(Strategy::FedCore, 3)).expect("engine");
     let r = engine.run().expect("run");
 

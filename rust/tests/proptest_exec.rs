@@ -1,0 +1,223 @@
+//! Property suites for the exec subsystem (seeded runner in `util::prop`;
+//! offline build, no proptest crate — see DESIGN.md "Offline-build note").
+//!
+//! Invariants:
+//! * `aggregate` is order-independent (up to f32 rounding) — the algebraic
+//!   property that makes order-preserving reduce sufficient for
+//!   determinism.
+//! * The sharded worker pool is safe without artifacts: empty rounds
+//!   succeed, missing-runtime errors surface as `Err` (never a hang or a
+//!   panic), and shutdown is clean for any worker count.
+//! * `Sharded` and `Sequential` executors produce identical `RunResult`
+//!   round records — bit-for-bit — for random configs and worker counts
+//!   (runs only when `make artifacts` has been run, like the other
+//!   runtime suites).
+//!
+//! Knobs (proptest-compatible, per the testing-strategy doc):
+//! `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays a run.
+
+use std::sync::Arc;
+
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark, FedDataset, Samples, Shard};
+use fedcore::exec::{ClientJob, EvalJob, ExecContext, Executor, Sharded};
+use fedcore::fl::{aggregate, CoresetMode, Engine, LocalPlan, RunConfig, Strategy};
+use fedcore::runtime::{ModelInfo, Runtime, RuntimeFactory, XDtype};
+use fedcore::sim::Fleet;
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+// ---------- aggregation algebra ----------
+
+#[test]
+fn proptest_exec_aggregate_is_order_independent() {
+    check("exec-agg-order", env_seed(0xA9E6), env_cases(50), |rng, _| {
+        let k = 1 + rng.below(8);
+        let dim = 1 + rng.below(64);
+        let mut locals: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = locals.iter().map(|v| v.as_slice()).collect();
+        let a = aggregate(&refs).unwrap();
+        rng.shuffle(&mut locals);
+        let refs: Vec<&[f32]> = locals.iter().map(|v| v.as_slice()).collect();
+        let b = aggregate(&refs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() <= 1e-6 * (1.0 + x.abs()),
+                "aggregate not order-independent: {x} vs {y}"
+            );
+        }
+    });
+}
+
+// ---------- pool lifecycle without a runtime ----------
+
+/// A minimal context that never reaches a real runtime (the factory below
+/// points at a directory with no artifacts, so workers fail fast).
+fn tiny_ctx() -> Arc<ExecContext> {
+    let shard = Shard {
+        samples: Samples::Dense { x: vec![0.25; 8 * 4], dim: 4 },
+        labels: vec![0; 8],
+    };
+    let data = Arc::new(FedDataset {
+        model: "logreg".into(),
+        clients: vec![shard.clone()],
+        test: shard,
+    });
+    let mut frng = Rng::new(1);
+    let fleet = Arc::new(Fleet::new(&mut frng, vec![8], 2, 30.0));
+    let model = ModelInfo {
+        name: "logreg".into(),
+        param_size: 4,
+        num_classes: 2,
+        x_shape: vec![4],
+        x_dtype: XDtype::F32,
+        seq_len: 0,
+        init_params: vec![0.0; 4],
+        train_file: "logreg_train.hlo.txt".into(),
+        feat_file: "logreg_feat.hlo.txt".into(),
+        eval_file: "logreg_eval.hlo.txt".into(),
+    };
+    Arc::new(ExecContext { data, model, fleet, lr: 0.1, mu: 0.0, method: Method::FasterPam })
+}
+
+#[test]
+fn proptest_exec_pool_lifecycle_without_artifacts() {
+    check("exec-pool-lifecycle", env_seed(0xB00F), env_cases(8), |rng, _| {
+        let workers = 1 + rng.below(4);
+        let factory = RuntimeFactory::new("/nonexistent/fedcore-artifacts");
+        let pool = Sharded::new(workers, factory);
+        assert_eq!(pool.workers(), workers);
+        let ctx = tiny_ctx();
+
+        // Empty rounds are a no-op for any worker count.
+        for _ in 0..1 + rng.below(3) {
+            assert!(pool.run_clients(&ctx, vec![]).unwrap().is_empty());
+            assert!(pool.run_evals(&ctx, vec![]).unwrap().is_empty());
+        }
+
+        // A real job must surface the missing-runtime failure as Err —
+        // never a hang or a panic — and the pool must stay usable.
+        let job = ClientJob {
+            client: 0,
+            plan: LocalPlan::FullSet { epochs: 2 },
+            global: Arc::new(vec![0.0; 4]),
+            static_coreset: None,
+            rng: rng.split(7),
+        };
+        assert!(pool.run_clients(&ctx, vec![job]).is_err());
+        let eval = EvalJob { params: Arc::new(vec![0.0; 4]), start: 0, end: 4 };
+        assert!(pool.run_evals(&ctx, vec![eval]).is_err());
+        assert!(pool.run_clients(&ctx, vec![]).is_ok(), "pool poisoned by a failed job");
+        // `pool` drops here: shutdown + join must not deadlock.
+    });
+}
+
+// ---------- sharded ≡ sequential (runtime-backed) ----------
+
+#[test]
+fn proptest_exec_sharded_matches_sequential() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    let strategies = [
+        Strategy::FedCore,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: 0.1 },
+        Strategy::FedAvg,
+    ];
+    check("exec-equivalence", env_seed(0xE8EC), env_cases(4), |rng, case| {
+        let cfg = RunConfig {
+            strategy: strategies[case % strategies.len()],
+            rounds: 1 + rng.below(2),
+            epochs: 2 + rng.below(2),
+            clients_per_round: 2 + rng.below(4),
+            lr: 0.01,
+            straggler_pct: [10.0, 30.0][rng.below(2)],
+            seed: rng.next_u64(),
+            coreset_method: [Method::FasterPam, Method::Random][rng.below(2)],
+            coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+            eval_every: 1,
+            eval_cap: 128,
+            workers: 1,
+            verbose: false,
+        };
+        let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        let workers = 2 + rng.below(3);
+        let exec = Sharded::new(workers, rt.factory());
+        let par = Engine::with_executor(&rt, &ds, cfg.clone(), exec).unwrap().run().unwrap();
+
+        assert_eq!(
+            seq.final_params, par.final_params,
+            "{} × {workers} workers: final params diverged",
+            seq.strategy
+        );
+        assert_eq!(seq.rounds.len(), par.rounds.len());
+        for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+            let r = a.round;
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {r} train_loss");
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "round {r} test_loss");
+            assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "round {r} test_acc");
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {r} sim_time");
+            assert_eq!(a.dropped, b.dropped, "round {r} dropped");
+            assert_eq!(a.coreset_clients, b.coreset_clients, "round {r} coreset_clients");
+            assert_eq!(
+                a.mean_compression.to_bits(),
+                b.mean_compression.to_bits(),
+                "round {r} mean_compression"
+            );
+            assert_eq!(a.client_times, b.client_times, "round {r} client_times");
+        }
+    });
+}
+
+#[test]
+fn proptest_exec_engine_workers_setting_matches_explicit_executor() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 0.5, beta: 0.5 },
+        0.12,
+        &rt.manifest().vocab,
+        13,
+    ));
+    let base = RunConfig {
+        strategy: Strategy::FedCore,
+        rounds: 2,
+        epochs: 2,
+        clients_per_round: 4,
+        lr: 0.01,
+        straggler_pct: 30.0,
+        seed: 21,
+        coreset_method: Method::FasterPam,
+        coreset_mode: CoresetMode::Adaptive,
+        eval_every: 1,
+        eval_cap: 128,
+        workers: 1,
+        verbose: false,
+    };
+    // `workers: N` in the config must behave exactly like handing the
+    // engine a Sharded executor of N workers.
+    let mut via_cfg = base.clone();
+    via_cfg.workers = 3;
+    let a = Engine::new(&rt, &ds, via_cfg).unwrap().run().unwrap();
+    let b = Engine::with_executor(&rt, &ds, base, Sharded::new(3, rt.factory()))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(a.final_params, b.final_params);
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits());
+    }
+}

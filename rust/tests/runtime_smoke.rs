@@ -8,17 +8,8 @@
 
 use fedcore::runtime::{Runtime, XBatch};
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 fn runtime_or_skip() -> Option<Runtime> {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::load(&dir).expect("runtime load"))
+    fedcore::expt::try_runtime()
 }
 
 #[test]

@@ -86,6 +86,7 @@ fn main() -> anyhow::Result<()> {
             eval_every: rounds, // evaluate at the end only
             eval_cap: 512,
             workers: 1,
+            trace: None,
             verbose: false,
         };
         let engine = Engine::new(&rt, &ds, cfg)?;
@@ -114,6 +115,7 @@ fn main() -> anyhow::Result<()> {
             eval_every: 32,
             eval_cap: 512,
             workers: 1,
+            trace: None,
             verbose: false,
         };
         let engine = Engine::new(&rt, &ds, cfg)?;

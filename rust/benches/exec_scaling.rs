@@ -48,6 +48,7 @@ fn main() {
         eval_every: 2,
         eval_cap: 256,
         workers: 1,
+        trace: None,
         verbose: false,
     };
 

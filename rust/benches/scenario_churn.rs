@@ -1,0 +1,131 @@
+//! Churn-scenario sweep: the same FL workload driven under four client-
+//! availability regimes (always-on baseline, periodic duty cycle, Markov
+//! on/off churn, heavy-tailed dropout), via the `expt::run_scenario`
+//! runner. Each scenario runs twice — the second run both warms nothing
+//! (scenarios share one runtime) and proves the determinism contract:
+//! round records must replay bit-for-bit. Emits `BENCH_scenarios.json`.
+//!
+//! Knobs: `FEDCORE_SCALE`, `FEDCORE_ROUNDS`, `FEDCORE_WORKERS`,
+//! `FEDCORE_BENCH_OUT` (output path, default `BENCH_scenarios.json`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use fedcore::data::Benchmark;
+use fedcore::expt;
+use fedcore::fl::Strategy;
+use fedcore::scenario::{ChurnModel, TraceSpec};
+use fedcore::util::json::{write_json, Json};
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn scenarios() -> Vec<(&'static str, TraceSpec)> {
+    vec![
+        ("always_on", TraceSpec::always_on()),
+        (
+            "periodic",
+            TraceSpec::from_model(ChurnModel::Periodic { period: 8.0, duty: 0.6 }, 24.0, 11),
+        ),
+        (
+            "markov",
+            TraceSpec::from_model(
+                ChurnModel::Markov { mean_on: 6.0, mean_off: 2.0, p_init_online: 0.8 },
+                24.0,
+                11,
+            ),
+        ),
+        (
+            "heavy_tail",
+            TraceSpec::from_model(
+                ChurnModel::HeavyTail { mean_on: 6.0, min_off: 0.5, alpha: 1.1 },
+                48.0,
+                11,
+            ),
+        ),
+    ]
+}
+
+fn main() {
+    let rt = expt::runtime_or_exit();
+    rt.warmup().expect("warmup");
+
+    let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
+    let strategy = Strategy::FedCore;
+    println!("== scenario churn: {} | {} ==", bench.label(), strategy.label());
+    println!(
+        "{:<12} {:>8} {:>9} {:>7} {:>8} {:>9} {:>9}",
+        "scenario", "seconds", "acc (%)", "t/τ", "online%", "offline", "idle"
+    );
+
+    let mut rows = Vec::new();
+    for (name, spec) in scenarios() {
+        let first = expt::run_scenario(&rt, bench, strategy, 30.0, 7, spec.clone())
+            .expect("scenario run");
+        let t0 = Instant::now();
+        let second = expt::run_scenario(&rt, bench, strategy, 30.0, 7, spec)
+            .expect("scenario replay");
+        let secs = t0.elapsed().as_secs_f64();
+
+        // Determinism contract: a churn scenario replays bit-for-bit.
+        assert_eq!(
+            first.result.final_params, second.result.final_params,
+            "{name}: final params diverged between identical runs"
+        );
+        for (a, b) in first.result.rounds.iter().zip(&second.result.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{name}: round {} train_loss not deterministic",
+                a.round
+            );
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.churn_dropped, b.churn_dropped);
+        }
+
+        let r = &second;
+        let acc = 100.0 * r.result.best_accuracy();
+        let t_norm = r.result.mean_normalized_round_time();
+        println!(
+            "{:<12} {:>8.2} {:>9.1} {:>7.2} {:>7.0}% {:>9} {:>9}",
+            r.scenario,
+            secs,
+            acc,
+            t_norm,
+            100.0 * r.mean_online_fraction,
+            r.churn_dropped,
+            r.idle_rounds
+        );
+        rows.push(obj(vec![
+            ("scenario", Json::Str(name.into())),
+            ("seconds", num(secs)),
+            ("best_accuracy_pct", num(acc)),
+            ("mean_norm_round_time", num(t_norm)),
+            ("mean_online_fraction", num(r.mean_online_fraction)),
+            ("churn_dropped", num(r.churn_dropped as f64)),
+            ("idle_rounds", num(r.idle_rounds as f64)),
+            ("partial_time", num(r.partial_time)),
+            ("rounds", num(r.result.rounds.len() as f64)),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("bench", Json::Str("scenario_churn".into())),
+        ("benchmark", Json::Str(bench.label())),
+        ("strategy", Json::Str(strategy.label().into())),
+        ("results", Json::Arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    let path =
+        std::env::var("FEDCORE_BENCH_OUT").unwrap_or_else(|_| "BENCH_scenarios.json".into());
+    std::fs::write(&path, text).expect("writing bench output");
+    println!("\nwrote {path}");
+}

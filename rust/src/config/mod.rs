@@ -8,12 +8,15 @@ use anyhow::{anyhow, Context, Result};
 use crate::coreset::Method;
 use crate::data::Benchmark;
 use crate::fl::{RunConfig, Strategy};
+use crate::scenario::TraceSpec;
 use crate::util::toml::TomlDoc;
 
 /// One experiment = benchmark + FL hyper-parameters + generation scale.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Which benchmark to generate.
     pub benchmark: Benchmark,
+    /// The FL run parameters.
     pub run: RunConfig,
     /// FedProx μ (paper Table 3, per benchmark).
     pub prox_mu: f32,
@@ -77,6 +80,8 @@ impl ExperimentConfig {
         Self::from_toml(&text)
     }
 
+    /// Parse a config document (the file-reading half of
+    /// [`ExperimentConfig::from_file`]).
     pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
         let doc = TomlDoc::parse(text).map_err(|e| anyhow!("config: {e:?}"))?;
         let bench_name = doc
@@ -140,6 +145,17 @@ impl ExperimentConfig {
                 other => return Err(anyhow!("unknown coreset mode '{other}'")),
             };
         }
+        // [scenario]: trace-driven client availability — either a pointer
+        // to a trace file (`trace = "examples/traces/markov_churn.toml"`)
+        // or an inline spec with the same keys as a trace file's [trace]
+        // section (explicit intervals then come from a sibling [clients]).
+        if doc.sections.contains_key("scenario") {
+            let spec = match doc.get("scenario", "trace").and_then(|v| v.as_str()) {
+                Some(path) => TraceSpec::from_file(path)?,
+                None => TraceSpec::from_toml_doc(&doc, "scenario")?,
+            };
+            cfg.run.trace = Some(spec);
+        }
         Ok(cfg)
     }
 }
@@ -201,6 +217,40 @@ workers = 3
         assert_eq!(cfg.run.straggler_pct, 10.0);
         assert_eq!(cfg.run.coreset_method, Method::Pam);
         assert_eq!(cfg.run.workers, 3);
+    }
+
+    #[test]
+    fn scenario_section_inline_model() {
+        use crate::scenario::{ChurnModel, TraceSource};
+        let text = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [scenario]\nkind = \"periodic\"\nhorizon = 12.0\nduty = 0.5\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let spec = cfg.run.trace.expect("scenario parsed");
+        assert_eq!(spec.horizon, 12.0);
+        match spec.source {
+            TraceSource::Model { model: ChurnModel::Periodic { duty, .. }, .. } => {
+                assert_eq!(duty, 0.5);
+            }
+            other => panic!("unexpected source {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scenario_section_from_trace_file() {
+        let trace_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../examples/traces/markov_churn.toml");
+        let text = format!(
+            "[experiment]\nbenchmark = \"mnist\"\n[scenario]\ntrace = \"{}\"\n",
+            trace_path.display()
+        );
+        let cfg = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(cfg.run.trace.expect("trace loaded").label(), "markov");
+    }
+
+    #[test]
+    fn no_scenario_section_means_no_trace() {
+        let cfg = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert!(cfg.run.trace.is_none());
     }
 
     #[test]

@@ -17,11 +17,14 @@ use crate::runtime::Runtime;
 /// Dense symmetric distance matrix, row-major `n × n`.
 #[derive(Clone, Debug)]
 pub struct DistMatrix {
+    /// Number of points (rows = columns).
     pub n: usize,
+    /// Row-major `n × n` distances.
     pub d: Vec<f32>,
 }
 
 impl DistMatrix {
+    /// d(i, j), unchecked beyond slice bounds.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
         self.d[i * self.n + j]

@@ -9,6 +9,7 @@
 use super::DistMatrix;
 use crate::util::rng::Rng;
 
+/// Pick `k` centers by farthest-point traversal from a random start.
 pub fn solve(dist: &DistMatrix, k: usize, rng: &mut Rng) -> Vec<usize> {
     let n = dist.n;
     let k = k.min(n);

@@ -36,10 +36,12 @@ pub struct Coreset {
 }
 
 impl Coreset {
+    /// Number of selected medoids (b, the coreset size).
     pub fn len(&self) -> usize {
         self.indices.len()
     }
 
+    /// True when no medoid was selected (empty client).
     pub fn is_empty(&self) -> bool {
         self.indices.is_empty()
     }
@@ -74,6 +76,8 @@ pub enum Method {
 }
 
 impl Method {
+    /// Parse a solver name (`fasterpam` | `pam` | `random` | `kcenter`,
+    /// with common aliases; case-insensitive).
     pub fn parse(s: &str) -> Option<Method> {
         match s.trim().to_ascii_lowercase().as_str() {
             "fasterpam" | "faster-pam" => Some(Method::FasterPam),
@@ -84,6 +88,7 @@ impl Method {
         }
     }
 
+    /// Display name (parsable back via [`Method::parse`]).
     pub fn label(&self) -> &'static str {
         match self {
             Method::FasterPam => "FasterPAM",

@@ -8,6 +8,7 @@
 use super::DistMatrix;
 use crate::util::rng::Rng;
 
+/// Pick `k` distinct samples uniformly at random.
 pub fn solve(dist: &DistMatrix, k: usize, rng: &mut Rng) -> Vec<usize> {
     rng.choose_k(dist.n, k.min(dist.n))
 }

@@ -13,7 +13,9 @@ use super::partition::{label_assignment, power_law_sizes};
 use super::types::{FedDataset, Samples, Shard};
 use crate::util::rng::Rng;
 
+/// Image side length (28×28 glyph canvas).
 pub const IMG: usize = 28;
+/// Number of digit classes.
 pub const CLASSES: usize = 10;
 
 /// Classic 7-row × 5-col seven-segment-style glyphs.
@@ -70,10 +72,15 @@ pub fn render_digit(rng: &mut Rng, digit: usize) -> Vec<f32> {
 /// Generation parameters. Paper scale: 1,000 clients, mean 69 samples.
 #[derive(Clone, Copy, Debug)]
 pub struct MnistConfig {
+    /// Number of clients.
     pub n_clients: usize,
+    /// Target mean samples per client (power-law distributed).
     pub mean_samples: f64,
+    /// Distinct digits per client (the paper's label skew: 2).
     pub digits_per_client: usize,
+    /// Held-out test-set size.
     pub test_samples: usize,
+    /// Generation seed.
     pub seed: u64,
 }
 
@@ -89,6 +96,7 @@ impl Default for MnistConfig {
     }
 }
 
+/// Generate the label-skewed digit benchmark per `cfg`.
 pub fn generate(cfg: &MnistConfig) -> FedDataset {
     let mut rng = Rng::new(cfg.seed).split(0x33);
     let sizes = power_law_sizes(&mut rng, cfg.n_clients, cfg.mean_samples, 1.4, 8);

@@ -22,7 +22,12 @@ use crate::util::rng::Rng;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Benchmark {
     /// Synthetic(α, β) — FedProx generator, logistic regression.
-    Synthetic { alpha: f64, beta: f64 },
+    Synthetic {
+        /// α — inter-client model heterogeneity.
+        alpha: f64,
+        /// β — inter-client data heterogeneity.
+        beta: f64,
+    },
     /// FedMNIST — label-skewed digit images, CNN.
     Mnist,
     /// Shakespeare — per-role next-char prediction, LSTM.

@@ -67,14 +67,21 @@ pub fn label_assignment(
 /// Summary statistics for Table 1.
 #[derive(Clone, Copy, Debug)]
 pub struct SizeStats {
+    /// Number of clients.
     pub clients: usize,
+    /// Total samples across clients.
     pub total: usize,
+    /// Mean samples per client.
     pub mean: f64,
+    /// Standard deviation of samples per client.
     pub std: f64,
+    /// Smallest client.
     pub min: usize,
+    /// Largest client.
     pub max: usize,
 }
 
+/// Compute the Table 1 summary statistics of a size vector.
 pub fn size_stats(sizes: &[usize]) -> SizeStats {
     let f: Vec<f64> = sizes.iter().map(|&s| s as f64).collect();
     SizeStats {

@@ -71,9 +71,13 @@ const SPEECHES: [&str; 8] = [
 /// Generation parameters. Paper scale: 143 clients, mean 3,616 samples.
 #[derive(Clone, Debug)]
 pub struct ShakespeareConfig {
+    /// Number of clients (speaking roles).
     pub n_clients: usize,
+    /// Target mean samples per client (power-law distributed).
     pub mean_samples: f64,
+    /// Held-out test-set size.
     pub test_samples: usize,
+    /// Generation seed.
     pub seed: u64,
     /// Char vocabulary from the artifact manifest (index 0 = unknown/pad).
     pub vocab: Vec<char>,

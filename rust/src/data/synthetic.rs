@@ -15,18 +15,26 @@ use super::partition::power_law_sizes;
 use super::types::{FedDataset, Samples, Shard};
 use crate::util::rng::Rng;
 
+/// Feature dimension of the synthetic generator.
 pub const DIM: usize = 60;
+/// Number of classes.
 pub const CLASSES: usize = 10;
 
 /// Generation parameters. `n_clients = 30`, `mean_samples = 670` matches
 /// the paper's Table 1 scale; tests/examples shrink both.
 #[derive(Clone, Copy, Debug)]
 pub struct SyntheticConfig {
+    /// α — inter-client model heterogeneity.
     pub alpha: f64,
+    /// β — inter-client data heterogeneity.
     pub beta: f64,
+    /// Number of clients.
     pub n_clients: usize,
+    /// Target mean samples per client (power-law distributed).
     pub mean_samples: f64,
+    /// Held-out test-set size.
     pub test_samples: usize,
+    /// Generation seed.
     pub seed: u64,
 }
 

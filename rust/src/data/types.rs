@@ -11,12 +11,23 @@ use crate::runtime::XBatch;
 #[derive(Clone, Debug)]
 pub enum Samples {
     /// Dense f32 features, `dim` values per sample.
-    Dense { x: Vec<f32>, dim: usize },
+    Dense {
+        /// Row-major features, `dim` per sample.
+        x: Vec<f32>,
+        /// Feature dimension.
+        dim: usize,
+    },
     /// Token sequences, `seq` ids per sample; labels are also per-position.
-    Tokens { x: Vec<i32>, seq: usize },
+    Tokens {
+        /// Row-major token ids, `seq` per sample.
+        x: Vec<i32>,
+        /// Sequence length.
+        seq: usize,
+    },
 }
 
 impl Samples {
+    /// Number of stored samples.
     pub fn num_samples(&self) -> usize {
         match self {
             Samples::Dense { x, dim } => {
@@ -48,6 +59,7 @@ impl Samples {
 /// One client's local shard.
 #[derive(Clone, Debug)]
 pub struct Shard {
+    /// The sample storage (dense features or token sequences).
     pub samples: Samples,
     /// Dense: one label per sample. Tokens: `seq` labels per sample
     /// (next-char targets).
@@ -55,10 +67,12 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// Number of local samples (mᵢ).
     pub fn len(&self) -> usize {
         self.samples.num_samples()
     }
 
+    /// True when the shard holds no samples.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -120,19 +134,24 @@ impl Shard {
 pub struct FedDataset {
     /// Manifest model key: "logreg" | "mnist" | "shake".
     pub model: String,
+    /// Per-client local shards.
     pub clients: Vec<Shard>,
+    /// Held-out global test set.
     pub test: Shard,
 }
 
 impl FedDataset {
+    /// Number of clients (N).
     pub fn num_clients(&self) -> usize {
         self.clients.len()
     }
 
+    /// Σ mᵢ over all clients.
     pub fn total_samples(&self) -> usize {
         self.clients.iter().map(|c| c.len()).sum()
     }
 
+    /// Per-client sample counts mᵢ.
     pub fn sizes(&self) -> Vec<usize> {
         self.clients.iter().map(|c| c.len()).collect()
     }

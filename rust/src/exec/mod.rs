@@ -42,7 +42,9 @@ use crate::util::rng::Rng;
 /// under training, the simulated fleet, and the training hyper-parameters.
 /// `Send + Sync`, handed to workers as an `Arc`.
 pub struct ExecContext {
+    /// The federated dataset (shards + test set).
     pub data: Arc<FedDataset>,
+    /// The model under training (manifest entry).
     pub model: ModelInfo,
     /// Shared with the engine (same allocation), so planning and client
     /// simulation can never see diverging fleets.
@@ -61,11 +63,13 @@ pub struct ExecContext {
 pub struct ClientJob {
     /// Index into `ctx.data.clients`.
     pub client: usize,
+    /// The client's local work for this round (per-strategy).
     pub plan: LocalPlan,
     /// The round's global model wᵣ (shared, read-only).
     pub global: Arc<Vec<f32>>,
     /// §4.3 static coreset, precomputed by the engine's per-client cache.
     pub static_coreset: Option<Coreset>,
+    /// This job's pre-split RNG stream (minibatch shuffles, tie-breaks).
     pub rng: Rng,
 }
 
@@ -73,13 +77,42 @@ pub struct ClientJob {
 /// of them — exactly one PJRT call, so that merging job outputs in order
 /// reproduces the sequential merge bit-for-bit).
 pub struct EvalJob {
+    /// The parameters under evaluation (shared, read-only).
     pub params: Arc<Vec<f32>>,
+    /// First test-set row of this batch (inclusive).
     pub start: usize,
+    /// One past the last test-set row of this batch.
     pub end: usize,
 }
 
 /// Where round jobs execute. Implementations must return results in job
 /// order and must not reorder the per-job RNG streams.
+///
+/// # Example
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use fedcore::data::{self, Benchmark};
+/// use fedcore::exec::{Executor, Sharded};
+/// use fedcore::fl::{Engine, RunConfig};
+/// use fedcore::runtime::Runtime;
+///
+/// # fn main() -> fedcore::Result<()> {
+/// let rt = Runtime::load("artifacts")?;
+/// let ds = Arc::new(data::generate(
+///     Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+///     0.2,
+///     &rt.manifest().vocab,
+///     7,
+/// ));
+/// // Four workers, each pinned to its own runtime. Results reduce in job
+/// // order, so this run is bit-identical to a sequential one.
+/// let exec = Sharded::new(4, rt.factory());
+/// assert_eq!(exec.workers(), 4);
+/// let _result = Engine::with_executor(&rt, &ds, RunConfig::default(), exec)?.run()?;
+/// # Ok(())
+/// # }
+/// ```
 pub trait Executor {
     /// Worker parallelism (1 for sequential).
     fn workers(&self) -> usize;
@@ -131,7 +164,9 @@ pub(crate) fn exec_eval(rt: &Runtime, ctx: &ExecContext, job: &EvalJob) -> Resul
 /// can pick at run time from `RunConfig::workers` without making every
 /// caller generic.
 pub enum ExecutorImpl<'a> {
+    /// In-thread execution on the engine's own runtime.
     Sequential(Sequential<'a>),
+    /// Persistent pool of runtime-pinned worker threads.
     Sharded(Sharded),
 }
 

@@ -10,11 +10,14 @@ use super::{exec_client, exec_eval, ClientJob, EvalJob, ExecContext, Executor};
 use crate::fl::ClientOutcome;
 use crate::runtime::{EvalOutput, Runtime};
 
+/// The reference executor: every job runs on the engine's thread, on the
+/// engine's runtime, in job order.
 pub struct Sequential<'a> {
     rt: &'a Runtime,
 }
 
 impl<'a> Sequential<'a> {
+    /// Wrap the engine's runtime; no threads, no setup cost.
     pub fn new(rt: &'a Runtime) -> Sequential<'a> {
         Sequential { rt }
     }

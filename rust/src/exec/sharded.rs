@@ -37,6 +37,9 @@ enum WorkerMsg {
     Shutdown,
 }
 
+/// The sharded executor: a persistent pool of worker threads, each pinned
+/// to its own lazily-built [`Runtime`], with deterministic round-robin
+/// dispatch and an order-restoring collect (see the module docs).
 pub struct Sharded {
     senders: Vec<Sender<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,

@@ -20,16 +20,19 @@ use crate::data::{self, Benchmark};
 use crate::fl::{all_strategies, Engine, Strategy};
 use crate::metrics::RunResult;
 use crate::runtime::Runtime;
+use crate::scenario::TraceSpec;
 
 /// Read an f64 knob from the environment.
 pub fn env_f64(name: &str, default: f64) -> f64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Read a usize knob from the environment.
 pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// `FEDCORE_FULL=1` — run benches at the paper's full scale (slow).
 pub fn full_scale() -> bool {
     std::env::var("FEDCORE_FULL").map(|v| v == "1").unwrap_or(false)
 }
@@ -79,6 +82,20 @@ pub fn bench_lr(bench: Benchmark) -> f32 {
     }
 }
 
+/// The shared bench-scale configuration (scaled preset + round/lr/eval
+/// knobs + the `FEDCORE_WORKERS` override) behind [`run_one`],
+/// [`run_cell`] and [`run_scenario`] — one place to add future knobs.
+fn bench_cfg(bench: Benchmark, straggler_pct: f64, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::scaled_preset(bench, bench_scale(bench));
+    cfg.run.rounds = bench_rounds(bench);
+    cfg.run.lr = bench_lr(bench);
+    cfg.run.straggler_pct = straggler_pct;
+    cfg.run.seed = seed;
+    cfg.run.eval_every = 2;
+    cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
+    cfg
+}
+
 /// One configured run (generating the dataset once per call).
 pub fn run_one(
     rt: &Runtime,
@@ -88,15 +105,73 @@ pub fn run_one(
     seed: u64,
 ) -> Result<RunResult> {
     let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
-    let mut cfg = ExperimentConfig::scaled_preset(bench, bench_scale(bench))
-        .with_strategy(strategy);
-    cfg.run.rounds = bench_rounds(bench);
-    cfg.run.lr = bench_lr(bench);
-    cfg.run.straggler_pct = straggler_pct;
-    cfg.run.seed = seed;
-    cfg.run.eval_every = 2;
-    cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
+    let cfg = bench_cfg(bench, straggler_pct, seed).with_strategy(strategy);
     Engine::new(rt, &ds, cfg.run.clone())?.run()
+}
+
+/// One scenario run's summary: the run itself plus churn aggregates
+/// derived from the round records and the materialized trace.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Short scenario name (the churn model's label, or `"explicit"`).
+    pub scenario: String,
+    /// The underlying FL run.
+    pub result: RunResult,
+    /// Rounds in which no selected client did any work (nobody online).
+    pub idle_rounds: usize,
+    /// Selected clients taken offline mid-round, summed over the run.
+    pub churn_dropped: usize,
+    /// Simulated seconds of partial work discarded by churn drops.
+    pub partial_time: f64,
+    /// Mean fraction of the fleet online at round starts.
+    pub mean_online_fraction: f64,
+}
+
+/// Run `strategy` on `bench` under a client-availability scenario (the
+/// bench-scale dataset and knobs of [`run_one`], plus the trace). The
+/// scenario runner behind `benches/scenario_churn.rs`.
+pub fn run_scenario(
+    rt: &Runtime,
+    bench: Benchmark,
+    strategy: Strategy,
+    straggler_pct: f64,
+    seed: u64,
+    spec: TraceSpec,
+) -> Result<ScenarioReport> {
+    let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
+    let mut cfg = bench_cfg(bench, straggler_pct, seed).with_strategy(strategy);
+    let scenario = spec.label().to_string();
+    cfg.run.trace = Some(spec);
+
+    let engine = Engine::new(rt, &ds, cfg.run.clone())?;
+    let trace = engine.trace().cloned();
+    let result = engine.run()?;
+
+    let mut idle_rounds = 0usize;
+    let mut churn_dropped = 0usize;
+    let mut partial_time = 0.0f64;
+    let mut online_acc = 0.0f64;
+    for rec in &result.rounds {
+        if rec.client_times.is_empty() && rec.dropped == 0 {
+            idle_rounds += 1;
+        }
+        churn_dropped += rec.churn_dropped;
+        partial_time += rec.partial_time;
+        if let Some(tr) = &trace {
+            // The availability the selector actually saw: read the trace at
+            // this round's start time.
+            online_acc += tr.online_fraction(rec.sim_elapsed - rec.sim_time);
+        }
+    }
+    let n = result.rounds.len().max(1);
+    Ok(ScenarioReport {
+        scenario,
+        result,
+        idle_rounds,
+        churn_dropped,
+        partial_time,
+        mean_online_fraction: if trace.is_some() { online_acc / n as f64 } else { 1.0 },
+    })
 }
 
 /// All four strategies on one (benchmark, straggler%) cell, sharing one
@@ -108,16 +183,7 @@ pub fn run_cell(
     seed: u64,
 ) -> Result<Vec<RunResult>> {
     let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
-    let base = {
-        let mut cfg = ExperimentConfig::scaled_preset(bench, bench_scale(bench));
-        cfg.run.rounds = bench_rounds(bench);
-        cfg.run.lr = bench_lr(bench);
-        cfg.run.straggler_pct = straggler_pct;
-        cfg.run.seed = seed;
-        cfg.run.eval_every = 2;
-        cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
-        cfg
-    };
+    let base = bench_cfg(bench, straggler_pct, seed);
     let mut out = Vec::new();
     for strategy in all_strategies(base.prox_mu) {
         let cfg = base.clone().with_strategy(strategy);

@@ -21,6 +21,7 @@ pub struct Checkpoint {
     pub model: String,
     /// Rounds completed when saved.
     pub round: u64,
+    /// The global parameter vector wᵣ.
     pub params: Vec<f32>,
 }
 
@@ -42,10 +43,12 @@ fn param_bytes(params: &[f32]) -> Vec<u8> {
 }
 
 impl Checkpoint {
+    /// Bundle a training state for saving.
     pub fn new(model: impl Into<String>, round: u64, params: Vec<f32>) -> Checkpoint {
         Checkpoint { model: model.into(), round, params }
     }
 
+    /// Write the checkpoint (creating parent directories as needed).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -66,6 +69,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and verify (magic, version, checksum) a checkpoint file.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let path = path.as_ref();
         let mut f = std::fs::File::open(path)

@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::client::ClientOutcome;
 use super::plan::{LocalPlan, Strategy};
@@ -22,6 +22,7 @@ use crate::data::FedDataset;
 use crate::exec::{ClientJob, EvalJob, ExecContext, Executor, ExecutorImpl};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
+use crate::scenario::{AvailabilityTrace, TraceSpec};
 use crate::sim::{clock::RoundTiming, Fleet, SimClock};
 use crate::util::rng::Rng;
 
@@ -39,6 +40,7 @@ pub enum CoresetMode {
 /// Everything one experiment run needs (strategy × benchmark × straggler%).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Which of the four paper strategies drives local planning.
     pub strategy: Strategy,
     /// R — communication rounds.
     pub rounds: usize,
@@ -64,6 +66,12 @@ pub struct RunConfig {
     /// = sharded pool of N runtime-pinned workers, 0 = auto
     /// (`util::pool::default_threads`, honors `FEDCORE_THREADS`).
     pub workers: usize,
+    /// Optional client-availability scenario: only clients the trace
+    /// reports online at a round's start are eligible for selection, and
+    /// selected clients that go offline mid-round are dropped with their
+    /// partial work discarded. `None` = the classic always-on setting
+    /// (byte-identical to pre-scenario behaviour).
+    pub trace: Option<TraceSpec>,
     /// Print a progress line per round.
     pub verbose: bool,
 }
@@ -83,6 +91,7 @@ impl Default for RunConfig {
             eval_every: 1,
             eval_cap: 512,
             workers: 1,
+            trace: None,
             verbose: false,
         }
     }
@@ -104,8 +113,61 @@ pub fn aggregate(locals: &[&[f32]]) -> Option<Vec<f32>> {
     Some(acc.into_iter().map(|a| (a / k) as f32).collect())
 }
 
+/// Availability-aware client selection (Algorithm 1 line 3 under churn):
+/// sample `k` clients with probability ∝ `weights[i]`, with replacement,
+/// **among the online clients only**.
+///
+/// Deterministic fallback when fewer than `k` clients are online: every
+/// online client is selected exactly once, in index order, and the RNG is
+/// not consumed (so the decision depends only on the trace, never on
+/// sampling luck). With every client online and `k ≤ weights.len()` this
+/// reduces exactly to the unrestricted sampler — an always-on trace
+/// reproduces the traceless run bit-for-bit.
+pub fn select_available(
+    rng: &mut Rng,
+    weights: &[f64],
+    online: &[usize],
+    k: usize,
+) -> Vec<usize> {
+    if online.is_empty() {
+        return Vec::new();
+    }
+    if online.len() < k {
+        return online.to_vec();
+    }
+    let mut w: Vec<f64> = online.iter().map(|&i| weights[i]).collect();
+    if w.iter().map(|x| x.max(0.0)).sum::<f64>() <= 0.0 {
+        // Degenerate weights (all masked out): fall back to uniform so the
+        // sampler never panics on an all-zero CDF.
+        w = vec![1.0; online.len()];
+    }
+    rng.weighted_with_replacement(&w, k).into_iter().map(|j| online[j]).collect()
+}
+
 /// The engine: owns the fleet simulation and the executor, borrows the
 /// runtime, shares the dataset (`Arc`, so sharded workers can hold it).
+///
+/// # Example
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use fedcore::config::ExperimentConfig;
+/// use fedcore::data::{self, Benchmark};
+/// use fedcore::fl::Engine;
+/// use fedcore::runtime::Runtime;
+///
+/// # fn main() -> fedcore::Result<()> {
+/// let rt = Runtime::load("artifacts")?;
+/// let cfg = ExperimentConfig::scaled_preset(
+///     Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+///     0.2,
+/// );
+/// let ds = Arc::new(data::generate(cfg.benchmark, cfg.scale, &rt.manifest().vocab, 7));
+/// let result = Engine::new(&rt, &ds, cfg.run.clone())?.run()?;
+/// println!("best accuracy {:.2}%", 100.0 * result.best_accuracy());
+/// # Ok(())
+/// # }
+/// ```
 pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     rt: &'a Runtime,
     model: ModelInfo,
@@ -116,6 +178,8 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     exec: E,
     /// Shared job context handed to executor workers.
     ctx: Arc<ExecContext>,
+    /// Materialized availability trace (None = always-on).
+    trace: Option<Arc<AvailabilityTrace>>,
     /// §4.3 static-coreset cache (client → coreset); budgets are constant
     /// per client, so a static coreset never needs rebuilding.
     static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
@@ -153,6 +217,15 @@ impl<'a, E: Executor> Engine<'a, E> {
             mu: cfg.strategy.mu(),
             method: cfg.coreset_method,
         });
+        // Traces are written fleet-independently (often in deadline units);
+        // materialize now that the fleet size and τ are known.
+        let trace = match &cfg.trace {
+            Some(spec) => Some(Arc::new(
+                spec.materialize(data.num_clients(), fleet.deadline)
+                    .context("materializing availability trace")?,
+            )),
+            None => None,
+        };
         Ok(Engine {
             rt,
             model,
@@ -160,6 +233,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             cfg,
             exec,
             ctx,
+            trace,
             static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
         })
     }
@@ -183,10 +257,12 @@ impl<'a, E: Executor> Engine<'a, E> {
         cs
     }
 
+    /// The run configuration this engine was built with.
     pub fn config(&self) -> &RunConfig {
         &self.cfg
     }
 
+    /// The manifest entry of the model under training.
     pub fn model(&self) -> &ModelInfo {
         &self.model
     }
@@ -194,6 +270,12 @@ impl<'a, E: Executor> Engine<'a, E> {
     /// The executor driving this engine's rounds.
     pub fn executor(&self) -> &E {
         &self.exec
+    }
+
+    /// The materialized availability trace driving this engine's rounds
+    /// (`None` = the classic always-on setting).
+    pub fn trace(&self) -> Option<&Arc<AvailabilityTrace>> {
+        self.trace.as_ref()
     }
 
     /// Evaluate `params` on the global test set (masked, batched). Batches
@@ -250,15 +332,39 @@ impl<'a, E: Executor> Engine<'a, E> {
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
 
         for r in 0..cfg.rounds {
-            // --- Algorithm 1 line 3: sample K clients, p ∝ mᵢ ---
-            let selected =
-                select_rng.weighted_with_replacement(&weights, cfg.clients_per_round);
+            // --- Algorithm 1 line 3: sample K clients, p ∝ mᵢ, among the
+            //     clients the availability trace reports online at the
+            //     round's start (everyone, when no trace is configured) ---
+            let t_now = clock.now();
+            let selected = match &self.trace {
+                None => select_rng.weighted_with_replacement(&weights, cfg.clients_per_round),
+                Some(trace) => {
+                    let online = self.fleet.online_clients(trace, t_now);
+                    select_available(&mut select_rng, &weights, &online, cfg.clients_per_round)
+                }
+            };
 
-            // --- lines 5–13: local work, sharded across the executor ---
+            // --- lines 5–13: local work, sharded across the executor.
+            //     A selected client whose online window ends before its
+            //     plan completes never reaches the executor: its job is
+            //     skipped (keeping the order-preserving reduce intact) and
+            //     its partial work is discarded but surfaced per-round. ---
             let global = Arc::new(params.clone());
             let mut jobs: Vec<ClientJob> = Vec::with_capacity(selected.len());
+            // One entry per selection slot: Some(partial simulated seconds)
+            // = churn-dropped before finishing, None = dispatched.
+            let mut churn_partial: Vec<Option<f64>> = Vec::with_capacity(selected.len());
             for &i in &selected {
                 let plan = cfg.strategy.plan(&self.fleet, i);
+                if let Some(trace) = &self.trace {
+                    let need = plan.sim_time(&self.fleet, i);
+                    let have = trace.remaining_online(i, t_now);
+                    if have < need {
+                        churn_partial.push(Some(have));
+                        continue;
+                    }
+                }
+                churn_partial.push(None);
                 // §4.3 static mode: serve coresets from the per-client cache.
                 let static_cs = match (&plan, cfg.coreset_mode) {
                     (LocalPlan::Coreset { budget, .. }, CoresetMode::Static) => {
@@ -274,7 +380,27 @@ impl<'a, E: Executor> Engine<'a, E> {
                     rng: client_root.split((r as u64) << 20 | i as u64),
                 });
             }
-            let outcomes = self.exec.run_clients(&self.ctx, jobs)?;
+            let executed = self.exec.run_clients(&self.ctx, jobs)?;
+            // Stitch executor results back into selection order around the
+            // skipped slots (dispatched jobs kept their relative order, so
+            // a single in-order walk suffices).
+            let mut executed = executed.into_iter();
+            let outcomes: Vec<ClientOutcome> = churn_partial
+                .iter()
+                .map(|slot| match slot {
+                    Some(partial) => ClientOutcome {
+                        params: None,
+                        train_loss: f64::NAN,
+                        sim_time: *partial,
+                        used_coreset: false,
+                        compression: 1.0,
+                        coreset_cost: 0.0,
+                    },
+                    None => executed.next().expect("one outcome per dispatched job"),
+                })
+                .collect();
+            let churn_dropped = churn_partial.iter().filter(|s| s.is_some()).count();
+            let partial_time: f64 = churn_partial.iter().flatten().sum();
 
             // --- line 15: aggregate contributing clients (selection order) ---
             let contributing: Vec<&ClientOutcome> =
@@ -289,13 +415,20 @@ impl<'a, E: Executor> Engine<'a, E> {
             }
 
             // --- timing: round ends when the slowest participant finishes;
-            //     an all-dropped round still costs the server the full τ ---
+            //     an all-dropped (or fully idle, under churn) round still
+            //     costs the server the full τ, and any mid-round dropout
+            //     forces the server to wait out τ before giving up on the
+            //     vanished client ---
             let client_times: Vec<f64> =
                 contributing.iter().map(|o| o.sim_time).collect();
             let timing = if client_times.is_empty() {
                 RoundTiming { client_times: vec![], round_time: self.fleet.deadline }
             } else {
-                RoundTiming::from_clients(client_times)
+                let mut t = RoundTiming::from_clients(client_times);
+                if churn_dropped > 0 {
+                    t.round_time = t.round_time.max(self.fleet.deadline);
+                }
+                t
             };
             let sim_time = timing.round_time;
             clock.push_round(timing.clone());
@@ -331,8 +464,13 @@ impl<'a, E: Executor> Engine<'a, E> {
             };
 
             if cfg.verbose {
+                let churn_note = if self.trace.is_some() {
+                    format!(" | offline {churn_dropped} ({} selected)", selected.len())
+                } else {
+                    String::new()
+                };
                 eprintln!(
-                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}",
+                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}",
                     cfg.strategy.label(),
                     100.0 * test_acc,
                     sim_time / self.fleet.deadline,
@@ -348,6 +486,8 @@ impl<'a, E: Executor> Engine<'a, E> {
                 sim_elapsed: clock.elapsed(),
                 client_times: timing.client_times,
                 dropped,
+                churn_dropped,
+                partial_time,
                 coreset_clients,
                 mean_compression,
             });

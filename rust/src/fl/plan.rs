@@ -13,15 +13,28 @@ pub enum LocalPlan {
     /// FedAvg-DS: straggler excluded from the round.
     Dropped,
     /// E epochs over the full set (fits τ, or FedAvg ignoring τ).
-    FullSet { epochs: usize },
+    FullSet {
+        /// Number of full-set epochs.
+        epochs: usize,
+    },
     /// FedProx: as many full epochs as fit, plus a partial epoch remainder
     /// of `tail_samples` sample-visits.
-    Truncated { epochs: usize, tail_samples: usize },
+    Truncated {
+        /// Whole epochs that fit the deadline.
+        epochs: usize,
+        /// Partial-epoch remainder, in sample-visits.
+        tail_samples: usize,
+    },
     /// FedCore: coreset of size `budget`. `full_first = true` is the normal
     /// path (epoch 1 full-set, E−1 coreset epochs); `false` is the §4.4
     /// extreme-straggler fallback (features from a cheap forward pass, all
     /// E epochs on the coreset).
-    Coreset { budget: usize, full_first: bool },
+    Coreset {
+        /// Coreset budget bᵢ (samples).
+        budget: usize,
+        /// True ⇒ epoch 1 runs the full set (the normal §4.2 path).
+        full_first: bool,
+    },
 }
 
 impl LocalPlan {
@@ -66,12 +79,18 @@ pub enum Strategy {
     /// FedAvg-DS — drops clients that cannot finish by τ.
     FedAvgDS,
     /// FedProx — proximal term μ, stragglers do fewer epochs.
-    FedProx { mu: f32 },
+    FedProx {
+        /// The proximal coefficient μ (paper Table 3 per benchmark).
+        mu: f32,
+    },
     /// FedCore — stragglers train on a k-medoids coreset.
     FedCore,
 }
 
 impl Strategy {
+    /// Parse a strategy name (`fedavg` | `fedavg-ds` | `fedprox` |
+    /// `fedcore`; case-insensitive, `-`/`_` ignored). FedProx parses with
+    /// its default μ = 0.1; config loaders override it afterwards.
     pub fn parse(s: &str) -> Option<Strategy> {
         match s.trim().to_ascii_lowercase().replace(['-', '_'], "").as_str() {
             "fedavg" => Some(Strategy::FedAvg),
@@ -82,6 +101,7 @@ impl Strategy {
         }
     }
 
+    /// Display name (paper table row headers).
     pub fn label(&self) -> &'static str {
         match self {
             Strategy::FedAvg => "FedAvg",

@@ -29,6 +29,18 @@
 //! for any worker count** (`--workers N` on the CLI, `workers` in
 //! [`fl::RunConfig`]; 0 = auto via `FEDCORE_THREADS` /
 //! `util::pool::default_threads`).
+//!
+//! # Client availability scenarios
+//!
+//! The [`scenario`] subsystem adds trace-driven churn on top of the
+//! static fleet: an availability trace (explicit intervals or a
+//! parametric churn model) decides which clients are online at each
+//! round's simulated start time, the engine samples only those, and
+//! clients that go offline mid-round are dropped with their partial work
+//! surfaced per-round. `--trace <file>` on the CLI, `[scenario]` in
+//! config files, `trace` in [`fl::RunConfig`].
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coreset;
@@ -38,6 +50,7 @@ pub mod expt;
 pub mod fl;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 

@@ -42,6 +42,7 @@ fn cli() -> Cli {
     .opt("method", "fasterpam", "coreset solver: fasterpam | pam | random | kcenter")
     .opt("eval-cap", "512", "max test samples per evaluation (0 = all)")
     .opt("workers", "", "client-execution worker threads (0 = auto, 1 = sequential; default 1)")
+    .opt("trace", "", "client-availability trace file (see examples/traces/; empty = always-on)")
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("out", "", "CSV output path (empty = stdout summary only)")
     .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
@@ -76,6 +77,10 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     // reference path even over a config file's setting).
     if !a.get("workers").is_empty() {
         cfg.run.workers = a.get_usize("workers");
+    }
+    // A CLI trace overrides any [scenario] section from `--config`.
+    if !a.get("trace").is_empty() {
+        cfg.run.trace = Some(fedcore::scenario::TraceSpec::from_file(a.get("trace"))?);
     }
     cfg.run.verbose = !a.has("quiet");
     if a.get_usize("rounds") > 0 {
@@ -134,6 +139,14 @@ fn cmd_run(a: &Args) -> Result<()> {
         100.0 * engine.fleet.straggler_fraction(),
         engine.executor().workers(),
     );
+    if let (Some(spec), Some(trace)) = (&cfg.run.trace, engine.trace()) {
+        eprintln!(
+            "scenario: {} availability trace | horizon {:.1} τ | {:.0}% online at t = 0",
+            spec.label(),
+            trace.horizon() / engine.fleet.deadline,
+            100.0 * trace.online_fraction(0.0),
+        );
+    }
     let result = if !a.get("load-ckpt").is_empty() {
         let ck = fedcore::fl::Checkpoint::load(a.get("load-ckpt"))?;
         if ck.model != ds.model {

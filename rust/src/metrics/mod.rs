@@ -11,11 +11,13 @@ use crate::util::stats;
 /// One FL round's observable outcomes.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// Round index r (0-based).
     pub round: usize,
     /// Weighted mean of participating clients' final local training loss.
     pub train_loss: f64,
     /// Global test loss / accuracy after aggregation.
     pub test_loss: f64,
+    /// Global test accuracy after aggregation (0..1).
     pub test_acc: f64,
     /// Simulated round length (seconds; τ-normalized views live in SimClock).
     pub sim_time: f64,
@@ -23,8 +25,14 @@ pub struct RoundRecord {
     pub sim_elapsed: f64,
     /// Per-participating-client simulated times.
     pub client_times: Vec<f64>,
-    /// Clients dropped this round (FedAvg-DS).
+    /// Clients that contributed nothing this round (strategy drops such as
+    /// FedAvg-DS, plus availability churn drops).
     pub dropped: usize,
+    /// Selected clients that the availability trace took offline before
+    /// their plan completed (a subset of `dropped`; 0 without a trace).
+    pub churn_dropped: usize,
+    /// Total simulated seconds of partial work discarded by churn drops.
+    pub partial_time: f64,
     /// Clients that trained on a coreset this round (FedCore).
     pub coreset_clients: usize,
     /// Mean coreset compression ratio b/m over coreset clients (1.0 = none).
@@ -35,15 +43,22 @@ pub struct RoundRecord {
 /// the final global model (for checkpointing / downstream evaluation).
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// Strategy label (e.g. "FedCore").
     pub strategy: String,
+    /// Benchmark label (e.g. "MNIST").
     pub benchmark: String,
+    /// s — the straggler percentage the fleet was calibrated for.
     pub straggler_pct: f64,
+    /// τ — the round deadline (simulated seconds) used for normalization.
     pub deadline: f64,
+    /// Per-round trace, in round order.
     pub rounds: Vec<RoundRecord>,
+    /// The final global model wᵣ.
     pub final_params: Vec<f32>,
 }
 
 impl RunResult {
+    /// Test accuracy after the last round (0.0 for an empty run).
     pub fn final_accuracy(&self) -> f64 {
         self.rounds.last().map(|r| r.test_acc).unwrap_or(0.0)
     }
@@ -54,6 +69,7 @@ impl RunResult {
         self.rounds.iter().map(|r| r.test_acc).fold(0.0, f64::max)
     }
 
+    /// Training loss of the last round (NaN for an empty run).
     pub fn final_train_loss(&self) -> f64 {
         self.rounds.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
     }
@@ -80,12 +96,12 @@ impl RunResult {
     /// Serialize the round trace as CSV (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,sim_time,sim_elapsed,dropped,coreset_clients,mean_compression\n",
+            "round,train_loss,test_loss,test_acc,sim_time,sim_elapsed,dropped,churn_dropped,partial_time,coreset_clients,mean_compression\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.4}",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{:.4}",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -93,6 +109,8 @@ impl RunResult {
                 r.sim_time,
                 r.sim_elapsed,
                 r.dropped,
+                r.churn_dropped,
+                r.partial_time,
                 r.coreset_clients,
                 r.mean_compression
             );
@@ -100,6 +118,7 @@ impl RunResult {
         out
     }
 
+    /// Write [`RunResult::to_csv`] to `path`, creating parent directories.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
@@ -113,6 +132,7 @@ impl RunResult {
 pub struct Histogram {
     /// Left edge of each bucket (normalized time units).
     pub edges: Vec<f64>,
+    /// Per-bucket counts (aligned with `edges`).
     pub counts: Vec<usize>,
 }
 
@@ -131,6 +151,7 @@ impl Histogram {
         Histogram { edges, counts }
     }
 
+    /// Total count across all buckets.
     pub fn total(&self) -> usize {
         self.counts.iter().sum()
     }
@@ -174,12 +195,17 @@ impl Histogram {
 /// Cross-run comparison row for Table 2.
 #[derive(Clone, Debug)]
 pub struct TableRow {
+    /// Strategy label.
     pub strategy: String,
+    /// Best test accuracy over the run, in percent.
     pub accuracy_pct: f64,
+    /// Mean normalized round time (t/τ).
     pub mean_norm_time: f64,
+    /// True when the mean round overshoots τ (the paper's red cells).
     pub exceeded_deadline: bool,
 }
 
+/// Summarize runs into Table-2-style rows (one per strategy).
 pub fn table2_rows(runs: &[RunResult]) -> Vec<TableRow> {
     runs.iter()
         .map(|r| {
@@ -211,6 +237,8 @@ mod tests {
             sim_elapsed: t * (round + 1) as f64,
             client_times: vec![t, t / 2.0],
             dropped: 0,
+            churn_dropped: 0,
+            partial_time: 0.0,
             coreset_clients: 1,
             mean_compression: 0.5,
         }
@@ -248,7 +276,8 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("round,"));
-        assert_eq!(lines[1].split(',').count(), 9);
+        assert_eq!(lines[1].split(',').count(), 11);
+        assert_eq!(lines[0].split(',').count(), 11);
     }
 
     #[test]

@@ -15,11 +15,14 @@ const COLORS: [&str; 6] = ["#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd"
 /// One named data series (x, y).
 #[derive(Clone, Debug)]
 pub struct Series {
+    /// Legend label.
     pub label: String,
+    /// (x, y) points in data coordinates.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// Bundle a labelled point list.
     pub fn new(label: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
         Series { label: label.into(), points }
     }

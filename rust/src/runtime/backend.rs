@@ -33,10 +33,12 @@ mod stub {
     pub struct PjRtClient;
 
     impl PjRtClient {
+        /// Always fails: the stub has no backend to construct.
         pub fn cpu() -> Result<PjRtClient> {
             Err(anyhow!(NO_BACKEND))
         }
 
+        /// Unreachable in practice (no client can exist); errs anyway.
         pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
             Err(anyhow!(NO_BACKEND))
         }
@@ -46,6 +48,7 @@ mod stub {
     pub struct HloModuleProto;
 
     impl HloModuleProto {
+        /// Always fails: the stub cannot parse HLO text.
         pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
             Err(anyhow!(NO_BACKEND))
         }
@@ -55,6 +58,7 @@ mod stub {
     pub struct XlaComputation;
 
     impl XlaComputation {
+        /// Infallible no-op (mirrors the `xla` signature).
         pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
             XlaComputation
         }
@@ -64,6 +68,7 @@ mod stub {
     pub struct PjRtLoadedExecutable;
 
     impl PjRtLoadedExecutable {
+        /// Always fails: nothing was ever compiled.
         pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
             Err(anyhow!(NO_BACKEND))
         }
@@ -73,6 +78,7 @@ mod stub {
     pub struct PjRtBuffer;
 
     impl PjRtBuffer {
+        /// Always fails: no device memory to fetch.
         pub fn to_literal_sync(&self) -> Result<Literal> {
             Err(anyhow!(NO_BACKEND))
         }
@@ -82,26 +88,32 @@ mod stub {
     pub struct Literal;
 
     impl Literal {
+        /// Infallible placeholder (mirrors the `xla` signature).
         pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
             Literal
         }
 
+        /// Infallible placeholder (mirrors the `xla` signature).
         pub fn scalar<T: Copy>(_v: T) -> Literal {
             Literal
         }
 
+        /// Always fails on the stub.
         pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
             Err(anyhow!(NO_BACKEND))
         }
 
+        /// Always fails on the stub.
         pub fn to_vec<T>(&self) -> Result<Vec<T>> {
             Err(anyhow!(NO_BACKEND))
         }
 
+        /// Always fails on the stub.
         pub fn get_first_element<T>(&self) -> Result<T> {
             Err(anyhow!(NO_BACKEND))
         }
 
+        /// Always fails on the stub.
         pub fn to_tuple(self) -> Result<Vec<Literal>> {
             Err(anyhow!(NO_BACKEND))
         }

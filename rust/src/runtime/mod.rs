@@ -37,6 +37,7 @@ pub struct RuntimeFactory {
 }
 
 impl RuntimeFactory {
+    /// A factory for the given artifacts directory (no I/O yet).
     pub fn new(artifacts_dir: impl AsRef<Path>) -> RuntimeFactory {
         RuntimeFactory { dir: artifacts_dir.as_ref().to_path_buf() }
     }
@@ -56,11 +57,14 @@ impl RuntimeFactory {
 /// or i32 (token ids); y is always i32 (labels / next-token ids).
 #[derive(Clone, Debug)]
 pub enum XBatch {
+    /// Dense f32 features.
     F32(Vec<f32>),
+    /// i32 token ids.
     I32(Vec<i32>),
 }
 
 impl XBatch {
+    /// Total number of stored elements (not samples).
     pub fn len(&self) -> usize {
         match self {
             XBatch::F32(v) => v.len(),
@@ -68,6 +72,7 @@ impl XBatch {
         }
     }
 
+    /// True when the batch holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -76,34 +81,41 @@ impl XBatch {
 /// Result of one training step.
 #[derive(Clone, Debug)]
 pub struct StepOutput {
+    /// Updated parameter vector.
     pub params: Vec<f32>,
+    /// Mean weighted batch loss.
     pub loss: f32,
 }
 
 /// Result of a feature-extraction call on one batch.
 #[derive(Clone, Debug)]
 pub struct FeatOutput {
-    /// Row-major [feat_batch, feature_dim].
+    /// Row-major `[feat_batch, feature_dim]`.
     pub features: Vec<f32>,
-    /// Per-sample loss, [feat_batch].
+    /// Per-sample loss, `[feat_batch]`.
     pub losses: Vec<f32>,
 }
 
 /// Accumulated evaluation numbers for a batch.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalOutput {
+    /// Σ per-sample loss over counted samples.
     pub loss_sum: f64,
+    /// Correct predictions (weighted by mask).
     pub correct: f64,
+    /// Counted samples (mask sum).
     pub count: f64,
 }
 
 impl EvalOutput {
+    /// Accumulate another batch's numbers (order-independent totals).
     pub fn merge(&mut self, other: EvalOutput) {
         self.loss_sum += other.loss_sum;
         self.correct += other.correct;
         self.count += other.count;
     }
 
+    /// Mean per-sample loss (0.0 when nothing was counted).
     pub fn mean_loss(&self) -> f64 {
         if self.count > 0.0 {
             self.loss_sum / self.count
@@ -112,6 +124,7 @@ impl EvalOutput {
         }
     }
 
+    /// Fraction of counted samples predicted correctly.
     pub fn accuracy(&self) -> f64 {
         if self.count > 0.0 {
             self.correct / self.count
@@ -124,8 +137,11 @@ impl EvalOutput {
 /// Execution statistics (perf instrumentation for EXPERIMENTS.md §Perf).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RuntimeStats {
+    /// Total artifact executions.
     pub executions: u64,
+    /// Artifacts compiled (≤ distinct artifact files).
     pub compile_count: u64,
+    /// Wall nanoseconds spent inside PJRT execution.
     pub exec_nanos: u64,
 }
 
@@ -187,6 +203,7 @@ impl Runtime {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -201,6 +218,7 @@ impl Runtime {
         RuntimeFactory::new(&self.dir)
     }
 
+    /// Aggregate execution counters so far.
     pub fn stats(&self) -> RuntimeStats {
         *self.stats.borrow()
     }

@@ -1,0 +1,395 @@
+//! Parametric churn models: generate an [`AvailabilityTrace`] from a
+//! handful of interpretable parameters instead of hand-written intervals.
+//!
+//! Four regimes cover the straggler-resilience literature's assumptions:
+//! always-on (the classic FL setting), periodic duty cycles (diurnal
+//! device availability), two-state Markov on/off churn (exponential
+//! session lengths, the standard availability model), and heavy-tailed
+//! dropout (Pareto offline gaps — a few clients vanish for a long time,
+//! as in FLANP-style straggler traces).
+//!
+//! Generation is deterministic: the same model, client count, horizon and
+//! [`Rng`] stream produce the identical trace, and each client's schedule
+//! is drawn from an independent split of the root stream (keyed by client
+//! index), so adding clients never perturbs existing schedules.
+
+use anyhow::anyhow;
+
+use super::trace::{AvailabilityTrace, EdgePolicy};
+use crate::util::rng::Rng;
+
+/// Guard against zero-length sojourns (u = 0 draws): keeps alternating
+/// on/off generation loops strictly advancing.
+const MIN_SOJOURN: f64 = 1e-9;
+
+/// A parametric client-availability regime. All durations are in the
+/// trace's native time unit (scaled to simulated seconds at
+/// materialization — see [`super::TraceSpec`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnModel {
+    /// Every client online at every time (the classic FL assumption).
+    AlwaysOn,
+    /// Deterministic duty cycle: each client is online for `duty × period`
+    /// out of every `period`, at a per-client random phase offset (so the
+    /// fleet's capacity stays roughly flat while individuals blink). For a
+    /// seamless [`EdgePolicy::Wrap`] trace choose a horizon that is a
+    /// multiple of `period`; otherwise windows truncate at the boundary.
+    Periodic {
+        /// Cycle length.
+        period: f64,
+        /// Online fraction of each cycle, in `(0, 1]`.
+        duty: f64,
+    },
+    /// Two-state Markov process: exponential online sojourns of mean
+    /// `mean_on` alternate with exponential offline sojourns of mean
+    /// `mean_off`; each client starts online with probability
+    /// `p_init_online`.
+    Markov {
+        /// Mean online sojourn.
+        mean_on: f64,
+        /// Mean offline sojourn.
+        mean_off: f64,
+        /// Probability a client is online at t = 0.
+        p_init_online: f64,
+    },
+    /// Heavy-tailed dropout: exponential online sojourns of mean `mean_on`
+    /// interrupted by Pareto(`min_off`, `alpha`) offline gaps — small
+    /// `alpha` makes a few clients disappear for a very long time.
+    HeavyTail {
+        /// Mean online sojourn.
+        mean_on: f64,
+        /// Minimum offline gap (the Pareto scale).
+        min_off: f64,
+        /// Pareto tail index (smaller ⇒ heavier tail), must be > 0.
+        alpha: f64,
+    },
+}
+
+impl ChurnModel {
+    /// Parse a model name: `always_on` | `periodic` | `markov` |
+    /// `heavy_tail` (case-insensitive, `-`/`_` interchangeable). Returns
+    /// the model with its default parameters; callers override fields
+    /// from their config source.
+    pub fn parse(s: &str) -> Option<ChurnModel> {
+        match s.trim().to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "alwayson" => Some(ChurnModel::AlwaysOn),
+            "periodic" => Some(ChurnModel::Periodic { period: 10.0, duty: 0.7 }),
+            "markov" => Some(ChurnModel::Markov {
+                mean_on: 8.0,
+                mean_off: 2.0,
+                p_init_online: 0.8,
+            }),
+            "heavytail" => Some(ChurnModel::HeavyTail {
+                mean_on: 8.0,
+                min_off: 0.5,
+                alpha: 1.1,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Canonical snake_case name (inverse of [`ChurnModel::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnModel::AlwaysOn => "always_on",
+            ChurnModel::Periodic { .. } => "periodic",
+            ChurnModel::Markov { .. } => "markov",
+            ChurnModel::HeavyTail { .. } => "heavy_tail",
+        }
+    }
+
+    /// The long-run fraction of time a single client is online under this
+    /// model (1.0 where the model has no offline state; for heavy-tailed
+    /// gaps this uses the mean gap `min_off · α/(α−1)`, or 0 when α ≤ 1 —
+    /// an infinite-mean tail eventually swallows everything).
+    pub fn expected_online_fraction(&self) -> f64 {
+        match *self {
+            ChurnModel::AlwaysOn => 1.0,
+            ChurnModel::Periodic { duty, .. } => duty.clamp(0.0, 1.0),
+            ChurnModel::Markov { mean_on, mean_off, .. } => mean_on / (mean_on + mean_off),
+            ChurnModel::HeavyTail { mean_on, min_off, alpha } => {
+                if alpha <= 1.0 {
+                    0.0
+                } else {
+                    let mean_off = min_off * alpha / (alpha - 1.0);
+                    mean_on / (mean_on + mean_off)
+                }
+            }
+        }
+    }
+
+    /// Reject parameter combinations that are meaningless or would make
+    /// generation pathological (non-positive sojourn means produce ~1e-9
+    /// sojourns and a near-infinite interval list, not an error state a
+    /// trace author could want).
+    pub fn validate(&self) -> crate::Result<()> {
+        let pos = |name: &str, v: f64| {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(anyhow!(
+                    "churn model {}: `{name}` must be positive and finite, got {v}",
+                    self.label()
+                ))
+            }
+        };
+        let frac = |name: &str, v: f64, lo_open: bool| {
+            let ok = v.is_finite() && v <= 1.0 && (v > 0.0 || (!lo_open && v >= 0.0));
+            if ok {
+                Ok(())
+            } else {
+                Err(anyhow!(
+                    "churn model {}: `{name}` must be in {}0, 1], got {v}",
+                    self.label(),
+                    if lo_open { "(" } else { "[" }
+                ))
+            }
+        };
+        match *self {
+            ChurnModel::AlwaysOn => Ok(()),
+            ChurnModel::Periodic { period, duty } => {
+                pos("period", period)?;
+                frac("duty", duty, true)
+            }
+            ChurnModel::Markov { mean_on, mean_off, p_init_online } => {
+                pos("mean_on", mean_on)?;
+                pos("mean_off", mean_off)?;
+                frac("p_init_online", p_init_online, false)
+            }
+            ChurnModel::HeavyTail { mean_on, min_off, alpha } => {
+                pos("mean_on", mean_on)?;
+                pos("min_off", min_off)?;
+                pos("alpha", alpha)
+            }
+        }
+    }
+
+    /// Generate the availability schedule of `clients` clients over
+    /// `[0, horizon)`. Each client draws from `rng.split(client_index)`,
+    /// so the schedule of client `i` is independent of the client count.
+    /// Errors on invalid parameters (see [`ChurnModel::validate`]).
+    pub fn generate(
+        &self,
+        rng: &Rng,
+        clients: usize,
+        horizon: f64,
+        policy: EdgePolicy,
+    ) -> crate::Result<AvailabilityTrace> {
+        self.validate()?;
+        let mut all = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let mut r = rng.split(c as u64);
+            all.push(self.client_intervals(&mut r, horizon));
+        }
+        AvailabilityTrace::from_intervals(all, horizon, policy)
+    }
+
+    /// One client's online intervals over `[0, horizon)` (unnormalized —
+    /// [`AvailabilityTrace::from_intervals`] sorts/merges/clamps).
+    fn client_intervals(&self, r: &mut Rng, horizon: f64) -> Vec<(f64, f64)> {
+        match *self {
+            ChurnModel::AlwaysOn => vec![(0.0, horizon)],
+            ChurnModel::Periodic { period, duty } => {
+                let duty = duty.clamp(0.0, 1.0);
+                if duty >= 1.0 || period <= 0.0 {
+                    return vec![(0.0, horizon)];
+                }
+                let phase = r.f64() * period;
+                let window = duty * period;
+                let mut ivs = Vec::new();
+                // Start one period early so a window straddling t = 0
+                // contributes its head — when the horizon is a multiple of
+                // the period this is exactly the wrapped continuation of
+                // the horizon-crossing window, keeping Wrap traces
+                // seamless without any double counting.
+                let mut start = phase - period;
+                while start < horizon {
+                    let end = start + window;
+                    if end > 0.0 {
+                        ivs.push((start.max(0.0), end.min(horizon)));
+                    }
+                    start += period;
+                }
+                ivs
+            }
+            ChurnModel::Markov { mean_on, mean_off, p_init_online } => {
+                let start_online = r.f64() < p_init_online;
+                alternate(r, horizon, start_online, |r, online| {
+                    let mean = if online { mean_on } else { mean_off };
+                    exponential(r, mean)
+                })
+            }
+            ChurnModel::HeavyTail { mean_on, min_off, alpha } => {
+                alternate(r, horizon, true, |r, online| {
+                    if online {
+                        exponential(r, mean_on)
+                    } else {
+                        r.power_law(min_off.max(MIN_SOJOURN), alpha.max(0.05))
+                    }
+                })
+            }
+        }
+    }
+}
+
+/// Exponential sample of mean `mean` (clamped strictly positive).
+fn exponential(r: &mut Rng, mean: f64) -> f64 {
+    let u = r.f64(); // [0, 1)
+    (-mean.max(MIN_SOJOURN) * (1.0 - u).ln()).max(MIN_SOJOURN)
+}
+
+/// Alternate online/offline sojourns from `t = 0` until the horizon,
+/// collecting the online stretches. `dur(rng, online)` draws the next
+/// sojourn length for the current state.
+fn alternate(
+    r: &mut Rng,
+    horizon: f64,
+    start_online: bool,
+    mut dur: impl FnMut(&mut Rng, bool) -> f64,
+) -> Vec<(f64, f64)> {
+    let mut ivs = Vec::new();
+    let mut online = start_online;
+    let mut t = 0.0;
+    while t < horizon {
+        let d = dur(r, online).max(MIN_SOJOURN);
+        if online {
+            ivs.push((t, (t + d).min(horizon)));
+        }
+        t += d;
+        online = !online;
+    }
+    ivs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(model: ChurnModel, clients: usize, horizon: f64) -> AvailabilityTrace {
+        model
+            .generate(&Rng::new(99), clients, horizon, EdgePolicy::Wrap)
+            .unwrap()
+    }
+
+    /// Fraction of client-time online, sampled on a grid.
+    fn measured_online_fraction(t: &AvailabilityTrace, horizon: f64) -> f64 {
+        let steps = 400;
+        let mut acc = 0.0;
+        for s in 0..steps {
+            let time = horizon * (s as f64 + 0.5) / steps as f64;
+            acc += t.online_fraction(time);
+        }
+        acc / steps as f64
+    }
+
+    #[test]
+    fn always_on_is_always_on() {
+        let t = gen(ChurnModel::AlwaysOn, 5, 50.0);
+        for c in 0..5 {
+            assert_eq!(t.remaining_online(c, 17.3), f64::INFINITY);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let m = ChurnModel::parse("markov").unwrap();
+        let a = m.generate(&Rng::new(7), 20, 100.0, EdgePolicy::Wrap).unwrap();
+        let b = m.generate(&Rng::new(7), 20, 100.0, EdgePolicy::Wrap).unwrap();
+        assert_eq!(a, b);
+        let c = m.generate(&Rng::new(8), 20, 100.0, EdgePolicy::Wrap).unwrap();
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn client_schedules_stable_under_fleet_growth() {
+        let m = ChurnModel::parse("heavy_tail").unwrap();
+        let small = m.generate(&Rng::new(3), 5, 80.0, EdgePolicy::Wrap).unwrap();
+        let big = m.generate(&Rng::new(3), 15, 80.0, EdgePolicy::Wrap).unwrap();
+        for c in 0..5 {
+            assert_eq!(small.intervals(c), big.intervals(c), "client {c}");
+        }
+    }
+
+    #[test]
+    fn periodic_duty_cycle_tracks_duty() {
+        let m = ChurnModel::Periodic { period: 10.0, duty: 0.6 };
+        let t = gen(m, 200, 100.0);
+        let frac = measured_online_fraction(&t, 100.0);
+        assert!((frac - 0.6).abs() < 0.05, "measured {frac}");
+    }
+
+    #[test]
+    fn periodic_non_divisor_horizon_keeps_duty() {
+        // Horizon not a multiple of the period: windows truncate at the
+        // boundary but the measured duty must still track `duty` (a
+        // regression guard against double-counting a crossing window's
+        // wrapped head on top of the period-early start).
+        let m = ChurnModel::Periodic { period: 7.0, duty: 0.5 };
+        let t = gen(m, 300, 10.0);
+        let frac = measured_online_fraction(&t, 10.0);
+        assert!((frac - 0.5).abs() < 0.05, "measured {frac}");
+    }
+
+    #[test]
+    fn markov_online_fraction_tracks_means() {
+        let m = ChurnModel::Markov { mean_on: 6.0, mean_off: 2.0, p_init_online: 0.75 };
+        let t = gen(m, 300, 400.0);
+        let frac = measured_online_fraction(&t, 400.0);
+        let want = m.expected_online_fraction();
+        assert!((frac - want).abs() < 0.06, "measured {frac}, want {want}");
+    }
+
+    #[test]
+    fn heavy_tail_produces_long_gaps() {
+        let m = ChurnModel::HeavyTail { mean_on: 4.0, min_off: 1.0, alpha: 1.05 };
+        let t = gen(m, 200, 200.0);
+        // With a near-1 tail index some client must be offline for a long
+        // stretch (> 10× the minimum gap).
+        let mut longest_gap = 0.0f64;
+        for c in 0..200 {
+            let ivs = t.intervals(c);
+            for w in ivs.windows(2) {
+                longest_gap = longest_gap.max(w[1].0 - w[0].1);
+            }
+        }
+        assert!(longest_gap > 10.0, "longest offline gap only {longest_gap}");
+    }
+
+    #[test]
+    fn invalid_parameters_are_errors_not_hangs() {
+        let bad = [
+            ChurnModel::Markov { mean_on: 0.0, mean_off: 2.0, p_init_online: 0.5 },
+            ChurnModel::Markov { mean_on: 4.0, mean_off: -1.0, p_init_online: 0.5 },
+            ChurnModel::Markov { mean_on: 4.0, mean_off: 2.0, p_init_online: 1.5 },
+            ChurnModel::HeavyTail { mean_on: 4.0, min_off: 0.0, alpha: 1.1 },
+            ChurnModel::HeavyTail { mean_on: 4.0, min_off: 0.5, alpha: f64::NAN },
+            ChurnModel::Periodic { period: 0.0, duty: 0.5 },
+            ChurnModel::Periodic { period: 8.0, duty: 0.0 },
+            ChurnModel::Periodic { period: 8.0, duty: 1.5 },
+        ];
+        for m in bad {
+            assert!(
+                m.generate(&Rng::new(1), 3, 24.0, EdgePolicy::Wrap).is_err(),
+                "{m:?} should be rejected"
+            );
+        }
+        // Boundary values that are legitimate stay accepted.
+        let ok = [
+            ChurnModel::Markov { mean_on: 4.0, mean_off: 2.0, p_init_online: 0.0 },
+            ChurnModel::Markov { mean_on: 4.0, mean_off: 2.0, p_init_online: 1.0 },
+            ChurnModel::Periodic { period: 8.0, duty: 1.0 },
+        ];
+        for m in ok {
+            assert!(m.generate(&Rng::new(1), 3, 24.0, EdgePolicy::Wrap).is_ok(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn parse_label_roundtrip() {
+        for name in ["always_on", "periodic", "markov", "heavy_tail"] {
+            let m = ChurnModel::parse(name).unwrap();
+            assert_eq!(m.label(), name);
+        }
+        assert!(ChurnModel::parse("diurnal").is_none());
+    }
+}

@@ -1,0 +1,510 @@
+//! Trace-driven client availability scenarios.
+//!
+//! FedCore's fleet simulation ([`crate::sim`]) models *how fast* clients
+//! are; this module models *whether they are there at all*. An
+//! [`AvailabilityTrace`] maps simulated time to each client's
+//! online/offline state, either written out explicitly (interval lists in
+//! TOML/JSON — see `examples/traces/`) or generated from a parametric
+//! [`ChurnModel`]. The FL engine consults the trace at each round's start
+//! time: only online clients are eligible for selection, and a selected
+//! client that goes offline before finishing its local plan is dropped
+//! mid-round, its partial work discarded and surfaced in the round record.
+//!
+//! # Time units
+//!
+//! Fleet deadlines are data-dependent (τ is a percentile of full-round
+//! times), so portable trace files express time in **deadline units**
+//! (`unit = "deadline"`): one unit is one round deadline τ. A trace is
+//! materialized into simulated seconds only once the fleet exists —
+//! [`TraceSpec::materialize`] takes the client count and τ. Raw-second
+//! traces (`unit = "seconds"`) skip the scaling.
+//!
+//! # Determinism
+//!
+//! Loading, generation and every query are deterministic: a
+//! [`TraceSpec`] plus a client count and deadline always materializes the
+//! bit-identical trace, and churn generation splits one RNG stream per
+//! client (keyed by client index), so runs replay exactly and adding
+//! clients never perturbs existing schedules.
+
+pub mod churn;
+pub mod trace;
+
+pub use churn::ChurnModel;
+pub use trace::{AvailabilityTrace, EdgePolicy};
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::toml::TomlDoc;
+
+/// The time unit trace timestamps are written in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceUnit {
+    /// Raw simulated seconds.
+    Seconds,
+    /// Multiples of the fleet's round deadline τ (portable across
+    /// benchmarks, whose absolute time scales differ by orders of
+    /// magnitude).
+    Deadlines,
+}
+
+impl TraceUnit {
+    /// Parse `"seconds"` / `"deadline"` (or `"deadlines"`).
+    pub fn parse(s: &str) -> Option<TraceUnit> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "seconds" | "second" | "s" => Some(TraceUnit::Seconds),
+            "deadline" | "deadlines" | "tau" => Some(TraceUnit::Deadlines),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (`"seconds"` / `"deadline"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceUnit::Seconds => "seconds",
+            TraceUnit::Deadlines => "deadline",
+        }
+    }
+}
+
+/// Where a trace's schedules come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceSource {
+    /// Hand-written per-client interval lists; clients not listed are
+    /// always online.
+    Explicit {
+        /// `(client index, flat-ordered online intervals)` pairs.
+        clients: Vec<(usize, Vec<(f64, f64)>)>,
+    },
+    /// Generated from a parametric churn model with its own seed.
+    Model {
+        /// The churn regime and its parameters.
+        model: ChurnModel,
+        /// Root seed of the generation RNG (independent of the FL seed).
+        seed: u64,
+    },
+}
+
+/// A declarative, fleet-independent description of an availability trace.
+///
+/// The spec carries everything a trace file can say; it becomes an
+/// [`AvailabilityTrace`] only at [`TraceSpec::materialize`] time, when
+/// the fleet size and deadline are known.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    /// Explicit intervals or a churn model.
+    pub source: TraceSource,
+    /// Trace length, in `unit`s.
+    pub horizon: f64,
+    /// Unit of `horizon` and all timestamps.
+    pub unit: TraceUnit,
+    /// Behaviour for times past the horizon.
+    pub policy: EdgePolicy,
+}
+
+impl TraceSpec {
+    /// The spec of the classic FL setting: everyone online, forever.
+    pub fn always_on() -> TraceSpec {
+        TraceSpec {
+            source: TraceSource::Model { model: ChurnModel::AlwaysOn, seed: 0 },
+            horizon: 1.0,
+            unit: TraceUnit::Deadlines,
+            policy: EdgePolicy::Wrap,
+        }
+    }
+
+    /// A generated spec with the module defaults (deadline units, wrap).
+    pub fn from_model(model: ChurnModel, horizon: f64, seed: u64) -> TraceSpec {
+        TraceSpec {
+            source: TraceSource::Model { model, seed },
+            horizon,
+            unit: TraceUnit::Deadlines,
+            policy: EdgePolicy::Wrap,
+        }
+    }
+
+    /// Short name for reports: the churn model's label, or `"explicit"`.
+    pub fn label(&self) -> &'static str {
+        match &self.source {
+            TraceSource::Explicit { .. } => "explicit",
+            TraceSource::Model { model, .. } => model.label(),
+        }
+    }
+
+    /// Load a spec from a trace file, dispatching on the extension
+    /// (`.json` ⇒ JSON, anything else ⇒ TOML).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<TraceSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let is_json = path
+            .extension()
+            .map(|e| e.eq_ignore_ascii_case("json"))
+            .unwrap_or(false);
+        let spec = if is_json { Self::from_json(&text) } else { Self::from_toml(&text) };
+        spec.with_context(|| format!("parsing trace {}", path.display()))
+    }
+
+    /// Parse the TOML trace format (see `examples/traces/README.md`):
+    /// a `[trace]` section with `kind`/`horizon`/`unit`/`after`/`seed` and
+    /// model parameters, plus an optional `[clients]` section of explicit
+    /// per-client interval lists for `kind = "explicit"`.
+    pub fn from_toml(text: &str) -> Result<TraceSpec> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("trace toml: {e}"))?;
+        Self::from_toml_doc(&doc, "trace")
+    }
+
+    /// Parse a spec out of `doc`'s `[section]` (the experiment config
+    /// loader reuses this for its inline `[scenario]` section, with
+    /// explicit intervals coming from the sibling `[clients]` section).
+    pub fn from_toml_doc(doc: &TomlDoc, section: &str) -> Result<TraceSpec> {
+        let clients = match doc.sections.get("clients") {
+            None => None,
+            Some(listing) => {
+                let mut out = Vec::with_capacity(listing.len());
+                for (key, value) in listing {
+                    let id: usize = key
+                        .parse()
+                        .map_err(|_| anyhow!("[clients] key '{key}' is not a client index"))?;
+                    let flat = value
+                        .as_f64_vec()
+                        .ok_or_else(|| anyhow!("client {id}: intervals must be a number array"))?;
+                    out.push((id, pair_up(id, &flat)?));
+                }
+                Some(out)
+            }
+        };
+        assemble_spec(
+            &format!("trace [{section}]"),
+            |key| doc.get(section, key).and_then(|v| v.as_str()).map(str::to_string),
+            |key| doc.get(section, key).and_then(|v| v.as_f64()),
+            // Accept `seed = 7` and (tolerantly) `seed = 7.0`.
+            doc.get(section, "seed")
+                .and_then(|v| v.as_i64().or_else(|| v.as_f64().map(|f| f as i64))),
+            clients,
+        )
+    }
+
+    /// Parse the JSON trace format: a root object with a `"trace"` object
+    /// (same keys as the TOML `[trace]` section) and, for explicit traces,
+    /// a `"clients"` object mapping client indices to flat interval arrays.
+    pub fn from_json(text: &str) -> Result<TraceSpec> {
+        let root = Json::parse(text).map_err(|e| anyhow!("trace json: {e}"))?;
+        let t = root
+            .get("trace")
+            .ok_or_else(|| anyhow!("trace json missing \"trace\" object"))?;
+        let clients = match root.get("clients").and_then(|v| v.as_obj()) {
+            None => None,
+            Some(listing) => {
+                let mut out = Vec::with_capacity(listing.len());
+                for (key, value) in listing {
+                    let id: usize = key
+                        .parse()
+                        .map_err(|_| anyhow!("\"clients\" key '{key}' is not a client index"))?;
+                    let arr = value
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("client {id}: intervals must be a number array"))?;
+                    let flat: Option<Vec<f64>> = arr.iter().map(|v| v.as_f64()).collect();
+                    let flat =
+                        flat.ok_or_else(|| anyhow!("client {id}: intervals must be numbers"))?;
+                    out.push((id, pair_up(id, &flat)?));
+                }
+                Some(out)
+            }
+        };
+        assemble_spec(
+            "trace json",
+            |key| t.get(key).and_then(|v| v.as_str()).map(str::to_string),
+            |key| t.get(key).and_then(|v| v.as_f64()),
+            // JSON has one numeric type; route through i64 so negative
+            // seeds wrap identically to the TOML path.
+            t.get("seed").and_then(|v| v.as_f64()).map(|f| f as i64),
+            clients,
+        )
+    }
+
+    /// Turn the spec into a concrete trace for a fleet of `clients`
+    /// clients whose round deadline is `deadline` simulated seconds
+    /// (used only when the spec is in deadline units). Deterministic:
+    /// identical inputs yield the bit-identical trace.
+    pub fn materialize(&self, clients: usize, deadline: f64) -> Result<AvailabilityTrace> {
+        let scale = match self.unit {
+            TraceUnit::Seconds => 1.0,
+            TraceUnit::Deadlines => deadline,
+        };
+        let unit_trace = match &self.source {
+            TraceSource::Model { model, seed } => {
+                model.generate(&Rng::new(*seed), clients, self.horizon, self.policy)?
+            }
+            TraceSource::Explicit { clients: listed } => {
+                // Unlisted clients are always online; listed ids past the
+                // fleet are ignored.
+                let mut all = vec![vec![(0.0, self.horizon)]; clients];
+                for (id, ivs) in listed {
+                    if *id < clients {
+                        all[*id] = ivs.clone();
+                    }
+                }
+                AvailabilityTrace::from_intervals(all, self.horizon, self.policy)?
+            }
+        };
+        unit_trace.scaled(scale)
+    }
+}
+
+/// Assemble a spec from format-agnostic parts — shared by the TOML and
+/// JSON front-ends so the two formats cannot drift. `str_of` / `f64_of`
+/// read scalar keys of the trace table, `seed` is the pre-parsed RNG seed
+/// (`None` ⇒ default 1, negatives wrap as two's-complement in both
+/// formats), and `clients` is the document's explicit per-client interval
+/// listing, if it had one.
+fn assemble_spec(
+    what: &str,
+    str_of: impl Fn(&str) -> Option<String>,
+    f64_of: impl Fn(&str) -> Option<f64>,
+    seed: Option<i64>,
+    clients: Option<Vec<(usize, Vec<(f64, f64)>)>>,
+) -> Result<TraceSpec> {
+    let kind = str_of("kind").ok_or_else(|| anyhow!("{what} missing `kind`"))?;
+    let unit = match str_of("unit") {
+        Some(u) => TraceUnit::parse(&u).ok_or_else(|| anyhow!("unknown trace unit '{u}'"))?,
+        None => TraceUnit::Deadlines,
+    };
+    let policy = match str_of("after") {
+        Some(p) => {
+            EdgePolicy::parse(&p).ok_or_else(|| anyhow!("unknown trace edge policy '{p}'"))?
+        }
+        None => EdgePolicy::Wrap,
+    };
+    let seed = seed.unwrap_or(1) as u64;
+
+    let source = if kind.eq_ignore_ascii_case("explicit") {
+        let mut clients =
+            clients.ok_or_else(|| anyhow!("explicit trace needs a clients listing"))?;
+        // Source maps iterate keys lexicographically ("10" < "2"); order
+        // by numeric client index so the spec is canonical.
+        clients.sort_by_key(|&(id, _)| id);
+        TraceSource::Explicit { clients }
+    } else {
+        let mut model =
+            ChurnModel::parse(&kind).ok_or_else(|| anyhow!("unknown trace kind '{kind}'"))?;
+        override_params(&mut model, &f64_of);
+        TraceSource::Model { model, seed }
+    };
+
+    let horizon = match f64_of("horizon") {
+        Some(h) => h,
+        None if matches!(source, TraceSource::Model { model: ChurnModel::AlwaysOn, .. }) => 1.0,
+        None => return Err(anyhow!("{what} missing `horizon`")),
+    };
+
+    Ok(TraceSpec { source, horizon, unit, policy })
+}
+
+/// Interpret a flat `[on, off, on, off, …]` array as interval pairs.
+fn pair_up(id: usize, flat: &[f64]) -> Result<Vec<(f64, f64)>> {
+    if flat.len() % 2 != 0 {
+        return Err(anyhow!(
+            "client {id}: interval list has odd length {} (want [on, off, …] pairs)",
+            flat.len()
+        ));
+    }
+    Ok(flat.chunks_exact(2).map(|p| (p[0], p[1])).collect())
+}
+
+/// Apply per-parameter overrides from a config source onto a model's
+/// defaults (missing keys keep the default).
+fn override_params(model: &mut ChurnModel, get: impl Fn(&str) -> Option<f64>) {
+    match model {
+        ChurnModel::AlwaysOn => {}
+        ChurnModel::Periodic { period, duty } => {
+            if let Some(v) = get("period") {
+                *period = v;
+            }
+            if let Some(v) = get("duty") {
+                *duty = v;
+            }
+        }
+        ChurnModel::Markov { mean_on, mean_off, p_init_online } => {
+            if let Some(v) = get("mean_on") {
+                *mean_on = v;
+            }
+            if let Some(v) = get("mean_off") {
+                *mean_off = v;
+            }
+            if let Some(v) = get("p_init_online") {
+                *p_init_online = v;
+            }
+        }
+        ChurnModel::HeavyTail { mean_on, min_off, alpha } => {
+            if let Some(v) = get("mean_on") {
+                *mean_on = v;
+            }
+            if let Some(v) = get("min_off") {
+                *min_off = v;
+            }
+            if let Some(v) = get("alpha") {
+                *alpha = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MARKOV_TOML: &str = r#"
+# markov churn in deadline units
+[trace]
+kind = "markov"
+horizon = 24.0
+unit = "deadline"
+after = "wrap"
+seed = 42
+mean_on = 6.0
+mean_off = 2.0
+p_init_online = 0.75
+"#;
+
+    const EXPLICIT_TOML: &str = r#"
+[trace]
+kind = "explicit"
+horizon = 10.0
+unit = "seconds"
+after = "clamp"
+
+[clients]
+0 = [0.0, 6.0, 8.0, 10.0]
+2 = [5.0, 10.0]
+"#;
+
+    #[test]
+    fn toml_markov_roundtrip() {
+        let spec = TraceSpec::from_toml(MARKOV_TOML).unwrap();
+        assert_eq!(spec.horizon, 24.0);
+        assert_eq!(spec.unit, TraceUnit::Deadlines);
+        assert_eq!(spec.policy, EdgePolicy::Wrap);
+        assert_eq!(
+            spec.source,
+            TraceSource::Model {
+                model: ChurnModel::Markov { mean_on: 6.0, mean_off: 2.0, p_init_online: 0.75 },
+                seed: 42
+            }
+        );
+        assert_eq!(spec.label(), "markov");
+    }
+
+    #[test]
+    fn toml_explicit_roundtrip() {
+        let spec = TraceSpec::from_toml(EXPLICIT_TOML).unwrap();
+        assert_eq!(spec.unit, TraceUnit::Seconds);
+        assert_eq!(spec.policy, EdgePolicy::Clamp);
+        let TraceSource::Explicit { clients } = &spec.source else {
+            panic!("not explicit")
+        };
+        assert_eq!(
+            clients,
+            &vec![
+                (0, vec![(0.0, 6.0), (8.0, 10.0)]),
+                (2, vec![(5.0, 10.0)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn json_mirror_of_toml() {
+        let json = r#"{
+            "trace": {"kind": "markov", "horizon": 24.0, "unit": "deadline",
+                      "after": "wrap", "seed": 42,
+                      "mean_on": 6.0, "mean_off": 2.0, "p_init_online": 0.75}
+        }"#;
+        assert_eq!(TraceSpec::from_json(json).unwrap(), TraceSpec::from_toml(MARKOV_TOML).unwrap());
+
+        let json_explicit = r#"{
+            "trace": {"kind": "explicit", "horizon": 10.0, "unit": "seconds", "after": "clamp"},
+            "clients": {"0": [0.0, 6.0, 8.0, 10.0], "2": [5.0, 10.0]}
+        }"#;
+        assert_eq!(
+            TraceSpec::from_json(json_explicit).unwrap(),
+            TraceSpec::from_toml(EXPLICIT_TOML).unwrap()
+        );
+    }
+
+    #[test]
+    fn seed_parses_identically_across_formats() {
+        let toml = "[trace]\nkind = \"markov\"\nhorizon = 8.0\nseed = -1\n";
+        let json = r#"{"trace": {"kind": "markov", "horizon": 8.0, "seed": -1}}"#;
+        assert_eq!(
+            TraceSpec::from_toml(toml).unwrap(),
+            TraceSpec::from_json(json).unwrap(),
+            "negative seeds must wrap identically in both formats"
+        );
+        // A float-typed seed is tolerated, not silently replaced by the
+        // default.
+        let spec =
+            TraceSpec::from_toml("[trace]\nkind = \"markov\"\nhorizon = 8.0\nseed = 7.0\n")
+                .unwrap();
+        match spec.source {
+            TraceSource::Model { seed, .. } => assert_eq!(seed, 7),
+            other => panic!("unexpected source {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_errors() {
+        assert!(TraceSpec::from_toml("[trace]\nhorizon = 5.0\n").is_err(), "missing kind");
+        assert!(TraceSpec::from_toml("[trace]\nkind = \"markov\"\n").is_err(), "missing horizon");
+        assert!(TraceSpec::from_toml("[trace]\nkind = \"nope\"\nhorizon = 1.0\n").is_err());
+        assert!(
+            TraceSpec::from_toml("[trace]\nkind = \"explicit\"\nhorizon = 1.0\n").is_err(),
+            "explicit without clients"
+        );
+        let odd = "[trace]\nkind = \"explicit\"\nhorizon = 1.0\n[clients]\n0 = [0.0, 1.0, 2.0]\n";
+        assert!(TraceSpec::from_toml(odd).is_err(), "odd interval list");
+        assert!(TraceSpec::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn always_on_defaults_horizon() {
+        let spec = TraceSpec::from_toml("[trace]\nkind = \"always_on\"\n").unwrap();
+        assert_eq!(spec.horizon, 1.0);
+        let t = spec.materialize(4, 100.0).unwrap();
+        assert!(t.is_online(3, 1e6));
+    }
+
+    #[test]
+    fn materialize_scales_deadline_units() {
+        let spec = TraceSpec::from_toml(
+            "[trace]\nkind = \"explicit\"\nhorizon = 10.0\nunit = \"deadline\"\n\
+             [clients]\n0 = [0.0, 4.0]\n",
+        )
+        .unwrap();
+        let t = spec.materialize(2, 50.0).unwrap();
+        assert_eq!(t.horizon(), 500.0);
+        assert_eq!(t.intervals(0), &[(0.0, 200.0)]);
+        // Unlisted client 1 is online over the whole cycle.
+        assert_eq!(t.remaining_online(1, 123.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let spec = TraceSpec::from_model(ChurnModel::parse("heavy_tail").unwrap(), 16.0, 9);
+        let a = spec.materialize(12, 33.0).unwrap();
+        let b = spec.materialize(12, 33.0).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seconds_unit_ignores_deadline() {
+        let mut spec = TraceSpec::from_model(ChurnModel::AlwaysOn, 5.0, 0);
+        spec.unit = TraceUnit::Seconds;
+        let a = spec.materialize(3, 10.0).unwrap();
+        let b = spec.materialize(3, 9999.0).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,361 @@
+//! Per-client availability traces: who is online at a given simulated time.
+//!
+//! An [`AvailabilityTrace`] stores, for every client, a sorted list of
+//! half-open online intervals `[start, end)` on a finite timeline
+//! `[0, horizon)`. Time past the horizon is handled by an [`EdgePolicy`]:
+//! either the trace repeats cyclically (diurnal patterns) or the state at
+//! the end of the trace persists (steady-state tails).
+//!
+//! Clients beyond the trace's own client count are treated as always
+//! online — an explicit trace that lists only the flaky clients composes
+//! with any fleet size, and the empty trace degenerates to the classic
+//! always-available FL setting.
+
+use anyhow::{anyhow, Result};
+
+/// What the trace reports for times at or past its horizon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgePolicy {
+    /// The trace repeats cyclically: time `t` is read at `t mod horizon`.
+    Wrap,
+    /// The state just before the horizon persists forever (a client online
+    /// at the end of the trace stays online; one offline stays offline).
+    Clamp,
+}
+
+impl EdgePolicy {
+    /// Parse `"wrap"` / `"clamp"` (case-insensitive).
+    pub fn parse(s: &str) -> Option<EdgePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "wrap" => Some(EdgePolicy::Wrap),
+            "clamp" => Some(EdgePolicy::Clamp),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (`"wrap"` / `"clamp"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EdgePolicy::Wrap => "wrap",
+            EdgePolicy::Clamp => "clamp",
+        }
+    }
+}
+
+/// Per-client online/offline schedule over simulated time.
+///
+/// Interval lists are normalized at construction (sorted, merged,
+/// clamped to `[0, horizon]`), so every query is a binary search.
+///
+/// ```
+/// use fedcore::scenario::{AvailabilityTrace, EdgePolicy};
+///
+/// // Client 0 is online for the first 6 time-units of every 10; client 1
+/// // never appears in the trace, so it counts as always online.
+/// let trace = AvailabilityTrace::from_intervals(
+///     vec![vec![(0.0, 6.0)]],
+///     10.0,
+///     EdgePolicy::Wrap,
+/// )
+/// .unwrap();
+/// assert!(trace.is_online(0, 3.0));
+/// assert!(!trace.is_online(0, 7.0));
+/// assert!(trace.is_online(0, 13.0)); // wraps: 13 ≡ 3 (mod 10)
+/// assert!(trace.is_online(1, 7.0)); // beyond the trace ⇒ always on
+/// assert_eq!(trace.remaining_online(0, 4.0), 2.0);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct AvailabilityTrace {
+    /// `clients[i]` = sorted, disjoint online intervals of client `i`.
+    clients: Vec<Vec<(f64, f64)>>,
+    /// Trace length in simulated seconds.
+    horizon: f64,
+    /// Behaviour for `t >= horizon`.
+    policy: EdgePolicy,
+}
+
+impl AvailabilityTrace {
+    /// Build a trace from raw per-client interval lists. Intervals are
+    /// clamped to `[0, horizon]`, sorted, and merged; empty (or fully
+    /// out-of-range) intervals are dropped. Errors when `horizon <= 0` or
+    /// an interval has `start > end`.
+    pub fn from_intervals(
+        clients: Vec<Vec<(f64, f64)>>,
+        horizon: f64,
+        policy: EdgePolicy,
+    ) -> Result<AvailabilityTrace> {
+        if !(horizon > 0.0) {
+            return Err(anyhow!("trace horizon must be positive, got {horizon}"));
+        }
+        let mut normalized = Vec::with_capacity(clients.len());
+        for (c, raw) in clients.into_iter().enumerate() {
+            let mut ivs: Vec<(f64, f64)> = Vec::with_capacity(raw.len());
+            for (s, e) in raw {
+                if !s.is_finite() || !e.is_finite() || s > e {
+                    return Err(anyhow!("client {c}: bad interval [{s}, {e})"));
+                }
+                let (s, e) = (s.max(0.0), e.min(horizon));
+                if s < e {
+                    ivs.push((s, e));
+                }
+            }
+            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite interval starts"));
+            // Merge touching/overlapping intervals so queries see disjoint,
+            // maximal online stretches.
+            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(ivs.len());
+            for (s, e) in ivs {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            normalized.push(merged);
+        }
+        Ok(AvailabilityTrace { clients: normalized, horizon, policy })
+    }
+
+    /// A trace on which all `n` clients are online at every time.
+    pub fn always_on(n: usize) -> AvailabilityTrace {
+        AvailabilityTrace {
+            clients: vec![vec![(0.0, 1.0)]; n],
+            horizon: 1.0,
+            policy: EdgePolicy::Wrap,
+        }
+    }
+
+    /// Number of clients the trace describes (callers may query beyond
+    /// this; such clients count as always online).
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Trace length in simulated seconds.
+    pub fn horizon(&self) -> f64 {
+        self.horizon
+    }
+
+    /// Behaviour for times at or past the horizon.
+    pub fn policy(&self) -> EdgePolicy {
+        self.policy
+    }
+
+    /// Client `i`'s normalized online intervals (sorted, disjoint).
+    pub fn intervals(&self, client: usize) -> &[(f64, f64)] {
+        self.clients.get(client).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Rescale every timestamp (and the horizon) by `scale` — used to
+    /// convert deadline-unit traces into simulated seconds.
+    pub fn scaled(mut self, scale: f64) -> Result<AvailabilityTrace> {
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(anyhow!("trace time scale must be positive and finite, got {scale}"));
+        }
+        for ivs in &mut self.clients {
+            for iv in ivs.iter_mut() {
+                iv.0 *= scale;
+                iv.1 *= scale;
+            }
+        }
+        self.horizon *= scale;
+        Ok(self)
+    }
+
+    /// Is client `i` online at simulated time `t`?
+    pub fn is_online(&self, client: usize, t: f64) -> bool {
+        self.remaining_online(client, t) > 0.0
+    }
+
+    /// How long client `i` remains online starting from time `t`.
+    ///
+    /// Returns `0.0` when the client is offline at `t`, and
+    /// `f64::INFINITY` when it never goes offline again (always-on
+    /// clients, wrap traces whose cycle is fully online, clamp traces
+    /// whose final state is online).
+    pub fn remaining_online(&self, client: usize, t: f64) -> f64 {
+        let Some(ivs) = self.clients.get(client) else {
+            return f64::INFINITY; // beyond the trace ⇒ always online
+        };
+        if ivs.is_empty() {
+            return 0.0; // never online
+        }
+        // Fully-online cycle: no boundary to ever cross.
+        if ivs.len() == 1 && ivs[0].0 <= 0.0 && ivs[0].1 >= self.horizon {
+            return f64::INFINITY;
+        }
+        match self.policy {
+            EdgePolicy::Wrap => {
+                let tw = t.rem_euclid(self.horizon);
+                let Some(&(_, end)) = containing(ivs, tw) else { return 0.0 };
+                let mut rem = end - tw;
+                // The online stretch continues across the cycle boundary
+                // when it touches the horizon and the first interval starts
+                // at 0 (full coverage was excluded above, so this is finite).
+                if end >= self.horizon && ivs[0].0 <= 0.0 {
+                    rem += ivs[0].1;
+                }
+                rem
+            }
+            EdgePolicy::Clamp => {
+                let final_online = ivs.last().map(|&(_, e)| e >= self.horizon).unwrap_or(false);
+                if t >= self.horizon {
+                    return if final_online { f64::INFINITY } else { 0.0 };
+                }
+                let Some(&(_, end)) = containing(ivs, t) else { return 0.0 };
+                if end >= self.horizon {
+                    f64::INFINITY // clamp: the final online state persists
+                } else {
+                    end - t
+                }
+            }
+        }
+    }
+
+    /// Indices of all trace clients online at time `t`, ascending.
+    pub fn online_at(&self, t: f64) -> Vec<usize> {
+        (0..self.clients.len()).filter(|&c| self.is_online(c, t)).collect()
+    }
+
+    /// Fraction of the trace's clients online at time `t` (1.0 for an
+    /// empty trace — no client is ever marked offline).
+    pub fn online_fraction(&self, t: f64) -> f64 {
+        if self.clients.is_empty() {
+            return 1.0;
+        }
+        self.online_at(t).len() as f64 / self.clients.len() as f64
+    }
+}
+
+/// The interval containing `t` (half-open `[start, end)`), if any.
+fn containing(ivs: &[(f64, f64)], t: f64) -> Option<&(f64, f64)> {
+    // partition_point: first interval with start > t; the candidate is the
+    // one before it.
+    let idx = ivs.partition_point(|&(s, _)| s <= t);
+    if idx == 0 {
+        return None;
+    }
+    let iv = &ivs[idx - 1];
+    (t < iv.1).then_some(iv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(ivs: Vec<Vec<(f64, f64)>>, horizon: f64, policy: EdgePolicy) -> AvailabilityTrace {
+        AvailabilityTrace::from_intervals(ivs, horizon, policy).unwrap()
+    }
+
+    #[test]
+    fn normalization_sorts_merges_clamps() {
+        let t = trace(
+            vec![vec![(8.0, 12.0), (-1.0, 2.0), (1.5, 4.0)]],
+            10.0,
+            EdgePolicy::Wrap,
+        );
+        assert_eq!(t.intervals(0), &[(0.0, 4.0), (8.0, 10.0)]);
+    }
+
+    #[test]
+    fn bad_inputs_are_errors() {
+        assert!(AvailabilityTrace::from_intervals(vec![], 0.0, EdgePolicy::Wrap).is_err());
+        assert!(AvailabilityTrace::from_intervals(vec![], -1.0, EdgePolicy::Wrap).is_err());
+        assert!(
+            AvailabilityTrace::from_intervals(vec![vec![(5.0, 1.0)]], 10.0, EdgePolicy::Wrap)
+                .is_err()
+        );
+        assert!(AvailabilityTrace::from_intervals(
+            vec![vec![(f64::NAN, 1.0)]],
+            10.0,
+            EdgePolicy::Wrap
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn online_queries_half_open() {
+        let t = trace(vec![vec![(2.0, 5.0)]], 10.0, EdgePolicy::Wrap);
+        assert!(!t.is_online(0, 1.999));
+        assert!(t.is_online(0, 2.0));
+        assert!(t.is_online(0, 4.999));
+        assert!(!t.is_online(0, 5.0));
+    }
+
+    #[test]
+    fn wrap_repeats_cycle() {
+        let t = trace(vec![vec![(0.0, 6.0)]], 10.0, EdgePolicy::Wrap);
+        for k in 0..4 {
+            let base = 10.0 * k as f64;
+            assert!(t.is_online(0, base + 3.0), "cycle {k}");
+            assert!(!t.is_online(0, base + 7.0), "cycle {k}");
+        }
+    }
+
+    #[test]
+    fn clamp_persists_final_state() {
+        let on_at_end = trace(vec![vec![(4.0, 10.0)]], 10.0, EdgePolicy::Clamp);
+        assert!(on_at_end.is_online(0, 25.0));
+        assert_eq!(on_at_end.remaining_online(0, 5.0), f64::INFINITY);
+
+        let off_at_end = trace(vec![vec![(0.0, 6.0)]], 10.0, EdgePolicy::Clamp);
+        assert!(!off_at_end.is_online(0, 25.0));
+        assert_eq!(off_at_end.remaining_online(0, 2.0), 4.0);
+    }
+
+    #[test]
+    fn remaining_chains_across_wrap() {
+        let t = trace(vec![vec![(0.0, 3.0), (8.0, 10.0)]], 10.0, EdgePolicy::Wrap);
+        // At t = 9: 1s to the horizon, then the cycle restarts online for 3.
+        assert_eq!(t.remaining_online(0, 9.0), 1.0 + 3.0);
+        // At t = 1 (inside the head): just the head's remainder.
+        assert_eq!(t.remaining_online(0, 1.0), 2.0);
+        assert_eq!(t.remaining_online(0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn full_cycle_is_infinite() {
+        let t = trace(vec![vec![(0.0, 10.0)]], 10.0, EdgePolicy::Wrap);
+        assert_eq!(t.remaining_online(0, 3.0), f64::INFINITY);
+        let a = AvailabilityTrace::always_on(3);
+        for c in 0..3 {
+            assert_eq!(a.remaining_online(c, 123.456), f64::INFINITY);
+        }
+    }
+
+    #[test]
+    fn clients_beyond_trace_always_online() {
+        let t = trace(vec![vec![]], 10.0, EdgePolicy::Wrap);
+        assert!(!t.is_online(0, 1.0)); // listed, never online
+        assert!(t.is_online(5, 1.0)); // unlisted ⇒ online
+        assert_eq!(t.remaining_online(5, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn online_at_and_fraction() {
+        let t = trace(
+            vec![vec![(0.0, 5.0)], vec![(5.0, 10.0)], vec![(0.0, 10.0)]],
+            10.0,
+            EdgePolicy::Wrap,
+        );
+        assert_eq!(t.online_at(2.0), vec![0, 2]);
+        assert_eq!(t.online_at(6.0), vec![1, 2]);
+        assert!((t.online_fraction(2.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_rescales_everything() {
+        let t = trace(vec![vec![(1.0, 2.0)]], 4.0, EdgePolicy::Wrap).scaled(10.0).unwrap();
+        assert_eq!(t.horizon(), 40.0);
+        assert_eq!(t.intervals(0), &[(10.0, 20.0)]);
+        assert!(t.is_online(0, 15.0));
+        assert!(!t.is_online(0, 25.0));
+        assert!(trace(vec![], 1.0, EdgePolicy::Wrap).scaled(0.0).is_err());
+    }
+
+    #[test]
+    fn edge_policy_parse_roundtrip() {
+        for p in [EdgePolicy::Wrap, EdgePolicy::Clamp] {
+            assert_eq!(EdgePolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(EdgePolicy::parse("nope"), None);
+    }
+}

@@ -16,6 +16,7 @@ pub struct RoundTiming {
 }
 
 impl RoundTiming {
+    /// Build a record whose round length is the max client time.
     pub fn from_clients(client_times: Vec<f64>) -> RoundTiming {
         let round_time = client_times.iter().copied().fold(0.0f64, f64::max);
         RoundTiming { client_times, round_time }
@@ -32,6 +33,7 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// A fresh clock normalizing by `deadline` (must be positive).
     pub fn new(deadline: f64) -> SimClock {
         assert!(deadline > 0.0);
         SimClock { deadline, rounds: Vec::new(), elapsed: 0.0 }
@@ -50,6 +52,14 @@ impl SimClock {
         self.elapsed
     }
 
+    /// The current simulated instant (alias of [`SimClock::elapsed`]).
+    /// This is the time at which a new round begins — availability traces
+    /// ([`crate::scenario::AvailabilityTrace`]) are read at this instant
+    /// to decide which clients are eligible for selection.
+    pub fn now(&self) -> f64 {
+        self.elapsed
+    }
+
     /// Cumulative simulated time after each round (for Fig. 5's x-axis).
     pub fn cumulative(&self) -> Vec<f64> {
         let mut acc = 0.0;
@@ -62,6 +72,7 @@ impl SimClock {
             .collect()
     }
 
+    /// Rounds recorded so far.
     pub fn num_rounds(&self) -> usize {
         self.rounds.len()
     }

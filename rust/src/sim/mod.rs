@@ -56,6 +56,7 @@ impl ClientProfile {
 /// The simulated fleet: capabilities + dataset sizes + the round deadline.
 #[derive(Clone, Debug)]
 pub struct Fleet {
+    /// Per-client hardware profiles (cᵢ).
     pub profiles: Vec<ClientProfile>,
     /// mᵢ — per-client training-set sizes.
     pub sizes: Vec<usize>,
@@ -114,6 +115,19 @@ impl Fleet {
             return Some(self.sizes[i]); // nothing left to shrink
         }
         Some(((cap - m) / (self.epochs - 1) as f64).floor().max(1.0) as usize)
+    }
+
+    /// The fleet's clients that `trace` reports online at simulated time
+    /// `t`, ascending. Clients beyond the trace's own client count are
+    /// treated as always online (see
+    /// [`crate::scenario::AvailabilityTrace`]), so a partial trace
+    /// composes with any fleet size.
+    pub fn online_clients(
+        &self,
+        trace: &crate::scenario::AvailabilityTrace,
+        t: f64,
+    ) -> Vec<usize> {
+        (0..self.sizes.len()).filter(|&i| trace.is_online(i, t)).collect()
     }
 
     /// §4.4 fallback budget when even epoch 1 does not fit: d̂ features come
@@ -217,6 +231,22 @@ mod tests {
             // ≤ τ up to one sample of flooring slack per epoch.
             assert!(t <= f.deadline + f.profiles[i].time_for(f.epochs), "client {i}");
         }
+    }
+
+    #[test]
+    fn online_clients_respects_trace() {
+        use crate::scenario::{AvailabilityTrace, EdgePolicy};
+        let f = fleet(4, 10.0);
+        let trace = AvailabilityTrace::from_intervals(
+            vec![vec![], vec![(0.0, 5.0)]],
+            10.0,
+            EdgePolicy::Wrap,
+        )
+        .unwrap();
+        // Client 0 is never online, client 1 only in [0, 5); clients 2 and
+        // 3 are beyond the trace and therefore always eligible.
+        assert_eq!(f.online_clients(&trace, 1.0), vec![1, 2, 3]);
+        assert_eq!(f.online_clients(&trace, 6.0), vec![2, 3]);
     }
 
     #[test]

@@ -10,16 +10,24 @@ use std::time::{Duration, Instant};
 
 use super::stats;
 
+/// Timing summary of one benched closure.
 pub struct BenchResult {
+    /// Bench label.
     pub name: String,
+    /// Timed iterations actually run.
     pub iters: usize,
+    /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Median nanoseconds.
     pub p50_ns: f64,
+    /// 99th-percentile nanoseconds.
     pub p99_ns: f64,
+    /// Fastest iteration.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// One aligned report line (name, iters, mean/p50/p99/min).
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>7} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
@@ -33,6 +41,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable nanoseconds (ns/µs/ms/s with sensible precision).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0} ns")

@@ -7,47 +7,63 @@
 
 use std::collections::BTreeMap;
 
+/// One declared option: `--name <v>` (valued) or `--name` (flag).
 #[derive(Clone, Debug)]
 pub struct OptSpec {
+    /// Option name without the leading `--`.
     pub name: &'static str,
+    /// Help text for the usage listing.
     pub help: &'static str,
+    /// Default value (None ⇒ required); unused for flags.
     pub default: Option<&'static str>,
+    /// True for boolean `--flag` options.
     pub is_flag: bool,
 }
 
+/// Parsed arguments: option values, set flags, and positionals.
 #[derive(Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-option arguments, in order (e.g. the subcommand).
     pub positional: Vec<String>,
 }
 
+/// A declared command-line interface (builder-style).
 pub struct Cli {
+    /// Binary name shown in usage.
     pub program: &'static str,
+    /// One-line description shown in usage.
     pub about: &'static str,
+    /// Declared options, in declaration order.
     pub opts: Vec<OptSpec>,
 }
 
 impl Cli {
+    /// Start declaring a CLI.
     pub fn new(program: &'static str, about: &'static str) -> Self {
         Cli { program, about, opts: Vec::new() }
     }
 
+    /// Declare an optional `--name <v>` with a default.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
         self
     }
 
+    /// Declare a required `--name <v>`.
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: None, is_flag: false });
         self
     }
 
+    /// Declare a boolean `--name` flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: None, is_flag: true });
         self
     }
 
+    /// Render the usage/help text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
         for o in &self.opts {
@@ -131,30 +147,36 @@ impl Cli {
 }
 
 impl Args {
+    /// The value of option `name` (its default when not given). Panics on
+    /// undeclared names — that is a programming error, not user input.
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("option --{name} not declared"))
     }
 
+    /// [`Args::get`] parsed as usize (exits via panic on bad input).
     pub fn get_usize(&self, name: &str) -> usize {
         self.get(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be an integer, got '{}'", self.get(name)))
     }
 
+    /// [`Args::get`] parsed as u64.
     pub fn get_u64(&self, name: &str) -> u64 {
         self.get(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be an integer, got '{}'", self.get(name)))
     }
 
+    /// [`Args::get`] parsed as f64.
     pub fn get_f64(&self, name: &str) -> f64 {
         self.get(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be a number, got '{}'", self.get(name)))
     }
 
+    /// Was flag `name` passed?
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

@@ -36,10 +36,12 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Minimum (+∞ for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (−∞ for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }

@@ -9,16 +9,23 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed TOML value (the subset the configs use).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float (also produced by exponent notation).
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// String contents, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -26,6 +33,7 @@ impl TomlValue {
         }
     }
 
+    /// Integer value, if this is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(i) => Some(*i),
@@ -33,6 +41,7 @@ impl TomlValue {
         }
     }
 
+    /// Numeric value (floats and integers both qualify).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(f) => Some(*f),
@@ -41,6 +50,7 @@ impl TomlValue {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -48,6 +58,7 @@ impl TomlValue {
         }
     }
 
+    /// Array of numbers, if this is an all-numeric array.
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         match self {
             TomlValue::Array(a) => a.iter().map(|v| v.as_f64()).collect(),
@@ -59,12 +70,16 @@ impl TomlValue {
 /// section name -> key -> value. Keys before any `[section]` land in "".
 #[derive(Clone, Debug, Default)]
 pub struct TomlDoc {
+    /// Section name → key → value (top-level keys land in `""`).
     pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
 }
 
+/// Parse error with a 1-based line number.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line of the error.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -77,6 +92,7 @@ impl fmt::Display for TomlError {
 impl std::error::Error for TomlError {}
 
 impl TomlDoc {
+    /// Parse a document; anything outside the supported subset errors.
     pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -109,6 +125,7 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Look up `key` in `[section]` (`""` = before any section header).
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.sections.get(section)?.get(key)
     }

@@ -31,6 +31,7 @@ fn tiny_cfg(strategy: Strategy, rounds: usize) -> RunConfig {
         eval_every: 2,
         eval_cap: 256,
         workers: 1,
+        trace: None,
         verbose: false,
     }
 }

@@ -149,6 +149,7 @@ fn proptest_exec_sharded_matches_sequential() {
             eval_every: 1,
             eval_cap: 128,
             workers: 1,
+            trace: None,
             verbose: false,
         };
         let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
@@ -203,6 +204,7 @@ fn proptest_exec_engine_workers_setting_matches_explicit_executor() {
         eval_every: 1,
         eval_cap: 128,
         workers: 1,
+        trace: None,
         verbose: false,
     };
     // `workers: N` in the config must behave exactly like handing the

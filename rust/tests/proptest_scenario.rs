@@ -1,0 +1,284 @@
+//! Property suites for trace-driven availability scenarios (seeded runner
+//! in `util::prop`; offline build, no proptest crate).
+//!
+//! Invariants:
+//! * Availability-aware selection never picks an offline client, is
+//!   deterministic under `PROPTEST_SEED`, and reduces exactly to the
+//!   unrestricted weighted sampler when every client is online.
+//! * Generated traces are well-formed (sorted, disjoint, in-range
+//!   intervals) and their point queries agree with each other.
+//! * Trace generation and materialization replay bit-for-bit from a seed.
+//! * With a runtime (`make artifacts`): an always-on trace reproduces the
+//!   traceless run exactly, and sharded equals sequential bit-for-bit
+//!   with churn enabled.
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark};
+use fedcore::exec::Sharded;
+use fedcore::fl::{select_available, CoresetMode, Engine, RunConfig, Strategy};
+use fedcore::scenario::{AvailabilityTrace, ChurnModel, EdgePolicy, TraceSpec};
+use fedcore::sim::Fleet;
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn random_model(rng: &mut Rng) -> ChurnModel {
+    match rng.below(4) {
+        0 => ChurnModel::AlwaysOn,
+        1 => ChurnModel::Periodic {
+            period: rng.range_f64(2.0, 12.0),
+            duty: rng.range_f64(0.2, 1.0),
+        },
+        2 => ChurnModel::Markov {
+            mean_on: rng.range_f64(1.0, 10.0),
+            mean_off: rng.range_f64(0.5, 5.0),
+            p_init_online: rng.f64(),
+        },
+        _ => ChurnModel::HeavyTail {
+            mean_on: rng.range_f64(1.0, 10.0),
+            min_off: rng.range_f64(0.1, 2.0),
+            alpha: rng.range_f64(0.8, 2.5),
+        },
+    }
+}
+
+fn random_trace(rng: &mut Rng, clients: usize) -> AvailabilityTrace {
+    let model = random_model(rng);
+    let horizon = rng.range_f64(5.0, 60.0);
+    let policy = [EdgePolicy::Wrap, EdgePolicy::Clamp][rng.below(2)];
+    model
+        .generate(&rng.split(0x7AACE), clients, horizon, policy)
+        .expect("generation")
+}
+
+// ---------- selection ----------
+
+#[test]
+fn proptest_scenario_selection_never_offline_and_deterministic() {
+    check("scenario-select-online", env_seed(0x5CE0), env_cases(200), |rng, _| {
+        let n = 2 + rng.below(40);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+        let online: Vec<usize> = (0..n).filter(|_| rng.f64() < 0.6).collect();
+        let k = 1 + rng.below(12);
+
+        let mut a_rng = rng.split(1);
+        let selected = select_available(&mut a_rng, &weights, &online, k);
+        for &i in &selected {
+            assert!(online.contains(&i), "selected offline client {i}");
+        }
+        if online.is_empty() {
+            assert!(selected.is_empty());
+        } else if online.len() < k {
+            // Deterministic fallback: every online client exactly once, in
+            // index order, without consuming the RNG.
+            assert_eq!(selected, online);
+        } else {
+            assert_eq!(selected.len(), k);
+        }
+
+        // Same RNG stream ⇒ same selection (replayable under PROPTEST_SEED).
+        let mut b_rng = rng.split(1);
+        let replay = select_available(&mut b_rng, &weights, &online, k);
+        assert_eq!(selected, replay);
+    });
+}
+
+#[test]
+fn proptest_scenario_selection_reduces_to_unrestricted_sampler() {
+    check("scenario-select-reduction", env_seed(0x5CE1), env_cases(100), |rng, _| {
+        let n = 2 + rng.below(30);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+        let k = 1 + rng.below(n); // k ≤ n: the non-fallback regime
+        let all: Vec<usize> = (0..n).collect();
+
+        let mut a_rng = rng.split(2);
+        let via_available = select_available(&mut a_rng, &weights, &all, k);
+        let mut b_rng = rng.split(2);
+        let unrestricted = b_rng.weighted_with_replacement(&weights, k);
+        assert_eq!(
+            via_available, unrestricted,
+            "all-online selection must match the baseline sampler"
+        );
+    });
+}
+
+// ---------- trace well-formedness ----------
+
+#[test]
+fn proptest_scenario_trace_invariants() {
+    check("scenario-trace-invariants", env_seed(0x7ACE), env_cases(60), |rng, _| {
+        let clients = 1 + rng.below(30);
+        let trace = random_trace(rng, clients);
+        let horizon = trace.horizon();
+
+        for c in 0..clients {
+            let ivs = trace.intervals(c);
+            for iv in ivs {
+                assert!(iv.0 >= 0.0 && iv.1 <= horizon, "client {c}: {iv:?} out of range");
+                assert!(iv.0 < iv.1, "client {c}: empty interval {iv:?}");
+            }
+            for w in ivs.windows(2) {
+                assert!(w[0].1 < w[1].0, "client {c}: unmerged/overlapping {w:?}");
+            }
+        }
+
+        // Point queries agree with each other at random times (including
+        // past the horizon, where the edge policy kicks in).
+        for _ in 0..32 {
+            let t = rng.range_f64(0.0, 3.0 * horizon);
+            let online = trace.online_at(t);
+            for c in 0..clients {
+                let is_on = trace.is_online(c, t);
+                assert_eq!(online.contains(&c), is_on, "online_at vs is_online at {t}");
+                let rem = trace.remaining_online(c, t);
+                assert_eq!(rem > 0.0, is_on, "remaining_online vs is_online at {t}");
+                // Just inside a positive remainder the client is still on.
+                if rem.is_finite() && rem > 1e-6 {
+                    assert!(
+                        trace.is_online(c, t + rem * 0.5),
+                        "client {c} offline inside its own remainder (t={t}, rem={rem})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn proptest_scenario_materialize_is_deterministic() {
+    check("scenario-materialize-replay", env_seed(0xDE7), env_cases(40), |rng, _| {
+        let spec = TraceSpec::from_model(
+            random_model(rng),
+            rng.range_f64(4.0, 40.0),
+            rng.next_u64(),
+        );
+        let clients = 1 + rng.below(25);
+        let deadline = rng.range_f64(0.5, 500.0);
+        let a = spec.materialize(clients, deadline).expect("materialize");
+        let b = spec.materialize(clients, deadline).expect("materialize");
+        assert_eq!(a, b, "materialization must replay bit-for-bit");
+    });
+}
+
+#[test]
+fn proptest_scenario_fleet_online_clients_matches_trace() {
+    check("scenario-fleet-online", env_seed(0xF1EE), env_cases(40), |rng, _| {
+        let n = 2 + rng.below(20);
+        let sizes: Vec<usize> = (0..n).map(|_| 10 + rng.below(100)).collect();
+        let mut frng = rng.split(3);
+        let fleet = Fleet::new(&mut frng, sizes, 4, 30.0);
+        let trace = random_trace(rng, n);
+        let t = rng.range_f64(0.0, 2.0 * trace.horizon());
+        let online = fleet.online_clients(&trace, t);
+        for i in 0..n {
+            assert_eq!(online.contains(&i), trace.is_online(i, t));
+        }
+    });
+}
+
+// ---------- engine equivalences (runtime-backed) ----------
+
+fn runtime_or_skip() -> Option<fedcore::runtime::Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+fn churn_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [
+        Strategy::FedCore,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: 0.1 },
+        Strategy::FedAvg,
+    ];
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 2 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 2 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: [10.0, 30.0][rng.below(2)],
+        seed: rng.next_u64(),
+        coreset_method: Method::FasterPam,
+        coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+        eval_every: 1,
+        eval_cap: 128,
+        workers: 1,
+        trace: Some(TraceSpec::from_model(
+            ChurnModel::Markov {
+                mean_on: rng.range_f64(2.0, 8.0),
+                mean_off: rng.range_f64(0.5, 4.0),
+                p_init_online: 0.8,
+            },
+            24.0,
+            rng.next_u64(),
+        )),
+        verbose: false,
+    }
+}
+
+#[test]
+fn proptest_scenario_always_on_trace_equals_baseline() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    let mut base = churn_cfg(&mut Rng::new(env_seed(0xA0)), 0);
+    base.trace = None;
+    let mut with_trace = base.clone();
+    with_trace.trace = Some(TraceSpec::always_on());
+
+    let a = Engine::new(&rt, &ds, base).unwrap().run().unwrap();
+    let b = Engine::new(&rt, &ds, with_trace).unwrap().run().unwrap();
+    assert_eq!(a.final_params, b.final_params, "always-on trace changed the run");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits());
+        assert_eq!(x.dropped, y.dropped);
+        assert_eq!(y.churn_dropped, 0, "always-on trace cannot churn-drop");
+    }
+}
+
+#[test]
+fn proptest_scenario_sharded_matches_sequential_with_churn() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("scenario-exec-equivalence", env_seed(0xC4E8), env_cases(4), |rng, case| {
+        let cfg = churn_cfg(rng, case);
+        let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        let workers = 2 + rng.below(3);
+        let exec = Sharded::new(workers, rt.factory());
+        let par = Engine::with_executor(&rt, &ds, cfg, exec).unwrap().run().unwrap();
+
+        assert_eq!(
+            seq.final_params, par.final_params,
+            "{} × {workers} workers with churn: final params diverged",
+            seq.strategy
+        );
+        assert_eq!(seq.rounds.len(), par.rounds.len());
+        for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+            let r = a.round;
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {r} train_loss");
+            assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "round {r} test_acc");
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "round {r} sim_time");
+            assert_eq!(a.dropped, b.dropped, "round {r} dropped");
+            assert_eq!(a.churn_dropped, b.churn_dropped, "round {r} churn_dropped");
+            assert_eq!(
+                a.partial_time.to_bits(),
+                b.partial_time.to_bits(),
+                "round {r} partial_time"
+            );
+            assert_eq!(a.client_times, b.client_times, "round {r} client_times");
+        }
+    });
+}

@@ -87,6 +87,7 @@ fn main() -> anyhow::Result<()> {
             eval_cap: 512,
             workers: 1,
             trace: None,
+            overlap: None,
             verbose: false,
         };
         let engine = Engine::new(&rt, &ds, cfg)?;
@@ -116,6 +117,7 @@ fn main() -> anyhow::Result<()> {
             eval_cap: 512,
             workers: 1,
             trace: None,
+            overlap: None,
             verbose: false,
         };
         let engine = Engine::new(&rt, &ds, cfg)?;

@@ -49,6 +49,7 @@ fn main() {
         eval_cap: 256,
         workers: 1,
         trace: None,
+        overlap: None,
         verbose: false,
     };
 

@@ -7,6 +7,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coreset::Method;
 use crate::data::Benchmark;
+use crate::exec::OverlapConfig;
 use crate::fl::{RunConfig, Strategy};
 use crate::scenario::TraceSpec;
 use crate::util::toml::TomlDoc;
@@ -145,6 +146,34 @@ impl ExperimentConfig {
                 other => return Err(anyhow!("unknown coreset mode '{other}'")),
             };
         }
+        // Async round overlap: `overlap = true` (or any of the policy
+        // keys) enables the quorum + delayed-gradient pipeline; missing
+        // keys keep the OverlapConfig defaults, `overlap = false` forces
+        // the synchronous barrier regardless of other keys.
+        let overlap_flag = doc.get("fl", "overlap").and_then(|v| v.as_bool());
+        let quorum = doc.get("fl", "quorum").and_then(|v| v.as_f64());
+        let max_staleness = match doc.get("fl", "max_staleness").and_then(|v| v.as_i64()) {
+            Some(v) if v < 0 => {
+                return Err(anyhow!("[fl] max_staleness must be >= 0, got {v}"))
+            }
+            other => other.map(|v| v as usize),
+        };
+        let alpha = doc.get("fl", "alpha").and_then(|v| v.as_f64());
+        let any_policy_key = quorum.is_some() || max_staleness.is_some() || alpha.is_some();
+        if overlap_flag == Some(true) || (overlap_flag.is_none() && any_policy_key) {
+            let mut ov = OverlapConfig::default();
+            if let Some(v) = quorum {
+                ov.quorum = v;
+            }
+            if let Some(v) = max_staleness {
+                ov.max_staleness = v;
+            }
+            if let Some(v) = alpha {
+                ov.alpha = v;
+            }
+            ov.validate().map_err(|e| anyhow!("[fl] overlap: {e}"))?;
+            cfg.run.overlap = Some(ov);
+        }
         // [scenario]: trace-driven client availability — either a pointer
         // to a trace file (`trace = "examples/traces/markov_churn.toml"`)
         // or an inline spec with the same keys as a trace file's [trace]
@@ -251,6 +280,38 @@ workers = 3
     fn no_scenario_section_means_no_trace() {
         let cfg = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
         assert!(cfg.run.trace.is_none());
+    }
+
+    #[test]
+    fn overlap_section_roundtrip() {
+        let text = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [fl]\noverlap = true\nquorum = 0.6\nmax_staleness = 3\nalpha = 2.0\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let ov = cfg.run.overlap.expect("overlap parsed");
+        assert_eq!(ov.quorum, 0.6);
+        assert_eq!(ov.max_staleness, 3);
+        assert_eq!(ov.alpha, 2.0);
+
+        // Policy keys alone enable overlap (no explicit flag needed)…
+        let implied = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nquorum = 0.5\n";
+        let cfg = ExperimentConfig::from_toml(implied).unwrap();
+        let ov = cfg.run.overlap.expect("policy key implies overlap");
+        assert_eq!(ov.quorum, 0.5);
+        assert_eq!(ov.max_staleness, OverlapConfig::default().max_staleness);
+
+        // …while `overlap = false` forces synchronous regardless.
+        let off = "[experiment]\nbenchmark = \"mnist\"\n[fl]\noverlap = false\nquorum = 0.5\n";
+        assert!(ExperimentConfig::from_toml(off).unwrap().run.overlap.is_none());
+
+        // No overlap keys ⇒ classic synchronous engine.
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert!(plain.run.overlap.is_none());
+
+        // Invalid policy values are hard errors, not silent defaults.
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nquorum = 1.5\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let negative = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nmax_staleness = -3\n";
+        assert!(ExperimentConfig::from_toml(negative).is_err());
     }
 
     #[test]

@@ -18,10 +18,18 @@
 //! arithmetic as the sequential path, so a run's `RunResult` is
 //! bit-identical for any worker count (verified by
 //! `rust/tests/proptest_exec.rs`).
+//!
+//! A third wrapper, [`Overlapped`], parameterizes the engine's *async
+//! round overlap* pipeline (quorum-triggered aggregation with
+//! staleness-bounded delayed gradients — see [`overlapped`]); it changes
+//! when the simulated server aggregates, never what is computed, so it
+//! composes with either compute executor.
 
+pub mod overlapped;
 pub mod sequential;
 pub mod sharded;
 
+pub use self::overlapped::{DelayedUpdate, InFlight, OverlapConfig, Overlapped};
 pub use self::sequential::Sequential;
 pub use self::sharded::Sharded;
 
@@ -160,28 +168,44 @@ pub(crate) fn exec_eval(rt: &Runtime, ctx: &ExecContext, job: &EvalJob) -> Resul
     rt.evaluate(&ctx.model, job.params.as_slice(), &x, &y, &mask)
 }
 
-/// The two built-in executors behind one concrete type, so `Engine::new`
-/// can pick at run time from `RunConfig::workers` without making every
-/// caller generic.
+/// The built-in executors behind one concrete type, so `Engine::new`
+/// can pick at run time from `RunConfig::workers` (and
+/// `RunConfig::overlap`) without making every caller generic.
 pub enum ExecutorImpl<'a> {
     /// In-thread execution on the engine's own runtime.
     Sequential(Sequential<'a>),
     /// Persistent pool of runtime-pinned worker threads.
     Sharded(Sharded),
+    /// In-thread execution under the overlapped pipeline.
+    OverlappedSequential(Overlapped<Sequential<'a>>),
+    /// Sharded pool under the overlapped pipeline.
+    OverlappedSharded(Overlapped<Sharded>),
 }
 
 impl<'a> ExecutorImpl<'a> {
     /// Resolve a worker-count setting: `0` = auto
     /// ([`crate::util::pool::default_threads`], which honors
     /// `FEDCORE_THREADS`), `1` = in-thread sequential, `N > 1` = sharded
-    /// pool of N runtime-pinned workers.
-    pub fn from_config(rt: &'a Runtime, workers: usize) -> ExecutorImpl<'a> {
+    /// pool of N runtime-pinned workers. When `overlap` is set the chosen
+    /// executor is wrapped in [`Overlapped`], whose constructor validates
+    /// the policy (an invalid quorum/alpha surfaces here as `Err`).
+    pub fn from_config(
+        rt: &'a Runtime,
+        workers: usize,
+        overlap: Option<OverlapConfig>,
+    ) -> Result<ExecutorImpl<'a>> {
         let n = if workers == 0 { crate::util::pool::default_threads() } else { workers };
-        if n <= 1 {
-            ExecutorImpl::Sequential(Sequential::new(rt))
-        } else {
-            ExecutorImpl::Sharded(Sharded::new(n, rt.factory()))
-        }
+        Ok(match (n <= 1, overlap) {
+            (true, None) => ExecutorImpl::Sequential(Sequential::new(rt)),
+            (false, None) => ExecutorImpl::Sharded(Sharded::new(n, rt.factory())),
+            (true, Some(cfg)) => {
+                ExecutorImpl::OverlappedSequential(Overlapped::new(Sequential::new(rt), cfg)?)
+            }
+            (false, Some(cfg)) => ExecutorImpl::OverlappedSharded(Overlapped::new(
+                Sharded::new(n, rt.factory()),
+                cfg,
+            )?),
+        })
     }
 }
 
@@ -190,6 +214,8 @@ impl Executor for ExecutorImpl<'_> {
         match self {
             ExecutorImpl::Sequential(e) => e.workers(),
             ExecutorImpl::Sharded(e) => e.workers(),
+            ExecutorImpl::OverlappedSequential(e) => e.workers(),
+            ExecutorImpl::OverlappedSharded(e) => e.workers(),
         }
     }
 
@@ -201,6 +227,8 @@ impl Executor for ExecutorImpl<'_> {
         match self {
             ExecutorImpl::Sequential(e) => e.run_clients(ctx, jobs),
             ExecutorImpl::Sharded(e) => e.run_clients(ctx, jobs),
+            ExecutorImpl::OverlappedSequential(e) => e.run_clients(ctx, jobs),
+            ExecutorImpl::OverlappedSharded(e) => e.run_clients(ctx, jobs),
         }
     }
 
@@ -208,6 +236,8 @@ impl Executor for ExecutorImpl<'_> {
         match self {
             ExecutorImpl::Sequential(e) => e.run_evals(ctx, jobs),
             ExecutorImpl::Sharded(e) => e.run_evals(ctx, jobs),
+            ExecutorImpl::OverlappedSequential(e) => e.run_evals(ctx, jobs),
+            ExecutorImpl::OverlappedSharded(e) => e.run_evals(ctx, jobs),
         }
     }
 }

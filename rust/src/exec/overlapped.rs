@@ -1,0 +1,323 @@
+//! Async round overlap: quorum-triggered aggregation with in-flight
+//! bookkeeping for staleness-bounded delayed gradients.
+//!
+//! Synchronous FL barriers every round on its slowest participant. The
+//! overlapped pipeline instead lets the server aggregate — and dispatch
+//! the next round — as soon as a **quorum** (a configurable fraction of
+//! the round's contributing clients) has reported back. Clients past the
+//! quorum keep computing; their updates travel through an [`InFlight`]
+//! ledger and are folded into a *later* round's aggregation as delayed
+//! gradients, down-weighted by staleness (`1/(1+s)^alpha`, following
+//! "Stragglers Are Not Disaster", arXiv:2102.06329) and discarded outright
+//! once staleness exceeds a hard cap.
+//!
+//! Determinism contract: everything here is simulated-time bookkeeping —
+//! no wall-clock, no extra RNG draws. Late updates are keyed by
+//! `(origin_round, selection slot)` and every drain returns them in that
+//! order, so an overlapped run replays bit-for-bit from its seed, and the
+//! degenerate configuration (`quorum = 1.0`, `max_staleness = 0`) leaves
+//! the ledger empty forever, reproducing the synchronous engine exactly
+//! (enforced by `rust/tests/proptest_overlap.rs`).
+
+use anyhow::{anyhow, Result};
+
+use std::sync::Arc;
+
+use super::{ClientJob, EvalJob, ExecContext, Executor};
+use crate::fl::ClientOutcome;
+use crate::runtime::EvalOutput;
+
+/// Staleness decay weight `1/(1+s)^alpha` for an update that is `s`
+/// rounds old at fold time. `s = 0` (an on-time update) always weighs
+/// exactly `1.0`; larger `alpha` forgets stale updates faster, and
+/// `alpha = 0` treats every non-discarded update equally.
+pub fn staleness_weight(staleness: usize, alpha: f64) -> f64 {
+    if staleness == 0 {
+        return 1.0;
+    }
+    1.0 / (1.0 + staleness as f64).powf(alpha)
+}
+
+/// Parameters of the overlapped (quorum + delayed gradient) pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapConfig {
+    /// Fraction of a round's contributing clients the server waits for
+    /// before aggregating and advancing, in `(0, 1]`. `1.0` waits for
+    /// everyone — the synchronous barrier.
+    pub quorum: f64,
+    /// Hard staleness cap, in rounds: a delayed update folded `s` rounds
+    /// after its origin is discarded when `s > max_staleness` (and
+    /// accounted per-round like churn drops). `0` discards every late
+    /// update.
+    pub max_staleness: usize,
+    /// Staleness decay exponent for [`staleness_weight`].
+    pub alpha: f64,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        OverlapConfig { quorum: 0.8, max_staleness: 2, alpha: 1.0 }
+    }
+}
+
+impl OverlapConfig {
+    /// The degenerate configuration that must reproduce the synchronous
+    /// engine bit-for-bit: full quorum, no staleness tolerance.
+    pub fn degenerate() -> OverlapConfig {
+        OverlapConfig { quorum: 1.0, max_staleness: 0, alpha: 1.0 }
+    }
+
+    /// Validate the parameters (quorum in `(0, 1]`, finite `alpha >= 0`).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.quorum > 0.0 && self.quorum <= 1.0) {
+            return Err(anyhow!("overlap quorum must be in (0, 1], got {}", self.quorum));
+        }
+        if !(self.alpha >= 0.0 && self.alpha.is_finite()) {
+            return Err(anyhow!("overlap alpha must be finite and >= 0, got {}", self.alpha));
+        }
+        Ok(())
+    }
+
+    /// How many of `n` contributing clients make a quorum:
+    /// `ceil(quorum * n)`, clamped to `[1, n]` (`0` only when `n = 0`).
+    pub fn quorum_count(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        ((self.quorum * n as f64).ceil() as usize).clamp(1, n)
+    }
+
+    /// [`staleness_weight`] at this config's `alpha`.
+    pub fn weight(&self, staleness: usize) -> f64 {
+        staleness_weight(staleness, self.alpha)
+    }
+}
+
+/// One late client update in flight between rounds: the round-end local
+/// parameters plus everything needed to fold (or discard) them
+/// deterministically later.
+#[derive(Clone, Debug)]
+pub struct DelayedUpdate {
+    /// The round the client was selected in.
+    pub origin_round: usize,
+    /// The client's selection slot within its origin round (the
+    /// deterministic tie-break key — slots are unique per round even when
+    /// sampling-with-replacement picks one client twice).
+    pub slot: usize,
+    /// The client's index.
+    pub client: usize,
+    /// Absolute simulated instant the update reaches the server
+    /// (origin round start + the client's simulated local time).
+    pub arrival: f64,
+    /// The round-end local parameters wᵢ.
+    pub params: Vec<f32>,
+}
+
+/// The in-flight ledger: every late update between its origin round and
+/// the aggregation that folds or discards it.
+///
+/// All queries are deterministic: arrivals drain ordered by
+/// `(origin_round, slot)`, never by insertion or completion order, so the
+/// fold order in the engine's weighted aggregation is a pure function of
+/// the run's seed.
+#[derive(Clone, Debug, Default)]
+pub struct InFlight {
+    pending: Vec<DelayedUpdate>,
+}
+
+impl InFlight {
+    /// An empty ledger.
+    pub fn new() -> InFlight {
+        InFlight::default()
+    }
+
+    /// Updates currently in flight.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Is the ledger empty?
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Clients with an update currently in flight (ascending, deduped).
+    pub fn busy_clients(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.pending.iter().map(|u| u.client).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Record a late update.
+    pub fn push(&mut self, update: DelayedUpdate) {
+        self.pending.push(update);
+    }
+
+    /// Remove and return every update that has arrived by `now`
+    /// (`arrival <= now`), ordered by `(origin_round, slot)`.
+    pub fn take_arrived(&mut self, now: f64) -> Vec<DelayedUpdate> {
+        let mut arrived = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].arrival <= now {
+                arrived.push(self.pending.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        arrived.sort_by_key(|u| (u.origin_round, u.slot));
+        arrived
+    }
+
+    /// Drop every still-pending update that can no longer fold: after
+    /// round `round`'s aggregation, the earliest possible fold is round
+    /// `round + 1`, so anything with `round - origin >= max_staleness` is
+    /// already doomed. Returns how many were discarded.
+    pub fn discard_doomed(&mut self, round: usize, max_staleness: usize) -> usize {
+        let before = self.pending.len();
+        self.pending.retain(|u| round - u.origin_round < max_staleness);
+        before - self.pending.len()
+    }
+
+    /// Drop everything (end of run); returns how many updates were still
+    /// in flight.
+    pub fn discard_all(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
+    }
+}
+
+/// Executor wrapper marking overlapped execution: compute still runs on
+/// the wrapped executor — sequential or a sharded pool — and the engine
+/// drives the pipeline itself from [`crate::fl::RunConfig`]'s `overlap`
+/// policy (this wrapper validates and carries a copy for introspection
+/// via [`Overlapped::config`], e.g. by `Engine::executor()` callers).
+/// Overlap changes *when the simulated server aggregates*, never *what
+/// is computed*, so the executor determinism contract (results in job
+/// order) is inherited unchanged from the inner executor.
+pub struct Overlapped<E> {
+    inner: E,
+    cfg: OverlapConfig,
+}
+
+impl<E: Executor> Overlapped<E> {
+    /// Wrap `inner` with an overlap policy (validated).
+    pub fn new(inner: E, cfg: OverlapConfig) -> Result<Overlapped<E>> {
+        cfg.validate()?;
+        Ok(Overlapped { inner, cfg })
+    }
+
+    /// The quorum / staleness policy this executor was built with.
+    pub fn config(&self) -> &OverlapConfig {
+        &self.cfg
+    }
+
+    /// The wrapped executor.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: Executor> Executor for Overlapped<E> {
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn run_clients(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientOutcome>> {
+        self.inner.run_clients(ctx, jobs)
+    }
+
+    fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
+        self.inner.run_evals(ctx, jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn update(origin: usize, slot: usize, arrival: f64) -> DelayedUpdate {
+        DelayedUpdate {
+            origin_round: origin,
+            slot,
+            client: 10 * origin + slot,
+            arrival,
+            params: vec![origin as f32, slot as f32],
+        }
+    }
+
+    #[test]
+    fn weight_is_one_on_time_and_decays() {
+        assert_eq!(staleness_weight(0, 2.0), 1.0);
+        assert_eq!(staleness_weight(1, 1.0), 0.5);
+        assert_eq!(staleness_weight(3, 1.0), 0.25);
+        // alpha = 0: every non-discarded update weighs 1.
+        assert_eq!(staleness_weight(7, 0.0), 1.0);
+    }
+
+    #[test]
+    fn quorum_count_bounds() {
+        let half = OverlapConfig { quorum: 0.5, ..OverlapConfig::default() };
+        assert_eq!(half.quorum_count(0), 0);
+        assert_eq!(half.quorum_count(1), 1);
+        assert_eq!(half.quorum_count(4), 2);
+        assert_eq!(half.quorum_count(5), 3); // ceil
+        let full = OverlapConfig::degenerate();
+        for n in 0..20 {
+            assert_eq!(full.quorum_count(n), n);
+        }
+        // A tiny quorum still waits for at least one client.
+        let tiny = OverlapConfig { quorum: 0.01, ..OverlapConfig::default() };
+        assert_eq!(tiny.quorum_count(3), 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(OverlapConfig::default().validate().is_ok());
+        assert!(OverlapConfig { quorum: 0.0, ..Default::default() }.validate().is_err());
+        assert!(OverlapConfig { quorum: 1.5, ..Default::default() }.validate().is_err());
+        assert!(OverlapConfig { alpha: -1.0, ..Default::default() }.validate().is_err());
+        assert!(OverlapConfig { alpha: f64::NAN, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn in_flight_drains_in_origin_slot_order() {
+        let mut fl = InFlight::new();
+        // Push out of order; drain must come back (origin, slot)-sorted.
+        fl.push(update(2, 1, 5.0));
+        fl.push(update(1, 3, 4.0));
+        fl.push(update(1, 0, 3.0));
+        fl.push(update(2, 0, 9.0));
+        assert_eq!(fl.len(), 4);
+        assert_eq!(fl.busy_clients(), vec![10, 13, 20, 21]);
+
+        let arrived = fl.take_arrived(5.0);
+        let keys: Vec<(usize, usize)> =
+            arrived.iter().map(|u| (u.origin_round, u.slot)).collect();
+        assert_eq!(keys, vec![(1, 0), (1, 3), (2, 1)]);
+        assert_eq!(fl.len(), 1, "the 9.0 arrival stays in flight");
+        assert!(fl.take_arrived(5.0).is_empty());
+    }
+
+    #[test]
+    fn discard_doomed_enforces_the_cap() {
+        let mut fl = InFlight::new();
+        fl.push(update(0, 0, 100.0));
+        fl.push(update(3, 0, 100.0));
+        // After round 3 with max_staleness = 2: the round-0 update would
+        // fold at staleness >= 4 — doomed; the round-3 one can still make
+        // rounds 4 or 5.
+        assert_eq!(fl.discard_doomed(3, 2), 1);
+        assert_eq!(fl.len(), 1);
+        // max_staleness = 0 dooms everything still pending.
+        assert_eq!(fl.discard_doomed(3, 0), 1);
+        assert!(fl.is_empty());
+        assert_eq!(fl.discard_all(), 0);
+    }
+}

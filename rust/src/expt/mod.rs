@@ -10,6 +10,8 @@
 //! * `FEDCORE_ROUNDS`  — round-count override
 //! * `FEDCORE_FULL=1`  — paper-scale everything (slow)
 //! * `FEDCORE_WORKERS` — exec worker threads (0 = auto, default 1)
+//! * `FEDCORE_QUORUM` / `FEDCORE_MAX_STALENESS` / `FEDCORE_ALPHA` —
+//!   overlap policy for [`bench_overlap`] (defaults 0.7 / 2 / 1.0)
 
 use std::sync::Arc;
 
@@ -17,6 +19,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::data::{self, Benchmark};
+use crate::exec::OverlapConfig;
 use crate::fl::{all_strategies, Engine, Strategy};
 use crate::metrics::RunResult;
 use crate::runtime::Runtime;
@@ -104,9 +107,38 @@ pub fn run_one(
     straggler_pct: f64,
     seed: u64,
 ) -> Result<RunResult> {
+    run_with(rt, bench, strategy, straggler_pct, seed, None, None)
+}
+
+/// One configured run under an optional async-overlap policy and/or
+/// availability trace (the bench-scale dataset and knobs of [`run_one`]).
+/// The runner behind `benches/async_overlap.rs`, and the sweep entry
+/// point for overlapped strategy grids.
+pub fn run_with(
+    rt: &Runtime,
+    bench: Benchmark,
+    strategy: Strategy,
+    straggler_pct: f64,
+    seed: u64,
+    overlap: Option<OverlapConfig>,
+    trace: Option<TraceSpec>,
+) -> Result<RunResult> {
     let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
-    let cfg = bench_cfg(bench, straggler_pct, seed).with_strategy(strategy);
+    let mut cfg = bench_cfg(bench, straggler_pct, seed).with_strategy(strategy);
+    cfg.run.overlap = overlap;
+    cfg.run.trace = trace;
     Engine::new(rt, &ds, cfg.run.clone())?.run()
+}
+
+/// The bench-default overlap policy: [`OverlapConfig`] with the
+/// `FEDCORE_QUORUM` / `FEDCORE_MAX_STALENESS` / `FEDCORE_ALPHA` env
+/// knobs applied (defaults 0.7 / 2 / 1.0).
+pub fn bench_overlap() -> OverlapConfig {
+    OverlapConfig {
+        quorum: env_f64("FEDCORE_QUORUM", 0.7),
+        max_staleness: env_usize("FEDCORE_MAX_STALENESS", 2),
+        alpha: env_f64("FEDCORE_ALPHA", 1.0),
+    }
 }
 
 /// One scenario run's summary: the run itself plus churn aggregates
@@ -323,5 +355,10 @@ mod tests {
     fn env_parsers_fall_back() {
         assert_eq!(env_f64("FEDCORE_DOES_NOT_EXIST", 2.5), 2.5);
         assert_eq!(env_usize("FEDCORE_DOES_NOT_EXIST", 3), 3);
+    }
+
+    #[test]
+    fn bench_overlap_policy_is_valid() {
+        assert!(bench_overlap().validate().is_ok());
     }
 }

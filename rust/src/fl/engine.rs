@@ -10,6 +10,17 @@
 //! Determinism: every job's RNG stream is split from `(round, client)`
 //! before dispatch and results are aggregated in selection order, so a run
 //! is bit-identical for any worker count.
+//!
+//! With [`RunConfig::overlap`] set, the loop switches to the *async
+//! round-overlap* pipeline: the server aggregates — and the clock
+//! advances to the next round's dispatch — as soon as a quorum of the
+//! round's contributing clients has finished; late finishers travel
+//! through an [`InFlight`] ledger and fold into a later round's
+//! aggregation as staleness-weighted delayed gradients
+//! ([`aggregate_weighted`]), or are discarded past the staleness cap.
+//! The degenerate policy (`quorum = 1.0`, `max_staleness = 0`) keeps the
+//! ledger empty and reproduces the synchronous loop bit-for-bit
+//! (`rust/tests/proptest_overlap.rs`).
 
 use std::sync::Arc;
 
@@ -19,7 +30,10 @@ use super::client::ClientOutcome;
 use super::plan::{LocalPlan, Strategy};
 use crate::coreset::Method;
 use crate::data::FedDataset;
-use crate::exec::{ClientJob, EvalJob, ExecContext, Executor, ExecutorImpl};
+use crate::exec::{
+    ClientJob, DelayedUpdate, EvalJob, ExecContext, Executor, ExecutorImpl, InFlight,
+    OverlapConfig,
+};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
 use crate::scenario::{AvailabilityTrace, TraceSpec};
@@ -72,6 +86,13 @@ pub struct RunConfig {
     /// partial work discarded. `None` = the classic always-on setting
     /// (byte-identical to pre-scenario behaviour).
     pub trace: Option<TraceSpec>,
+    /// Async round overlap: `Some(policy)` aggregates each round at a
+    /// quorum of its contributing clients and folds late arrivals into
+    /// later rounds as staleness-weighted delayed gradients (see
+    /// [`crate::exec::overlapped`]). `None` = the classic synchronous
+    /// barrier; the degenerate policy (`quorum = 1.0`,
+    /// `max_staleness = 0`) reproduces `None` bit-for-bit.
+    pub overlap: Option<OverlapConfig>,
     /// Print a progress line per round.
     pub verbose: bool,
 }
@@ -92,6 +113,7 @@ impl Default for RunConfig {
             eval_cap: 512,
             workers: 1,
             trace: None,
+            overlap: None,
             verbose: false,
         }
     }
@@ -111,6 +133,34 @@ pub fn aggregate(locals: &[&[f32]]) -> Option<Vec<f32>> {
     }
     let k = locals.len() as f64;
     Some(acc.into_iter().map(|a| (a / k) as f32).collect())
+}
+
+/// Weighted FedAvg aggregation for the overlapped pipeline:
+/// wᵣ₊₁ = Σ λᵢ wᵢ / Σ λᵢ, computed in f64 in caller order (on-time
+/// cohort in selection order, then delayed arrivals by
+/// `(origin_round, slot)`). With unit weights this reproduces
+/// [`aggregate`] **bit-for-bit** — `1.0 * x` is exact and the weight sum
+/// accumulates to exactly `k` — which is what lets the degenerate
+/// overlapped configuration match the synchronous engine
+/// (`rust/tests/proptest_overlap.rs`). Returns None when nothing
+/// contributed or the total weight is not positive (the server keeps the
+/// old model).
+pub fn aggregate_weighted(locals: &[&[f32]], weights: &[f64]) -> Option<Vec<f32>> {
+    assert_eq!(locals.len(), weights.len(), "one weight per contribution");
+    let first = locals.first()?;
+    let mut acc = vec![0.0f64; first.len()];
+    let mut total = 0.0f64;
+    for (l, &w) in locals.iter().zip(weights) {
+        assert_eq!(l.len(), acc.len(), "parameter dimension mismatch");
+        total += w;
+        for (a, &p) in acc.iter_mut().zip(*l) {
+            *a += w * (p as f64);
+        }
+    }
+    if total <= 0.0 {
+        return None;
+    }
+    Some(acc.into_iter().map(|a| (a / total) as f32).collect())
 }
 
 /// Availability-aware client selection (Algorithm 1 line 3 under churn):
@@ -188,7 +238,7 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
 impl<'a> Engine<'a> {
     /// Build an engine with the executor implied by `cfg.workers`.
     pub fn new(rt: &'a Runtime, data: &Arc<FedDataset>, cfg: RunConfig) -> Result<Engine<'a>> {
-        let exec = ExecutorImpl::from_config(rt, cfg.workers);
+        let exec = ExecutorImpl::from_config(rt, cfg.workers, cfg.overlap)?;
         Engine::with_executor(rt, data, cfg, exec)
     }
 }
@@ -204,6 +254,9 @@ impl<'a, E: Executor> Engine<'a, E> {
     ) -> Result<Engine<'a, E>> {
         if data.num_clients() == 0 {
             return Err(anyhow!("dataset has no clients"));
+        }
+        if let Some(ov) = &cfg.overlap {
+            ov.validate().context("overlap configuration")?;
         }
         let model = rt.manifest().model(&data.model)?.clone();
         let mut fleet_rng = Rng::new(cfg.seed).split(0xF1EE7);
@@ -328,6 +381,11 @@ impl<'a, E: Executor> Engine<'a, E> {
         let client_root = Rng::new(cfg.seed).split(0xC11E47);
         let mut clock = SimClock::new(self.fleet.deadline);
 
+        // Async overlap state: `None` runs the synchronous barrier; the
+        // ledger stays empty then, and every quorum degenerates to "all".
+        let overlap = cfg.overlap;
+        let mut in_flight = InFlight::new();
+
         let mut params = init_params;
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
 
@@ -402,49 +460,106 @@ impl<'a, E: Executor> Engine<'a, E> {
             let churn_dropped = churn_partial.iter().filter(|s| s.is_some()).count();
             let partial_time: f64 = churn_partial.iter().flatten().sum();
 
-            // --- line 15: aggregate contributing clients (selection order) ---
-            let contributing: Vec<&ClientOutcome> =
-                outcomes.iter().filter(|o| o.params.is_some()).collect();
-            let dropped = outcomes.len() - contributing.len();
-            let locals: Vec<&[f32]> = contributing
+            // --- timing: the synchronous server waits for its slowest
+            //     participant; the overlapped server advances at the
+            //     quorum (q-th smallest contributing time) while the tail
+            //     keeps computing. An all-dropped (or fully idle, under
+            //     churn) round still costs the server the full τ, and any
+            //     mid-round dropout forces the server to wait out τ before
+            //     giving up on the vanished client ---
+            let contributing: Vec<(usize, &ClientOutcome)> = outcomes
                 .iter()
-                .map(|o| o.params.as_deref().unwrap())
+                .enumerate()
+                .filter(|(_, o)| o.params.is_some())
                 .collect();
-            if let Some(new_params) = aggregate(&locals) {
+            let dropped = outcomes.len() - contributing.len();
+            let client_times: Vec<f64> =
+                contributing.iter().map(|(_, o)| o.sim_time).collect();
+            let mut timing = if client_times.is_empty() {
+                RoundTiming::idle(self.fleet.deadline)
+            } else {
+                let q = overlap
+                    .map(|o| o.quorum_count(client_times.len()))
+                    .unwrap_or(client_times.len());
+                let mut sorted = client_times.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite client times"));
+                RoundTiming::with_quorum(client_times, sorted[q - 1])
+            };
+            if churn_dropped > 0 {
+                timing.round_time = timing.round_time.max(self.fleet.deadline);
+            }
+            let sim_time = timing.round_time;
+            // The aggregation instant: when this round's quorum (or
+            // barrier) is reached on the absolute simulated clock.
+            let agg_instant = t_now + sim_time;
+
+            // --- line 15: aggregate. On-time cohort in selection order at
+            //     unit weight; late finishers enter the in-flight ledger;
+            //     delayed gradients that have arrived fold after the
+            //     cohort, ordered by (origin round, slot) and weighted
+            //     1/(1+staleness)^alpha, or are discarded past the cap ---
+            let mut locals: Vec<&[f32]> = Vec::with_capacity(contributing.len());
+            let mut fold_weights: Vec<f64> = Vec::with_capacity(contributing.len());
+            for (slot, o) in &contributing {
+                if o.sim_time <= sim_time {
+                    locals.push(o.params.as_deref().unwrap());
+                    fold_weights.push(1.0);
+                } else {
+                    in_flight.push(DelayedUpdate {
+                        origin_round: r,
+                        slot: *slot,
+                        client: selected[*slot],
+                        arrival: t_now + o.sim_time,
+                        params: o.params.clone().expect("contributing outcome has params"),
+                    });
+                }
+            }
+            let mut stale_folded = 0usize;
+            let mut stale_discarded = 0usize;
+            let mut stale_weight = 0.0f64;
+            let arrived = in_flight.take_arrived(agg_instant);
+            for u in &arrived {
+                let ov = overlap.expect("in-flight updates only exist in overlapped mode");
+                let staleness = r - u.origin_round;
+                if staleness <= ov.max_staleness {
+                    let w = ov.weight(staleness);
+                    locals.push(&u.params);
+                    fold_weights.push(w);
+                    stale_folded += 1;
+                    stale_weight += w;
+                } else {
+                    stale_discarded += 1;
+                }
+            }
+            if let Some(ov) = overlap {
+                // Bound the ledger: anything that can no longer fold
+                // within the staleness cap — or is still in flight after
+                // the final round — is discarded and accounted now.
+                stale_discarded += in_flight.discard_doomed(r, ov.max_staleness);
+                if r + 1 == cfg.rounds {
+                    stale_discarded += in_flight.discard_all();
+                }
+            }
+            if let Some(new_params) = aggregate_weighted(&locals, &fold_weights) {
                 params = new_params;
             }
-
-            // --- timing: round ends when the slowest participant finishes;
-            //     an all-dropped (or fully idle, under churn) round still
-            //     costs the server the full τ, and any mid-round dropout
-            //     forces the server to wait out τ before giving up on the
-            //     vanished client ---
-            let client_times: Vec<f64> =
-                contributing.iter().map(|o| o.sim_time).collect();
-            let timing = if client_times.is_empty() {
-                RoundTiming { client_times: vec![], round_time: self.fleet.deadline }
-            } else {
-                let mut t = RoundTiming::from_clients(client_times);
-                if churn_dropped > 0 {
-                    t.round_time = t.round_time.max(self.fleet.deadline);
-                }
-                t
-            };
-            let sim_time = timing.round_time;
             clock.push_round(timing.clone());
 
-            // --- metrics ---
+            // --- metrics (over the round's own executed clients — a late
+            //     finisher did its local training this round even though
+            //     its parameters fold later) ---
             let losses: Vec<f64> = contributing
                 .iter()
-                .map(|o| o.train_loss)
+                .map(|(_, o)| o.train_loss)
                 .filter(|l| l.is_finite())
                 .collect();
             let train_loss = crate::util::stats::mean(&losses);
-            let coreset_clients = contributing.iter().filter(|o| o.used_coreset).count();
+            let coreset_clients =
+                contributing.iter().filter(|(_, o)| o.used_coreset).count();
             let compressions: Vec<f64> = contributing
                 .iter()
-                .filter(|o| o.used_coreset)
-                .map(|o| o.compression)
+                .filter(|(_, o)| o.used_coreset)
+                .map(|(_, o)| o.compression)
                 .collect();
             let mean_compression = if compressions.is_empty() {
                 1.0
@@ -469,8 +584,16 @@ impl<'a, E: Executor> Engine<'a, E> {
                 } else {
                     String::new()
                 };
+                let overlap_note = if overlap.is_some() {
+                    format!(
+                        " | stale +{stale_folded}/-{stale_discarded} | in-flight {}",
+                        in_flight.len()
+                    )
+                } else {
+                    String::new()
+                };
                 eprintln!(
-                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}",
+                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}{overlap_note}",
                     cfg.strategy.label(),
                     100.0 * test_acc,
                     sim_time / self.fleet.deadline,
@@ -483,11 +606,15 @@ impl<'a, E: Executor> Engine<'a, E> {
                 test_loss,
                 test_acc,
                 sim_time,
+                tail_time: timing.tail_time,
                 sim_elapsed: clock.elapsed(),
                 client_times: timing.client_times,
                 dropped,
                 churn_dropped,
                 partial_time,
+                stale_folded,
+                stale_discarded,
+                stale_weight,
                 coreset_clients,
                 mean_compression,
             });
@@ -501,5 +628,110 @@ impl<'a, E: Executor> Engine<'a, E> {
             rounds,
             final_params: params,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---------- select_available: the deterministic <K fallback ----------
+    // (previously exercised only indirectly through the runtime-gated
+    // scenario suites; these pin the edge semantics without a runtime)
+
+    #[test]
+    fn select_fallback_under_k_is_index_ordered_and_rng_free() {
+        let weights = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let online = vec![4, 1, 3]; // deliberately unsorted input
+        let mut rng = Rng::new(9);
+        let before = rng.clone();
+        let picked = select_available(&mut rng, &weights, &online, 4);
+        // Fewer online than K: every online client exactly once, in the
+        // order the caller listed them (the engine passes ascending
+        // indices), and the RNG must not have been consumed.
+        assert_eq!(picked, online);
+        let mut a = rng;
+        let mut b = before;
+        assert_eq!(a.next_u64(), b.next_u64(), "fallback consumed the RNG");
+    }
+
+    #[test]
+    fn select_exactly_k_online_still_samples() {
+        // online.len() == k is NOT the fallback: sampling (with
+        // replacement) runs, so duplicates are possible and the RNG moves.
+        let weights = vec![1.0; 6];
+        let online = vec![0, 2, 4];
+        let mut rng = Rng::new(3);
+        let before = rng.clone();
+        let picked = select_available(&mut rng, &weights, &online, 3);
+        assert_eq!(picked.len(), 3);
+        assert!(picked.iter().all(|i| online.contains(i)));
+        let mut a = rng;
+        let mut b = before;
+        assert_ne!(a.next_u64(), b.next_u64(), "sampling must consume the RNG");
+    }
+
+    #[test]
+    fn select_empty_online_is_empty() {
+        let mut rng = Rng::new(1);
+        assert!(select_available(&mut rng, &[1.0, 1.0], &[], 2).is_empty());
+    }
+
+    #[test]
+    fn select_degenerate_weights_fall_back_to_uniform() {
+        // All-online clients carry zero/negative weight: the sampler must
+        // not panic on an all-zero CDF and must still return k picks.
+        let weights = vec![0.0, -1.0, 0.0, 5.0];
+        let online = vec![0, 1, 2]; // the positive-weight client is offline
+        let mut rng = Rng::new(7);
+        let picked = select_available(&mut rng, &weights, &online, 2);
+        assert_eq!(picked.len(), 2);
+        assert!(picked.iter().all(|i| online.contains(i)));
+    }
+
+    #[test]
+    fn select_single_online_client_fills_every_slot_or_fallbacks() {
+        let weights = vec![1.0, 1.0];
+        let mut rng = Rng::new(5);
+        // k = 1 == online.len(): sampled, always client 1.
+        assert_eq!(select_available(&mut rng, &weights, &[1], 1), vec![1]);
+        // k = 3 > online.len(): fallback, client 1 exactly once.
+        assert_eq!(select_available(&mut rng, &weights, &[1], 3), vec![1]);
+    }
+
+    // ---------- aggregate_weighted ----------
+
+    #[test]
+    fn weighted_aggregate_with_unit_weights_is_bitwise_plain() {
+        let a = vec![0.125f32, -3.5, 7.75, 0.1];
+        let b = vec![1.0f32, 2.0, -0.25, 0.3];
+        let c = vec![9.5f32, 0.0, 1.5, -0.7];
+        let locals: Vec<&[f32]> = vec![&a, &b, &c];
+        let plain = aggregate(&locals).unwrap();
+        let weighted = aggregate_weighted(&locals, &[1.0, 1.0, 1.0]).unwrap();
+        for (x, y) in plain.iter().zip(&weighted) {
+            assert_eq!(x.to_bits(), y.to_bits(), "unit weights must degenerate exactly");
+        }
+    }
+
+    #[test]
+    fn weighted_aggregate_downweights_stale_contributions() {
+        let fresh = vec![0.0f32];
+        let stale = vec![10.0f32];
+        let locals: Vec<&[f32]> = vec![&fresh, &stale];
+        // weight 1 vs 0.5: (0*1 + 10*0.5) / 1.5 = 10/3
+        let out = aggregate_weighted(&locals, &[1.0, 0.5]).unwrap();
+        assert!((out[0] - 10.0 / 1.5).abs() < 1e-6);
+        // Heavier staleness discount pulls the mean toward the fresh update.
+        let lighter = aggregate_weighted(&locals, &[1.0, 0.25]).unwrap();
+        assert!(lighter[0] < out[0]);
+    }
+
+    #[test]
+    fn weighted_aggregate_empty_and_zero_weight() {
+        assert!(aggregate_weighted(&[], &[]).is_none());
+        let p = vec![1.0f32];
+        let locals: Vec<&[f32]> = vec![&p];
+        assert!(aggregate_weighted(&locals, &[0.0]).is_none());
     }
 }

@@ -14,7 +14,9 @@ pub mod plan;
 pub use checkpoint::Checkpoint;
 
 pub use client::{run_client, ClientOutcome};
-pub use engine::{aggregate, select_available, CoresetMode, Engine, RunConfig};
+pub use engine::{
+    aggregate, aggregate_weighted, select_available, CoresetMode, Engine, RunConfig,
+};
 pub use plan::{LocalPlan, Strategy};
 
 /// All four strategies in paper presentation order.

@@ -39,6 +39,19 @@
 //! clients that go offline mid-round are dropped with their partial work
 //! surfaced per-round. `--trace <file>` on the CLI, `[scenario]` in
 //! config files, `trace` in [`fl::RunConfig`].
+//!
+//! # Async round overlap
+//!
+//! With [`fl::RunConfig::overlap`] set (`--overlap` on the CLI,
+//! `[fl] overlap/quorum/max_staleness/alpha` in config files) the engine
+//! stops barriering every round on its slowest client: it aggregates —
+//! and dispatches the next round — as soon as a quorum of the round's
+//! contributing clients has finished, and folds late arrivals into later
+//! rounds as delayed gradients weighted `1/(1+staleness)^alpha`
+//! (discarded past `max_staleness`; see [`exec::overlapped`]). The
+//! degenerate policy (`quorum = 1.0`, `max_staleness = 0`) reproduces
+//! the synchronous engine bit-for-bit, which anchors the differential
+//! property suite in `rust/tests/proptest_overlap.rs`.
 
 #![warn(missing_docs)]
 

@@ -43,11 +43,15 @@ fn cli() -> Cli {
     .opt("eval-cap", "512", "max test samples per evaluation (0 = all)")
     .opt("workers", "", "client-execution worker threads (0 = auto, 1 = sequential; default 1)")
     .opt("trace", "", "client-availability trace file (see examples/traces/; empty = always-on)")
+    .opt("quorum", "0.8", "overlap: fraction of contributing clients to await before aggregating")
+    .opt("max-staleness", "2", "overlap: discard delayed updates older than this many rounds")
+    .opt("alpha", "1", "overlap: staleness decay exponent for 1/(1+s)^alpha weighting")
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("out", "", "CSV output path (empty = stdout summary only)")
     .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
     .opt("load-ckpt", "", "resume from a model checkpoint")
     .opt("save-ckpt", "", "write the final global model to this path")
+    .flag("overlap", "async round overlap: quorum aggregation, staleness-weighted late updates")
     .flag("static-coreset", "§4.3 static input-space coresets (default: adaptive)")
     .flag("quiet", "suppress per-round progress lines")
 }
@@ -81,6 +85,27 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     // A CLI trace overrides any [scenario] section from `--config`.
     if !a.get("trace").is_empty() {
         cfg.run.trace = Some(fedcore::scenario::TraceSpec::from_file(a.get("trace"))?);
+    }
+    // `--overlap` — or any explicit policy flag, mirroring the [fl]
+    // section's semantics — enables the async pipeline (a config file may
+    // also have enabled it); explicit policy flags override either source.
+    let policy_given = explicit("quorum", "0.8")
+        || explicit("max-staleness", "2")
+        || explicit("alpha", "1");
+    if (a.has("overlap") || policy_given) && cfg.run.overlap.is_none() {
+        cfg.run.overlap = Some(fedcore::exec::OverlapConfig::default());
+    }
+    if let Some(ov) = &mut cfg.run.overlap {
+        if explicit("quorum", "0.8") {
+            ov.quorum = a.get_f64("quorum");
+        }
+        if explicit("max-staleness", "2") {
+            ov.max_staleness = a.get_usize("max-staleness");
+        }
+        if explicit("alpha", "1") {
+            ov.alpha = a.get_f64("alpha");
+        }
+        ov.validate()?;
     }
     cfg.run.verbose = !a.has("quiet");
     if a.get_usize("rounds") > 0 {
@@ -147,6 +172,14 @@ fn cmd_run(a: &Args) -> Result<()> {
             100.0 * trace.online_fraction(0.0),
         );
     }
+    if let Some(ov) = &cfg.run.overlap {
+        eprintln!(
+            "async overlap: quorum {:.0}% | max staleness {} rounds | alpha {:.2}",
+            100.0 * ov.quorum,
+            ov.max_staleness,
+            ov.alpha,
+        );
+    }
     let result = if !a.get("load-ckpt").is_empty() {
         let ck = fedcore::fl::Checkpoint::load(a.get("load-ckpt"))?;
         if ck.model != ds.model {
@@ -169,6 +202,13 @@ fn cmd_run(a: &Args) -> Result<()> {
         result.final_train_loss(),
         result.mean_normalized_round_time()
     );
+    if cfg.run.overlap.is_some() {
+        let (folded, discarded) = result.stale_totals();
+        println!(
+            "overlap: tail t/τ {:.2} (server advances at quorum) | stale folded {folded}, discarded {discarded}",
+            result.mean_normalized_tail_time(),
+        );
+    }
     let out = a.get("out");
     if !out.is_empty() {
         result.write_csv(out)?;

@@ -19,9 +19,15 @@ pub struct RoundRecord {
     pub test_loss: f64,
     /// Global test accuracy after aggregation (0..1).
     pub test_acc: f64,
-    /// Simulated round length (seconds; τ-normalized views live in SimClock).
+    /// Simulated server-advance round length (seconds; the quorum time in
+    /// overlapped runs, the straggler tail in synchronous ones —
+    /// τ-normalized views live in SimClock).
     pub sim_time: f64,
-    /// Cumulative simulated time at the end of this round.
+    /// When this round's slowest participating client finished (seconds
+    /// from the round start). Equals `sim_time` in synchronous runs;
+    /// `>= sim_time` when the server advanced on a quorum.
+    pub tail_time: f64,
+    /// Cumulative simulated server time at the end of this round.
     pub sim_elapsed: f64,
     /// Per-participating-client simulated times.
     pub client_times: Vec<f64>,
@@ -33,6 +39,16 @@ pub struct RoundRecord {
     pub churn_dropped: usize,
     /// Total simulated seconds of partial work discarded by churn drops.
     pub partial_time: f64,
+    /// Delayed (stale) updates from earlier rounds folded into this
+    /// round's aggregation (0 outside the overlapped pipeline).
+    pub stale_folded: usize,
+    /// Delayed updates discarded at this round because their staleness
+    /// exceeded the cap (accounted like churn drops; 0 outside the
+    /// overlapped pipeline).
+    pub stale_discarded: usize,
+    /// Sum of the staleness weights of the updates in `stale_folded`
+    /// (each in (0, 1]; 0.0 when nothing was folded).
+    pub stale_weight: f64,
     /// Clients that trained on a coreset this round (FedCore).
     pub coreset_clients: usize,
     /// Mean coreset compression ratio b/m over coreset clients (1.0 = none).
@@ -75,9 +91,33 @@ impl RunResult {
     }
 
     /// Mean simulated round time normalized by the deadline (Table 2 rows).
+    /// In overlapped runs this is the server-advance (quorum) rate.
     pub fn mean_normalized_round_time(&self) -> f64 {
         let ts: Vec<f64> = self.rounds.iter().map(|r| r.sim_time / self.deadline).collect();
         stats::mean(&ts)
+    }
+
+    /// Mean straggler-tail round time normalized by the deadline — how
+    /// long rounds' slowest clients ran, regardless of when the server
+    /// advanced. Equals [`RunResult::mean_normalized_round_time`] for
+    /// synchronous runs.
+    pub fn mean_normalized_tail_time(&self) -> f64 {
+        let ts: Vec<f64> = self.rounds.iter().map(|r| r.tail_time / self.deadline).collect();
+        stats::mean(&ts)
+    }
+
+    /// Total simulated server time of the run (the last round's
+    /// cumulative clock; 0.0 for an empty run).
+    pub fn total_sim_time(&self) -> f64 {
+        self.rounds.last().map(|r| r.sim_elapsed).unwrap_or(0.0)
+    }
+
+    /// Run-wide delayed-gradient accounting: `(folded, discarded)` totals
+    /// over all rounds (both 0 outside the overlapped pipeline).
+    pub fn stale_totals(&self) -> (usize, usize) {
+        self.rounds
+            .iter()
+            .fold((0, 0), |(f, d), r| (f + r.stale_folded, d + r.stale_discarded))
     }
 
     /// All per-client normalized round times (Fig. 4 / Fig. 7 histograms).
@@ -96,21 +136,25 @@ impl RunResult {
     /// Serialize the round trace as CSV (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,sim_time,sim_elapsed,dropped,churn_dropped,partial_time,coreset_clients,mean_compression\n",
+            "round,train_loss,test_loss,test_acc,sim_time,tail_time,sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,stale_discarded,stale_weight,coreset_clients,mean_compression\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{:.4}",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{:.6},{},{:.4}",
                 r.round,
                 r.train_loss,
                 r.test_loss,
                 r.test_acc,
                 r.sim_time,
+                r.tail_time,
                 r.sim_elapsed,
                 r.dropped,
                 r.churn_dropped,
                 r.partial_time,
+                r.stale_folded,
+                r.stale_discarded,
+                r.stale_weight,
                 r.coreset_clients,
                 r.mean_compression
             );
@@ -234,11 +278,15 @@ mod tests {
             test_loss: 1.0,
             test_acc: acc,
             sim_time: t,
+            tail_time: t,
             sim_elapsed: t * (round + 1) as f64,
             client_times: vec![t, t / 2.0],
             dropped: 0,
             churn_dropped: 0,
             partial_time: 0.0,
+            stale_folded: 0,
+            stale_discarded: 0,
+            stale_weight: 0.0,
             coreset_clients: 1,
             mean_compression: 0.5,
         }
@@ -276,8 +324,24 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("round,"));
-        assert_eq!(lines[1].split(',').count(), 11);
-        assert_eq!(lines[0].split(',').count(), 11);
+        assert_eq!(lines[1].split(',').count(), 15);
+        assert_eq!(lines[0].split(',').count(), 15);
+        assert!(lines[0].contains("tail_time"));
+        assert!(lines[0].contains("stale_folded"));
+    }
+
+    #[test]
+    fn stale_and_tail_views() {
+        let mut r = run();
+        // Round 1 advanced on a quorum: tail overhangs the server time,
+        // and a delayed update was folded while another was discarded.
+        r.rounds[1].tail_time = 5.0;
+        r.rounds[1].stale_folded = 1;
+        r.rounds[1].stale_weight = 0.5;
+        r.rounds[2].stale_discarded = 2;
+        assert_eq!(r.stale_totals(), (1, 2));
+        assert!(r.mean_normalized_tail_time() > r.mean_normalized_round_time());
+        assert_eq!(r.total_sim_time(), 6.0);
     }
 
     #[test]

@@ -358,4 +358,76 @@ mod tests {
         }
         assert_eq!(EdgePolicy::parse("nope"), None);
     }
+
+    // ---------- horizon-boundary edge cases (wrap vs clamp) ----------
+    // (previously only exercised indirectly via the runtime-gated
+    // scenario suites; these pin the exact boundary semantics)
+
+    #[test]
+    fn wrap_at_exact_horizon_reads_time_zero() {
+        let t = trace(vec![vec![(0.0, 3.0)]], 10.0, EdgePolicy::Wrap);
+        // t = horizon wraps to 0 (rem_euclid), which is online.
+        assert!(t.is_online(0, 10.0));
+        assert_eq!(t.remaining_online(0, 10.0), 3.0);
+        assert_eq!(t.remaining_online(0, 30.0), 3.0, "any whole number of cycles");
+        // An interval not touching 0: t = horizon is offline.
+        let mid = trace(vec![vec![(4.0, 7.0)]], 10.0, EdgePolicy::Wrap);
+        assert!(!mid.is_online(0, 10.0));
+        assert!(mid.is_online(0, 14.5));
+    }
+
+    #[test]
+    fn clamp_at_exact_horizon_uses_final_state() {
+        let on = trace(vec![vec![(4.0, 10.0)]], 10.0, EdgePolicy::Clamp);
+        assert!(on.is_online(0, 10.0), "final-online clamp persists at t = horizon");
+        assert_eq!(on.remaining_online(0, 10.0), f64::INFINITY);
+        let off = trace(vec![vec![(0.0, 6.0)]], 10.0, EdgePolicy::Clamp);
+        assert!(!off.is_online(0, 10.0), "final-offline clamp persists at t = horizon");
+        assert_eq!(off.remaining_online(0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn wrap_tail_without_zero_head_does_not_chain() {
+        // The online stretch touches the horizon but the cycle restarts
+        // offline, so the remainder must stop at the boundary.
+        let t = trace(vec![vec![(8.0, 10.0)]], 10.0, EdgePolicy::Wrap);
+        assert_eq!(t.remaining_online(0, 9.0), 1.0);
+        // And symmetric: a zero head with no horizon tail never chains.
+        let h = trace(vec![vec![(0.0, 3.0), (5.0, 7.0)]], 10.0, EdgePolicy::Wrap);
+        assert_eq!(h.remaining_online(0, 6.0), 1.0);
+    }
+
+    #[test]
+    fn interval_end_is_exclusive_everywhere() {
+        for policy in [EdgePolicy::Wrap, EdgePolicy::Clamp] {
+            let t = trace(vec![vec![(2.0, 5.0)]], 10.0, policy);
+            assert_eq!(t.remaining_online(0, 5.0), 0.0, "{policy:?}: end is exclusive");
+            assert!(t.remaining_online(0, 5.0 - 1e-9) > 0.0);
+        }
+    }
+
+    #[test]
+    fn wrap_far_future_matches_first_cycle() {
+        let t = trace(vec![vec![(2.0, 6.0)]], 10.0, EdgePolicy::Wrap);
+        let far = 1.0e9; // a whole number of cycles
+        for probe in [0.0, 2.0, 4.0, 6.0, 9.0] {
+            assert_eq!(
+                t.is_online(0, probe),
+                t.is_online(0, far + probe),
+                "cycle state diverged at offset {probe}"
+            );
+        }
+        assert_eq!(t.remaining_online(0, far + 3.0), t.remaining_online(0, 3.0));
+    }
+
+    #[test]
+    fn clamp_mid_trace_remainder_is_finite() {
+        // Inside an interval that does NOT touch the horizon, clamp
+        // behaves like a plain finite schedule.
+        let t = trace(vec![vec![(1.0, 4.0), (6.0, 8.0)]], 10.0, EdgePolicy::Clamp);
+        assert_eq!(t.remaining_online(0, 2.0), 2.0);
+        assert_eq!(t.remaining_online(0, 7.5), 0.5);
+        assert_eq!(t.remaining_online(0, 9.0), 0.0, "between last interval and horizon");
+        assert_eq!(t.remaining_online(0, 12.0), 0.0, "past a final-offline horizon");
+    }
 }

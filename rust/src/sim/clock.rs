@@ -5,21 +5,58 @@
 //! client* finishes (or when every deadline-aware client has stopped at τ),
 //! so the round length is the max over per-client times. FedAvg ignores τ
 //! and its rounds stretch to the straggler tail (paper Fig. 4's 11× tail).
+//!
+//! Overlapped (async) semantics: the server advances as soon as a quorum
+//! of the round's clients has reported, while the straggler tail keeps
+//! computing in the background. [`RoundTiming`] therefore carries **two**
+//! per-round times — [`RoundTiming::round_time`], the server-advance
+//! (quorum) time the clock accumulates, and [`RoundTiming::tail_time`],
+//! when the round's slowest client actually finished — so metrics never
+//! conflate the pipeline rate with the straggler tail. In synchronous
+//! mode the two coincide.
 
 /// Per-round simulated timing record.
 #[derive(Clone, Debug, Default)]
 pub struct RoundTiming {
     /// Per-participating-client simulated times (seconds).
     pub client_times: Vec<f64>,
-    /// Round length = max(client_times) (0.0 for an empty round).
+    /// Server-advance time: how long the server waits before aggregating
+    /// and starting the next round. Synchronous: `max(client_times)`
+    /// (plus any deadline wait imposed by the engine). Overlapped: the
+    /// quorum completion time.
     pub round_time: f64,
+    /// Straggler-tail time: when the round's slowest participating client
+    /// finished (`max(client_times)`), regardless of when the server
+    /// advanced. `round_time <= tail_time` in overlapped rounds;
+    /// `round_time >= tail_time` when the server waits out τ on a
+    /// mid-round dropout.
+    pub tail_time: f64,
 }
 
 impl RoundTiming {
-    /// Build a record whose round length is the max client time.
+    /// Synchronous round: server advance = straggler tail = max client
+    /// time (0.0 for an empty round).
     pub fn from_clients(client_times: Vec<f64>) -> RoundTiming {
-        let round_time = client_times.iter().copied().fold(0.0f64, f64::max);
-        RoundTiming { client_times, round_time }
+        let tail = client_times.iter().copied().fold(0.0f64, f64::max);
+        RoundTiming { client_times, round_time: tail, tail_time: tail }
+    }
+
+    /// Overlapped round: the server advances at `quorum_time` (the q-th
+    /// smallest client time, computed by the engine) while the tail runs
+    /// to `max(client_times)`. `quorum_time` must not exceed the tail.
+    pub fn with_quorum(client_times: Vec<f64>, quorum_time: f64) -> RoundTiming {
+        let tail = client_times.iter().copied().fold(0.0f64, f64::max);
+        debug_assert!(
+            quorum_time <= tail || client_times.is_empty(),
+            "quorum time {quorum_time} past the tail {tail}"
+        );
+        RoundTiming { client_times, round_time: quorum_time, tail_time: tail }
+    }
+
+    /// An idle round (nobody contributed): the server waits out the full
+    /// deadline before moving on.
+    pub fn idle(deadline: f64) -> RoundTiming {
+        RoundTiming { client_times: vec![], round_time: deadline, tail_time: deadline }
     }
 }
 
@@ -39,7 +76,9 @@ impl SimClock {
         SimClock { deadline, rounds: Vec::new(), elapsed: 0.0 }
     }
 
-    /// Record one round; returns its simulated length.
+    /// Record one round; the clock advances by the **server-advance**
+    /// time (`round_time`), never the straggler tail. Returns the
+    /// advance.
     pub fn push_round(&mut self, timing: RoundTiming) -> f64 {
         let t = timing.round_time;
         self.elapsed += t;
@@ -47,7 +86,7 @@ impl SimClock {
         t
     }
 
-    /// Total simulated seconds so far.
+    /// Total simulated seconds of server time so far.
     pub fn elapsed(&self) -> f64 {
         self.elapsed
     }
@@ -60,7 +99,21 @@ impl SimClock {
         self.elapsed
     }
 
-    /// Cumulative simulated time after each round (for Fig. 5's x-axis).
+    /// When the last in-flight client work actually finished: the max
+    /// over rounds of (round start + tail time). Equals
+    /// [`SimClock::elapsed`] in synchronous runs; in overlapped runs the
+    /// final rounds' tails may overhang the server clock.
+    pub fn completion_time(&self) -> f64 {
+        let mut start = 0.0f64;
+        let mut done = 0.0f64;
+        for r in &self.rounds {
+            done = done.max(start + r.tail_time);
+            start += r.round_time;
+        }
+        done.max(start)
+    }
+
+    /// Cumulative simulated server time after each round (Fig. 5's x-axis).
     pub fn cumulative(&self) -> Vec<f64> {
         let mut acc = 0.0;
         self.rounds
@@ -77,13 +130,20 @@ impl SimClock {
         self.rounds.len()
     }
 
-    /// Round lengths normalized by τ (paper Table 2: "normalized time of 1
-    /// is round deadline").
+    /// Server-advance (quorum) round lengths normalized by τ (paper
+    /// Table 2: "normalized time of 1 is round deadline").
     pub fn normalized_round_times(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.round_time / self.deadline).collect()
     }
 
-    /// Mean normalized round length — the Table 2 time metric.
+    /// Straggler-tail round lengths normalized by τ — how long each
+    /// round's slowest client ran, even past the server's advance.
+    pub fn normalized_tail_times(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.tail_time / self.deadline).collect()
+    }
+
+    /// Mean normalized server-advance round length — the Table 2 time
+    /// metric.
     pub fn mean_normalized_round(&self) -> f64 {
         let ts = self.normalized_round_times();
         crate::util::stats::mean(&ts)
@@ -107,12 +167,60 @@ mod tests {
     fn round_time_is_max_of_clients() {
         let t = RoundTiming::from_clients(vec![1.0, 3.0, 2.0]);
         assert_eq!(t.round_time, 3.0);
+        assert_eq!(t.tail_time, 3.0);
     }
 
     #[test]
     fn empty_round_is_zero() {
         let t = RoundTiming::from_clients(vec![]);
         assert_eq!(t.round_time, 0.0);
+        assert_eq!(t.tail_time, 0.0);
+    }
+
+    #[test]
+    fn quorum_timing_splits_advance_from_tail() {
+        let t = RoundTiming::with_quorum(vec![1.0, 3.0, 2.0], 2.0);
+        assert_eq!(t.round_time, 2.0, "server advances at the quorum");
+        assert_eq!(t.tail_time, 3.0, "the straggler tail is preserved");
+        // Full quorum degenerates to the synchronous record.
+        let full = RoundTiming::with_quorum(vec![1.0, 3.0, 2.0], 3.0);
+        assert_eq!(full.round_time, full.tail_time);
+    }
+
+    #[test]
+    fn idle_round_costs_the_deadline() {
+        let t = RoundTiming::idle(2.5);
+        assert_eq!(t.round_time, 2.5);
+        assert_eq!(t.tail_time, 2.5);
+        assert!(t.client_times.is_empty());
+    }
+
+    #[test]
+    fn clock_advances_on_quorum_not_tail() {
+        let mut c = SimClock::new(1.0);
+        c.push_round(RoundTiming::with_quorum(vec![1.0, 5.0], 1.0));
+        c.push_round(RoundTiming::with_quorum(vec![2.0, 3.0], 2.0));
+        // Server time: 1 + 2; tails (1+5=6 from round 0) overhang it.
+        assert_eq!(c.elapsed(), 3.0);
+        assert_eq!(c.completion_time(), 6.0);
+        assert_eq!(c.normalized_round_times(), vec![1.0, 2.0]);
+        assert_eq!(c.normalized_tail_times(), vec![5.0, 3.0]);
+    }
+
+    #[test]
+    fn completion_time_equals_elapsed_when_synchronous() {
+        let mut c = SimClock::new(1.0);
+        c.push_round(RoundTiming::from_clients(vec![2.0, 1.0]));
+        c.push_round(RoundTiming::from_clients(vec![4.0]));
+        assert_eq!(c.elapsed(), 6.0);
+        assert_eq!(c.completion_time(), 6.0);
+        // A server-side deadline wait (round_time > tail) is still counted.
+        let mut d = SimClock::new(1.0);
+        let mut t = RoundTiming::from_clients(vec![0.5]);
+        t.round_time = 2.0; // engine maxed with τ after a churn dropout
+        d.push_round(t);
+        assert_eq!(d.elapsed(), 2.0);
+        assert_eq!(d.completion_time(), 2.0);
     }
 
     #[test]

@@ -32,6 +32,7 @@ fn tiny_cfg(strategy: Strategy, rounds: usize) -> RunConfig {
         eval_cap: 256,
         workers: 1,
         trace: None,
+        overlap: None,
         verbose: false,
     }
 }

@@ -150,6 +150,7 @@ fn proptest_exec_sharded_matches_sequential() {
             eval_cap: 128,
             workers: 1,
             trace: None,
+            overlap: None,
             verbose: false,
         };
         let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
@@ -205,6 +206,7 @@ fn proptest_exec_engine_workers_setting_matches_explicit_executor() {
         eval_cap: 128,
         workers: 1,
         trace: None,
+        overlap: None,
         verbose: false,
     };
     // `workers: N` in the config must behave exactly like handing the

@@ -1,0 +1,354 @@
+//! Differential property suite for the async round-overlap pipeline
+//! (seeded runner in `util::prop`; offline build, no proptest crate —
+//! see docs/testing.md).
+//!
+//! Invariants:
+//! * Staleness weights are 1 on time, strictly decreasing in staleness
+//!   (for `alpha > 0`), and bounded in (0, 1].
+//! * The in-flight ledger folds or discards every late update exactly
+//!   once, never past the staleness cap, and drains in deterministic
+//!   `(origin_round, slot)` order.
+//! * `aggregate_weighted` with unit weights reproduces `aggregate`
+//!   **bit-for-bit** — the algebraic half of the degenerate-equivalence
+//!   contract.
+//! * Quorum counts are monotone and bounded (`quorum = 1.0` ⇒ everyone).
+//! * With a runtime (`make artifacts`): the degenerate overlap policy
+//!   (`quorum = 1.0`, `max_staleness = 0`) reproduces the synchronous
+//!   engine's `RunResult` bit-identically; overlapped runs replay
+//!   bit-for-bit from their seed; every overlapped round's server-advance
+//!   time is ≤ the synchronous round's; and overlapped sharded equals
+//!   overlapped sequential.
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark};
+use fedcore::exec::{overlapped::staleness_weight, DelayedUpdate, InFlight, OverlapConfig};
+use fedcore::fl::{aggregate, aggregate_weighted, CoresetMode, Engine, RunConfig, Strategy};
+use fedcore::sim::clock::RoundTiming;
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+// ---------- staleness weights (satellite c) ----------
+
+#[test]
+fn proptest_overlap_stale_weight_monotone_and_bounded() {
+    check("overlap-weight-monotone", env_seed(0x57A1E), env_cases(200), |rng, _| {
+        // alpha = 0 exactly (no discount) or bounded away from zero, so
+        // the strict-decrease check never fights f64 rounding.
+        let alpha = if rng.below(4) == 0 { 0.0 } else { rng.range_f64(0.1, 4.0) };
+        let cfg = OverlapConfig { quorum: 0.5, max_staleness: 8, alpha };
+        assert_eq!(cfg.weight(0), 1.0, "on-time updates must weigh exactly 1");
+        let mut prev = cfg.weight(0);
+        for s in 1..=12usize {
+            let w = cfg.weight(s);
+            assert!(w > 0.0 && w <= 1.0, "weight {w} out of (0, 1] at staleness {s}");
+            if alpha > 0.0 {
+                assert!(w < prev, "weight not strictly decreasing: {w} !< {prev} at s = {s}");
+            } else {
+                assert_eq!(w, 1.0, "alpha = 0 must not discount");
+            }
+            prev = w;
+        }
+        // The free function and the config method agree.
+        let s = rng.below(10);
+        assert_eq!(cfg.weight(s), staleness_weight(s, alpha));
+    });
+}
+
+// ---------- in-flight ledger: discard-cap enforcement (satellite c) ----------
+
+/// Drive the ledger exactly like the engine does — push late finishers
+/// after each round's aggregation instant, drain arrivals at the next
+/// instants, doom-filter, final drain — and check that every update folds
+/// or discards exactly once, that nothing folds past the staleness cap,
+/// and that arrivals drain in `(origin_round, slot)` order.
+#[test]
+fn proptest_overlap_in_flight_folds_or_discards_exactly_once() {
+    check("overlap-inflight-protocol", env_seed(0x0F117), env_cases(150), |rng, _| {
+        let rounds = 3 + rng.below(8);
+        let cap = rng.below(4);
+        let mut ledger = InFlight::new();
+        let (mut pushed, mut folded, mut discarded) = (0usize, 0usize, 0usize);
+        let mut now = 0.0f64;
+        for r in 0..rounds {
+            let agg_instant = now + rng.range_f64(0.5, 2.0);
+            for slot in 0..rng.below(4) {
+                // A late finisher arrives strictly after its own round's
+                // aggregation instant (the engine's on-time cut).
+                ledger.push(DelayedUpdate {
+                    origin_round: r,
+                    slot,
+                    client: slot,
+                    arrival: agg_instant + rng.range_f64(0.0, 5.0) + 1e-9,
+                    params: vec![r as f32],
+                });
+                pushed += 1;
+            }
+            let arrived = ledger.take_arrived(agg_instant);
+            let mut prev_key: Option<(usize, usize)> = None;
+            for u in &arrived {
+                let key = (u.origin_round, u.slot);
+                if let Some(p) = prev_key {
+                    assert!(p < key, "arrivals out of (origin, slot) order: {p:?} then {key:?}");
+                }
+                prev_key = Some(key);
+                assert!(u.origin_round < r, "an update arrived within its own round");
+                let staleness = r - u.origin_round;
+                // The doomed filter ran last round, so nothing that
+                // arrives can exceed the cap.
+                assert!(staleness <= cap, "staleness {staleness} folded past cap {cap}");
+                folded += 1;
+            }
+            discarded += ledger.discard_doomed(r, cap);
+            now = agg_instant;
+        }
+        discarded += ledger.discard_all();
+        assert_eq!(
+            pushed,
+            folded + discarded,
+            "every late update must fold or discard exactly once"
+        );
+        assert!(ledger.is_empty());
+    });
+}
+
+// ---------- weighted aggregation degenerates bitwise ----------
+
+#[test]
+fn proptest_overlap_unit_weight_aggregation_is_bitwise_plain() {
+    check("overlap-agg-degenerate", env_seed(0xA66D), env_cases(100), |rng, _| {
+        let k = 1 + rng.below(10);
+        let dim = 1 + rng.below(64);
+        let locals: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = locals.iter().map(|v| v.as_slice()).collect();
+        let plain = aggregate(&refs).unwrap();
+        let weighted = aggregate_weighted(&refs, &vec![1.0; k]).unwrap();
+        for (i, (x, y)) in plain.iter().zip(&weighted).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "unit-weight aggregation diverged from plain at dim {i}: {x} vs {y}"
+            );
+        }
+    });
+}
+
+// ---------- quorum arithmetic ----------
+
+#[test]
+fn proptest_overlap_quorum_count_monotone_and_bounded() {
+    check("overlap-quorum-count", env_seed(0x900A), env_cases(200), |rng, _| {
+        let n = rng.below(40);
+        let q1 = rng.range_f64(0.01, 1.0);
+        let q2 = rng.range_f64(0.01, 1.0);
+        let (lo, hi) = if q1 <= q2 { (q1, q2) } else { (q2, q1) };
+        let lo_cfg = OverlapConfig { quorum: lo, ..OverlapConfig::default() };
+        let hi_cfg = OverlapConfig { quorum: hi, ..OverlapConfig::default() };
+        let (a, b) = (lo_cfg.quorum_count(n), hi_cfg.quorum_count(n));
+        assert!(a <= b, "quorum count not monotone: {a} > {b} for {lo} <= {hi}");
+        if n > 0 {
+            assert!((1..=n).contains(&a), "count {a} out of [1, {n}]");
+            assert_eq!(
+                OverlapConfig::degenerate().quorum_count(n),
+                n,
+                "full quorum must wait for everyone"
+            );
+        } else {
+            assert_eq!(a, 0);
+        }
+    });
+}
+
+#[test]
+fn proptest_overlap_round_timing_quorum_below_tail() {
+    check("overlap-timing", env_seed(0x71A11), env_cases(100), |rng, _| {
+        let n = 1 + rng.below(12);
+        let times: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 20.0)).collect();
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = 1 + rng.below(n);
+        let t = RoundTiming::with_quorum(times.clone(), sorted[q - 1]);
+        assert_eq!(t.round_time, sorted[q - 1]);
+        assert_eq!(t.tail_time, *sorted.last().unwrap());
+        assert!(t.round_time <= t.tail_time, "quorum time past the straggler tail");
+        // Full quorum is the synchronous record.
+        let full = RoundTiming::with_quorum(times.clone(), *sorted.last().unwrap());
+        let sync = RoundTiming::from_clients(times);
+        assert_eq!(full.round_time.to_bits(), sync.round_time.to_bits());
+        assert_eq!(full.tail_time.to_bits(), sync.tail_time.to_bits());
+    });
+}
+
+// ---------- engine differentials (runtime-backed) ----------
+
+fn runtime_or_skip() -> Option<fedcore::runtime::Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+fn base_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [
+        Strategy::FedAvg,
+        Strategy::FedCore,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: 0.1 },
+    ];
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 2 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 3 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: [10.0, 30.0][rng.below(2)],
+        seed: rng.next_u64(),
+        coreset_method: Method::FasterPam,
+        coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+        eval_every: 1,
+        eval_cap: 128,
+        workers: 1,
+        trace: None,
+        overlap: None,
+        verbose: false,
+    }
+}
+
+fn random_overlap(rng: &mut Rng) -> OverlapConfig {
+    OverlapConfig {
+        quorum: rng.range_f64(0.25, 1.0),
+        max_staleness: rng.below(4),
+        alpha: rng.range_f64(0.0, 3.0),
+    }
+}
+
+fn assert_rounds_bitwise_equal(a: &fedcore::metrics::RunResult, b: &fedcore::metrics::RunResult) {
+    assert_eq!(a.final_params, b.final_params, "final params diverged");
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {r} train_loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "round {r} test_loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {r} test_acc");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "round {r} sim_time");
+        assert_eq!(x.tail_time.to_bits(), y.tail_time.to_bits(), "round {r} tail_time");
+        assert_eq!(x.client_times, y.client_times, "round {r} client_times");
+        assert_eq!(x.dropped, y.dropped, "round {r} dropped");
+        assert_eq!(x.stale_folded, y.stale_folded, "round {r} stale_folded");
+        assert_eq!(x.stale_discarded, y.stale_discarded, "round {r} stale_discarded");
+        assert_eq!(x.stale_weight.to_bits(), y.stale_weight.to_bits(), "round {r} stale_weight");
+        assert_eq!(x.coreset_clients, y.coreset_clients, "round {r} coreset_clients");
+    }
+    assert_eq!(a.to_csv(), b.to_csv(), "CSV serializations diverged");
+}
+
+/// Satellite (a): quorum = 1.0 + max_staleness = 0 must be the
+/// synchronous engine, bit-for-bit, for every strategy/config.
+#[test]
+fn proptest_overlap_degenerate_equals_sequential() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("overlap-degenerate-equivalence", env_seed(0xDE6E), env_cases(4), |rng, case| {
+        let sync_cfg = base_cfg(rng, case);
+        let mut over_cfg = sync_cfg.clone();
+        over_cfg.overlap = Some(OverlapConfig::degenerate());
+
+        let sync = Engine::new(&rt, &ds, sync_cfg).unwrap().run().unwrap();
+        let over = Engine::new(&rt, &ds, over_cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&sync, &over);
+        let (folded, discarded) = over.stale_totals();
+        assert_eq!((folded, discarded), (0, 0), "degenerate run used the stale path");
+    });
+}
+
+/// Satellite (b): an overlapped run replays bit-for-bit from its seed
+/// (honoring PROPTEST_SEED like every other suite).
+#[test]
+fn proptest_overlap_replay_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("overlap-seed-replay", env_seed(0x8EB1A), env_cases(4), |rng, case| {
+        let mut cfg = base_cfg(rng, case);
+        cfg.overlap = Some(random_overlap(rng));
+        let a = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        let b = Engine::new(&rt, &ds, cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&a, &b);
+    });
+}
+
+/// Satellite (d): the overlapped server never takes longer than the
+/// synchronous barrier — per round and in total. Traceless configs keep
+/// selection (and hence per-round client times) identical between the two
+/// modes, so the comparison is exact.
+#[test]
+fn proptest_overlap_round_times_never_exceed_synchronous() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("overlap-round-time-bound", env_seed(0x1E55), env_cases(4), |rng, case| {
+        let sync_cfg = base_cfg(rng, case);
+        let mut over_cfg = sync_cfg.clone();
+        over_cfg.overlap = Some(random_overlap(rng));
+
+        let sync = Engine::new(&rt, &ds, sync_cfg).unwrap().run().unwrap();
+        let over = Engine::new(&rt, &ds, over_cfg).unwrap().run().unwrap();
+        assert_eq!(sync.rounds.len(), over.rounds.len());
+        for (s, o) in sync.rounds.iter().zip(&over.rounds) {
+            let r = s.round;
+            // Same cohort ⇒ identical straggler tails; the server advance
+            // is capped by the synchronous barrier.
+            assert_eq!(s.client_times, o.client_times, "round {r} cohorts diverged");
+            assert_eq!(s.tail_time.to_bits(), o.tail_time.to_bits(), "round {r} tail");
+            assert!(
+                o.sim_time <= s.sim_time,
+                "round {r}: overlapped advance {} exceeds synchronous {}",
+                o.sim_time,
+                s.sim_time
+            );
+        }
+        assert!(
+            over.total_sim_time() <= sync.total_sim_time(),
+            "overlapped total {} exceeds synchronous {}",
+            over.total_sim_time(),
+            sync.total_sim_time()
+        );
+    });
+}
+
+/// The executor determinism contract survives overlap: a sharded pool
+/// under the overlapped pipeline matches the sequential overlapped run
+/// bit-for-bit.
+#[test]
+fn proptest_overlap_sharded_matches_sequential() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("overlap-exec-equivalence", env_seed(0x5A4D), env_cases(4), |rng, case| {
+        let mut cfg = base_cfg(rng, case);
+        cfg.overlap = Some(random_overlap(rng));
+        let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        cfg.workers = 2 + rng.below(3);
+        let par = Engine::new(&rt, &ds, cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&seq, &par);
+    });
+}

@@ -214,6 +214,7 @@ fn churn_cfg(rng: &mut Rng, case: usize) -> RunConfig {
             24.0,
             rng.next_u64(),
         )),
+        overlap: None,
         verbose: false,
     }
 }

@@ -89,6 +89,7 @@ fn main() -> anyhow::Result<()> {
             trace: None,
             overlap: None,
             verbose: false,
+            ..RunConfig::default()
         };
         let engine = Engine::new(&rt, &ds, cfg)?;
         let result = engine.run()?;
@@ -119,6 +120,7 @@ fn main() -> anyhow::Result<()> {
             trace: None,
             overlap: None,
             verbose: false,
+            ..RunConfig::default()
         };
         let engine = Engine::new(&rt, &ds, cfg)?;
         let r = engine.run()?;

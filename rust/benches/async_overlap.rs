@@ -30,6 +30,10 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
+/// Root seed of every run in this bench — also stamped into the
+/// provenance object so the JSON's workload identity cannot drift.
+const SEED: u64 = 7;
+
 /// The straggler-heavy availability scenario from the scenario bench.
 fn heavy_tail() -> TraceSpec {
     TraceSpec::from_model(
@@ -57,14 +61,14 @@ fn main() {
     // the synchronous engine, bit-for-bit, before any comparison is
     // worth reporting.
     {
-        let sync = expt::run_with(&rt, bench, Strategy::FedCore, 30.0, 7, None, None)
+        let sync = expt::run_with(&rt, bench, Strategy::FedCore, 30.0, SEED, None, None)
             .expect("sync run");
         let degenerate = expt::run_with(
             &rt,
             bench,
             Strategy::FedCore,
             30.0,
-            7,
+            SEED,
             Some(OverlapConfig::degenerate()),
             None,
         )
@@ -95,7 +99,7 @@ fn main() {
     for (scenario, trace) in &scenarios {
         for strategy in strategies {
             let sync =
-                expt::run_with(&rt, bench, strategy, 30.0, 7, None, trace.clone())
+                expt::run_with(&rt, bench, strategy, 30.0, SEED, None, trace.clone())
                     .expect("sync run");
             let t0 = Instant::now();
             let over = expt::run_with(
@@ -103,7 +107,7 @@ fn main() {
                 bench,
                 strategy,
                 30.0,
-                7,
+                SEED,
                 Some(overlap),
                 trace.clone(),
             )
@@ -167,6 +171,14 @@ fn main() {
         ("quorum", num(overlap.quorum)),
         ("max_staleness", num(overlap.max_staleness as f64)),
         ("alpha", num(overlap.alpha)),
+        (
+            "provenance",
+            fedcore::util::bench::provenance(
+                SEED,
+                expt::bench_rounds(bench),
+                expt::bench_scale(bench),
+            ),
+        ),
         ("results", Json::Arr(rows)),
     ]);
     let mut text = String::new();

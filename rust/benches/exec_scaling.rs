@@ -51,6 +51,7 @@ fn main() {
         trace: None,
         overlap: None,
         verbose: false,
+        ..RunConfig::default()
     };
 
     println!(
@@ -118,6 +119,7 @@ fn main() {
         ("rounds", num(rounds as f64)),
         ("clients_per_round", num(base.clients_per_round as f64)),
         ("epochs", num(base.epochs as f64)),
+        ("provenance", fedcore::util::bench::provenance(base.seed, rounds, scale)),
         ("results", Json::Arr(rows)),
     ]);
     let mut text = String::new();

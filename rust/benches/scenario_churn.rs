@@ -25,6 +25,10 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
+/// Root seed of every run in this bench — also stamped into the
+/// provenance object so the JSON's workload identity cannot drift.
+const SEED: u64 = 7;
+
 fn scenarios() -> Vec<(&'static str, TraceSpec)> {
     vec![
         ("always_on", TraceSpec::always_on()),
@@ -65,10 +69,10 @@ fn main() {
 
     let mut rows = Vec::new();
     for (name, spec) in scenarios() {
-        let first = expt::run_scenario(&rt, bench, strategy, 30.0, 7, spec.clone())
+        let first = expt::run_scenario(&rt, bench, strategy, 30.0, SEED, spec.clone())
             .expect("scenario run");
         let t0 = Instant::now();
-        let second = expt::run_scenario(&rt, bench, strategy, 30.0, 7, spec)
+        let second = expt::run_scenario(&rt, bench, strategy, 30.0, SEED, spec)
             .expect("scenario replay");
         let secs = t0.elapsed().as_secs_f64();
 
@@ -119,6 +123,14 @@ fn main() {
         ("bench", Json::Str("scenario_churn".into())),
         ("benchmark", Json::Str(bench.label())),
         ("strategy", Json::Str(strategy.label().into())),
+        (
+            "provenance",
+            fedcore::util::bench::provenance(
+                SEED,
+                expt::bench_rounds(bench),
+                expt::bench_scale(bench),
+            ),
+        ),
         ("results", Json::Arr(rows)),
     ]);
     let mut text = String::new();

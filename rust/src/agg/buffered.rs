@@ -1,0 +1,204 @@
+//! FedBuff-style buffered aggregation with server momentum.
+//!
+//! Instead of applying every round's mean immediately, the server
+//! accumulates (staleness-weighted) updates in a buffer and applies them
+//! as one weighted mean once the buffer holds at least `k` of them —
+//! the buffered-asynchronous design of FedBuff (Nguyen et al., 2022),
+//! which the delayed-gradient line of work (arXiv:2102.06329) motivates
+//! as the server-side complement to staleness weighting. An optional
+//! server momentum β smooths consecutive applications:
+//!
+//! ```text
+//! w̄    = Σ λᵢ wᵢ / Σ λᵢ          (the buffered weighted mean)
+//! v    ← β·v + (w̄ − w)           (velocity, in f64)
+//! w    ← w + v
+//! ```
+//!
+//! Degeneracy: with `β = 0` the velocity is exactly `w̄ − w`, so the
+//! update is applied as `w̄` **directly** (no `w + (w̄ − w)` rounding
+//! detour), and with `k = 0` the buffer flushes every round — together
+//! reproducing [`Mean`](super::Mean) bit-for-bit
+//! (`rust/tests/proptest_agg.rs`).
+
+use super::{aggregate_weighted, AggStats, Aggregator};
+
+/// The FedBuff-style server buffer (see the module docs).
+#[derive(Clone, Debug)]
+pub struct Buffered {
+    /// Buffer threshold: apply once at least this many updates are held
+    /// (`0` = flush every round that contributed anything).
+    k: usize,
+    /// Server momentum β in `[0, 1)`.
+    momentum: f64,
+    /// Buffered updates (owned copies) with their fold weights, in
+    /// arrival order — the engine's deterministic fold order, so a
+    /// flush aggregates exactly like the unbuffered path would have.
+    buf_params: Vec<Vec<f32>>,
+    buf_weights: Vec<f64>,
+    /// Momentum velocity, in f64 (empty until the first momentum apply).
+    velocity: Vec<f64>,
+}
+
+impl Buffered {
+    /// A buffer that applies every `k` updates with momentum `momentum`.
+    pub fn new(k: usize, momentum: f64) -> Buffered {
+        Buffered {
+            k,
+            momentum,
+            buf_params: Vec::new(),
+            buf_weights: Vec::new(),
+            velocity: Vec::new(),
+        }
+    }
+
+    /// Updates currently held in the buffer.
+    pub fn buffered(&self) -> usize {
+        self.buf_params.len()
+    }
+
+    /// Drain the buffer and apply its weighted mean to `current` (with
+    /// momentum when configured). `None` when the buffer was empty or
+    /// carried no positive weight.
+    fn apply(&mut self, current: &[f32]) -> Option<Vec<f32>> {
+        let refs: Vec<&[f32]> = self.buf_params.iter().map(|v| v.as_slice()).collect();
+        let mean = aggregate_weighted(&refs, &self.buf_weights);
+        self.buf_params.clear();
+        self.buf_weights.clear();
+        let mean = mean?;
+        if self.momentum == 0.0 {
+            // β = 0: the velocity is exactly (w̄ − w), so w + v = w̄ —
+            // apply the mean directly to keep the degenerate policy
+            // bit-identical to `Mean` (no f64 add/subtract round trip).
+            self.velocity.clear();
+            return Some(mean);
+        }
+        if self.velocity.len() != current.len() {
+            self.velocity = vec![0.0; current.len()];
+        }
+        let mut out = Vec::with_capacity(current.len());
+        for ((&w, &m), v) in current.iter().zip(&mean).zip(self.velocity.iter_mut()) {
+            *v = self.momentum * *v + (m as f64 - w as f64);
+            out.push((w as f64 + *v) as f32);
+        }
+        Some(out)
+    }
+}
+
+impl Aggregator for Buffered {
+    fn label(&self) -> &'static str {
+        "buffered"
+    }
+
+    fn aggregate_round(
+        &mut self,
+        current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        assert_eq!(locals.len(), weights.len(), "one weight per contribution");
+        for (l, &w) in locals.iter().zip(weights) {
+            self.buf_params.push(l.to_vec());
+            self.buf_weights.push(w);
+        }
+        let threshold = self.k.max(1);
+        if self.buf_params.is_empty() || self.buf_params.len() < threshold {
+            return (None, AggStats { buffered: self.buf_params.len(), ..AggStats::default() });
+        }
+        (self.apply(current), AggStats::default())
+    }
+
+    fn flush(&mut self, current: &[f32]) -> Option<Vec<f32>> {
+        if self.buf_params.is_empty() {
+            return None;
+        }
+        self.apply(current)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::Mean;
+
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|x| x.as_slice()).collect()
+    }
+
+    #[test]
+    fn degenerate_buffer_is_bitwise_mean() {
+        let locals = vec![vec![0.5f32, -2.25, 3.0], vec![1.75f32, 0.1, -0.6]];
+        let weights = [1.0, 0.5];
+        let current = [9.0f32, 9.0, 9.0];
+        let (want, _) = Mean.aggregate_round(&current, &refs(&locals), &weights);
+        let mut buf = Buffered::new(0, 0.0);
+        let (got, stats) = buf.aggregate_round(&current, &refs(&locals), &weights);
+        for (x, y) in want.unwrap().iter().zip(&got.unwrap()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "k=0, β=0 must be Mean bit-for-bit");
+        }
+        assert_eq!(stats, AggStats::default());
+        assert_eq!(buf.buffered(), 0, "degenerate buffer must drain every round");
+    }
+
+    #[test]
+    fn buffer_holds_until_threshold_then_flushes() {
+        let mut buf = Buffered::new(3, 0.0);
+        let current = [0.0f32];
+        let a = vec![vec![1.0f32]];
+        let (out, stats) = buf.aggregate_round(&current, &refs(&a), &[1.0]);
+        assert!(out.is_none());
+        assert_eq!(stats.buffered, 1);
+        let b = vec![vec![3.0f32]];
+        let (out, stats) = buf.aggregate_round(&current, &refs(&b), &[1.0]);
+        assert!(out.is_none());
+        assert_eq!(stats.buffered, 2);
+        // Third update reaches the threshold: the whole buffer applies.
+        let c = vec![vec![5.0f32]];
+        let (out, stats) = buf.aggregate_round(&current, &refs(&c), &[1.0]);
+        assert_eq!(out.unwrap(), vec![3.0f32]); // (1 + 3 + 5) / 3
+        assert_eq!(stats.buffered, 0);
+        assert_eq!(buf.buffered(), 0);
+    }
+
+    #[test]
+    fn flush_drains_a_partial_buffer() {
+        let mut buf = Buffered::new(10, 0.0);
+        let current = [0.0f32];
+        let a = vec![vec![2.0f32], vec![4.0f32]];
+        let (out, _) = buf.aggregate_round(&current, &refs(&a), &[1.0, 1.0]);
+        assert!(out.is_none());
+        assert_eq!(buf.flush(&current).unwrap(), vec![3.0f32]);
+        assert!(buf.flush(&current).is_none(), "flush of an empty buffer is a no-op");
+    }
+
+    #[test]
+    fn momentum_carries_velocity_across_applies() {
+        let mut buf = Buffered::new(0, 0.5);
+        let current = [0.0f32];
+        let up = vec![vec![1.0f32]];
+        // First apply: v = 0.5·0 + (1 − 0) = 1 → w = 1.
+        let (out, _) = buf.aggregate_round(&current, &refs(&up), &[1.0]);
+        let w1 = out.unwrap();
+        assert_eq!(w1, vec![1.0f32]);
+        // Second apply from w = 1 with mean 1: v = 0.5·1 + 0 = 0.5 → w = 1.5
+        // (momentum overshoots past the stationary mean).
+        let (out, _) = buf.aggregate_round(&w1, &refs(&up), &[1.0]);
+        assert_eq!(out.unwrap(), vec![1.5f32]);
+    }
+
+    #[test]
+    fn empty_round_never_applies() {
+        let mut buf = Buffered::new(0, 0.0);
+        let (out, stats) = buf.aggregate_round(&[1.0f32], &[], &[]);
+        assert!(out.is_none());
+        assert_eq!(stats, AggStats::default());
+    }
+
+    #[test]
+    fn zero_weight_buffer_keeps_the_model() {
+        let mut buf = Buffered::new(0, 0.0);
+        let up = vec![vec![5.0f32]];
+        let (out, _) = buf.aggregate_round(&[1.0f32], &refs(&up), &[0.0]);
+        assert!(out.is_none(), "non-positive total weight must not move the model");
+        assert_eq!(buf.buffered(), 0, "the dud buffer still drains");
+    }
+}

@@ -1,0 +1,130 @@
+//! The reference aggregation semantics: the (weighted) FedAvg mean.
+//!
+//! [`aggregate`] and [`aggregate_weighted`] are the free functions the
+//! engine has always used (they moved here from `fl/engine.rs`; `fl`
+//! re-exports them unchanged). [`Mean`] lifts them behind the
+//! [`Aggregator`] trait — bit-identical to calling the free function,
+//! which anchors every other policy's degenerate-equivalence gate.
+
+use super::{AggStats, Aggregator};
+
+/// FedAvg aggregation (Algorithm 1 line 15): wᵣ₊₁ = (1/K) Σ wᵢ, computed
+/// in f64 for order-independence up to f32 rounding. Returns None when no
+/// client contributed (all dropped — the server keeps the old model).
+pub fn aggregate(locals: &[&[f32]]) -> Option<Vec<f32>> {
+    let first = locals.first()?;
+    let mut acc = vec![0.0f64; first.len()];
+    for l in locals {
+        assert_eq!(l.len(), acc.len(), "parameter dimension mismatch");
+        for (a, &p) in acc.iter_mut().zip(*l) {
+            *a += p as f64;
+        }
+    }
+    let k = locals.len() as f64;
+    Some(acc.into_iter().map(|a| (a / k) as f32).collect())
+}
+
+/// Weighted FedAvg aggregation for the overlapped pipeline:
+/// wᵣ₊₁ = Σ λᵢ wᵢ / Σ λᵢ, computed in f64 in caller order (on-time
+/// cohort in selection order, then delayed arrivals by
+/// `(origin_round, slot)`). With unit weights this reproduces
+/// [`aggregate`] **bit-for-bit** — `1.0 * x` is exact and the weight sum
+/// accumulates to exactly `k` — which is what lets the degenerate
+/// overlapped configuration match the synchronous engine
+/// (`rust/tests/proptest_overlap.rs`). Returns None when nothing
+/// contributed or the total weight is not positive (the server keeps the
+/// old model).
+pub fn aggregate_weighted(locals: &[&[f32]], weights: &[f64]) -> Option<Vec<f32>> {
+    assert_eq!(locals.len(), weights.len(), "one weight per contribution");
+    let first = locals.first()?;
+    let mut acc = vec![0.0f64; first.len()];
+    let mut total = 0.0f64;
+    for (l, &w) in locals.iter().zip(weights) {
+        assert_eq!(l.len(), acc.len(), "parameter dimension mismatch");
+        total += w;
+        for (a, &p) in acc.iter_mut().zip(*l) {
+            *a += w * (p as f64);
+        }
+    }
+    if total <= 0.0 {
+        return None;
+    }
+    Some(acc.into_iter().map(|a| (a / total) as f32).collect())
+}
+
+/// The weighted mean behind the [`Aggregator`] trait: exactly
+/// [`aggregate_weighted`], no state, no accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Mean;
+
+impl Aggregator for Mean {
+    fn label(&self) -> &'static str {
+        "mean"
+    }
+
+    fn aggregate_round(
+        &mut self,
+        _current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        (aggregate_weighted(locals, weights), AggStats::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_aggregate_with_unit_weights_is_bitwise_plain() {
+        let a = vec![0.125f32, -3.5, 7.75, 0.1];
+        let b = vec![1.0f32, 2.0, -0.25, 0.3];
+        let c = vec![9.5f32, 0.0, 1.5, -0.7];
+        let locals: Vec<&[f32]> = vec![&a, &b, &c];
+        let plain = aggregate(&locals).unwrap();
+        let weighted = aggregate_weighted(&locals, &[1.0, 1.0, 1.0]).unwrap();
+        for (x, y) in plain.iter().zip(&weighted) {
+            assert_eq!(x.to_bits(), y.to_bits(), "unit weights must degenerate exactly");
+        }
+    }
+
+    #[test]
+    fn weighted_aggregate_downweights_stale_contributions() {
+        let fresh = vec![0.0f32];
+        let stale = vec![10.0f32];
+        let locals: Vec<&[f32]> = vec![&fresh, &stale];
+        // weight 1 vs 0.5: (0*1 + 10*0.5) / 1.5 = 10/3
+        let out = aggregate_weighted(&locals, &[1.0, 0.5]).unwrap();
+        assert!((out[0] - 10.0 / 1.5).abs() < 1e-6);
+        // Heavier staleness discount pulls the mean toward the fresh update.
+        let lighter = aggregate_weighted(&locals, &[1.0, 0.25]).unwrap();
+        assert!(lighter[0] < out[0]);
+    }
+
+    #[test]
+    fn weighted_aggregate_empty_and_zero_weight() {
+        assert!(aggregate_weighted(&[], &[]).is_none());
+        let p = vec![1.0f32];
+        let locals: Vec<&[f32]> = vec![&p];
+        assert!(aggregate_weighted(&locals, &[0.0]).is_none());
+    }
+
+    #[test]
+    fn mean_trait_is_bitwise_free_function() {
+        let a = vec![0.3f32, -1.5, 2.25];
+        let b = vec![4.125f32, 0.5, -0.75];
+        let locals: Vec<&[f32]> = vec![&a, &b];
+        let weights = [1.0, 0.5];
+        let (out, stats) = Mean.aggregate_round(&[0.0; 3], &locals, &weights);
+        let free = aggregate_weighted(&locals, &weights).unwrap();
+        let out = out.unwrap();
+        for (x, y) in out.iter().zip(&free) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(stats, AggStats::default());
+        // Empty round: the server keeps its model.
+        let (none, _) = Mean.aggregate_round(&[0.0; 3], &[], &[]);
+        assert!(none.is_none());
+    }
+}

@@ -1,0 +1,240 @@
+//! Pluggable server aggregation: the seam between "the round's weighted
+//! contributions" and "the next global model".
+//!
+//! The engine builds one ordered list per round — the on-time cohort in
+//! selection order at unit weight, then arrived delayed gradients by
+//! `(origin round, slot)` at their staleness weights — and folds it
+//! through an [`Aggregator`]:
+//!
+//! * [`Mean`] — the classic weighted FedAvg mean ([`aggregate`] /
+//!   [`aggregate_weighted`] live here now; `fl` re-exports them), the
+//!   reference semantics every other policy degenerates to.
+//! * [`Buffered`] — FedBuff-style server buffering: accumulate K
+//!   (staleness-weighted) updates across rounds, apply them as one
+//!   weighted mean with server momentum β. The degenerate policy
+//!   (`k = 0` ⇒ flush every round, `β = 0`) reproduces [`Mean`]
+//!   **bit-for-bit**.
+//! * [`TrimmedMean`] / [`CoordinateMedian`] — per-coordinate robust
+//!   aggregators that survive corrupted or adversarial client updates
+//!   (sign flips, noise injection — see [`crate::scenario::corruption`]);
+//!   [`NormClip`] wraps any of the above with update-norm clipping.
+//! * [`AdaptiveQuorum`] — a controller that tightens the overlapped
+//!   pipeline's quorum when the stale-discard rate rises and relaxes it
+//!   back when the pipeline runs clean.
+//!
+//! Determinism contract: aggregators consume **no RNG** and hold only
+//! state that is a pure function of the contribution sequence (the
+//! buffer, the momentum velocity, the adaptive quorum), so every policy
+//! replays bit-for-bit from the run's seed. Robust paths break ties by
+//! `f32::total_cmp` then contribution index — never by pointer or hash
+//! order. The differential gates live in `rust/tests/proptest_agg.rs`.
+
+pub mod buffered;
+pub mod mean;
+pub mod quorum;
+pub mod robust;
+
+pub use buffered::Buffered;
+pub use mean::{aggregate, aggregate_weighted, Mean};
+pub use quorum::AdaptiveQuorum;
+pub use robust::{CoordinateMedian, NormClip, TrimmedMean};
+
+use anyhow::{anyhow, Result};
+
+/// Per-round accounting from the aggregation seam, surfaced in
+/// [`crate::metrics::RoundRecord`] (`agg_rejected` / `agg_clipped`) and
+/// the CSV.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AggStats {
+    /// Contribution-slots excluded from the aggregate per coordinate:
+    /// `2·g` for [`TrimmedMean`] (g trimmed from each tail), `n − 1`
+    /// (odd n) or `n − 2` (even n) for [`CoordinateMedian`], 0 for the
+    /// mean/buffered paths.
+    pub rejected: usize,
+    /// Contributions whose update norm [`NormClip`] scaled down this
+    /// round (0 without a clipping wrapper).
+    pub clipped: usize,
+    /// Updates held in the server buffer after this round ([`Buffered`]
+    /// only; 0 once the buffer flushed).
+    pub buffered: usize,
+}
+
+/// One round's aggregation: fold weighted contributions (in the caller's
+/// deterministic order) into the next global model.
+///
+/// Implementations must be RNG-free and order-deterministic: the same
+/// `(current, locals, weights)` sequence across rounds must produce the
+/// bit-identical outputs, regardless of worker count or wall clock.
+pub trait Aggregator {
+    /// Short policy label for logs and bench output.
+    fn label(&self) -> &'static str;
+
+    /// Fold one round's contributions into new global parameters.
+    /// `locals[i]` carries weight `weights[i]`; both are in the engine's
+    /// deterministic fold order. Returns `None` when nothing can be
+    /// applied this round (the server keeps `current`), plus the round's
+    /// accounting.
+    fn aggregate_round(
+        &mut self,
+        current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats);
+
+    /// End-of-run flush for policies that hold cross-round state
+    /// ([`Buffered`]); the default has nothing to flush.
+    fn flush(&mut self, _current: &[f32]) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+impl<A: Aggregator + ?Sized> Aggregator for Box<A> {
+    fn label(&self) -> &'static str {
+        (**self).label()
+    }
+
+    fn aggregate_round(
+        &mut self,
+        current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        (**self).aggregate_round(current, locals, weights)
+    }
+
+    fn flush(&mut self, current: &[f32]) -> Option<Vec<f32>> {
+        (**self).flush(current)
+    }
+}
+
+/// Declarative aggregation policy: what [`crate::fl::RunConfig`] carries
+/// and the CLI / `[fl]` config keys select. Built into a concrete
+/// [`Aggregator`] once per run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum AggPolicy {
+    /// Weighted FedAvg mean — the reference semantics (default).
+    #[default]
+    Mean,
+    /// FedBuff-style server buffer with momentum (see [`Buffered`]).
+    Buffered {
+        /// Updates to accumulate before applying (`0` = flush every
+        /// round; the degenerate "K = cohort" setting).
+        k: usize,
+        /// Server momentum β in `[0, 1)`; `0` applies the buffered mean
+        /// directly (bit-identical to [`Mean`] when `k = 0`).
+        momentum: f64,
+    },
+    /// Per-coordinate trimmed mean (see [`TrimmedMean`]).
+    TrimmedMean {
+        /// Fraction trimmed from **each** tail per coordinate, in
+        /// `[0, 0.5)`; `0` trims nothing (bit-identical to [`Mean`]).
+        trim_frac: f64,
+    },
+    /// Per-coordinate median (see [`CoordinateMedian`]).
+    CoordinateMedian,
+}
+
+impl AggPolicy {
+    /// Parse a policy name (knobs keep their defaults):
+    /// `mean` | `buffered` | `trimmed_mean` (or `trimmed`) | `median`.
+    pub fn parse(s: &str) -> Option<AggPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "mean" | "fedavg" => Some(AggPolicy::Mean),
+            "buffered" | "fedbuff" => Some(AggPolicy::Buffered { k: 0, momentum: 0.0 }),
+            "trimmed_mean" | "trimmed" => Some(AggPolicy::TrimmedMean { trim_frac: 0.1 }),
+            "median" | "coordinate_median" => Some(AggPolicy::CoordinateMedian),
+            _ => None,
+        }
+    }
+
+    /// Canonical policy name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggPolicy::Mean => "mean",
+            AggPolicy::Buffered { .. } => "buffered",
+            AggPolicy::TrimmedMean { .. } => "trimmed_mean",
+            AggPolicy::CoordinateMedian => "median",
+        }
+    }
+
+    /// Validate the policy knobs (momentum in `[0, 1)`, trim fraction in
+    /// `[0, 0.5)`).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            AggPolicy::Mean | AggPolicy::CoordinateMedian => Ok(()),
+            AggPolicy::Buffered { momentum, .. } => {
+                if !(*momentum >= 0.0 && *momentum < 1.0) {
+                    return Err(anyhow!(
+                        "server momentum must be in [0, 1), got {momentum}"
+                    ));
+                }
+                Ok(())
+            }
+            AggPolicy::TrimmedMean { trim_frac } => {
+                if !(*trim_frac >= 0.0 && *trim_frac < 0.5) {
+                    return Err(anyhow!(
+                        "trim fraction must be in [0, 0.5), got {trim_frac}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Build the concrete aggregator, optionally wrapped in a
+    /// [`NormClip`] layer (`clip_norm = Some(c)` clips update L2 norms
+    /// to `c` before the base policy sees them).
+    pub fn build(&self, clip_norm: Option<f64>) -> Box<dyn Aggregator> {
+        let base: Box<dyn Aggregator> = match *self {
+            AggPolicy::Mean => Box::new(Mean),
+            AggPolicy::Buffered { k, momentum } => Box::new(Buffered::new(k, momentum)),
+            AggPolicy::TrimmedMean { trim_frac } => Box::new(TrimmedMean::new(trim_frac)),
+            AggPolicy::CoordinateMedian => Box::new(CoordinateMedian),
+        };
+        match clip_norm {
+            Some(c) => Box::new(NormClip::new(c, base)),
+            None => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_and_labels() {
+        assert_eq!(AggPolicy::parse("mean"), Some(AggPolicy::Mean));
+        assert_eq!(
+            AggPolicy::parse("BUFFERED"),
+            Some(AggPolicy::Buffered { k: 0, momentum: 0.0 })
+        );
+        assert_eq!(
+            AggPolicy::parse("trimmed"),
+            Some(AggPolicy::TrimmedMean { trim_frac: 0.1 })
+        );
+        assert_eq!(AggPolicy::parse("median"), Some(AggPolicy::CoordinateMedian));
+        assert_eq!(AggPolicy::parse("nope"), None);
+        assert_eq!(AggPolicy::default().label(), "mean");
+    }
+
+    #[test]
+    fn policy_validation() {
+        assert!(AggPolicy::Mean.validate().is_ok());
+        assert!(AggPolicy::Buffered { k: 4, momentum: 0.9 }.validate().is_ok());
+        assert!(AggPolicy::Buffered { k: 0, momentum: 1.0 }.validate().is_err());
+        assert!(AggPolicy::Buffered { k: 0, momentum: -0.1 }.validate().is_err());
+        assert!(AggPolicy::Buffered { k: 0, momentum: f64::NAN }.validate().is_err());
+        assert!(AggPolicy::TrimmedMean { trim_frac: 0.49 }.validate().is_ok());
+        assert!(AggPolicy::TrimmedMean { trim_frac: 0.5 }.validate().is_err());
+        assert!(AggPolicy::TrimmedMean { trim_frac: -0.1 }.validate().is_err());
+    }
+
+    #[test]
+    fn build_composes_clip_wrapper() {
+        let plain = AggPolicy::Mean.build(None);
+        assert_eq!(plain.label(), "mean");
+        let clipped = AggPolicy::Mean.build(Some(1.0));
+        assert_eq!(clipped.label(), "norm_clip");
+    }
+}

@@ -1,0 +1,119 @@
+//! Adaptive quorum control for the overlapped pipeline.
+//!
+//! The async round overlap ([`crate::exec::overlapped`]) aggregates at a
+//! fixed quorum fraction; when the fraction is too low for the fleet's
+//! tail, many late updates exceed the staleness cap and are **discarded**
+//! — wasted client work. [`AdaptiveQuorum`] closes the loop: each round
+//! it observes how the round's resolved late updates split into folded
+//! vs discarded, tightens the quorum (waits for more clients) when the
+//! discard rate exceeds a target, and relaxes it back toward the
+//! configured floor when the pipeline runs clean.
+//!
+//! Determinism: the controller is a pure function of the observed
+//! per-round counts — no RNG, no wall clock — so adaptive runs replay
+//! bit-for-bit from their seed like every other configuration.
+
+/// Proportional quorum controller (see the module docs). The current
+/// quorum always stays within `[floor, 1.0]`, where `floor` is the
+/// configured [`OverlapConfig::quorum`](crate::exec::OverlapConfig).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveQuorum {
+    /// Acceptable stale-discard rate among resolved late updates.
+    target: f64,
+    /// Quorum adjustment per observed round.
+    step: f64,
+    /// The configured (most relaxed) quorum.
+    floor: f64,
+    /// The current quorum.
+    q: f64,
+}
+
+impl AdaptiveQuorum {
+    /// Default controller: target discard rate 10%, step 0.05 per round,
+    /// starting at (and never relaxing below) `initial_quorum`.
+    pub fn new(initial_quorum: f64) -> AdaptiveQuorum {
+        AdaptiveQuorum::with_params(initial_quorum, 0.1, 0.05)
+    }
+
+    /// Controller with explicit target discard rate and per-round step.
+    pub fn with_params(initial_quorum: f64, target: f64, step: f64) -> AdaptiveQuorum {
+        let floor = initial_quorum.clamp(0.0, 1.0);
+        AdaptiveQuorum { target: target.max(0.0), step: step.max(0.0), floor, q: floor }
+    }
+
+    /// The quorum the engine should use for the next round.
+    pub fn quorum(&self) -> f64 {
+        self.q
+    }
+
+    /// The configured floor the controller relaxes back to.
+    pub fn floor(&self) -> f64 {
+        self.floor
+    }
+
+    /// Feed one round's late-update resolution counts: `folded` delayed
+    /// updates entered an aggregation, `discarded` exceeded the staleness
+    /// cap. A discard rate above the target tightens the quorum one step
+    /// (toward 1.0); otherwise — including rounds with no late updates at
+    /// all — the quorum relaxes one step back toward the floor.
+    pub fn observe(&mut self, folded: usize, discarded: usize) {
+        let resolved = folded + discarded;
+        let tighten = resolved > 0 && (discarded as f64 / resolved as f64) > self.target;
+        self.q = if tighten {
+            (self.q + self.step).min(1.0)
+        } else {
+            (self.q - self.step).max(self.floor)
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_floor_and_stays_bounded() {
+        let mut a = AdaptiveQuorum::new(0.6);
+        assert_eq!(a.quorum(), 0.6);
+        assert_eq!(a.floor(), 0.6);
+        // Many discard-heavy rounds: saturates at 1.0, never beyond.
+        for _ in 0..100 {
+            a.observe(0, 5);
+            assert!(a.quorum() <= 1.0 && a.quorum() >= 0.6);
+        }
+        assert_eq!(a.quorum(), 1.0);
+        // Many clean rounds: decays back to the floor, never below.
+        for _ in 0..100 {
+            a.observe(3, 0);
+            assert!(a.quorum() >= 0.6);
+        }
+        assert_eq!(a.quorum(), 0.6);
+    }
+
+    #[test]
+    fn reacts_to_the_discard_rate_not_the_count() {
+        let mut a = AdaptiveQuorum::with_params(0.5, 0.5, 0.1);
+        // 1 of 4 discarded = 25% ≤ target 50%: relax (already at floor).
+        a.observe(3, 1);
+        assert_eq!(a.quorum(), 0.5);
+        // 3 of 4 discarded = 75% > 50%: tighten.
+        a.observe(1, 3);
+        assert!((a.quorum() - 0.6).abs() < 1e-12);
+        // Quiet round (nothing resolved): relax toward the floor.
+        a.observe(0, 0);
+        assert_eq!(a.quorum(), 0.5);
+    }
+
+    #[test]
+    fn controller_is_deterministic() {
+        let run = |obs: &[(usize, usize)]| {
+            let mut a = AdaptiveQuorum::new(0.7);
+            for &(f, d) in obs {
+                a.observe(f, d);
+            }
+            a.quorum()
+        };
+        let obs = [(1, 0), (0, 2), (2, 2), (0, 0), (5, 1)];
+        assert_eq!(run(&obs).to_bits(), run(&obs).to_bits());
+    }
+}

@@ -1,0 +1,318 @@
+//! Robust aggregators: per-coordinate trimmed mean, per-coordinate
+//! median, and an update-norm clipping wrapper.
+//!
+//! Motivated by the corrupted-update scenario family
+//! ([`crate::scenario::corruption`]): when a fraction of clients returns
+//! noisy or sign-flipped updates, the plain mean is dragged arbitrarily
+//! far, while a trimmed mean with a trim count at least the corruption
+//! count stays inside the honest values' envelope per coordinate (the
+//! breakdown bound enforced by `rust/tests/proptest_agg.rs`).
+//!
+//! Determinism: every sort uses `f32::total_cmp` with the contribution
+//! index as the tie-break, so equal (and even NaN) values trim
+//! identically on every run. The `trim_frac = 0` / `clip = ∞` degenerate
+//! paths delegate to the exact [`aggregate_weighted`] loop and are
+//! bit-identical to [`Mean`](super::Mean).
+
+use super::{aggregate_weighted, AggStats, Aggregator};
+
+/// Per-coordinate trimmed mean: for each coordinate, drop the
+/// `g = ⌊trim_frac · n⌋` smallest and largest values (capped so at least
+/// one value survives), then take the weighted mean of the survivors.
+#[derive(Clone, Copy, Debug)]
+pub struct TrimmedMean {
+    /// Fraction trimmed from each tail per coordinate, in `[0, 0.5)`.
+    trim_frac: f64,
+}
+
+impl TrimmedMean {
+    /// A trimmed mean dropping `⌊trim_frac · n⌋` values from each tail.
+    pub fn new(trim_frac: f64) -> TrimmedMean {
+        TrimmedMean { trim_frac }
+    }
+
+    /// How many values are trimmed from each tail for `n` contributions.
+    pub fn trim_count(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        ((self.trim_frac * n as f64).floor() as usize).min((n - 1) / 2)
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn label(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn aggregate_round(
+        &mut self,
+        _current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        assert_eq!(locals.len(), weights.len(), "one weight per contribution");
+        let n = locals.len();
+        let g = self.trim_count(n);
+        if g == 0 {
+            // Nothing to trim: the exact Mean loop, bit-for-bit.
+            return (aggregate_weighted(locals, weights), AggStats::default());
+        }
+        let dim = locals[0].len();
+        // Per coordinate: mark the g smallest and g largest values
+        // (ties broken by contribution index — deterministic).
+        let mut keep = vec![true; n * dim];
+        let mut col: Vec<(f32, usize)> = Vec::with_capacity(n);
+        for j in 0..dim {
+            col.clear();
+            for (i, l) in locals.iter().enumerate() {
+                assert_eq!(l.len(), dim, "parameter dimension mismatch");
+                col.push((l[j], i));
+            }
+            col.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for t in 0..g {
+                keep[col[t].1 * dim + j] = false;
+                keep[col[n - 1 - t].1 * dim + j] = false;
+            }
+        }
+        // Accumulate survivors in caller order — the same f64 loop shape
+        // as `aggregate_weighted`, just with per-coordinate weight totals.
+        let mut acc = vec![0.0f64; dim];
+        let mut tot = vec![0.0f64; dim];
+        for (i, l) in locals.iter().enumerate() {
+            let w = weights[i];
+            for (j, &p) in l.iter().enumerate() {
+                if keep[i * dim + j] {
+                    acc[j] += w * (p as f64);
+                    tot[j] += w;
+                }
+            }
+        }
+        if tot.iter().any(|&t| t <= 0.0) {
+            return (None, AggStats { rejected: 2 * g, ..AggStats::default() });
+        }
+        let out = acc.iter().zip(&tot).map(|(a, t)| (a / t) as f32).collect();
+        (Some(out), AggStats { rejected: 2 * g, ..AggStats::default() })
+    }
+}
+
+/// Per-coordinate median (weights are ignored — the median is already a
+/// 50%-breakdown estimator; documented, not a bug). Even counts average
+/// the two middle values in f64.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinateMedian;
+
+impl Aggregator for CoordinateMedian {
+    fn label(&self) -> &'static str {
+        "median"
+    }
+
+    fn aggregate_round(
+        &mut self,
+        _current: &[f32],
+        locals: &[&[f32]],
+        _weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        let n = locals.len();
+        let Some(first) = locals.first() else {
+            return (None, AggStats::default());
+        };
+        let dim = first.len();
+        let mut out = Vec::with_capacity(dim);
+        let mut col: Vec<f32> = Vec::with_capacity(n);
+        for j in 0..dim {
+            col.clear();
+            for l in locals {
+                assert_eq!(l.len(), dim, "parameter dimension mismatch");
+                col.push(l[j]);
+            }
+            col.sort_by(f32::total_cmp);
+            let m = if n % 2 == 1 {
+                col[n / 2] as f64
+            } else {
+                (col[n / 2 - 1] as f64 + col[n / 2] as f64) / 2.0
+            };
+            out.push(m as f32);
+        }
+        let rejected = if n % 2 == 1 { n - 1 } else { n.saturating_sub(2) };
+        (Some(out), AggStats { rejected, ..AggStats::default() })
+    }
+}
+
+/// Update-norm clipping wrapper: before the inner aggregator runs, every
+/// contribution whose update `wᵢ − w` has L2 norm above `max_norm` is
+/// scaled back onto the norm ball (`w + (wᵢ − w)·max_norm/‖wᵢ − w‖`);
+/// contributions inside the ball pass through **unmodified** (the same
+/// slices — a non-finite `max_norm` disables clipping entirely and is
+/// bit-transparent).
+pub struct NormClip<A> {
+    max_norm: f64,
+    inner: A,
+}
+
+impl<A: Aggregator> NormClip<A> {
+    /// Clip update norms to `max_norm` before delegating to `inner`.
+    pub fn new(max_norm: f64, inner: A) -> NormClip<A> {
+        NormClip { max_norm, inner }
+    }
+
+    /// The wrapped aggregator.
+    pub fn inner(&self) -> &A {
+        &self.inner
+    }
+}
+
+impl<A: Aggregator> Aggregator for NormClip<A> {
+    fn label(&self) -> &'static str {
+        "norm_clip"
+    }
+
+    fn aggregate_round(
+        &mut self,
+        current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        if !self.max_norm.is_finite() {
+            return self.inner.aggregate_round(current, locals, weights);
+        }
+        let mut clipped = 0usize;
+        let scaled: Vec<Option<Vec<f32>>> = locals
+            .iter()
+            .map(|l| {
+                assert_eq!(l.len(), current.len(), "parameter dimension mismatch");
+                let norm = l
+                    .iter()
+                    .zip(current)
+                    .map(|(&p, &c)| {
+                        let d = p as f64 - c as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt();
+                if norm <= self.max_norm {
+                    return None;
+                }
+                clipped += 1;
+                let s = self.max_norm / norm;
+                Some(
+                    l.iter()
+                        .zip(current)
+                        .map(|(&p, &c)| (c as f64 + s * (p as f64 - c as f64)) as f32)
+                        .collect(),
+                )
+            })
+            .collect();
+        let refs: Vec<&[f32]> = locals
+            .iter()
+            .zip(&scaled)
+            .map(|(l, s)| s.as_deref().unwrap_or(l))
+            .collect();
+        let (out, mut stats) = self.inner.aggregate_round(current, &refs, weights);
+        stats.clipped += clipped;
+        (out, stats)
+    }
+
+    fn flush(&mut self, current: &[f32]) -> Option<Vec<f32>> {
+        self.inner.flush(current)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::Mean;
+
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|x| x.as_slice()).collect()
+    }
+
+    #[test]
+    fn trim_count_caps_at_survivor() {
+        let t = TrimmedMean::new(0.4);
+        assert_eq!(t.trim_count(0), 0);
+        assert_eq!(t.trim_count(1), 0);
+        assert_eq!(t.trim_count(2), 0); // 0.8 floors to 0
+        assert_eq!(t.trim_count(5), 2);
+        assert_eq!(t.trim_count(3), 1);
+        // Even a huge fraction leaves at least one value.
+        let t = TrimmedMean::new(0.49);
+        assert_eq!(t.trim_count(100), 49);
+    }
+
+    #[test]
+    fn zero_trim_is_bitwise_mean() {
+        let locals = vec![vec![0.1f32, -7.5], vec![2.25f32, 0.3], vec![-1.0f32, 4.5]];
+        let weights = [1.0, 0.5, 0.25];
+        let (want, _) = Mean.aggregate_round(&[0.0; 2], &refs(&locals), &weights);
+        let (got, stats) =
+            TrimmedMean::new(0.0).aggregate_round(&[0.0; 2], &refs(&locals), &weights);
+        for (x, y) in want.unwrap().iter().zip(&got.unwrap()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn trimmed_mean_discards_the_outlier() {
+        // Four honest values near 1.0, one wild outlier per tail direction.
+        let locals = vec![
+            vec![1.0f32],
+            vec![1.1f32],
+            vec![0.9f32],
+            vec![1.0f32],
+            vec![1000.0f32],
+        ];
+        let weights = [1.0; 5];
+        let (out, stats) = TrimmedMean::new(0.2).aggregate_round(&[0.0], &refs(&locals), &weights);
+        let v = out.unwrap()[0];
+        // g = 1: the 1000.0 and one honest extreme are gone; the result
+        // stays inside the honest envelope.
+        assert!((0.9..=1.1).contains(&v), "trimmed mean {v} left the honest range");
+        assert_eq!(stats.rejected, 2);
+        // The plain mean is dragged far outside it.
+        let (mean, _) = Mean.aggregate_round(&[0.0], &refs(&locals), &weights);
+        assert!(mean.unwrap()[0] > 100.0);
+    }
+
+    #[test]
+    fn median_is_robust_and_counts_rejects() {
+        let locals = vec![vec![1.0f32], vec![2.0f32], vec![900.0f32]];
+        let (out, stats) = CoordinateMedian.aggregate_round(&[0.0], &refs(&locals), &[1.0; 3]);
+        assert_eq!(out.unwrap(), vec![2.0f32]);
+        assert_eq!(stats.rejected, 2);
+        // Even count: mean of the middle two.
+        let locals = vec![vec![1.0f32], vec![3.0f32], vec![5.0f32], vec![900.0f32]];
+        let (out, stats) = CoordinateMedian.aggregate_round(&[0.0], &refs(&locals), &[1.0; 4]);
+        assert_eq!(out.unwrap(), vec![4.0f32]);
+        assert_eq!(stats.rejected, 2);
+        let (none, _) = CoordinateMedian.aggregate_round(&[0.0], &[], &[]);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn norm_clip_scales_only_over_threshold() {
+        let current = vec![0.0f32, 0.0];
+        // ‖(3,4)‖ = 5 → clipped to norm 1; ‖(0.6, 0.8)‖ = 1 → untouched.
+        let locals = vec![vec![3.0f32, 4.0], vec![0.6f32, 0.8]];
+        let (out, stats) =
+            NormClip::new(1.0, Mean).aggregate_round(&current, &refs(&locals), &[1.0, 1.0]);
+        assert_eq!(stats.clipped, 1);
+        let out = out.unwrap();
+        // Both contributions now sit at (0.6, 0.8): the mean is too.
+        assert!((out[0] - 0.6).abs() < 1e-6 && (out[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infinite_clip_is_bit_transparent() {
+        let locals = vec![vec![5.5f32, -3.25], vec![100.0f32, 0.125]];
+        let weights = [1.0, 2.0];
+        let (want, _) = Mean.aggregate_round(&[0.0; 2], &refs(&locals), &weights);
+        let (got, stats) = NormClip::new(f64::INFINITY, Mean)
+            .aggregate_round(&[0.0; 2], &refs(&locals), &weights);
+        for (x, y) in want.unwrap().iter().zip(&got.unwrap()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(stats.clipped, 0);
+    }
+}

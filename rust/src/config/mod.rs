@@ -5,11 +5,12 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::agg::AggPolicy;
 use crate::coreset::Method;
 use crate::data::Benchmark;
 use crate::exec::OverlapConfig;
 use crate::fl::{RunConfig, Strategy};
-use crate::scenario::TraceSpec;
+use crate::scenario::{CorruptionKind, CorruptionSpec, TraceSpec};
 use crate::util::toml::TomlDoc;
 
 /// One experiment = benchmark + FL hyper-parameters + generation scale.
@@ -174,16 +175,135 @@ impl ExperimentConfig {
             ov.validate().map_err(|e| anyhow!("[fl] overlap: {e}"))?;
             cfg.run.overlap = Some(ov);
         }
+        // Server aggregation policy: `agg = "..."` selects, the knob keys
+        // parameterize; a knob key alone implies its policy (mirroring
+        // the overlap section's semantics).
+        let agg_name = doc.get("fl", "agg").and_then(|v| v.as_str());
+        let momentum = doc.get("fl", "server_momentum").and_then(|v| v.as_f64());
+        let buffer_k = usize_of("buffer_k");
+        let trim_frac = doc.get("fl", "trim_frac").and_then(|v| v.as_f64());
+        let implied = match (agg_name, momentum.or_else(|| buffer_k.map(|k| k as f64)), trim_frac)
+        {
+            (Some(name), _, _) => Some(
+                AggPolicy::parse(name)
+                    .ok_or_else(|| anyhow!("unknown aggregation policy '{name}'"))?,
+            ),
+            (None, Some(_), _) => Some(AggPolicy::Buffered { k: 0, momentum: 0.0 }),
+            (None, None, Some(_)) => Some(AggPolicy::TrimmedMean { trim_frac: 0.1 }),
+            (None, None, None) => None,
+        };
+        if let Some(mut pol) = implied {
+            match &mut pol {
+                AggPolicy::Buffered { k, momentum: m } => {
+                    if let Some(v) = buffer_k {
+                        *k = v;
+                    }
+                    if let Some(v) = momentum {
+                        *m = v;
+                    }
+                }
+                AggPolicy::TrimmedMean { trim_frac: t } => {
+                    if let Some(v) = trim_frac {
+                        *t = v;
+                    }
+                }
+                AggPolicy::Mean | AggPolicy::CoordinateMedian => {}
+            }
+            // A knob aimed at a different policy is a config bug, not a
+            // silent no-op (e.g. agg = "mean" with trim_frac set).
+            if (momentum.is_some() || buffer_k.is_some())
+                && !matches!(pol, AggPolicy::Buffered { .. })
+            {
+                return Err(anyhow!(
+                    "[fl] server_momentum/buffer_k only apply to agg = \"buffered\", got \"{}\"",
+                    pol.label()
+                ));
+            }
+            if trim_frac.is_some() && !matches!(pol, AggPolicy::TrimmedMean { .. }) {
+                return Err(anyhow!(
+                    "[fl] trim_frac only applies to agg = \"trimmed_mean\", got \"{}\"",
+                    pol.label()
+                ));
+            }
+            pol.validate().map_err(|e| anyhow!("[fl] aggregation: {e}"))?;
+            cfg.run.aggregator = pol;
+        }
+        if let Some(v) = doc.get("fl", "clip_norm").and_then(|v| v.as_f64()) {
+            if !(v > 0.0) {
+                return Err(anyhow!("[fl] clip_norm must be positive, got {v}"));
+            }
+            cfg.run.clip_norm = Some(v);
+        }
+        if let Some(v) = doc.get("fl", "adaptive_quorum").and_then(|v| v.as_bool()) {
+            cfg.run.adaptive_quorum = v;
+        }
+        if let Some(v) = doc.get("fl", "flaky_boost").and_then(|v| v.as_f64()) {
+            if !(v >= 0.0 && v.is_finite()) {
+                return Err(anyhow!("[fl] flaky_boost must be finite and >= 0, got {v}"));
+            }
+            cfg.run.flaky_boost = v;
+        }
         // [scenario]: trace-driven client availability — either a pointer
         // to a trace file (`trace = "examples/traces/markov_churn.toml"`)
         // or an inline spec with the same keys as a trace file's [trace]
-        // section (explicit intervals then come from a sibling [clients]).
+        // section (explicit intervals then come from a sibling [clients])
+        // — and/or a corrupted-update knob (`corrupt = "noise" |
+        // "sign_flip"` with `corrupt_frac` / `corrupt_sigma` /
+        // `corrupt_scale` / `corrupt_seed`).
         if doc.sections.contains_key("scenario") {
-            let spec = match doc.get("scenario", "trace").and_then(|v| v.as_str()) {
-                Some(path) => TraceSpec::from_file(path)?,
-                None => TraceSpec::from_toml_doc(&doc, "scenario")?,
-            };
-            cfg.run.trace = Some(spec);
+            let has_trace = doc.get("scenario", "trace").is_some()
+                || doc.get("scenario", "kind").is_some();
+            if has_trace {
+                let spec = match doc.get("scenario", "trace").and_then(|v| v.as_str()) {
+                    Some(path) => TraceSpec::from_file(path)?,
+                    None => TraceSpec::from_toml_doc(&doc, "scenario")?,
+                };
+                cfg.run.trace = Some(spec);
+            }
+            if let Some(kind) = doc.get("scenario", "corrupt").and_then(|v| v.as_str()) {
+                let mut kind = CorruptionKind::parse(kind)
+                    .ok_or_else(|| anyhow!("unknown corruption kind '{kind}'"))?;
+                match &mut kind {
+                    CorruptionKind::Noise { sigma } => {
+                        if let Some(v) =
+                            doc.get("scenario", "corrupt_sigma").and_then(|v| v.as_f64())
+                        {
+                            *sigma = v;
+                        }
+                    }
+                    CorruptionKind::SignFlip { scale } => {
+                        if let Some(v) =
+                            doc.get("scenario", "corrupt_scale").and_then(|v| v.as_f64())
+                        {
+                            *scale = v;
+                        }
+                    }
+                }
+                let mut spec = CorruptionSpec::new(kind, 0.1);
+                if let Some(v) = doc.get("scenario", "corrupt_frac").and_then(|v| v.as_f64()) {
+                    spec.fraction = v;
+                }
+                if let Some(v) = doc.get("scenario", "corrupt_seed").and_then(|v| v.as_i64()) {
+                    spec.seed = v as u64;
+                }
+                spec.validate().map_err(|e| anyhow!("[scenario] corruption: {e}"))?;
+                cfg.run.corruption = Some(spec);
+            } else {
+                // Corruption knobs without the `corrupt` kind are a
+                // config bug, not a silent no-op.
+                for key in ["corrupt_frac", "corrupt_sigma", "corrupt_scale", "corrupt_seed"] {
+                    if doc.get("scenario", key).is_some() {
+                        return Err(anyhow!(
+                            "[scenario] {key} set but `corrupt` (noise | sign_flip) is missing"
+                        ));
+                    }
+                }
+                if !has_trace {
+                    return Err(anyhow!(
+                        "[scenario] section needs a trace (`trace`/`kind`) or a `corrupt` knob"
+                    ));
+                }
+            }
         }
         Ok(cfg)
     }
@@ -312,6 +432,88 @@ workers = 3
         assert!(ExperimentConfig::from_toml(bad).is_err());
         let negative = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nmax_staleness = -3\n";
         assert!(ExperimentConfig::from_toml(negative).is_err());
+    }
+
+    #[test]
+    fn agg_section_roundtrip() {
+        let text = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [fl]\nagg = \"buffered\"\nbuffer_k = 5\nserver_momentum = 0.3\n\
+                    clip_norm = 2.5\nadaptive_quorum = true\nflaky_boost = 1.5\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.run.aggregator, AggPolicy::Buffered { k: 5, momentum: 0.3 });
+        assert_eq!(cfg.run.clip_norm, Some(2.5));
+        assert!(cfg.run.adaptive_quorum);
+        assert_eq!(cfg.run.flaky_boost, 1.5);
+
+        // Knob keys alone imply their policy (like the overlap keys)…
+        let implied = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ntrim_frac = 0.2\n";
+        let cfg = ExperimentConfig::from_toml(implied).unwrap();
+        assert_eq!(cfg.run.aggregator, AggPolicy::TrimmedMean { trim_frac: 0.2 });
+        let implied = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nserver_momentum = 0.5\n";
+        let cfg = ExperimentConfig::from_toml(implied).unwrap();
+        assert_eq!(cfg.run.aggregator, AggPolicy::Buffered { k: 0, momentum: 0.5 });
+
+        // …no keys ⇒ the classic mean, no clipping.
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert_eq!(plain.run.aggregator, AggPolicy::Mean);
+        assert!(plain.run.clip_norm.is_none());
+        assert!(!plain.run.adaptive_quorum);
+        assert_eq!(plain.run.flaky_boost, 0.0);
+
+        // Invalid values are hard errors.
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nagg = \"nope\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ntrim_frac = 0.6\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nclip_norm = -1.0\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // Knobs aimed at a different policy are hard errors too, not
+        // silent no-ops.
+        let mismatch =
+            "[experiment]\nbenchmark = \"mnist\"\n[fl]\nagg = \"mean\"\ntrim_frac = 0.2\n";
+        assert!(ExperimentConfig::from_toml(mismatch).is_err());
+        let mismatch = "[experiment]\nbenchmark = \"mnist\"\n\
+                        [fl]\nagg = \"trimmed_mean\"\nserver_momentum = 0.5\n";
+        assert!(ExperimentConfig::from_toml(mismatch).is_err());
+        let ambiguous = "[experiment]\nbenchmark = \"mnist\"\n\
+                         [fl]\nserver_momentum = 0.5\ntrim_frac = 0.2\n";
+        assert!(ExperimentConfig::from_toml(ambiguous).is_err());
+    }
+
+    #[test]
+    fn scenario_corruption_knob() {
+        use crate::scenario::CorruptionKind;
+        let text = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [scenario]\ncorrupt = \"sign_flip\"\ncorrupt_frac = 0.25\ncorrupt_seed = 9\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let spec = cfg.run.corruption.expect("corruption parsed");
+        assert_eq!(spec.kind, CorruptionKind::SignFlip { scale: 1.0 });
+        assert_eq!(spec.fraction, 0.25);
+        assert_eq!(spec.seed, 9);
+        assert!(cfg.run.trace.is_none(), "corruption-only section must not imply a trace");
+
+        // Corruption composes with an inline trace in the same section.
+        let both = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [scenario]\nkind = \"periodic\"\nhorizon = 12.0\n\
+                    corrupt = \"noise\"\ncorrupt_sigma = 0.5\n";
+        let cfg = ExperimentConfig::from_toml(both).unwrap();
+        assert!(cfg.run.trace.is_some());
+        assert_eq!(
+            cfg.run.corruption.unwrap().kind,
+            CorruptionKind::Noise { sigma: 0.5 }
+        );
+
+        // An empty scenario section is a configuration bug, not a no-op.
+        let empty = "[experiment]\nbenchmark = \"mnist\"\n[scenario]\nx = 1\n";
+        assert!(ExperimentConfig::from_toml(empty).is_err());
+        // Bad corruption values are hard errors.
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n\
+                   [scenario]\ncorrupt = \"noise\"\ncorrupt_frac = 1.5\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // Corruption knobs without the `corrupt` kind are hard errors.
+        let orphan = "[experiment]\nbenchmark = \"mnist\"\n\
+                      [scenario]\nkind = \"periodic\"\nhorizon = 12.0\ncorrupt_frac = 0.3\n";
+        assert!(ExperimentConfig::from_toml(orphan).is_err());
     }
 
     #[test]

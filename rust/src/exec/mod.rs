@@ -137,6 +137,41 @@ pub trait Executor {
     fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>>;
 }
 
+/// A shared reference to an executor is itself an executor (the trait
+/// only ever takes `&self`). This is what lets a whole sweep's engines
+/// reuse **one** [`Sharded`] pool — and its compiled per-worker runtimes
+/// — instead of building a pool per engine: build the pool once, hand
+/// `&pool` to each [`crate::fl::Engine::with_executor`]. Results are
+/// bit-identical to per-engine pools (`rust/tests/proptest_exec.rs`).
+impl<E: Executor + ?Sized> Executor for &E {
+    fn workers(&self) -> usize {
+        (**self).workers()
+    }
+
+    fn run_clients(
+        &self,
+        ctx: &Arc<ExecContext>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientOutcome>> {
+        (**self).run_clients(ctx, jobs)
+    }
+
+    fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
+        (**self).run_evals(ctx, jobs)
+    }
+}
+
+/// Resolve a worker-count setting (`0` = auto via
+/// [`crate::util::pool::default_threads`]) and build the **shared sweep
+/// pool** when it calls for one: `Some(pool)` for `> 1` effective
+/// workers, `None` when the sequential path should be used. One rule for
+/// every sweep site ([`crate::expt::run_cell`], the CLI `sweep`), so
+/// sweeps can never diverge from single runs on worker resolution.
+pub fn sweep_pool(workers: usize, factory: crate::runtime::RuntimeFactory) -> Option<Sharded> {
+    let n = if workers == 0 { crate::util::pool::default_threads() } else { workers };
+    (n > 1).then(|| Sharded::new(n, factory))
+}
+
 /// Run one client job against `rt` (shared by both executors).
 pub(crate) fn exec_client(
     rt: &Runtime,

@@ -9,7 +9,11 @@
 //! ledger and are folded into a *later* round's aggregation as delayed
 //! gradients, down-weighted by staleness (`1/(1+s)^alpha`, following
 //! "Stragglers Are Not Disaster", arXiv:2102.06329) and discarded outright
-//! once staleness exceeds a hard cap.
+//! once staleness exceeds a hard cap. The fold itself goes through the
+//! engine's configured [`crate::agg::Aggregator`] — the weighted mean by
+//! default, or FedBuff-style buffering / robust policies — and
+//! [`crate::agg::AdaptiveQuorum`] can tighten or relax `quorum` per round
+//! from the observed stale-discard rate.
 //!
 //! Determinism contract: everything here is simulated-time bookkeeping —
 //! no wall-clock, no extra RNG draws. Late updates are keyed by

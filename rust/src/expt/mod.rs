@@ -207,7 +207,11 @@ pub fn run_scenario(
 }
 
 /// All four strategies on one (benchmark, straggler%) cell, sharing one
-/// generated dataset — the unit of Table 2 / Fig. 3 work.
+/// generated dataset — the unit of Table 2 / Fig. 3 work. With
+/// `FEDCORE_WORKERS > 1` the whole cell also shares **one** sharded pool
+/// (and its compiled per-worker runtimes) across all four engines
+/// instead of building a pool per engine; results are bit-identical
+/// either way (`rust/tests/proptest_exec.rs`).
 pub fn run_cell(
     rt: &Runtime,
     bench: Benchmark,
@@ -216,6 +220,7 @@ pub fn run_cell(
 ) -> Result<Vec<RunResult>> {
     let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
     let base = bench_cfg(bench, straggler_pct, seed);
+    let shared = crate::exec::sweep_pool(base.run.workers, rt.factory());
     let mut out = Vec::new();
     for strategy in all_strategies(base.prox_mu) {
         let cfg = base.clone().with_strategy(strategy);
@@ -225,7 +230,11 @@ pub fn run_cell(
             straggler_pct,
             strategy.label()
         );
-        out.push(Engine::new(rt, &ds, cfg.run.clone())?.run()?);
+        let result = match &shared {
+            Some(pool) => Engine::with_executor(rt, &ds, cfg.run.clone(), pool)?.run()?,
+            None => Engine::new(rt, &ds, cfg.run.clone())?.run()?,
+        };
+        out.push(result);
     }
     Ok(out)
 }

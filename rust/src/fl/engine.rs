@@ -3,9 +3,10 @@
 //! Per round: sample K clients with probability ∝ mᵢ (Assumption A.6),
 //! broadcast the global model, execute each client's [`LocalPlan`] through
 //! the configured [`Executor`] (in-thread or sharded across runtime-pinned
-//! workers — see [`crate::exec`]), aggregate the round-end parameters
-//! wᵣ₊₁ = (1/K) Σ wᵢ in selection order, and record loss/accuracy/timing
-//! into a [`RunResult`].
+//! workers — see [`crate::exec`]), fold the round-end parameters through
+//! the configured [`crate::agg::Aggregator`] in selection order (the
+//! default [`AggPolicy::Mean`] is wᵣ₊₁ = (1/K) Σ wᵢ, the classic FedAvg
+//! mean), and record loss/accuracy/timing into a [`RunResult`].
 //!
 //! Determinism: every job's RNG stream is split from `(round, client)`
 //! before dispatch and results are aggregated in selection order, so a run
@@ -28,6 +29,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::client::ClientOutcome;
 use super::plan::{LocalPlan, Strategy};
+use crate::agg::{AdaptiveQuorum, AggPolicy};
 use crate::coreset::Method;
 use crate::data::FedDataset;
 use crate::exec::{
@@ -36,9 +38,13 @@ use crate::exec::{
 };
 use crate::metrics::{RoundRecord, RunResult};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
-use crate::scenario::{AvailabilityTrace, TraceSpec};
+use crate::scenario::{AvailabilityTrace, CorruptionSpec, TraceSpec};
 use crate::sim::{clock::RoundTiming, Fleet, SimClock};
 use crate::util::rng::Rng;
+
+// The aggregation algebra moved to the agg subsystem; re-exported here
+// (and from `fl`) so every historical call site keeps compiling.
+pub use crate::agg::{aggregate, aggregate_weighted};
 
 /// When FedCore (re)builds coresets (paper §4.3/§4.4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +99,27 @@ pub struct RunConfig {
     /// barrier; the degenerate policy (`quorum = 1.0`,
     /// `max_staleness = 0`) reproduces `None` bit-for-bit.
     pub overlap: Option<OverlapConfig>,
+    /// Server aggregation policy (see [`crate::agg`]). The default
+    /// [`AggPolicy::Mean`] is the classic weighted FedAvg mean,
+    /// bit-identical to the pre-policy engine.
+    pub aggregator: AggPolicy,
+    /// Clip client update L2 norms to this bound before aggregating
+    /// (`None` = no clipping; see [`crate::agg::NormClip`]).
+    pub clip_norm: Option<f64>,
+    /// With `overlap` set: adapt the quorum per round from the observed
+    /// stale-discard rate (see [`crate::agg::AdaptiveQuorum`]). Ignored
+    /// without overlap.
+    pub adaptive_quorum: bool,
+    /// Corrupted-update scenario: a seeded fraction of clients returns
+    /// noisy / sign-flipped parameters (see
+    /// [`crate::scenario::corruption`]). `None` = every update honest.
+    pub corruption: Option<CorruptionSpec>,
+    /// Availability-aware selection boost: with a trace configured,
+    /// multiply each client's selection weight by
+    /// `1 + boost · (1 − uptime)` (then renormalize), oversampling flaky
+    /// clients so their data is not starved by churn. `0.0` (default)
+    /// keeps selection byte-identical to the unboosted path.
+    pub flaky_boost: f64,
     /// Print a progress line per round.
     pub verbose: bool,
 }
@@ -114,53 +141,36 @@ impl Default for RunConfig {
             workers: 1,
             trace: None,
             overlap: None,
+            aggregator: AggPolicy::Mean,
+            clip_norm: None,
+            adaptive_quorum: false,
+            corruption: None,
+            flaky_boost: 0.0,
             verbose: false,
         }
     }
 }
 
-/// FedAvg aggregation (Algorithm 1 line 15): wᵣ₊₁ = (1/K) Σ wᵢ, computed
-/// in f64 for order-independence up to f32 rounding. Returns None when no
-/// client contributed (all dropped — the server keeps the old model).
-pub fn aggregate(locals: &[&[f32]]) -> Option<Vec<f32>> {
-    let first = locals.first()?;
-    let mut acc = vec![0.0f64; first.len()];
-    for l in locals {
-        assert_eq!(l.len(), acc.len(), "parameter dimension mismatch");
-        for (a, &p) in acc.iter_mut().zip(*l) {
-            *a += p as f64;
-        }
+/// Availability-aware selection weights: boost flaky clients so churn
+/// does not starve their data. Each weight is multiplied by
+/// `1 + boost · (1 − uptime)` and the result renormalized to sum 1.
+/// `boost <= 0` returns the input weights **unchanged** (bitwise), so
+/// the flag-off path is byte-identical to the classic sampler.
+pub fn boost_flaky_weights(weights: &[f64], uptimes: &[f64], boost: f64) -> Vec<f64> {
+    assert_eq!(weights.len(), uptimes.len(), "one uptime per client");
+    if boost <= 0.0 {
+        return weights.to_vec();
     }
-    let k = locals.len() as f64;
-    Some(acc.into_iter().map(|a| (a / k) as f32).collect())
-}
-
-/// Weighted FedAvg aggregation for the overlapped pipeline:
-/// wᵣ₊₁ = Σ λᵢ wᵢ / Σ λᵢ, computed in f64 in caller order (on-time
-/// cohort in selection order, then delayed arrivals by
-/// `(origin_round, slot)`). With unit weights this reproduces
-/// [`aggregate`] **bit-for-bit** — `1.0 * x` is exact and the weight sum
-/// accumulates to exactly `k` — which is what lets the degenerate
-/// overlapped configuration match the synchronous engine
-/// (`rust/tests/proptest_overlap.rs`). Returns None when nothing
-/// contributed or the total weight is not positive (the server keeps the
-/// old model).
-pub fn aggregate_weighted(locals: &[&[f32]], weights: &[f64]) -> Option<Vec<f32>> {
-    assert_eq!(locals.len(), weights.len(), "one weight per contribution");
-    let first = locals.first()?;
-    let mut acc = vec![0.0f64; first.len()];
-    let mut total = 0.0f64;
-    for (l, &w) in locals.iter().zip(weights) {
-        assert_eq!(l.len(), acc.len(), "parameter dimension mismatch");
-        total += w;
-        for (a, &p) in acc.iter_mut().zip(*l) {
-            *a += w * (p as f64);
-        }
+    let raw: Vec<f64> = weights
+        .iter()
+        .zip(uptimes)
+        .map(|(&w, &u)| w.max(0.0) * (1.0 + boost * (1.0 - u.clamp(0.0, 1.0))))
+        .collect();
+    let sum: f64 = raw.iter().sum();
+    if sum <= 0.0 {
+        return weights.to_vec();
     }
-    if total <= 0.0 {
-        return None;
-    }
-    Some(acc.into_iter().map(|a| (a / total) as f32).collect())
+    raw.into_iter().map(|w| w / sum).collect()
 }
 
 /// Availability-aware client selection (Algorithm 1 line 3 under churn):
@@ -230,6 +240,9 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     ctx: Arc<ExecContext>,
     /// Materialized availability trace (None = always-on).
     trace: Option<Arc<AvailabilityTrace>>,
+    /// Materialized corruption membership (`corrupted[i]` = client i is
+    /// corrupted; None = every update honest).
+    corrupted: Option<Vec<bool>>,
     /// §4.3 static-coreset cache (client → coreset); budgets are constant
     /// per client, so a static coreset never needs rebuilding.
     static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
@@ -258,6 +271,22 @@ impl<'a, E: Executor> Engine<'a, E> {
         if let Some(ov) = &cfg.overlap {
             ov.validate().context("overlap configuration")?;
         }
+        cfg.aggregator.validate().context("aggregation policy")?;
+        if let Some(c) = cfg.clip_norm {
+            if !(c > 0.0) {
+                return Err(anyhow!("clip norm must be positive, got {c}"));
+            }
+        }
+        if !(cfg.flaky_boost >= 0.0 && cfg.flaky_boost.is_finite()) {
+            return Err(anyhow!("flaky boost must be finite and >= 0, got {}", cfg.flaky_boost));
+        }
+        let corrupted = match &cfg.corruption {
+            Some(spec) => {
+                spec.validate().context("corruption scenario")?;
+                Some(spec.corrupted_clients(data.num_clients()))
+            }
+            None => None,
+        };
         let model = rt.manifest().model(&data.model)?.clone();
         let mut fleet_rng = Rng::new(cfg.seed).split(0xF1EE7);
         let fleet =
@@ -287,6 +316,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             exec,
             ctx,
             trace,
+            corrupted,
             static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
         })
     }
@@ -377,6 +407,17 @@ impl<'a, E: Executor> Engine<'a, E> {
         }
         let cfg = &self.cfg;
         let weights = self.ctx.data.client_weights();
+        // Availability-aware selection policy: boost flaky clients'
+        // weights from the trace's per-client uptime. Off (or traceless)
+        // runs keep the exact original weights, bitwise.
+        let weights = match &self.trace {
+            Some(trace) if cfg.flaky_boost > 0.0 => {
+                let uptimes: Vec<f64> =
+                    (0..weights.len()).map(|i| trace.uptime(i)).collect();
+                boost_flaky_weights(&weights, &uptimes, cfg.flaky_boost)
+            }
+            _ => weights,
+        };
         let mut select_rng = Rng::new(cfg.seed).split(0x5E1EC7);
         let client_root = Rng::new(cfg.seed).split(0xC11E47);
         let mut clock = SimClock::new(self.fleet.deadline);
@@ -385,6 +426,14 @@ impl<'a, E: Executor> Engine<'a, E> {
         // ledger stays empty then, and every quorum degenerates to "all".
         let overlap = cfg.overlap;
         let mut in_flight = InFlight::new();
+        let mut adaptive = match (overlap, cfg.adaptive_quorum) {
+            (Some(ov), true) => Some(AdaptiveQuorum::new(ov.quorum)),
+            _ => None,
+        };
+
+        // The aggregation seam: one policy instance per run (buffered
+        // policies carry cross-round state). RNG-free by contract.
+        let mut agg = cfg.aggregator.build(cfg.clip_norm);
 
         let mut params = init_params;
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
@@ -443,7 +492,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             // skipped slots (dispatched jobs kept their relative order, so
             // a single in-order walk suffices).
             let mut executed = executed.into_iter();
-            let outcomes: Vec<ClientOutcome> = churn_partial
+            let mut outcomes: Vec<ClientOutcome> = churn_partial
                 .iter()
                 .map(|slot| match slot {
                     Some(partial) => ClientOutcome {
@@ -457,6 +506,20 @@ impl<'a, E: Executor> Engine<'a, E> {
                     None => executed.next().expect("one outcome per dispatched job"),
                 })
                 .collect();
+            // Corrupted-update scenario: perturb marked clients' returned
+            // parameters before anything downstream (ledger, aggregation)
+            // sees them. Deterministic per (spec seed, round, client) —
+            // worker scheduling cannot reach this stream.
+            if let (Some(spec), Some(flags)) = (&cfg.corruption, &self.corrupted) {
+                for (slot, o) in outcomes.iter_mut().enumerate() {
+                    let client = selected[slot];
+                    if flags[client] {
+                        if let Some(p) = &mut o.params {
+                            spec.apply(p, &global, r, client);
+                        }
+                    }
+                }
+            }
             let churn_dropped = churn_partial.iter().filter(|s| s.is_some()).count();
             let partial_time: f64 = churn_partial.iter().flatten().sum();
 
@@ -478,8 +541,14 @@ impl<'a, E: Executor> Engine<'a, E> {
             let mut timing = if client_times.is_empty() {
                 RoundTiming::idle(self.fleet.deadline)
             } else {
+                // Adaptive quorum: substitute the controller's current
+                // quorum for the configured one (same ceil/clamp rule).
                 let q = overlap
-                    .map(|o| o.quorum_count(client_times.len()))
+                    .map(|o| match &adaptive {
+                        Some(a) => OverlapConfig { quorum: a.quorum(), ..o }
+                            .quorum_count(client_times.len()),
+                        None => o.quorum_count(client_times.len()),
+                    })
                     .unwrap_or(client_times.len());
                 let mut sorted = client_times.clone();
                 sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite client times"));
@@ -540,8 +609,23 @@ impl<'a, E: Executor> Engine<'a, E> {
                     stale_discarded += in_flight.discard_all();
                 }
             }
-            if let Some(new_params) = aggregate_weighted(&locals, &fold_weights) {
-                params = new_params;
+            if let Some(a) = &mut adaptive {
+                a.observe(stale_folded, stale_discarded);
+            }
+            // The aggregation seam: fold the deterministic contribution
+            // sequence through the configured policy. `Mean` is exactly
+            // the historical `aggregate_weighted` call.
+            let (new_params, agg_stats) = agg.aggregate_round(&params, &locals, &fold_weights);
+            if let Some(p) = new_params {
+                params = p;
+            }
+            if r + 1 == cfg.rounds {
+                // End of run: buffered policies flush whatever they still
+                // hold so the final model reflects every folded update
+                // (a no-op for stateless policies and drained buffers).
+                if let Some(p) = agg.flush(&params) {
+                    params = p;
+                }
             }
             clock.push_round(timing.clone());
 
@@ -592,8 +676,17 @@ impl<'a, E: Executor> Engine<'a, E> {
                 } else {
                     String::new()
                 };
+                let agg_note = if agg_stats.rejected + agg_stats.clipped + agg_stats.buffered > 0
+                {
+                    format!(
+                        " | agg rej {} clip {} buf {}",
+                        agg_stats.rejected, agg_stats.clipped, agg_stats.buffered
+                    )
+                } else {
+                    String::new()
+                };
                 eprintln!(
-                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}{overlap_note}",
+                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}{overlap_note}{agg_note}",
                     cfg.strategy.label(),
                     100.0 * test_acc,
                     sim_time / self.fleet.deadline,
@@ -615,6 +708,8 @@ impl<'a, E: Executor> Engine<'a, E> {
                 stale_folded,
                 stale_discarded,
                 stale_weight,
+                agg_rejected: agg_stats.rejected,
+                agg_clipped: agg_stats.clipped,
                 coreset_clients,
                 mean_compression,
             });
@@ -699,39 +794,70 @@ mod tests {
         assert_eq!(select_available(&mut rng, &weights, &[1], 3), vec![1]);
     }
 
-    // ---------- aggregate_weighted ----------
+    // ---------- aggregate_weighted re-export ----------
+    // (the algebra's own tests live with the code in agg/mean.rs; this
+    // pins that the historical `fl` re-export path still resolves)
 
     #[test]
-    fn weighted_aggregate_with_unit_weights_is_bitwise_plain() {
+    fn weighted_aggregate_reexport_unit_weights_bitwise_plain() {
         let a = vec![0.125f32, -3.5, 7.75, 0.1];
         let b = vec![1.0f32, 2.0, -0.25, 0.3];
-        let c = vec![9.5f32, 0.0, 1.5, -0.7];
-        let locals: Vec<&[f32]> = vec![&a, &b, &c];
+        let locals: Vec<&[f32]> = vec![&a, &b];
         let plain = aggregate(&locals).unwrap();
-        let weighted = aggregate_weighted(&locals, &[1.0, 1.0, 1.0]).unwrap();
+        let weighted = aggregate_weighted(&locals, &[1.0, 1.0]).unwrap();
         for (x, y) in plain.iter().zip(&weighted) {
             assert_eq!(x.to_bits(), y.to_bits(), "unit weights must degenerate exactly");
         }
     }
 
+    // ---------- availability-aware selection boost (satellite) ----------
+
     #[test]
-    fn weighted_aggregate_downweights_stale_contributions() {
-        let fresh = vec![0.0f32];
-        let stale = vec![10.0f32];
-        let locals: Vec<&[f32]> = vec![&fresh, &stale];
-        // weight 1 vs 0.5: (0*1 + 10*0.5) / 1.5 = 10/3
-        let out = aggregate_weighted(&locals, &[1.0, 0.5]).unwrap();
-        assert!((out[0] - 10.0 / 1.5).abs() < 1e-6);
-        // Heavier staleness discount pulls the mean toward the fresh update.
-        let lighter = aggregate_weighted(&locals, &[1.0, 0.25]).unwrap();
-        assert!(lighter[0] < out[0]);
+    fn boost_zero_returns_weights_bitwise_unchanged() {
+        let weights = vec![0.25, 0.5, 0.125, 0.125];
+        let uptimes = vec![0.1, 0.9, 0.5, 1.0];
+        let out = boost_flaky_weights(&weights, &uptimes, 0.0);
+        for (a, b) in weights.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits(), "boost = 0 must be the identity");
+        }
     }
 
     #[test]
-    fn weighted_aggregate_empty_and_zero_weight() {
-        assert!(aggregate_weighted(&[], &[]).is_none());
-        let p = vec![1.0f32];
-        let locals: Vec<&[f32]> = vec![&p];
-        assert!(aggregate_weighted(&locals, &[0.0]).is_none());
+    fn boost_normalizes_and_is_deterministic() {
+        let weights = vec![0.4, 0.3, 0.2, 0.1];
+        let uptimes = vec![1.0, 0.5, 0.2, 0.0];
+        let a = boost_flaky_weights(&weights, &uptimes, 2.0);
+        let b = boost_flaky_weights(&weights, &uptimes, 2.0);
+        assert_eq!(a, b, "boosting must be deterministic");
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "boosted weights must sum to 1, got {sum}");
+        assert!(a.iter().all(|&w| w >= 0.0));
+    }
+
+    #[test]
+    fn boost_favors_low_uptime_clients() {
+        // Equal base weights, different uptimes: the flakier client must
+        // end up with the strictly larger share.
+        let weights = vec![0.5, 0.5];
+        let uptimes = vec![0.2, 0.9];
+        let out = boost_flaky_weights(&weights, &uptimes, 1.5);
+        assert!(
+            out[0] > out[1],
+            "flaky client not oversampled: {} vs {}",
+            out[0],
+            out[1]
+        );
+        // A fully-online fleet is boosted uniformly — shares unchanged.
+        let flat = boost_flaky_weights(&[0.3, 0.7], &[1.0, 1.0], 1.5);
+        assert!((flat[0] - 0.3).abs() < 1e-12 && (flat[1] - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boost_degenerate_weights_fall_back_to_input() {
+        // All-zero weights cannot be normalized: return the input as-is
+        // (the selector has its own all-zero fallback).
+        let weights = vec![0.0, 0.0];
+        let out = boost_flaky_weights(&weights, &[0.5, 0.5], 2.0);
+        assert_eq!(out, weights);
     }
 }

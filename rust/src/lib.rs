@@ -53,8 +53,26 @@
 //! the synchronous engine bit-for-bit, which anchors the differential
 //! property suite in `rust/tests/proptest_overlap.rs`.
 
+//!
+//! # Server aggregation policies
+//!
+//! The [`agg`] subsystem makes the server's aggregation rule pluggable
+//! ([`fl::RunConfig::aggregator`], `--agg` on the CLI, `[fl]
+//! agg/server_momentum/buffer_k/trim_frac/clip_norm` in config files):
+//! the classic weighted mean, FedBuff-style buffered aggregation with
+//! server momentum, and robust aggregators (per-coordinate trimmed mean
+//! / median, update-norm clipping) that survive the corrupted-update
+//! scenarios in [`scenario::corruption`]. Every policy is RNG-free and
+//! order-deterministic; the degenerate settings (`buffered` with
+//! `k = 0, β = 0`, `trimmed_mean` with `trim_frac = 0`) reproduce the
+//! mean **bit-for-bit** (`rust/tests/proptest_agg.rs`). An
+//! [`agg::AdaptiveQuorum`] controller can additionally tighten or relax
+//! the overlapped pipeline's quorum from the observed stale-discard
+//! rate (`--adaptive-quorum`).
+
 #![warn(missing_docs)]
 
+pub mod agg;
 pub mod config;
 pub mod coreset;
 pub mod data;

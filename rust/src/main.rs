@@ -46,12 +46,21 @@ fn cli() -> Cli {
     .opt("quorum", "0.8", "overlap: fraction of contributing clients to await before aggregating")
     .opt("max-staleness", "2", "overlap: discard delayed updates older than this many rounds")
     .opt("alpha", "1", "overlap: staleness decay exponent for 1/(1+s)^alpha weighting")
+    .opt("agg", "mean", "server aggregator: mean | buffered | trimmed_mean | median")
+    .opt("server-momentum", "0", "buffered: server momentum beta in [0, 1)")
+    .opt("buffer-k", "0", "buffered: updates per server-buffer flush (0 = every round)")
+    .opt("trim-frac", "0.1", "trimmed_mean: fraction trimmed from each tail per coordinate")
+    .opt("clip-norm", "0", "clip client update L2 norms before aggregating (0 = off)")
+    .opt("corrupt", "", "scenario: corrupt a client fraction's updates: noise | sign_flip")
+    .opt("corrupt-frac", "0.1", "scenario: fraction of clients corrupted")
+    .opt("flaky-boost", "0", "selection: weight boost for low-uptime clients (needs --trace)")
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("out", "", "CSV output path (empty = stdout summary only)")
     .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
     .opt("load-ckpt", "", "resume from a model checkpoint")
     .opt("save-ckpt", "", "write the final global model to this path")
     .flag("overlap", "async round overlap: quorum aggregation, staleness-weighted late updates")
+    .flag("adaptive-quorum", "overlap: adapt the quorum from the observed stale-discard rate")
     .flag("static-coreset", "§4.3 static input-space coresets (default: adaptive)")
     .flag("quiet", "suppress per-round progress lines")
 }
@@ -106,6 +115,88 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
             ov.alpha = a.get_f64("alpha");
         }
         ov.validate()?;
+    }
+    if a.has("adaptive-quorum") {
+        cfg.run.adaptive_quorum = true;
+    }
+    // Server aggregation policy: `--agg` selects, the knob flags
+    // parameterize; any explicit flag overrides a config file's [fl]
+    // keys, otherwise the file's policy stands.
+    let agg_given = explicit("agg", "mean")
+        || explicit("server-momentum", "0")
+        || explicit("buffer-k", "0")
+        || explicit("trim-frac", "0.1");
+    if !from_config || agg_given {
+        // Base policy: an explicit --agg wins; otherwise a config file's
+        // [fl] policy stands (so `--config exp.toml --buffer-k 10` tunes
+        // the file's buffered policy instead of resetting it).
+        let mut pol = if !from_config || explicit("agg", "mean") {
+            fedcore::agg::AggPolicy::parse(a.get("agg"))
+                .ok_or_else(|| anyhow!("unknown aggregation policy '{}'", a.get("agg")))?
+        } else {
+            cfg.run.aggregator
+        };
+        // A knob flag without --agg implies its policy, like the config
+        // file's knob keys do.
+        if pol == fedcore::agg::AggPolicy::Mean && !explicit("agg", "mean") {
+            if explicit("server-momentum", "0") || explicit("buffer-k", "0") {
+                pol = fedcore::agg::AggPolicy::Buffered { k: 0, momentum: 0.0 };
+            } else if explicit("trim-frac", "0.1") {
+                pol = fedcore::agg::AggPolicy::TrimmedMean { trim_frac: 0.1 };
+            }
+        }
+        // Explicit knob flags override; unset knobs keep the base
+        // policy's values (CLI defaults for a fresh --agg, the config
+        // file's values when tuning one).
+        match &mut pol {
+            fedcore::agg::AggPolicy::Buffered { k, momentum } => {
+                if explicit("buffer-k", "0") {
+                    *k = a.get_usize("buffer-k");
+                }
+                if explicit("server-momentum", "0") {
+                    *momentum = a.get_f64("server-momentum");
+                }
+            }
+            fedcore::agg::AggPolicy::TrimmedMean { trim_frac } => {
+                if explicit("trim-frac", "0.1") {
+                    *trim_frac = a.get_f64("trim-frac");
+                }
+            }
+            _ => {}
+        }
+        // A knob aimed at a different policy is a config bug, not a
+        // silent no-op.
+        let buffered_knob = explicit("server-momentum", "0") || explicit("buffer-k", "0");
+        if buffered_knob && !matches!(pol, fedcore::agg::AggPolicy::Buffered { .. }) {
+            return Err(anyhow!(
+                "--server-momentum/--buffer-k only apply to the buffered aggregator, got {}",
+                pol.label()
+            ));
+        }
+        if explicit("trim-frac", "0.1")
+            && !matches!(pol, fedcore::agg::AggPolicy::TrimmedMean { .. })
+        {
+            return Err(anyhow!(
+                "--trim-frac only applies to the trimmed_mean aggregator, got {}",
+                pol.label()
+            ));
+        }
+        pol.validate()?;
+        cfg.run.aggregator = pol;
+    }
+    if a.get_f64("clip-norm") > 0.0 {
+        cfg.run.clip_norm = Some(a.get_f64("clip-norm"));
+    }
+    if a.get_f64("flaky-boost") > 0.0 {
+        cfg.run.flaky_boost = a.get_f64("flaky-boost");
+    }
+    if !a.get("corrupt").is_empty() {
+        let kind = fedcore::scenario::CorruptionKind::parse(a.get("corrupt"))
+            .ok_or_else(|| anyhow!("unknown corruption kind '{}'", a.get("corrupt")))?;
+        let spec =
+            fedcore::scenario::CorruptionSpec::new(kind, a.get_f64("corrupt-frac"));
+        spec.validate()?;
+        cfg.run.corruption = Some(spec);
     }
     cfg.run.verbose = !a.has("quiet");
     if a.get_usize("rounds") > 0 {
@@ -174,10 +265,29 @@ fn cmd_run(a: &Args) -> Result<()> {
     }
     if let Some(ov) = &cfg.run.overlap {
         eprintln!(
-            "async overlap: quorum {:.0}% | max staleness {} rounds | alpha {:.2}",
+            "async overlap: quorum {:.0}% | max staleness {} rounds | alpha {:.2}{}",
             100.0 * ov.quorum,
             ov.max_staleness,
             ov.alpha,
+            if cfg.run.adaptive_quorum { " | adaptive" } else { "" },
+        );
+    }
+    if cfg.run.aggregator != fedcore::agg::AggPolicy::Mean || cfg.run.clip_norm.is_some() {
+        eprintln!(
+            "aggregation: {:?}{}",
+            cfg.run.aggregator,
+            cfg.run
+                .clip_norm
+                .map(|c| format!(" | clip norm {c}"))
+                .unwrap_or_default(),
+        );
+    }
+    if let Some(spec) = &cfg.run.corruption {
+        eprintln!(
+            "corruption: {} | {:.0}% of clients | seed {}",
+            spec.label(),
+            100.0 * spec.fraction,
+            spec.seed,
         );
     }
     let result = if !a.get("load-ckpt").is_empty() {
@@ -209,6 +319,10 @@ fn cmd_run(a: &Args) -> Result<()> {
             result.mean_normalized_tail_time(),
         );
     }
+    let (rejected, clipped) = result.agg_totals();
+    if rejected + clipped > 0 {
+        println!("aggregation: rejected {rejected} contribution-slots, clipped {clipped} updates");
+    }
     let out = a.get("out");
     if !out.is_empty() {
         result.write_csv(out)?;
@@ -235,12 +349,25 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         &rt.manifest().vocab,
         base.data_seed,
     ));
+    // Cross-run pool reuse: one sharded pool (and its compiled per-worker
+    // runtimes) serves every engine of the sweep. Results are
+    // bit-identical to per-engine pools (exec determinism contract).
+    let shared = fedcore::exec::sweep_pool(base.run.workers, rt.factory());
+    if let Some(pool) = &shared {
+        eprintln!(
+            "sweep: sharing one {}-worker pool across all strategies",
+            pool.workers()
+        );
+    }
     let mut results = Vec::new();
     for strategy in all_strategies(base.prox_mu) {
         let cfg = base.clone().with_strategy(strategy);
-        let engine = Engine::new(&rt, &ds, cfg.run.clone())?;
         eprintln!("--- {} ---", strategy.label());
-        results.push(engine.run()?);
+        let result = match &shared {
+            Some(pool) => Engine::with_executor(&rt, &ds, cfg.run.clone(), pool)?.run()?,
+            None => Engine::new(&rt, &ds, cfg.run.clone())?.run()?,
+        };
+        results.push(result);
     }
     println!(
         "\nTable-2 style summary — {} at {}% stragglers:",

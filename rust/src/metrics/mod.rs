@@ -49,6 +49,14 @@ pub struct RoundRecord {
     /// Sum of the staleness weights of the updates in `stale_folded`
     /// (each in (0, 1]; 0.0 when nothing was folded).
     pub stale_weight: f64,
+    /// Contribution-slots a robust aggregator excluded from this round's
+    /// aggregate per coordinate (2·g for trimmed-mean, n−1/n−2 for the
+    /// coordinate median; 0 for the mean/buffered paths — see
+    /// [`crate::agg::AggStats`]).
+    pub agg_rejected: usize,
+    /// Contributions whose update norm was clipped before aggregation
+    /// this round (0 without a clip-norm wrapper).
+    pub agg_clipped: usize,
     /// Clients that trained on a coreset this round (FedCore).
     pub coreset_clients: usize,
     /// Mean coreset compression ratio b/m over coreset clients (1.0 = none).
@@ -120,6 +128,14 @@ impl RunResult {
             .fold((0, 0), |(f, d), r| (f + r.stale_folded, d + r.stale_discarded))
     }
 
+    /// Run-wide aggregation-seam accounting: `(rejected, clipped)` totals
+    /// over all rounds (both 0 under the plain mean without clipping).
+    pub fn agg_totals(&self) -> (usize, usize) {
+        self.rounds
+            .iter()
+            .fold((0, 0), |(rej, cl), r| (rej + r.agg_rejected, cl + r.agg_clipped))
+    }
+
     /// All per-client normalized round times (Fig. 4 / Fig. 7 histograms).
     pub fn client_times_normalized(&self) -> Vec<f64> {
         self.rounds
@@ -136,12 +152,12 @@ impl RunResult {
     /// Serialize the round trace as CSV (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,sim_time,tail_time,sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,stale_discarded,stale_weight,coreset_clients,mean_compression\n",
+            "round,train_loss,test_loss,test_acc,sim_time,tail_time,sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,stale_discarded,stale_weight,agg_rejected,agg_clipped,coreset_clients,mean_compression\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{:.6},{},{:.4}",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{:.6},{},{},{},{:.4}",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -155,6 +171,8 @@ impl RunResult {
                 r.stale_folded,
                 r.stale_discarded,
                 r.stale_weight,
+                r.agg_rejected,
+                r.agg_clipped,
                 r.coreset_clients,
                 r.mean_compression
             );
@@ -287,6 +305,8 @@ mod tests {
             stale_folded: 0,
             stale_discarded: 0,
             stale_weight: 0.0,
+            agg_rejected: 0,
+            agg_clipped: 0,
             coreset_clients: 1,
             mean_compression: 0.5,
         }
@@ -324,10 +344,21 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("round,"));
-        assert_eq!(lines[1].split(',').count(), 15);
-        assert_eq!(lines[0].split(',').count(), 15);
+        assert_eq!(lines[1].split(',').count(), 17);
+        assert_eq!(lines[0].split(',').count(), 17);
         assert!(lines[0].contains("tail_time"));
         assert!(lines[0].contains("stale_folded"));
+        assert!(lines[0].contains("agg_rejected"));
+        assert!(lines[0].contains("agg_clipped"));
+    }
+
+    #[test]
+    fn agg_totals_view() {
+        let mut r = run();
+        r.rounds[0].agg_rejected = 2;
+        r.rounds[2].agg_rejected = 4;
+        r.rounds[1].agg_clipped = 3;
+        assert_eq!(r.agg_totals(), (6, 3));
     }
 
     #[test]

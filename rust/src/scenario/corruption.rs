@@ -1,0 +1,214 @@
+//! Corrupted-update scenarios: seeded per-client noise / sign-flip
+//! attacks on the round-end parameters clients return.
+//!
+//! The availability trace family models clients *disappearing*; this
+//! knob models clients *misbehaving* — the adversarial workload the
+//! robust aggregators in [`crate::agg`] exist for. A
+//! [`CorruptionSpec`] marks a deterministic fraction of the fleet as
+//! corrupted (per-client membership keyed by the spec's own seed, stable
+//! under fleet growth like trace generation) and perturbs each corrupted
+//! client's returned parameters before aggregation:
+//!
+//! * [`CorruptionKind::Noise`] — adds i.i.d. Gaussian noise of scale σ
+//!   to every coordinate (a faulty sensor / quantization blowup).
+//! * [`CorruptionKind::SignFlip`] — replaces the update `wᵢ − w` with
+//!   `−scale · (wᵢ − w)` (the classic model-poisoning sign-flip attack).
+//!
+//! Determinism: membership is a pure function of `(seed, client)`; the
+//! noise stream is split from `(seed, round, client)` — independent of
+//! the FL seed and of worker scheduling, so corrupted runs replay
+//! bit-for-bit and sign flips consume no RNG at all.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::rng::Rng;
+
+/// How a corrupted client's returned parameters are perturbed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CorruptionKind {
+    /// Add N(0, σ²) noise to every coordinate.
+    Noise {
+        /// Noise scale σ (simulated-parameter units).
+        sigma: f64,
+    },
+    /// Replace the update `wᵢ − w` with `−scale · (wᵢ − w)`.
+    SignFlip {
+        /// Flip magnitude (`1.0` = exact reflection around the global).
+        scale: f64,
+    },
+}
+
+impl CorruptionKind {
+    /// Parse a kind name with default parameters:
+    /// `noise` (σ = 1) | `sign_flip` (scale = 1).
+    pub fn parse(s: &str) -> Option<CorruptionKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "noise" => Some(CorruptionKind::Noise { sigma: 1.0 }),
+            "sign_flip" | "signflip" | "flip" => Some(CorruptionKind::SignFlip { scale: 1.0 }),
+            _ => None,
+        }
+    }
+
+    /// Canonical kind name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CorruptionKind::Noise { .. } => "noise",
+            CorruptionKind::SignFlip { .. } => "sign_flip",
+        }
+    }
+}
+
+/// A seeded corruption scenario: which fraction of the fleet misbehaves,
+/// and how.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CorruptionSpec {
+    /// The perturbation applied to corrupted clients' parameters.
+    pub kind: CorruptionKind,
+    /// Fraction of the fleet corrupted, in `[0, 1]`. Membership is
+    /// per-client Bernoulli(fraction) on the spec's own seed.
+    pub fraction: f64,
+    /// Root seed of the corruption streams (independent of the FL seed).
+    pub seed: u64,
+}
+
+impl CorruptionSpec {
+    /// A spec with the module defaults (seed 1).
+    pub fn new(kind: CorruptionKind, fraction: f64) -> CorruptionSpec {
+        CorruptionSpec { kind, fraction, seed: 1 }
+    }
+
+    /// Validate the parameters (fraction in `[0, 1]`, finite positive
+    /// scales).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.fraction >= 0.0 && self.fraction <= 1.0) {
+            return Err(anyhow!("corruption fraction must be in [0, 1], got {}", self.fraction));
+        }
+        match self.kind {
+            CorruptionKind::Noise { sigma } => {
+                if !(sigma >= 0.0 && sigma.is_finite()) {
+                    return Err(anyhow!(
+                        "corruption noise sigma must be finite and >= 0, got {sigma}"
+                    ));
+                }
+            }
+            CorruptionKind::SignFlip { scale } => {
+                if !(scale > 0.0 && scale.is_finite()) {
+                    return Err(anyhow!("sign-flip scale must be finite and > 0, got {scale}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Which of `n` clients are corrupted. Per-client membership is keyed
+    /// by `(seed, client index)`, so adding clients never flips existing
+    /// ones — the same stability rule trace generation follows.
+    pub fn corrupted_clients(&self, n: usize) -> Vec<bool> {
+        let root = Rng::new(self.seed);
+        (0..n)
+            .map(|i| {
+                let mut r = root.split(0xC0_44 ^ i as u64);
+                r.f64() < self.fraction
+            })
+            .collect()
+    }
+
+    /// Perturb one corrupted client's round-end parameters in place.
+    /// `global` is the round's broadcast model wᵣ (the reflection center
+    /// for sign flips). Deterministic per `(seed, round, client)`.
+    pub fn apply(&self, params: &mut [f32], global: &[f32], round: usize, client: usize) {
+        match self.kind {
+            CorruptionKind::Noise { sigma } => {
+                let mut rng =
+                    Rng::new(self.seed).split(0xBAD ^ ((round as u64) << 24) ^ client as u64);
+                for p in params.iter_mut() {
+                    *p = (*p as f64 + sigma * rng.normal()) as f32;
+                }
+            }
+            CorruptionKind::SignFlip { scale } => {
+                assert_eq!(params.len(), global.len(), "parameter dimension mismatch");
+                for (p, &g) in params.iter_mut().zip(global) {
+                    *p = (g as f64 - scale * (*p as f64 - g as f64)) as f32;
+                }
+            }
+        }
+    }
+
+    /// Canonical kind name (for reports).
+    pub fn label(&self) -> &'static str {
+        self.kind.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_validate() {
+        assert_eq!(CorruptionKind::parse("noise"), Some(CorruptionKind::Noise { sigma: 1.0 }));
+        assert_eq!(
+            CorruptionKind::parse("SIGN_FLIP"),
+            Some(CorruptionKind::SignFlip { scale: 1.0 })
+        );
+        assert_eq!(CorruptionKind::parse("nope"), None);
+        assert!(CorruptionSpec::new(CorruptionKind::Noise { sigma: 0.5 }, 0.2).validate().is_ok());
+        assert!(CorruptionSpec::new(CorruptionKind::Noise { sigma: -1.0 }, 0.2)
+            .validate()
+            .is_err());
+        assert!(CorruptionSpec::new(CorruptionKind::SignFlip { scale: 0.0 }, 0.2)
+            .validate()
+            .is_err());
+        assert!(CorruptionSpec::new(CorruptionKind::SignFlip { scale: 1.0 }, 1.5)
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn membership_is_deterministic_and_stable_under_growth() {
+        let spec = CorruptionSpec::new(CorruptionKind::SignFlip { scale: 1.0 }, 0.3);
+        let a = spec.corrupted_clients(20);
+        let b = spec.corrupted_clients(20);
+        assert_eq!(a, b);
+        // Growing the fleet never flips existing clients.
+        let bigger = spec.corrupted_clients(40);
+        assert_eq!(&bigger[..20], &a[..]);
+        // Edge fractions.
+        assert!(CorruptionSpec::new(spec.kind, 0.0)
+            .corrupted_clients(50)
+            .iter()
+            .all(|&c| !c));
+        assert!(CorruptionSpec::new(spec.kind, 1.0)
+            .corrupted_clients(50)
+            .iter()
+            .all(|&c| c));
+    }
+
+    #[test]
+    fn sign_flip_reflects_around_the_global() {
+        let spec = CorruptionSpec::new(CorruptionKind::SignFlip { scale: 1.0 }, 1.0);
+        let global = vec![1.0f32, -2.0, 0.5];
+        let mut params = vec![1.5f32, -2.5, 0.5];
+        spec.apply(&mut params, &global, 3, 7);
+        // w' − g = −(w − g): 1.5 → 0.5, −2.5 → −1.5, 0.5 → 0.5.
+        assert!((params[0] - 0.5).abs() < 1e-6);
+        assert!((params[1] + 1.5).abs() < 1e-6);
+        assert!((params[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noise_replays_per_round_and_client() {
+        let spec = CorruptionSpec::new(CorruptionKind::Noise { sigma: 0.5 }, 1.0);
+        let global = vec![0.0f32; 8];
+        let base = vec![1.0f32; 8];
+        let mut a = base.clone();
+        let mut b = base.clone();
+        spec.apply(&mut a, &global, 2, 5);
+        spec.apply(&mut b, &global, 2, 5);
+        assert_eq!(a, b, "same (seed, round, client) must replay exactly");
+        let mut c = base.clone();
+        spec.apply(&mut c, &global, 3, 5);
+        assert_ne!(a, c, "different rounds must draw different noise");
+        assert!(a.iter().zip(&base).any(|(x, y)| x != y), "sigma > 0 must perturb");
+    }
+}

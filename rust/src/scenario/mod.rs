@@ -1,7 +1,10 @@
-//! Trace-driven client availability scenarios.
+//! Trace-driven client availability scenarios — and corrupted-update
+//! adversaries ([`corruption`]).
 //!
 //! FedCore's fleet simulation ([`crate::sim`]) models *how fast* clients
-//! are; this module models *whether they are there at all*. An
+//! are; this module models *whether they are there at all* (availability
+//! traces) and *whether their updates can be trusted* (the corruption
+//! knob exercising [`crate::agg`]'s robust aggregators). An
 //! [`AvailabilityTrace`] maps simulated time to each client's
 //! online/offline state, either written out explicitly (interval lists in
 //! TOML/JSON — see `examples/traces/`) or generated from a parametric
@@ -28,9 +31,11 @@
 //! clients never perturbs existing schedules.
 
 pub mod churn;
+pub mod corruption;
 pub mod trace;
 
 pub use churn::ChurnModel;
+pub use corruption::{CorruptionKind, CorruptionSpec};
 pub use trace::{AvailabilityTrace, EdgePolicy};
 
 use std::path::Path;

@@ -210,6 +210,20 @@ impl AvailabilityTrace {
         }
     }
 
+    /// Client `i`'s uptime fraction over one trace horizon: total online
+    /// time divided by the horizon, in `[0, 1]`. Clients beyond the trace
+    /// count as always online (1.0). Time-independent, so
+    /// availability-aware selection policies (the flaky-client weight
+    /// boost in [`crate::fl::boost_flaky_weights`]) can precompute it
+    /// once per run.
+    pub fn uptime(&self, client: usize) -> f64 {
+        let Some(ivs) = self.clients.get(client) else {
+            return 1.0;
+        };
+        let on: f64 = ivs.iter().map(|&(s, e)| e - s).sum();
+        (on / self.horizon).clamp(0.0, 1.0)
+    }
+
     /// Indices of all trace clients online at time `t`, ascending.
     pub fn online_at(&self, t: f64) -> Vec<usize> {
         (0..self.clients.len()).filter(|&c| self.is_online(c, t)).collect()
@@ -429,5 +443,18 @@ mod tests {
         assert_eq!(t.remaining_online(0, 7.5), 0.5);
         assert_eq!(t.remaining_online(0, 9.0), 0.0, "between last interval and horizon");
         assert_eq!(t.remaining_online(0, 12.0), 0.0, "past a final-offline horizon");
+    }
+
+    #[test]
+    fn uptime_fraction_per_client() {
+        let t = trace(
+            vec![vec![(0.0, 4.0), (6.0, 8.0)], vec![], vec![(0.0, 10.0)]],
+            10.0,
+            EdgePolicy::Wrap,
+        );
+        assert!((t.uptime(0) - 0.6).abs() < 1e-12);
+        assert_eq!(t.uptime(1), 0.0, "never-online client");
+        assert_eq!(t.uptime(2), 1.0, "fully-online client");
+        assert_eq!(t.uptime(99), 1.0, "clients beyond the trace are always on");
     }
 }

@@ -56,7 +56,12 @@ pub fn fmt_ns(ns: f64) -> String {
 
 /// Run `f` repeatedly: a few warmup calls, then timed iterations until
 /// either `max_iters` or `budget` wall time is spent, whichever first.
-pub fn bench<T>(name: &str, max_iters: usize, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+pub fn bench<T>(
+    name: &str,
+    max_iters: usize,
+    budget: Duration,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
     for _ in 0..3.min(max_iters) {
         black_box(f());
     }
@@ -88,6 +93,40 @@ pub fn run_group(title: &str, benches: Vec<BenchResult>) {
     }
 }
 
+/// Provenance stamp for every `BENCH_*.json` output:
+/// `{seed, rounds, scale, git_sha}` — so bench trajectories stay
+/// comparable across PRs (same seed/rounds/scale ⇒ same workload; the
+/// sha names the code that produced the numbers). The sha comes from
+/// `GITHUB_SHA` in CI, `git rev-parse HEAD` locally, `"unknown"` when
+/// neither is available.
+pub fn provenance(seed: u64, rounds: usize, scale: f64) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let sha = std::env::var("GITHUB_SHA")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .or_else(git_head_sha)
+        .unwrap_or_else(|| "unknown".into());
+    Json::Obj(
+        [
+            ("seed".to_string(), Json::Num(seed as f64)),
+            ("rounds".to_string(), Json::Num(rounds as f64)),
+            ("scale".to_string(), Json::Num(scale)),
+            ("git_sha".to_string(), Json::Str(sha)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+fn git_head_sha() -> Option<String> {
+    let out = std::process::Command::new("git").args(["rev-parse", "HEAD"]).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let sha = String::from_utf8_lossy(&out.stdout).trim().to_string();
+    (!sha.is_empty()).then_some(sha)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +143,16 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn provenance_carries_the_workload_identity() {
+        let p = provenance(7, 14, 0.25);
+        assert_eq!(p.get("seed").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(p.get("rounds").and_then(|v| v.as_f64()), Some(14.0));
+        assert_eq!(p.get("scale").and_then(|v| v.as_f64()), Some(0.25));
+        let sha = p.get("git_sha").and_then(|v| v.as_str()).expect("sha present");
+        assert!(!sha.is_empty());
     }
 
     #[test]

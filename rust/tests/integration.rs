@@ -34,6 +34,7 @@ fn tiny_cfg(strategy: Strategy, rounds: usize) -> RunConfig {
         trace: None,
         overlap: None,
         verbose: false,
+        ..RunConfig::default()
     }
 }
 
@@ -283,6 +284,8 @@ fn checkpoint_resume_matches_model() {
         .expect("save");
     let ck = fedcore::fl::Checkpoint::load(&path).expect("load");
     assert_eq!(ck.params, r.final_params);
+    assert_eq!(ck.round, 3, "round must survive the round trip");
+    assert_eq!(ck.model, ds.model, "model name must survive the round trip");
     let resumed = engine.run_from(ck.params).expect("resume");
     // The resumed run starts from trained params: its first-round accuracy
     // must be in the converged regime, not back at chance (0.1), and within

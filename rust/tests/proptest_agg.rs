@@ -1,0 +1,468 @@
+//! Differential property suite for the pluggable aggregation subsystem
+//! (`agg/`; seeded runner in `util::prop` — offline build, no proptest
+//! crate, see docs/testing.md).
+//!
+//! Invariants:
+//! * `Mean` behind the trait is `aggregate_weighted`, **bit-for-bit**;
+//!   every degenerate policy (`Buffered{k=0, β=0}`, `TrimmedMean{0}`,
+//!   `NormClip{∞}`) reproduces it bitwise too — the algebraic half of
+//!   the refactor's equivalence gate.
+//! * The trimmed mean obeys its breakdown bound: with at least as many
+//!   values trimmed per tail as there are corrupted contributions, the
+//!   output stays inside the honest values' envelope per coordinate —
+//!   including against a seeded sign-flip from the corruption scenario.
+//! * The coordinate median is bitwise permutation-invariant; the trimmed
+//!   mean is permutation-invariant up to f64 summation order.
+//! * `Buffered` holds updates until its threshold, flushes exactly what
+//!   it holds, and replays bit-for-bit; `AdaptiveQuorum` stays within
+//!   `[floor, 1]` and moves in the discard rate's direction.
+//! * With a runtime (`make artifacts`): the degenerate `Buffered` engine
+//!   run equals the synchronous `Mean` engine bit-for-bit (all
+//!   `RoundRecord` fields via `to_bits` + CSV); momentum runs replay
+//!   from their seed; and the trimmed-mean engine survives the sign-flip
+//!   corruption scenario with real rejection accounting.
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::agg::{
+    aggregate_weighted, AdaptiveQuorum, AggPolicy, Aggregator, Buffered, CoordinateMedian, Mean,
+    NormClip, TrimmedMean,
+};
+use fedcore::data::{self, Benchmark};
+use fedcore::fl::{Engine, RunConfig, Strategy};
+use fedcore::scenario::{CorruptionKind, CorruptionSpec};
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn gen_locals(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| (0..dim).map(|_| rng.normal() as f32).collect()).collect()
+}
+
+fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+    v.iter().map(|x| x.as_slice()).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: dim {i}: {x} vs {y}");
+    }
+}
+
+// ---------- degenerate policies are the mean, bitwise ----------
+
+#[test]
+fn proptest_agg_degenerate_policies_are_bitwise_mean() {
+    check("agg-degenerate-bitwise", env_seed(0xA66B), env_cases(100), |rng, _| {
+        let n = 1 + rng.below(10);
+        let dim = 1 + rng.below(48);
+        let locals = gen_locals(rng, n, dim);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 1.0)).collect();
+        let current: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let want = aggregate_weighted(&refs(&locals), &weights).unwrap();
+
+        let (mean, _) = Mean.aggregate_round(&current, &refs(&locals), &weights);
+        assert_bits_eq(&want, &mean.unwrap(), "Mean via trait");
+
+        let (buf, stats) =
+            Buffered::new(0, 0.0).aggregate_round(&current, &refs(&locals), &weights);
+        assert_bits_eq(&want, &buf.unwrap(), "Buffered{k=0, β=0}");
+        assert_eq!(stats.buffered, 0);
+
+        let (trim, stats) =
+            TrimmedMean::new(0.0).aggregate_round(&current, &refs(&locals), &weights);
+        assert_bits_eq(&want, &trim.unwrap(), "TrimmedMean{0}");
+        assert_eq!(stats.rejected, 0);
+
+        let (clip, stats) = NormClip::new(f64::INFINITY, Mean)
+            .aggregate_round(&current, &refs(&locals), &weights);
+        assert_bits_eq(&want, &clip.unwrap(), "NormClip{∞}");
+        assert_eq!(stats.clipped, 0);
+    });
+}
+
+// ---------- trimmed-mean breakdown bound ----------
+
+#[test]
+fn proptest_agg_trimmed_mean_breakdown_bound() {
+    check("agg-trim-breakdown", env_seed(0x7B1B), env_cases(150), |rng, _| {
+        let honest = 3 + rng.below(8);
+        let bad = 1 + rng.below(2); // corrupted contributions
+        let dim = 1 + rng.below(16);
+        // Honest values in a known envelope; corrupted values arbitrary
+        // and huge in either direction.
+        let mut locals: Vec<Vec<f32>> = (0..honest)
+            .map(|_| (0..dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+            .collect();
+        for _ in 0..bad {
+            let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            locals.push(
+                (0..dim)
+                    .map(|_| (sign * rng.range_f64(100.0, 1e6)) as f32)
+                    .collect(),
+            );
+        }
+        let n = locals.len();
+        let weights = vec![1.0; n];
+        // Trim at least `bad` from each tail (but keep 2g < n).
+        let g = bad.min((n - 1) / 2);
+        let trim_frac = (g as f64 + 0.5) / n as f64;
+        let mut tm = TrimmedMean::new(trim_frac.min(0.49));
+        assert!(tm.trim_count(n) >= g.min((n - 1) / 2), "generator bug: trim too small");
+        let (out, stats) = tm.aggregate_round(&vec![0.0; dim], &refs(&locals), &weights);
+        let out = out.unwrap();
+        assert_eq!(stats.rejected, 2 * tm.trim_count(n));
+        for (j, &v) in out.iter().enumerate() {
+            let lo = (0..honest).map(|i| locals[i][j]).fold(f32::INFINITY, f32::min);
+            let hi = (0..honest).map(|i| locals[i][j]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                v >= lo - 1e-4 && v <= hi + 1e-4,
+                "coordinate {j}: trimmed mean {v} escaped honest envelope [{lo}, {hi}]"
+            );
+        }
+    });
+}
+
+/// The acceptance gate: a seeded sign-flipped client (driven through the
+/// actual scenario machinery, `CorruptionSpec::apply`) is provably
+/// discarded by the trimmed mean — the robust aggregate stays inside the
+/// honest envelope while the plain mean is dragged out of it.
+#[test]
+fn proptest_agg_trimmed_mean_discards_signflip_corruption() {
+    check("agg-trim-vs-signflip", env_seed(0x51F1), env_cases(100), |rng, case| {
+        let n = 4 + rng.below(6);
+        let dim = 1 + rng.below(12);
+        let global: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        // Honest clients: small positive steps from the global (updates
+        // in (0.1, 1.0) per coordinate — a strictly positive envelope).
+        let locals: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                global
+                    .iter()
+                    .map(|&g| (g as f64 + rng.range_f64(0.1, 1.0)) as f32)
+                    .collect()
+            })
+            .collect();
+        // One corrupted client: the scenario sign-flip reflects its
+        // update to a strictly negative step — outside the envelope.
+        let spec = CorruptionSpec {
+            kind: CorruptionKind::SignFlip { scale: 1.0 + rng.range_f64(0.0, 3.0) },
+            fraction: 1.0,
+            seed: rng.next_u64(),
+        };
+        let mut corrupted = locals.clone();
+        let victim = rng.below(n);
+        spec.apply(&mut corrupted[victim], &global, case, victim);
+
+        let all = refs(&corrupted);
+        let weights = vec![1.0; n];
+        // trim_frac a hair above 1/n so ⌊trim_frac·n⌋ = 1 survives f64
+        // rounding: exactly the flipped value goes from the low tail.
+        let (robust, stats) =
+            TrimmedMean::new(1.2 / n as f64).aggregate_round(&global, &all, &weights);
+        let robust = robust.unwrap();
+        assert!(stats.rejected >= 2, "trim must reject the flipped value per coordinate");
+        let (mean, _) = Mean.aggregate_round(&global, &all, &weights);
+        let mean = mean.unwrap();
+        for j in 0..dim {
+            let lo = (0..n)
+                .filter(|&i| i != victim)
+                .map(|i| corrupted[i][j])
+                .fold(f32::INFINITY, f32::min);
+            let hi = (0..n)
+                .filter(|&i| i != victim)
+                .map(|i| corrupted[i][j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            // The flipped update landed strictly outside the honest
+            // envelope (a strictly negative step vs strictly positive
+            // honest steps)…
+            assert!(
+                corrupted[victim][j] < lo,
+                "coordinate {j}: generator bug — the flip stayed inside the envelope"
+            );
+            // …and the trimmed mean provably discards it: the robust
+            // aggregate stays inside the honest envelope.
+            assert!(
+                robust[j] >= lo - 1e-4 && robust[j] <= hi + 1e-4,
+                "coordinate {j}: trimmed mean {} did not discard the sign-flip",
+                robust[j]
+            );
+        }
+        // The plain mean, by contrast, gives the outlier full weight —
+        // it cannot coincide with the robust aggregate.
+        assert_ne!(mean, robust, "plain mean unexpectedly matched the trimmed mean");
+    });
+}
+
+// ---------- permutation invariance ----------
+
+#[test]
+fn proptest_agg_median_is_bitwise_permutation_invariant() {
+    check("agg-median-perm", env_seed(0x3ED1), env_cases(100), |rng, _| {
+        let n = 1 + rng.below(9);
+        let dim = 1 + rng.below(24);
+        let locals = gen_locals(rng, n, dim);
+        let (a, _) =
+            CoordinateMedian.aggregate_round(&vec![0.0; dim], &refs(&locals), &vec![1.0; n]);
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let shuffled: Vec<Vec<f32>> = perm.iter().map(|&i| locals[i].clone()).collect();
+        let (b, _) =
+            CoordinateMedian.aggregate_round(&vec![0.0; dim], &refs(&shuffled), &vec![1.0; n]);
+        assert_bits_eq(&a.unwrap(), &b.unwrap(), "median permutation");
+    });
+}
+
+#[test]
+fn proptest_agg_trimmed_mean_is_permutation_invariant_up_to_rounding() {
+    check("agg-trim-perm", env_seed(0x7E21), env_cases(100), |rng, _| {
+        let n = 3 + rng.below(8);
+        let dim = 1 + rng.below(24);
+        let locals = gen_locals(rng, n, dim);
+        let weights = vec![1.0; n];
+        let mut tm = TrimmedMean::new(rng.range_f64(0.05, 0.4));
+        let (a, _) = tm.aggregate_round(&vec![0.0; dim], &refs(&locals), &weights);
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let shuffled: Vec<Vec<f32>> = perm.iter().map(|&i| locals[i].clone()).collect();
+        let (b, _) = tm.aggregate_round(&vec![0.0; dim], &refs(&shuffled), &weights);
+        for (x, y) in a.unwrap().iter().zip(&b.unwrap()) {
+            assert!(
+                (x - y).abs() <= 1e-5 * (1.0 + x.abs()),
+                "trimmed mean not permutation-invariant: {x} vs {y}"
+            );
+        }
+    });
+}
+
+// ---------- buffered protocol ----------
+
+#[test]
+fn proptest_agg_buffered_holds_flushes_and_replays() {
+    check("agg-buffered-protocol", env_seed(0xB0FF), env_cases(100), |rng, _| {
+        let dim = 1 + rng.below(16);
+        let k = 2 + rng.below(6);
+        let momentum = [0.0, 0.5][rng.below(2)];
+        let rounds = 2 + rng.below(6);
+        let per_round: Vec<Vec<Vec<f32>>> =
+            (0..rounds).map(|_| gen_locals(rng, 1 + rng.below(3), dim)).collect();
+
+        let drive = |k: usize| {
+            let mut buf = Buffered::new(k, momentum);
+            let mut params: Vec<f32> = vec![0.0; dim];
+            let mut applied = 0usize;
+            let mut held = 0usize;
+            for contributions in &per_round {
+                let w = vec![1.0; contributions.len()];
+                let (out, stats) = buf.aggregate_round(&params, &refs(contributions), &w);
+                held += contributions.len();
+                if let Some(p) = out {
+                    assert!(held >= k.max(1), "buffer applied below its threshold");
+                    params = p;
+                    applied += held;
+                    held = 0;
+                } else {
+                    assert_eq!(stats.buffered, held, "buffered count out of sync");
+                }
+            }
+            if let Some(p) = buf.flush(&params) {
+                params = p;
+                applied += held;
+                held = 0;
+            }
+            assert_eq!(held, 0, "flush must drain the buffer");
+            (params, applied)
+        };
+
+        let (a, applied_a) = drive(k);
+        let (b, applied_b) = drive(k);
+        assert_bits_eq(&a, &b, "buffered replay");
+        assert_eq!(applied_a, applied_b);
+        let total: usize = per_round.iter().map(|c| c.len()).sum();
+        assert_eq!(applied_a, total, "every buffered update must apply exactly once");
+    });
+}
+
+// ---------- adaptive quorum ----------
+
+#[test]
+fn proptest_agg_adaptive_quorum_bounded_and_directional() {
+    check("agg-adaptive-quorum", env_seed(0xADA7), env_cases(150), |rng, _| {
+        let floor = rng.range_f64(0.1, 0.9);
+        let mut a = AdaptiveQuorum::new(floor);
+        for _ in 0..rng.below(40) {
+            let before = a.quorum();
+            let folded = rng.below(5);
+            let discarded = rng.below(5);
+            a.observe(folded, discarded);
+            let q = a.quorum();
+            assert!(q >= floor - 1e-12 && q <= 1.0, "quorum {q} left [floor {floor}, 1]");
+            let resolved = folded + discarded;
+            if resolved > 0 && (discarded as f64 / resolved as f64) > 0.1 {
+                assert!(q >= before, "discard-heavy round must not relax the quorum");
+            } else {
+                assert!(q <= before, "clean round must not tighten the quorum");
+            }
+        }
+    });
+}
+
+// ---------- corruption scenario determinism ----------
+
+#[test]
+fn proptest_agg_corruption_membership_and_noise_replay() {
+    check("agg-corruption-replay", env_seed(0xC0DE), env_cases(100), |rng, case| {
+        let n = 1 + rng.below(40);
+        let frac = rng.range_f64(0.0, 1.0);
+        let spec = CorruptionSpec {
+            kind: CorruptionKind::Noise { sigma: rng.range_f64(0.1, 2.0) },
+            fraction: frac,
+            seed: rng.next_u64(),
+        };
+        let a = spec.corrupted_clients(n);
+        assert_eq!(a, spec.corrupted_clients(n), "membership must replay");
+        // Membership is stable under fleet growth.
+        let grown = spec.corrupted_clients(n + 5);
+        assert_eq!(&grown[..n], &a[..]);
+        // Noise replays per (round, client) and perturbs.
+        let dim = 1 + rng.below(16);
+        let global = vec![0.0f32; dim];
+        let base: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let mut x = base.clone();
+        let mut y = base.clone();
+        spec.apply(&mut x, &global, case, 3);
+        spec.apply(&mut y, &global, case, 3);
+        assert_bits_eq(&x, &y, "noise replay");
+        assert!(x.iter().zip(&base).any(|(p, q)| p != q), "noise must perturb");
+    });
+}
+
+// ---------- engine differentials (runtime-backed) ----------
+
+fn runtime_or_skip() -> Option<fedcore::runtime::Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+fn engine_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [Strategy::FedAvg, Strategy::FedCore];
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 2 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 3 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: 30.0,
+        seed: rng.next_u64(),
+        eval_every: 1,
+        eval_cap: 128,
+        ..RunConfig::default()
+    }
+}
+
+fn assert_rounds_bitwise_equal(a: &fedcore::metrics::RunResult, b: &fedcore::metrics::RunResult) {
+    assert_eq!(a.final_params, b.final_params, "final params diverged");
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {r} train_loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "round {r} test_loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {r} test_acc");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "round {r} sim_time");
+        assert_eq!(x.tail_time.to_bits(), y.tail_time.to_bits(), "round {r} tail_time");
+        assert_eq!(x.client_times, y.client_times, "round {r} client_times");
+        assert_eq!(x.dropped, y.dropped, "round {r} dropped");
+        assert_eq!(x.agg_rejected, y.agg_rejected, "round {r} agg_rejected");
+        assert_eq!(x.agg_clipped, y.agg_clipped, "round {r} agg_clipped");
+        assert_eq!(x.coreset_clients, y.coreset_clients, "round {r} coreset_clients");
+    }
+    assert_eq!(a.to_csv(), b.to_csv(), "CSV serializations diverged");
+}
+
+/// The refactor gate: `Buffered{k=0, β=0}` through the engine equals the
+/// `Mean` engine bit-for-bit (all round fields + CSV) — i.e. the
+/// pre-refactor aggregation seam moved without moving a bit.
+#[test]
+fn proptest_agg_degenerate_buffered_equals_mean_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("agg-engine-degenerate", env_seed(0xDEB0), env_cases(4), |rng, case| {
+        let mean_cfg = engine_cfg(rng, case);
+        let mut buf_cfg = mean_cfg.clone();
+        buf_cfg.aggregator = AggPolicy::Buffered { k: 0, momentum: 0.0 };
+        let mut trim_cfg = mean_cfg.clone();
+        trim_cfg.aggregator = AggPolicy::TrimmedMean { trim_frac: 0.0 };
+
+        let mean = Engine::new(&rt, &ds, mean_cfg).unwrap().run().unwrap();
+        let buffered = Engine::new(&rt, &ds, buf_cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&mean, &buffered);
+        let trimmed = Engine::new(&rt, &ds, trim_cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&mean, &trimmed);
+    });
+}
+
+/// Momentum runs replay bit-for-bit from their seed (the buffered state
+/// is a pure function of the contribution sequence).
+#[test]
+fn proptest_agg_momentum_run_replays_from_seed() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("agg-momentum-replay", env_seed(0x3E41), env_cases(3), |rng, case| {
+        let mut cfg = engine_cfg(rng, case);
+        cfg.aggregator =
+            AggPolicy::Buffered { k: rng.below(3), momentum: rng.range_f64(0.1, 0.9) };
+        let a = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        let b = Engine::new(&rt, &ds, cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&a, &b);
+    });
+}
+
+/// The corruption scenario bites through the engine, the robust policy
+/// does real rejection work under it, and corrupted runs replay.
+#[test]
+fn proptest_agg_engine_signflip_scenario_exercises_robust_path() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("agg-engine-corruption", env_seed(0x5CAB), env_cases(3), |rng, case| {
+        let clean_cfg = engine_cfg(rng, case);
+        let spec = CorruptionSpec {
+            kind: CorruptionKind::SignFlip { scale: 2.0 },
+            fraction: 0.5,
+            seed: 5,
+        };
+        let mut mean_cfg = clean_cfg.clone();
+        mean_cfg.corruption = Some(spec);
+        let mut robust_cfg = mean_cfg.clone();
+        robust_cfg.aggregator = AggPolicy::TrimmedMean { trim_frac: 0.34 };
+
+        let clean = Engine::new(&rt, &ds, clean_cfg).unwrap().run().unwrap();
+        let corrupted = Engine::new(&rt, &ds, mean_cfg.clone()).unwrap().run().unwrap();
+        assert_ne!(
+            clean.final_params, corrupted.final_params,
+            "sign-flip corruption must perturb the mean engine"
+        );
+        let robust = Engine::new(&rt, &ds, robust_cfg.clone()).unwrap().run().unwrap();
+        let (rejected, _) = robust.agg_totals();
+        assert!(rejected > 0, "trimmed mean did no rejection work under corruption");
+        // Corrupted runs replay bit-for-bit (membership + noise streams
+        // are pure functions of the spec).
+        let again = Engine::new(&rt, &ds, robust_cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&robust, &again);
+    });
+}

@@ -152,6 +152,7 @@ fn proptest_exec_sharded_matches_sequential() {
             trace: None,
             overlap: None,
             verbose: false,
+            ..RunConfig::default()
         };
         let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
 
@@ -208,6 +209,7 @@ fn proptest_exec_engine_workers_setting_matches_explicit_executor() {
         trace: None,
         overlap: None,
         verbose: false,
+        ..RunConfig::default()
     };
     // `workers: N` in the config must behave exactly like handing the
     // engine a Sharded executor of N workers.
@@ -223,5 +225,61 @@ fn proptest_exec_engine_workers_setting_matches_explicit_executor() {
         assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
         assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
         assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits());
+    }
+}
+
+/// Cross-run pool reuse (ROADMAP): one shared `Sharded` pool driving a
+/// whole sweep of engines — via the `&pool` executor impl — must produce
+/// results bit-identical to building a fresh pool per engine. This is
+/// what lets `expt::run_cell` and the CLI sweep compile each worker's
+/// runtime once for all strategies.
+#[test]
+fn proptest_exec_shared_pool_matches_per_engine_pools() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 0.5, beta: 0.5 },
+        0.12,
+        &rt.manifest().vocab,
+        13,
+    ));
+    let strategies = [Strategy::FedAvg, Strategy::FedCore, Strategy::FedAvgDS];
+    let cfg_for = |strategy| RunConfig {
+        strategy,
+        rounds: 2,
+        epochs: 2,
+        clients_per_round: 4,
+        lr: 0.01,
+        straggler_pct: 30.0,
+        seed: 23,
+        eval_every: 1,
+        eval_cap: 128,
+        ..RunConfig::default()
+    };
+    // One pool, three engines — the sweep shape.
+    let pool = Sharded::new(3, rt.factory());
+    let shared: Vec<_> = strategies
+        .iter()
+        .map(|&s| {
+            Engine::with_executor(&rt, &ds, cfg_for(s), &pool).unwrap().run().unwrap()
+        })
+        .collect();
+    // Fresh pool per engine — the old per-engine behaviour.
+    for (strategy, a) in strategies.iter().zip(&shared) {
+        let b = Engine::with_executor(&rt, &ds, cfg_for(*strategy), Sharded::new(3, rt.factory()))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(
+            a.final_params, b.final_params,
+            "{}: shared pool diverged from per-engine pool",
+            a.strategy
+        );
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+            assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "round {}", x.round);
+            assert_eq!(x.client_times, y.client_times, "round {}", x.round);
+        }
+        assert_eq!(a.to_csv(), b.to_csv(), "{}: CSV diverged", a.strategy);
     }
 }

@@ -213,6 +213,7 @@ fn base_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         trace: None,
         overlap: None,
         verbose: false,
+        ..RunConfig::default()
     }
 }
 

@@ -216,6 +216,7 @@ fn churn_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         )),
         overlap: None,
         verbose: false,
+        ..RunConfig::default()
     }
 }
 

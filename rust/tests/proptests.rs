@@ -386,6 +386,84 @@ fn prop_svg_never_emits_nan_and_stays_well_formed() {
     });
 }
 
+// ---------- checkpoint persistence ----------
+
+/// Save/load round-trip: params bit-identical (via `to_bits`, so −0.0,
+/// subnormals and extreme values survive), model name and round
+/// preserved, for random sizes including the empty vector.
+#[test]
+fn proptest_checkpoint_roundtrip_is_bit_identical() {
+    use fedcore::fl::Checkpoint;
+    use fedcore::util::prop::{env_cases, env_seed};
+    check("checkpoint-roundtrip", env_seed(0xC4E5), env_cases(50), |rng, case| {
+        let models = ["logreg", "mnist", "shake"];
+        let model = models[case % models.len()];
+        let round = rng.next_u64();
+        let n = rng.below(256);
+        let mut params: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        // Salt with the awkward values a plain normal draw never hits.
+        for (i, v) in [0.0f32, -0.0, f32::MIN_POSITIVE, f32::MAX, -1.0e-40].iter().enumerate() {
+            if n > i {
+                params[i] = *v;
+            }
+        }
+        let path = std::env::temp_dir().join(format!(
+            "fedcore_prop_ckpt_{}_{case}",
+            std::process::id()
+        ));
+        let ck = Checkpoint::new(model, round, params);
+        ck.save(&path).expect("save");
+        let back = Checkpoint::load(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.model, model, "model name must survive the round trip");
+        assert_eq!(back.round, round, "round must survive the round trip");
+        assert_eq!(back.params.len(), ck.params.len());
+        for (i, (a, b)) in ck.params.iter().zip(&back.params).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "param {i} changed bits: {a} vs {b}");
+        }
+    });
+}
+
+/// Corrupt-file error path: flipping any byte of the parameter payload
+/// (or the stored checksum) makes `load` fail loudly; truncation too.
+#[test]
+fn proptest_checkpoint_corruption_is_detected() {
+    use fedcore::fl::Checkpoint;
+    use fedcore::util::prop::{env_cases, env_seed};
+    check("checkpoint-corruption", env_seed(0xC4E6), env_cases(50), |rng, case| {
+        let n = 1 + rng.below(128);
+        let params: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let model = "logreg";
+        let path = std::env::temp_dir().join(format!(
+            "fedcore_prop_ckpt_bad_{}_{case}",
+            std::process::id()
+        ));
+        Checkpoint::new(model, 3, params).save(&path).expect("save");
+        let mut bytes = std::fs::read(&path).expect("read");
+        // Header layout: magic(4) version(4) name_len(8) name round(8)
+        // count(8); everything after is params*4 + checksum(8) — the
+        // checksummed region, where any single-byte flip must be caught.
+        let payload_start = 4 + 4 + 8 + model.len() + 8 + 8;
+        if rng.below(2) == 0 {
+            let idx = payload_start + rng.below(bytes.len() - payload_start);
+            bytes[idx] ^= 0x40;
+            std::fs::write(&path, &bytes).expect("write");
+            assert!(
+                Checkpoint::load(&path).is_err(),
+                "flipped byte {idx} of {} went undetected",
+                bytes.len()
+            );
+        } else {
+            // Truncation (always inside the checksummed tail).
+            let keep = payload_start + rng.below(bytes.len() - payload_start);
+            bytes.truncate(keep);
+            std::fs::write(&path, &bytes).expect("write");
+            assert!(Checkpoint::load(&path).is_err(), "truncation to {keep} went undetected");
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
 // ---------- dataset generators ----------
 
 #[test]

@@ -120,6 +120,10 @@ impl ExperimentConfig {
         if let Some(v) = usize_of("workers") {
             cfg.run.workers = v;
         }
+        if let Some(v) = doc.get("fl", "dispatch").and_then(|v| v.as_str()) {
+            cfg.run.dispatch = crate::exec::DispatchPolicy::parse(v)
+                .ok_or_else(|| anyhow!("unknown dispatch policy '{v}'"))?;
+        }
         if let Some(v) = doc.get("fl", "lr").and_then(|v| v.as_f64()) {
             cfg.run.lr = v as f32;
         }
@@ -356,6 +360,7 @@ lr = 0.01
 straggler_pct = 10.0
 coreset_method = "pam"
 workers = 3
+dispatch = "work_stealing"
 "#;
         let cfg = ExperimentConfig::from_toml(text).unwrap();
         assert_eq!(cfg.benchmark, Benchmark::Synthetic { alpha: 0.5, beta: 0.5 });
@@ -366,6 +371,21 @@ workers = 3
         assert_eq!(cfg.run.straggler_pct, 10.0);
         assert_eq!(cfg.run.coreset_method, Method::Pam);
         assert_eq!(cfg.run.workers, 3);
+        assert_eq!(cfg.run.dispatch, crate::exec::DispatchPolicy::WorkStealing);
+    }
+
+    #[test]
+    fn dispatch_key_defaults_and_rejects_unknowns() {
+        use crate::exec::DispatchPolicy;
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert_eq!(plain.run.dispatch, DispatchPolicy::RoundRobin);
+        let rr = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ndispatch = \"rr\"\n";
+        assert_eq!(
+            ExperimentConfig::from_toml(rr).unwrap().run.dispatch,
+            DispatchPolicy::RoundRobin
+        );
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ndispatch = \"lifo\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,569 @@
+//! Deterministic dispatch scheduling: which worker runs which job,
+//! decided in *simulated* time on the coordinator.
+//!
+//! Round-robin dealing (the historical policy) is deterministic but
+//! imbalanced: one heavy client plan — the same system-heterogeneity
+//! pathology FedCore attacks at the protocol level — idles every other
+//! worker for the tail of the round. Classic work stealing fixes the
+//! imbalance by letting idle threads race for queued work, but racing
+//! real threads would make worker placement (and any schedule ledger)
+//! nondeterministic. This module does neither: it **simulates** a
+//! work-stealing pool in virtual time from the jobs' deterministic
+//! simulated costs ([`crate::fl::LocalPlan::sim_time`]), producing an
+//! explicit job → worker [`Schedule`] that the real pool then follows.
+//! Placement, steal counts, and the [`ScheduleTrace`] ledger are pure
+//! functions of `(policy, costs, workers)` — bit-replayable from the
+//! run's seed — while the engine's order-preserving reduce keeps model
+//! outputs bit-identical regardless of policy (ARCHITECTURE.md
+//! determinism rule 6; enforced by `rust/tests/proptest_dispatch.rs`).
+//!
+//! The work-stealing simulation: jobs are dealt round-robin into
+//! per-worker home deques (so a homogeneous round reproduces round-robin
+//! placement exactly, steals = 0). Workers claim in virtual time — the
+//! worker with the smallest free-time (ties: smallest id) pops the front
+//! of its own deque; a worker whose deque is empty steals the **back**
+//! of the richest victim's deque (ties: smallest victim id). Every claim
+//! starts a job no later than its round-robin start would have been, so
+//! the work-stealing makespan never exceeds the round-robin makespan.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// How the sharded executor deals a batch of jobs to its workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Deal job `i` to worker `i % workers` (the historical default;
+    /// deterministic, and balanced only when job costs are similar).
+    #[default]
+    RoundRobin,
+    /// Deterministic work stealing: follow the virtual-time simulation
+    /// of a stealing pool over the jobs' simulated costs (module docs).
+    WorkStealing,
+}
+
+impl DispatchPolicy {
+    /// Parse a policy name (`round_robin` | `work_stealing`, with `rr` /
+    /// `ws` shorthands; case-insensitive, `-`/`_` ignored).
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s.trim().to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "roundrobin" | "rr" => Some(DispatchPolicy::RoundRobin),
+            "workstealing" | "steal" | "ws" => Some(DispatchPolicy::WorkStealing),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (`"round_robin"` / `"work_stealing"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round_robin",
+            DispatchPolicy::WorkStealing => "work_stealing",
+        }
+    }
+
+    /// The `FEDCORE_DISPATCH` environment override, falling back to the
+    /// default ([`DispatchPolicy::RoundRobin`]) when unset or
+    /// unparseable. Read by the bench/experiment harness
+    /// ([`crate::expt`]) and the CLI's default resolution.
+    pub fn from_env() -> DispatchPolicy {
+        std::env::var("FEDCORE_DISPATCH")
+            .ok()
+            .and_then(|v| DispatchPolicy::parse(&v))
+            .unwrap_or_default()
+    }
+}
+
+/// One batch's deterministic dispatch schedule: per-job placement and
+/// virtual-time bounds, plus per-worker load accounting. Produced by
+/// [`plan_schedule`]; followed verbatim by the sharded pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// Worker count the schedule was planned for.
+    pub workers: usize,
+    /// `assignment[i]` = the worker that runs job `i`.
+    pub assignment: Vec<usize>,
+    /// Virtual start time of each job (seconds of simulated cost).
+    pub start: Vec<f64>,
+    /// Virtual end time of each job (`start[i] + cost[i]`).
+    pub end: Vec<f64>,
+    /// `stolen[i]` = job `i` ran on a worker other than its round-robin
+    /// home `i % workers` (always `false` under round-robin).
+    pub stolen: Vec<bool>,
+    /// Simulated busy seconds per worker (sum of its jobs' costs).
+    pub worker_busy: Vec<f64>,
+    /// Virtual completion time of the batch: `max` over workers of their
+    /// last job's end (`0.0` for an empty batch).
+    pub makespan: f64,
+}
+
+impl Schedule {
+    /// Jobs that ran away from their round-robin home worker.
+    pub fn steals(&self) -> usize {
+        self.stolen.iter().filter(|&&s| s).count()
+    }
+
+    /// Total simulated busy seconds across all workers.
+    pub fn busy_seconds(&self) -> f64 {
+        self.worker_busy.iter().sum()
+    }
+
+    /// Total simulated worker-seconds the batch occupied:
+    /// `workers × makespan`.
+    pub fn capacity_seconds(&self) -> f64 {
+        self.stats().capacity_seconds()
+    }
+
+    /// Simulated idle worker-seconds: capacity minus busy (clamped at 0
+    /// against rounding).
+    pub fn idle_seconds(&self) -> f64 {
+        self.stats().idle_seconds()
+    }
+
+    /// Fraction of the batch's worker-seconds spent busy (`1.0` for an
+    /// empty batch).
+    pub fn utilization(&self) -> f64 {
+        self.stats().utilization()
+    }
+
+    /// Condense into the per-batch [`DispatchStats`] the engine records.
+    pub fn stats(&self) -> DispatchStats {
+        DispatchStats {
+            workers: self.workers,
+            jobs: self.assignment.len(),
+            steals: self.steals(),
+            busy_seconds: self.busy_seconds(),
+            makespan: self.makespan,
+        }
+    }
+}
+
+/// Condensed accounting of one dispatch batch — what the engine records
+/// per round ([`crate::metrics::RoundRecord`]'s `steal_count` /
+/// `worker_idle`) and [`crate::sim::SimClock`] accumulates for run-level
+/// utilization.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DispatchStats {
+    /// Worker count the batch was scheduled over (0 only for the
+    /// trait-default stats of an executor without dispatch accounting).
+    pub workers: usize,
+    /// Jobs in the batch.
+    pub jobs: usize,
+    /// Jobs that ran away from their round-robin home worker.
+    pub steals: usize,
+    /// Total simulated busy seconds across workers.
+    pub busy_seconds: f64,
+    /// Virtual completion time of the batch.
+    pub makespan: f64,
+}
+
+impl DispatchStats {
+    /// Total simulated worker-seconds: `workers × makespan`.
+    pub fn capacity_seconds(&self) -> f64 {
+        self.workers as f64 * self.makespan
+    }
+
+    /// Simulated idle worker-seconds (capacity minus busy, clamped ≥ 0).
+    pub fn idle_seconds(&self) -> f64 {
+        (self.capacity_seconds() - self.busy_seconds).max(0.0)
+    }
+
+    /// Busy fraction of the batch's worker-seconds (`1.0` when empty).
+    pub fn utilization(&self) -> f64 {
+        let cap = self.capacity_seconds();
+        if cap <= 0.0 {
+            return 1.0;
+        }
+        self.busy_seconds / cap
+    }
+}
+
+/// Plan one batch's dispatch schedule from the jobs' simulated costs.
+/// Pure and deterministic: the same `(policy, costs, workers)` always
+/// produces the bit-identical [`Schedule`], so schedule traces replay
+/// from the run's seed. Costs must be finite and non-negative.
+pub fn plan_schedule(policy: DispatchPolicy, costs: &[f64], workers: usize) -> Schedule {
+    assert!(workers >= 1, "dispatch needs at least one worker");
+    debug_assert!(costs.iter().all(|c| c.is_finite() && *c >= 0.0), "job costs must be finite");
+    let n = costs.len();
+    let mut assignment = vec![0usize; n];
+    let mut start = vec![0.0f64; n];
+    let mut end = vec![0.0f64; n];
+    let mut stolen = vec![false; n];
+    let mut busy = vec![0.0f64; workers];
+    let mut free = vec![0.0f64; workers];
+    let mut claim = |idx: usize, w: usize, free: &mut [f64], busy: &mut [f64]| {
+        assignment[idx] = w;
+        stolen[idx] = w != idx % workers;
+        start[idx] = free[w];
+        end[idx] = free[w] + costs[idx];
+        free[w] = end[idx];
+        busy[w] += costs[idx];
+    };
+    match policy {
+        DispatchPolicy::RoundRobin => {
+            for idx in 0..n {
+                claim(idx, idx % workers, &mut free, &mut busy);
+            }
+        }
+        DispatchPolicy::WorkStealing => {
+            // Home deques: the round-robin deal, so a balanced batch
+            // reproduces round-robin placement exactly (zero steals).
+            let mut deques: Vec<VecDeque<usize>> = vec![VecDeque::new(); workers];
+            for idx in 0..n {
+                deques[idx % workers].push_back(idx);
+            }
+            let mut active = vec![true; workers];
+            let mut remaining = n;
+            while remaining > 0 {
+                // The next claimant: smallest virtual free-time among
+                // workers still in the game, ties broken by worker id.
+                let w = (0..workers)
+                    .filter(|&w| active[w])
+                    .min_by(|&a, &b| {
+                        free[a]
+                            .partial_cmp(&free[b])
+                            .expect("finite virtual times")
+                            .then(a.cmp(&b))
+                    })
+                    .expect("a worker stays active while jobs remain");
+                if let Some(idx) = deques[w].pop_front() {
+                    claim(idx, w, &mut free, &mut busy);
+                    remaining -= 1;
+                    continue;
+                }
+                // Own deque empty: steal the *back* (most recently dealt
+                // job) of the richest victim; ties pick the smallest id.
+                let victim = (0..workers)
+                    .filter(|&v| !deques[v].is_empty())
+                    .max_by(|&a, &b| deques[a].len().cmp(&deques[b].len()).then(b.cmp(&a)));
+                match victim {
+                    Some(v) => {
+                        let idx = deques[v].pop_back().expect("victim deque non-empty");
+                        claim(idx, w, &mut free, &mut busy);
+                        remaining -= 1;
+                    }
+                    // Nothing left anywhere: this worker idles out.
+                    None => active[w] = false,
+                }
+            }
+        }
+    }
+    let makespan = free.iter().copied().fold(0.0f64, f64::max);
+    Schedule { workers, assignment, start, end, stolen, worker_busy: busy, makespan }
+}
+
+/// What kind of jobs a dispatch batch carried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// One selected client's local work ([`crate::exec::ClientJob`]).
+    Client,
+    /// One test-set evaluation batch ([`crate::exec::EvalJob`]).
+    Eval,
+}
+
+/// One job's entry in the schedule ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleEntry {
+    /// Client-dispatch sequence number: with one client batch per engine
+    /// round (the synchronous and overlapped loops both dispatch once),
+    /// this is the engine's round index. Eval batches carry the round of
+    /// the preceding client batch.
+    pub round: usize,
+    /// Client or eval batch.
+    pub kind: JobKind,
+    /// The job's index within its batch (= its slot in the
+    /// order-preserving reduce).
+    pub job_idx: usize,
+    /// The worker the schedule placed this job on.
+    pub worker: usize,
+    /// Cumulative stolen jobs within this batch, up to and including
+    /// this job (entries are emitted in job-index order, so the batch's
+    /// last entry carries the batch total).
+    pub steal_count: usize,
+    /// Virtual start time within the batch (simulated seconds).
+    pub start: f64,
+    /// Virtual end time within the batch.
+    pub end: f64,
+}
+
+/// The schedule ledger: every dispatched job's placement and virtual
+/// timing, recordable from any [`crate::exec::Executor`] via
+/// `record_schedule` / `take_schedule`. Entirely virtual-time, so a
+/// trace is a pure function of the run's seed and replays bit-for-bit
+/// (`rust/tests/proptest_dispatch.rs`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScheduleTrace {
+    /// Ledger entries, in dispatch order (batches in dispatch order,
+    /// jobs in index order within each batch).
+    pub entries: Vec<ScheduleEntry>,
+}
+
+impl ScheduleTrace {
+    /// Ledger length.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the ledger empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total stolen jobs across all recorded batches.
+    pub fn total_steals(&self) -> usize {
+        // Within a batch `steal_count` is cumulative; the batch total is
+        // its last entry's value. Batch boundaries are where job_idx
+        // resets to 0.
+        let mut total = 0;
+        let mut last_in_batch = 0;
+        for e in &self.entries {
+            if e.job_idx == 0 {
+                total += last_in_batch;
+                last_in_batch = 0;
+            }
+            last_in_batch = e.steal_count;
+        }
+        total + last_in_batch
+    }
+
+    /// Serialize the ledger as CSV (one row per job).
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("round,kind,job_idx,worker,steal_count,start,end\n");
+        for e in &self.entries {
+            let kind = match e.kind {
+                JobKind::Client => "client",
+                JobKind::Eval => "eval",
+            };
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{:.6},{:.6}",
+                e.round, kind, e.job_idx, e.worker, e.steal_count, e.start, e.end
+            );
+        }
+        out
+    }
+}
+
+/// Shared schedule-instrumentation state for the built-in executors:
+/// counts client batches (round numbering), keeps the most recent client
+/// batch's [`DispatchStats`] for the engine's per-round accounting, and
+/// accumulates [`ScheduleEntry`]s while recording is on. Interior
+/// mutability so the `&self` executor methods can write to it.
+#[derive(Debug, Default)]
+pub(crate) struct TraceRecorder {
+    inner: Mutex<RecorderState>,
+}
+
+#[derive(Debug, Default)]
+struct RecorderState {
+    recording: bool,
+    rounds: usize,
+    entries: Vec<ScheduleEntry>,
+    last_client: Option<DispatchStats>,
+}
+
+impl TraceRecorder {
+    /// Turn ledger recording on (clearing any previous ledger and
+    /// resetting round numbering) or off.
+    pub(crate) fn set_recording(&self, on: bool) {
+        let mut st = self.inner.lock().expect("trace recorder poisoned");
+        st.recording = on;
+        if on {
+            st.entries.clear();
+            st.rounds = 0;
+        }
+    }
+
+    /// Drain the recorded ledger (`None` when recording is off).
+    pub(crate) fn take(&self) -> Option<ScheduleTrace> {
+        let mut st = self.inner.lock().expect("trace recorder poisoned");
+        st.recording.then(|| ScheduleTrace { entries: std::mem::take(&mut st.entries) })
+    }
+
+    /// The most recent client batch's stats (regardless of recording).
+    pub(crate) fn last_client_dispatch(&self) -> Option<DispatchStats> {
+        self.inner.lock().expect("trace recorder poisoned").last_client
+    }
+
+    /// Record one dispatched batch's schedule.
+    pub(crate) fn observe(&self, kind: JobKind, sched: &Schedule) {
+        let mut st = self.inner.lock().expect("trace recorder poisoned");
+        let round = match kind {
+            JobKind::Client => {
+                let r = st.rounds;
+                st.rounds += 1;
+                st.last_client = Some(sched.stats());
+                r
+            }
+            JobKind::Eval => st.rounds.saturating_sub(1),
+        };
+        if st.recording {
+            let mut steals = 0usize;
+            for idx in 0..sched.assignment.len() {
+                steals += usize::from(sched.stolen[idx]);
+                st.entries.push(ScheduleEntry {
+                    round,
+                    kind,
+                    job_idx: idx,
+                    worker: sched.assignment[idx],
+                    steal_count: steals,
+                    start: sched.start[idx],
+                    end: sched.end[idx],
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for s in ["round_robin", "Round-Robin", "rr", "ROUNDROBIN"] {
+            assert_eq!(DispatchPolicy::parse(s), Some(DispatchPolicy::RoundRobin), "{s}");
+        }
+        for s in ["work_stealing", "work-stealing", "ws", "steal"] {
+            assert_eq!(DispatchPolicy::parse(s), Some(DispatchPolicy::WorkStealing), "{s}");
+        }
+        assert!(DispatchPolicy::parse("lifo").is_none());
+        for p in [DispatchPolicy::RoundRobin, DispatchPolicy::WorkStealing] {
+            assert_eq!(DispatchPolicy::parse(p.label()), Some(p));
+        }
+    }
+
+    #[test]
+    fn round_robin_deals_by_index_and_stacks_times() {
+        let s = plan_schedule(DispatchPolicy::RoundRobin, &[2.0, 1.0, 3.0, 1.0, 2.0], 2);
+        assert_eq!(s.assignment, vec![0, 1, 0, 1, 0]);
+        assert_eq!(s.steals(), 0);
+        // Worker 0 runs jobs 0, 2, 4 back to back: starts 0, 2, 5.
+        assert_eq!(s.start, vec![0.0, 0.0, 2.0, 1.0, 5.0]);
+        assert_eq!(s.end, vec![2.0, 1.0, 5.0, 2.0, 7.0]);
+        assert_eq!(s.worker_busy, vec![7.0, 2.0]);
+        assert_eq!(s.makespan, 7.0);
+        assert_eq!(s.idle_seconds(), 7.0 * 2.0 - 9.0);
+    }
+
+    #[test]
+    fn homogeneous_costs_reduce_work_stealing_to_round_robin() {
+        let costs = vec![1.5; 11];
+        let rr = plan_schedule(DispatchPolicy::RoundRobin, &costs, 4);
+        let ws = plan_schedule(DispatchPolicy::WorkStealing, &costs, 4);
+        assert_eq!(ws.assignment, rr.assignment, "balanced batch must not steal");
+        assert_eq!(ws.steals(), 0);
+        assert_eq!(ws.start, rr.start);
+        assert_eq!(ws.end, rr.end);
+        assert_eq!(ws.makespan, rr.makespan);
+    }
+
+    #[test]
+    fn heavy_head_job_is_rebalanced_by_stealing() {
+        // Job 0 dominates: round-robin stacks jobs 2 and 4 behind it on
+        // worker 0 while worker 1 idles; stealing moves them over.
+        let costs = vec![10.0, 1.0, 1.0, 1.0, 1.0];
+        let rr = plan_schedule(DispatchPolicy::RoundRobin, &costs, 2);
+        let ws = plan_schedule(DispatchPolicy::WorkStealing, &costs, 2);
+        assert_eq!(rr.makespan, 12.0);
+        assert_eq!(ws.makespan, 10.0, "stealers drain the light jobs under the heavy one");
+        assert!(ws.steals() >= 2, "jobs 2 and 4 must migrate, got {}", ws.steals());
+        assert!(ws.utilization() > rr.utilization());
+        // Work is conserved either way.
+        assert!((ws.busy_seconds() - rr.busy_seconds()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stealing_never_exceeds_round_robin_makespan() {
+        // Deterministic spot-grid (the property version with random costs
+        // lives in tests/proptest_dispatch.rs).
+        let grids: &[&[f64]] = &[
+            &[3.0, 1.0, 1.0, 3.0],
+            &[1.0, 4.0, 5.0, 2.0, 0.5],
+            &[0.0, 7.0, 0.0, 7.0, 1.0, 1.0, 1.0],
+            &[2.0, 2.0, 2.0, 3.0, 3.0],
+        ];
+        for costs in grids {
+            for workers in 1..=4 {
+                let rr = plan_schedule(DispatchPolicy::RoundRobin, costs, workers);
+                let ws = plan_schedule(DispatchPolicy::WorkStealing, costs, workers);
+                assert!(
+                    ws.makespan <= rr.makespan + 1e-12,
+                    "{costs:?} × {workers}: ws {} > rr {}",
+                    ws.makespan,
+                    rr.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_trivial() {
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::WorkStealing] {
+            let s = plan_schedule(policy, &[], 3);
+            assert!(s.assignment.is_empty());
+            assert_eq!(s.makespan, 0.0);
+            assert_eq!(s.utilization(), 1.0);
+            assert_eq!(s.idle_seconds(), 0.0);
+            assert_eq!(s.stats(), DispatchStats { workers: 3, ..Default::default() });
+        }
+    }
+
+    #[test]
+    fn single_worker_is_sequential_for_both_policies() {
+        let costs = vec![2.0, 5.0, 1.0];
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::WorkStealing] {
+            let s = plan_schedule(policy, &costs, 1);
+            assert_eq!(s.assignment, vec![0, 0, 0]);
+            assert_eq!(s.start, vec![0.0, 2.0, 7.0]);
+            assert_eq!(s.makespan, 8.0);
+            assert_eq!(s.steals(), 0);
+            assert_eq!(s.utilization(), 1.0);
+        }
+    }
+
+    #[test]
+    fn recorder_ledger_rounds_and_cumulative_steals() {
+        let rec = TraceRecorder::default();
+        rec.set_recording(true);
+        let batch = plan_schedule(DispatchPolicy::WorkStealing, &[10.0, 1.0, 1.0, 1.0], 2);
+        rec.observe(JobKind::Client, &batch);
+        rec.observe(JobKind::Eval, &plan_schedule(DispatchPolicy::RoundRobin, &[1.0], 2));
+        rec.observe(JobKind::Client, &batch);
+        let trace = rec.take().expect("recording was on");
+        assert_eq!(trace.len(), 9);
+        // Client batch 0, its eval at the same round, client batch 1.
+        assert_eq!(trace.entries[0].round, 0);
+        assert_eq!(trace.entries[4].kind, JobKind::Eval);
+        assert_eq!(trace.entries[4].round, 0);
+        assert_eq!(trace.entries[5].round, 1);
+        // Cumulative steal counts are monotone within a batch and the
+        // ledger total matches the schedules'.
+        assert_eq!(trace.total_steals(), 2 * batch.steals());
+        let csv = trace.to_csv();
+        assert!(csv.starts_with("round,kind,job_idx,worker,steal_count,start,end\n"));
+        assert_eq!(csv.trim().lines().count(), 10);
+        // Drained: a second take is an empty ledger.
+        assert!(rec.take().expect("still recording").is_empty());
+        // Stats stay readable with recording off.
+        rec.set_recording(false);
+        assert!(rec.take().is_none());
+        assert_eq!(rec.last_client_dispatch().expect("client batch seen").jobs, 4);
+    }
+
+    #[test]
+    fn stats_idle_and_utilization_arithmetic() {
+        let s = DispatchStats {
+            workers: 4,
+            jobs: 8,
+            steals: 3,
+            busy_seconds: 6.0,
+            makespan: 2.0,
+        };
+        assert_eq!(s.capacity_seconds(), 8.0);
+        assert_eq!(s.idle_seconds(), 2.0);
+        assert_eq!(s.utilization(), 0.75);
+        assert_eq!(DispatchStats::default().utilization(), 1.0);
+        assert_eq!(DispatchStats::default().idle_seconds(), 0.0);
+    }
+}

@@ -24,11 +24,23 @@
 //! staleness-bounded delayed gradients — see [`overlapped`]); it changes
 //! when the simulated server aggregates, never what is computed, so it
 //! composes with either compute executor.
+//!
+//! *Where* in the pool a job lands is decided by a [`DispatchPolicy`]
+//! ([`dispatch`]): round-robin dealing by job index (the default), or a
+//! deterministic work-stealing schedule simulated in virtual time from
+//! the jobs' simulated costs — better utilization under heavy-tailed
+//! plans, with placement still a pure function of the run's seed.
+//! Either way results collect by job index, so the dispatch policy is
+//! never observable in model outputs (`rust/tests/proptest_dispatch.rs`).
 
+pub mod dispatch;
 pub mod overlapped;
 pub mod sequential;
 pub mod sharded;
 
+pub use self::dispatch::{
+    plan_schedule, DispatchPolicy, DispatchStats, JobKind, Schedule, ScheduleEntry, ScheduleTrace,
+};
 pub use self::overlapped::{DelayedUpdate, InFlight, OverlapConfig, Overlapped};
 pub use self::sequential::Sequential;
 pub use self::sharded::Sharded;
@@ -135,6 +147,32 @@ pub trait Executor {
 
     /// Execute evaluation batches; `out[i]` corresponds to `jobs[i]`.
     fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>>;
+
+    /// The dispatch policy placing this executor's jobs (informational;
+    /// the default is round-robin, which every single-runtime executor
+    /// trivially satisfies).
+    fn dispatch_policy(&self) -> DispatchPolicy {
+        DispatchPolicy::RoundRobin
+    }
+
+    /// Start (or stop) recording a [`ScheduleTrace`] ledger of every
+    /// dispatched job's placement and virtual timing. Starting clears
+    /// any previous ledger. The default executor records nothing.
+    fn record_schedule(&self, _on: bool) {}
+
+    /// Drain the recorded [`ScheduleTrace`] (`None` when recording is
+    /// off or the executor does not instrument dispatch).
+    fn take_schedule(&self) -> Option<ScheduleTrace> {
+        None
+    }
+
+    /// Dispatch accounting of the most recent **client** batch (steals,
+    /// busy/idle worker-seconds, makespan — all in virtual time), which
+    /// the engine records per round. `None` until a client batch ran or
+    /// when the executor does not instrument dispatch.
+    fn last_client_dispatch(&self) -> Option<DispatchStats> {
+        None
+    }
 }
 
 /// A shared reference to an executor is itself an executor (the trait
@@ -159,6 +197,22 @@ impl<E: Executor + ?Sized> Executor for &E {
     fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
         (**self).run_evals(ctx, jobs)
     }
+
+    fn dispatch_policy(&self) -> DispatchPolicy {
+        (**self).dispatch_policy()
+    }
+
+    fn record_schedule(&self, on: bool) {
+        (**self).record_schedule(on)
+    }
+
+    fn take_schedule(&self) -> Option<ScheduleTrace> {
+        (**self).take_schedule()
+    }
+
+    fn last_client_dispatch(&self) -> Option<DispatchStats> {
+        (**self).last_client_dispatch()
+    }
 }
 
 /// Resolve a worker-count setting (`0` = auto via
@@ -166,10 +220,30 @@ impl<E: Executor + ?Sized> Executor for &E {
 /// pool** when it calls for one: `Some(pool)` for `> 1` effective
 /// workers, `None` when the sequential path should be used. One rule for
 /// every sweep site ([`crate::expt::run_cell`], the CLI `sweep`), so
-/// sweeps can never diverge from single runs on worker resolution.
-pub fn sweep_pool(workers: usize, factory: crate::runtime::RuntimeFactory) -> Option<Sharded> {
+/// sweeps can never diverge from single runs on worker resolution. The
+/// pool deals jobs per `dispatch` (results are bit-identical either
+/// way — the policy only moves placement).
+pub fn sweep_pool(
+    workers: usize,
+    factory: crate::runtime::RuntimeFactory,
+    dispatch: DispatchPolicy,
+) -> Option<Sharded> {
     let n = if workers == 0 { crate::util::pool::default_threads() } else { workers };
-    (n > 1).then(|| Sharded::new(n, factory))
+    (n > 1).then(|| Sharded::with_policy(n, factory, dispatch))
+}
+
+/// Deterministic simulated cost of one client job — the dispatch
+/// scheduler's input. Exactly the plan's simulated duration
+/// ([`crate::fl::LocalPlan::sim_time`]; 0 for dropped plans), so the
+/// schedule is a pure function of the run's seed.
+pub(crate) fn client_job_cost(ctx: &ExecContext, job: &ClientJob) -> f64 {
+    job.plan.sim_time(&ctx.fleet, job.client)
+}
+
+/// Deterministic cost proxy of one evaluation batch: its row count
+/// (every row is one forward pass; batches differ only at the tail).
+pub(crate) fn eval_job_cost(job: &EvalJob) -> f64 {
+    (job.end - job.start) as f64
 }
 
 /// Run one client job against `rt` (shared by both executors).
@@ -221,23 +295,27 @@ impl<'a> ExecutorImpl<'a> {
     /// Resolve a worker-count setting: `0` = auto
     /// ([`crate::util::pool::default_threads`], which honors
     /// `FEDCORE_THREADS`), `1` = in-thread sequential, `N > 1` = sharded
-    /// pool of N runtime-pinned workers. When `overlap` is set the chosen
-    /// executor is wrapped in [`Overlapped`], whose constructor validates
-    /// the policy (an invalid quorum/alpha surfaces here as `Err`).
+    /// pool of N runtime-pinned workers dealing jobs per `dispatch`.
+    /// When `overlap` is set the chosen executor is wrapped in
+    /// [`Overlapped`], whose constructor validates the policy (an
+    /// invalid quorum/alpha surfaces here as `Err`).
     pub fn from_config(
         rt: &'a Runtime,
         workers: usize,
         overlap: Option<OverlapConfig>,
+        dispatch: DispatchPolicy,
     ) -> Result<ExecutorImpl<'a>> {
         let n = if workers == 0 { crate::util::pool::default_threads() } else { workers };
         Ok(match (n <= 1, overlap) {
             (true, None) => ExecutorImpl::Sequential(Sequential::new(rt)),
-            (false, None) => ExecutorImpl::Sharded(Sharded::new(n, rt.factory())),
+            (false, None) => {
+                ExecutorImpl::Sharded(Sharded::with_policy(n, rt.factory(), dispatch))
+            }
             (true, Some(cfg)) => {
                 ExecutorImpl::OverlappedSequential(Overlapped::new(Sequential::new(rt), cfg)?)
             }
             (false, Some(cfg)) => ExecutorImpl::OverlappedSharded(Overlapped::new(
-                Sharded::new(n, rt.factory()),
+                Sharded::with_policy(n, rt.factory(), dispatch),
                 cfg,
             )?),
         })
@@ -273,6 +351,42 @@ impl Executor for ExecutorImpl<'_> {
             ExecutorImpl::Sharded(e) => e.run_evals(ctx, jobs),
             ExecutorImpl::OverlappedSequential(e) => e.run_evals(ctx, jobs),
             ExecutorImpl::OverlappedSharded(e) => e.run_evals(ctx, jobs),
+        }
+    }
+
+    fn dispatch_policy(&self) -> DispatchPolicy {
+        match self {
+            ExecutorImpl::Sequential(e) => e.dispatch_policy(),
+            ExecutorImpl::Sharded(e) => e.dispatch_policy(),
+            ExecutorImpl::OverlappedSequential(e) => e.dispatch_policy(),
+            ExecutorImpl::OverlappedSharded(e) => e.dispatch_policy(),
+        }
+    }
+
+    fn record_schedule(&self, on: bool) {
+        match self {
+            ExecutorImpl::Sequential(e) => e.record_schedule(on),
+            ExecutorImpl::Sharded(e) => e.record_schedule(on),
+            ExecutorImpl::OverlappedSequential(e) => e.record_schedule(on),
+            ExecutorImpl::OverlappedSharded(e) => e.record_schedule(on),
+        }
+    }
+
+    fn take_schedule(&self) -> Option<ScheduleTrace> {
+        match self {
+            ExecutorImpl::Sequential(e) => e.take_schedule(),
+            ExecutorImpl::Sharded(e) => e.take_schedule(),
+            ExecutorImpl::OverlappedSequential(e) => e.take_schedule(),
+            ExecutorImpl::OverlappedSharded(e) => e.take_schedule(),
+        }
+    }
+
+    fn last_client_dispatch(&self) -> Option<DispatchStats> {
+        match self {
+            ExecutorImpl::Sequential(e) => e.last_client_dispatch(),
+            ExecutorImpl::Sharded(e) => e.last_client_dispatch(),
+            ExecutorImpl::OverlappedSequential(e) => e.last_client_dispatch(),
+            ExecutorImpl::OverlappedSharded(e) => e.last_client_dispatch(),
         }
     }
 }

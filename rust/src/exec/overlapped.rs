@@ -240,6 +240,24 @@ impl<E: Executor> Executor for Overlapped<E> {
     fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
         self.inner.run_evals(ctx, jobs)
     }
+
+    // Dispatch instrumentation passes straight through: overlap changes
+    // when the server aggregates, never where jobs run.
+    fn dispatch_policy(&self) -> super::DispatchPolicy {
+        self.inner.dispatch_policy()
+    }
+
+    fn record_schedule(&self, on: bool) {
+        self.inner.record_schedule(on)
+    }
+
+    fn take_schedule(&self) -> Option<super::ScheduleTrace> {
+        self.inner.take_schedule()
+    }
+
+    fn last_client_dispatch(&self) -> Option<super::DispatchStats> {
+        self.inner.last_client_dispatch()
+    }
 }
 
 #[cfg(test)]

@@ -1,12 +1,19 @@
 //! The in-thread executor: runs every job on the engine's own runtime, in
 //! job order. This is the reference implementation the sharded executor
 //! must match bit-for-bit (and the original engine behaviour, unchanged).
+//! It still instruments dispatch — a one-worker round-robin schedule —
+//! so the engine's per-round dispatch accounting and the
+//! [`ScheduleTrace`] ledger work identically across executors.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{exec_client, exec_eval, ClientJob, EvalJob, ExecContext, Executor};
+use super::dispatch::{plan_schedule, DispatchPolicy, DispatchStats, JobKind, TraceRecorder};
+use super::{
+    client_job_cost, eval_job_cost, exec_client, exec_eval, ClientJob, EvalJob, ExecContext,
+    Executor, ScheduleTrace,
+};
 use crate::fl::ClientOutcome;
 use crate::runtime::{EvalOutput, Runtime};
 
@@ -14,12 +21,13 @@ use crate::runtime::{EvalOutput, Runtime};
 /// engine's runtime, in job order.
 pub struct Sequential<'a> {
     rt: &'a Runtime,
+    recorder: TraceRecorder,
 }
 
 impl<'a> Sequential<'a> {
     /// Wrap the engine's runtime; no threads, no setup cost.
     pub fn new(rt: &'a Runtime) -> Sequential<'a> {
-        Sequential { rt }
+        Sequential { rt, recorder: TraceRecorder::default() }
     }
 }
 
@@ -33,10 +41,28 @@ impl Executor for Sequential<'_> {
         ctx: &Arc<ExecContext>,
         jobs: Vec<ClientJob>,
     ) -> Result<Vec<ClientOutcome>> {
+        let costs: Vec<f64> = jobs.iter().map(|j| client_job_cost(ctx, j)).collect();
+        self.recorder
+            .observe(JobKind::Client, &plan_schedule(DispatchPolicy::RoundRobin, &costs, 1));
         jobs.into_iter().map(|job| exec_client(self.rt, ctx, job)).collect()
     }
 
     fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
+        let costs: Vec<f64> = jobs.iter().map(eval_job_cost).collect();
+        self.recorder
+            .observe(JobKind::Eval, &plan_schedule(DispatchPolicy::RoundRobin, &costs, 1));
         jobs.iter().map(|job| exec_eval(self.rt, ctx, job)).collect()
+    }
+
+    fn record_schedule(&self, on: bool) {
+        self.recorder.set_recording(on);
+    }
+
+    fn take_schedule(&self) -> Option<ScheduleTrace> {
+        self.recorder.take()
+    }
+
+    fn last_client_dispatch(&self) -> Option<DispatchStats> {
+        self.recorder.last_client_dispatch()
     }
 }

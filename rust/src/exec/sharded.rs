@@ -1,15 +1,19 @@
 //! The sharded executor: a persistent pool of worker threads, each pinned
 //! to its own [`Runtime`] built lazily from a [`RuntimeFactory`] on first
 //! job (so constructing the pool is cheap and never touches the
-//! filesystem). Jobs are dealt round-robin by job index — deterministic,
-//! and balanced because one round's client jobs have similar cost — and
-//! results are re-ordered by job index before returning, which is what
-//! makes sharded aggregation bit-identical to sequential.
+//! filesystem). Job placement follows a deterministic [`DispatchPolicy`]
+//! schedule planned on the coordinator ([`super::dispatch`]): round-robin
+//! dealing by job index (the default), or a virtual-time work-stealing
+//! schedule that rebalances heavy-tailed client plans across workers.
+//! Either way results are re-ordered by job index before returning, which
+//! is what makes sharded aggregation bit-identical to sequential —
+//! regardless of policy.
 //!
 //! Failure model: a worker that cannot build its runtime, or whose job
 //! errors, sends the error back and stays alive; a worker that dies
 //! entirely closes its channels, which `collect` surfaces as an error
-//! instead of deadlocking.
+//! (naming the unreported job and its assigned worker) instead of
+//! deadlocking.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -17,7 +21,11 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use super::{exec_client, exec_eval, ClientJob, EvalJob, ExecContext, Executor};
+use super::dispatch::{plan_schedule, DispatchPolicy, DispatchStats, JobKind, TraceRecorder};
+use super::{
+    client_job_cost, eval_job_cost, exec_client, exec_eval, ClientJob, EvalJob, ExecContext,
+    Executor, ScheduleTrace,
+};
 use crate::fl::ClientOutcome;
 use crate::runtime::{EvalOutput, Runtime, RuntimeFactory};
 
@@ -26,29 +34,40 @@ enum WorkerMsg {
         idx: usize,
         ctx: Arc<ExecContext>,
         job: ClientJob,
-        tx: Sender<(usize, Result<ClientOutcome>)>,
+        tx: Sender<(usize, usize, Result<ClientOutcome>)>,
     },
     Eval {
         idx: usize,
         ctx: Arc<ExecContext>,
         job: EvalJob,
-        tx: Sender<(usize, Result<EvalOutput>)>,
+        tx: Sender<(usize, usize, Result<EvalOutput>)>,
     },
     Shutdown,
 }
 
 /// The sharded executor: a persistent pool of worker threads, each pinned
-/// to its own lazily-built [`Runtime`], with deterministic round-robin
+/// to its own lazily-built [`Runtime`], with deterministic policy-planned
 /// dispatch and an order-restoring collect (see the module docs).
 pub struct Sharded {
     senders: Vec<Sender<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,
+    policy: DispatchPolicy,
+    recorder: TraceRecorder,
 }
 
 impl Sharded {
-    /// Spawn `workers` threads immediately; each builds its runtime lazily
-    /// on its first job.
+    /// Spawn `workers` threads immediately with the default round-robin
+    /// dispatch; each builds its runtime lazily on its first job.
     pub fn new(workers: usize, factory: RuntimeFactory) -> Sharded {
+        Sharded::with_policy(workers, factory, DispatchPolicy::default())
+    }
+
+    /// Spawn `workers` threads with an explicit [`DispatchPolicy`].
+    pub fn with_policy(
+        workers: usize,
+        factory: RuntimeFactory,
+        policy: DispatchPolicy,
+    ) -> Sharded {
         assert!(workers >= 1, "sharded executor needs at least one worker");
         let mut senders = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -57,49 +76,104 @@ impl Sharded {
             let f = factory.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fedcore-exec-{w}"))
-                .spawn(move || worker_main(rx, f))
+                .spawn(move || worker_main(w, rx, f))
                 .expect("spawning exec worker thread");
             senders.push(tx);
             handles.push(handle);
         }
-        Sharded { senders, handles }
+        Sharded { senders, handles, policy, recorder: TraceRecorder::default() }
     }
 
-    /// Deal jobs round-robin by job index and collect results in job
-    /// order. `wrap` builds the per-kind [`WorkerMsg`]; everything else —
-    /// dispatch policy, error surfaces, the order-restoring collect — is
+    /// The dispatch policy this pool places jobs with.
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Plan the batch's schedule from the per-job costs, send each job to
+    /// its scheduled worker, and collect results in job order. `wrap`
+    /// builds the per-kind [`WorkerMsg`]; everything else — placement,
+    /// trace recording, error surfaces, the order-restoring collect — is
     /// shared by both job kinds.
     fn dispatch<J, T>(
         &self,
         ctx: &Arc<ExecContext>,
         jobs: Vec<J>,
-        wrap: impl Fn(usize, Arc<ExecContext>, J, Sender<(usize, Result<T>)>) -> WorkerMsg,
+        kind: JobKind,
+        cost: impl Fn(&J) -> f64,
+        wrap: impl Fn(usize, Arc<ExecContext>, J, Sender<(usize, usize, Result<T>)>) -> WorkerMsg,
     ) -> Result<Vec<T>> {
         let n = jobs.len();
+        let costs: Vec<f64> = jobs.iter().map(&cost).collect();
+        let sched = plan_schedule(self.policy, &costs, self.senders.len());
+        self.recorder.observe(kind, &sched);
         let (tx, rx) = mpsc::channel();
         for (idx, job) in jobs.into_iter().enumerate() {
-            let w = idx % self.senders.len();
+            let w = sched.assignment[idx];
             self.senders[w]
                 .send(wrap(idx, Arc::clone(ctx), job, tx.clone()))
                 .map_err(|_| anyhow!("exec worker {w} is gone"))?;
         }
         drop(tx);
-        Self::collect(rx, n)
+        Self::collect(rx, n, &sched.assignment)
     }
 
-    /// Receive exactly `n` `(idx, result)` pairs and restore job order.
-    fn collect<T>(rx: Receiver<(usize, Result<T>)>, n: usize) -> Result<Vec<T>> {
+    /// Receive exactly `n` `(idx, worker, result)` triples and restore
+    /// job order. A duplicate, out-of-range, or never-reported job index
+    /// is an error naming the offending index and worker, never a silent
+    /// overwrite or an anonymous failure.
+    fn collect<T>(
+        rx: Receiver<(usize, usize, Result<T>)>,
+        n: usize,
+        assigned: &[usize],
+    ) -> Result<Vec<T>> {
         let mut out: Vec<Option<T>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
         for _ in 0..n {
-            let (idx, res) = rx
-                .recv()
-                .map_err(|_| anyhow!("exec worker died before finishing its jobs"))?;
+            let (idx, worker, res) = match rx.recv() {
+                Ok(msg) => msg,
+                Err(_) => {
+                    // Every sender hung up with results still owed: a
+                    // worker died. Name what never arrived.
+                    let missing: Vec<usize> = out
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, slot)| slot.is_none())
+                        .map(|(i, _)| i)
+                        .collect();
+                    let more = if missing.len() > 1 {
+                        format!(" and {} more", missing.len() - 1)
+                    } else {
+                        String::new()
+                    };
+                    let detail = match missing.first() {
+                        Some(&i) => format!(
+                            "job {i} (assigned to worker {}){more}",
+                            assigned.get(i).copied().unwrap_or(0),
+                        ),
+                        None => "no job".to_string(),
+                    };
+                    return Err(anyhow!(
+                        "exec worker died before finishing its jobs: missing {detail}"
+                    ));
+                }
+            };
+            if idx >= n {
+                return Err(anyhow!(
+                    "exec worker {worker} reported out-of-range job index {idx} (batch of {n})"
+                ));
+            }
+            if out[idx].is_some() {
+                return Err(anyhow!("exec worker {worker} reported job {idx} twice"));
+            }
             out[idx] = Some(res?);
         }
-        out.into_iter()
-            .map(|o| o.ok_or_else(|| anyhow!("exec worker reported a duplicate job index")))
-            .collect()
+        // n receives, no duplicates, no out-of-range indices ⇒ by
+        // pigeonhole every slot is filled (missing jobs surface in the
+        // recv-error arm above, naming their assigned worker).
+        Ok(out
+            .into_iter()
+            .map(|slot| slot.expect("all slots filled by the receive loop"))
+            .collect())
     }
 }
 
@@ -113,11 +187,35 @@ impl Executor for Sharded {
         ctx: &Arc<ExecContext>,
         jobs: Vec<ClientJob>,
     ) -> Result<Vec<ClientOutcome>> {
-        self.dispatch(ctx, jobs, |idx, ctx, job, tx| WorkerMsg::Client { idx, ctx, job, tx })
+        self.dispatch(
+            ctx,
+            jobs,
+            JobKind::Client,
+            |job| client_job_cost(ctx, job),
+            |idx, ctx, job, tx| WorkerMsg::Client { idx, ctx, job, tx },
+        )
     }
 
     fn run_evals(&self, ctx: &Arc<ExecContext>, jobs: Vec<EvalJob>) -> Result<Vec<EvalOutput>> {
-        self.dispatch(ctx, jobs, |idx, ctx, job, tx| WorkerMsg::Eval { idx, ctx, job, tx })
+        self.dispatch(ctx, jobs, JobKind::Eval, eval_job_cost, |idx, ctx, job, tx| {
+            WorkerMsg::Eval { idx, ctx, job, tx }
+        })
+    }
+
+    fn dispatch_policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    fn record_schedule(&self, on: bool) {
+        self.recorder.set_recording(on);
+    }
+
+    fn take_schedule(&self) -> Option<ScheduleTrace> {
+        self.recorder.take()
+    }
+
+    fn last_client_dispatch(&self) -> Option<DispatchStats> {
+        self.recorder.last_client_dispatch()
     }
 }
 
@@ -133,7 +231,7 @@ impl Drop for Sharded {
     }
 }
 
-fn worker_main(rx: Receiver<WorkerMsg>, factory: RuntimeFactory) {
+fn worker_main(worker: usize, rx: Receiver<WorkerMsg>, factory: RuntimeFactory) {
     // The worker's pinned runtime: built on first use, reused for every
     // subsequent job (executable compilation is cached inside `Runtime`).
     let mut rt: Option<Runtime> = None;
@@ -143,13 +241,13 @@ fn worker_main(rx: Receiver<WorkerMsg>, factory: RuntimeFactory) {
                 let res = caught(|| {
                     pinned_runtime(&mut rt, &factory).and_then(|rt| exec_client(rt, &ctx, job))
                 });
-                let _ = tx.send((idx, res));
+                let _ = tx.send((idx, worker, res));
             }
             WorkerMsg::Eval { idx, ctx, job, tx } => {
                 let res = caught(|| {
                     pinned_runtime(&mut rt, &factory).and_then(|rt| exec_eval(rt, &ctx, &job))
                 });
-                let _ = tx.send((idx, res));
+                let _ = tx.send((idx, worker, res));
             }
             WorkerMsg::Shutdown => break,
         }
@@ -181,4 +279,66 @@ fn pinned_runtime<'r>(
         *slot = Some(factory.build()?);
     }
     Ok(slot.as_ref().expect("runtime slot just filled"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---------- collect error reporting (satellite: no more anonymous
+    // duplicate/missing-index failures) ----------
+
+    #[test]
+    fn collect_restores_job_order() {
+        let (tx, rx) = mpsc::channel();
+        tx.send((2usize, 0usize, Ok::<i32, anyhow::Error>(30))).unwrap();
+        tx.send((0, 1, Ok(10))).unwrap();
+        tx.send((1, 0, Ok(20))).unwrap();
+        drop(tx);
+        let out = Sharded::collect(rx, 3, &[1, 0, 0]).unwrap();
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn collect_names_the_duplicate_index_and_worker() {
+        let (tx, rx) = mpsc::channel();
+        tx.send((0usize, 0usize, Ok::<i32, anyhow::Error>(1))).unwrap();
+        tx.send((0, 1, Ok(2))).unwrap();
+        drop(tx);
+        let err = Sharded::collect(rx, 2, &[0, 1]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("job 0"), "duplicate index not named: {msg}");
+        assert!(msg.contains("worker 1"), "duplicating worker not named: {msg}");
+    }
+
+    #[test]
+    fn collect_names_the_out_of_range_index_and_worker() {
+        let (tx, rx) = mpsc::channel();
+        tx.send((7usize, 2usize, Ok::<i32, anyhow::Error>(1))).unwrap();
+        drop(tx);
+        let err = Sharded::collect(rx, 1, &[0]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains('7') && msg.contains("worker 2"), "{msg}");
+    }
+
+    #[test]
+    fn collect_names_the_missing_job_and_its_assigned_worker() {
+        let (tx, rx) = mpsc::channel();
+        tx.send((0usize, 0usize, Ok::<i32, anyhow::Error>(1))).unwrap();
+        drop(tx); // jobs 1 and 2 never report: their worker died
+        let err = Sharded::collect(rx, 3, &[0, 1, 1]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("job 1"), "missing index not named: {msg}");
+        assert!(msg.contains("worker 1"), "assigned worker not named: {msg}");
+        assert!(msg.contains("1 more"), "remaining missing count absent: {msg}");
+    }
+
+    #[test]
+    fn collect_propagates_job_errors() {
+        let (tx, rx) = mpsc::channel();
+        tx.send((0usize, 0usize, Err::<i32, _>(anyhow!("job exploded")))).unwrap();
+        drop(tx);
+        let err = Sharded::collect(rx, 1, &[0]).unwrap_err();
+        assert!(format!("{err:#}").contains("job exploded"));
+    }
 }

@@ -10,6 +10,8 @@
 //! * `FEDCORE_ROUNDS`  — round-count override
 //! * `FEDCORE_FULL=1`  — paper-scale everything (slow)
 //! * `FEDCORE_WORKERS` — exec worker threads (0 = auto, default 1)
+//! * `FEDCORE_DISPATCH` — job dispatch policy (`round_robin` default,
+//!   `work_stealing`)
 //! * `FEDCORE_QUORUM` / `FEDCORE_MAX_STALENESS` / `FEDCORE_ALPHA` —
 //!   overlap policy for [`bench_overlap`] (defaults 0.7 / 2 / 1.0)
 
@@ -20,7 +22,7 @@ use anyhow::Result;
 use crate::config::ExperimentConfig;
 use crate::data::{self, Benchmark};
 use crate::exec::OverlapConfig;
-use crate::fl::{all_strategies, Engine, Strategy};
+use crate::fl::{all_strategies, Engine, RunConfig, Strategy};
 use crate::metrics::RunResult;
 use crate::runtime::Runtime;
 use crate::scenario::TraceSpec;
@@ -96,6 +98,7 @@ fn bench_cfg(bench: Benchmark, straggler_pct: f64, seed: u64) -> ExperimentConfi
     cfg.run.seed = seed;
     cfg.run.eval_every = 2;
     cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
+    cfg.run.dispatch = crate::exec::DispatchPolicy::from_env();
     cfg
 }
 
@@ -218,9 +221,26 @@ pub fn run_cell(
     straggler_pct: f64,
     seed: u64,
 ) -> Result<Vec<RunResult>> {
+    run_cell_with(rt, bench, straggler_pct, seed, |_| {})
+}
+
+/// [`run_cell`] with a configuration hook: `mutate` edits the cell's
+/// shared [`RunConfig`] (workers, dispatch policy, overlap, aggregator,
+/// trace, …) before the engines are built, so tests and drivers can
+/// compose cross-subsystem cells — e.g. work-stealing dispatch under an
+/// overlap quorum with a robust aggregator on a churn trace — while
+/// keeping the sweep's one-pool-per-cell behaviour.
+pub fn run_cell_with(
+    rt: &Runtime,
+    bench: Benchmark,
+    straggler_pct: f64,
+    seed: u64,
+    mutate: impl Fn(&mut RunConfig),
+) -> Result<Vec<RunResult>> {
     let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
-    let base = bench_cfg(bench, straggler_pct, seed);
-    let shared = crate::exec::sweep_pool(base.run.workers, rt.factory());
+    let mut base = bench_cfg(bench, straggler_pct, seed);
+    mutate(&mut base.run);
+    let shared = crate::exec::sweep_pool(base.run.workers, rt.factory(), base.run.dispatch);
     let mut out = Vec::new();
     for strategy in all_strategies(base.prox_mu) {
         let cfg = base.clone().with_strategy(strategy);

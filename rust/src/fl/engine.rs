@@ -33,8 +33,8 @@ use crate::agg::{AdaptiveQuorum, AggPolicy};
 use crate::coreset::Method;
 use crate::data::FedDataset;
 use crate::exec::{
-    ClientJob, DelayedUpdate, EvalJob, ExecContext, Executor, ExecutorImpl, InFlight,
-    OverlapConfig,
+    ClientJob, DelayedUpdate, DispatchPolicy, EvalJob, ExecContext, Executor, ExecutorImpl,
+    InFlight, OverlapConfig,
 };
 use crate::metrics::{RoundRecord, RunResult};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
@@ -86,6 +86,12 @@ pub struct RunConfig {
     /// = sharded pool of N runtime-pinned workers, 0 = auto
     /// (`util::pool::default_threads`, honors `FEDCORE_THREADS`).
     pub workers: usize,
+    /// How the sharded pool places jobs on workers (see
+    /// [`crate::exec::dispatch`]): deterministic round-robin dealing
+    /// (default) or the virtual-time work-stealing schedule. Model
+    /// outputs are bit-identical either way — the policy only moves the
+    /// dispatch diagnostics (`steal_count` / `worker_idle`).
+    pub dispatch: DispatchPolicy,
     /// Optional client-availability scenario: only clients the trace
     /// reports online at a round's start are eligible for selection, and
     /// selected clients that go offline mid-round are dropped with their
@@ -139,6 +145,7 @@ impl Default for RunConfig {
             eval_every: 1,
             eval_cap: 512,
             workers: 1,
+            dispatch: DispatchPolicy::RoundRobin,
             trace: None,
             overlap: None,
             aggregator: AggPolicy::Mean,
@@ -251,7 +258,7 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
 impl<'a> Engine<'a> {
     /// Build an engine with the executor implied by `cfg.workers`.
     pub fn new(rt: &'a Runtime, data: &Arc<FedDataset>, cfg: RunConfig) -> Result<Engine<'a>> {
-        let exec = ExecutorImpl::from_config(rt, cfg.workers, cfg.overlap)?;
+        let exec = ExecutorImpl::from_config(rt, cfg.workers, cfg.overlap, cfg.dispatch)?;
         Engine::with_executor(rt, data, cfg, exec)
     }
 }
@@ -488,6 +495,12 @@ impl<'a, E: Executor> Engine<'a, E> {
                 });
             }
             let executed = self.exec.run_clients(&self.ctx, jobs)?;
+            // Dispatch diagnostics of this round's client batch (virtual
+            // time, deterministic): recorded per round and accumulated
+            // into the clock's utilization ledger. Never feeds timing or
+            // aggregation — determinism rule 6.
+            let dispatch = self.exec.last_client_dispatch().unwrap_or_default();
+            clock.record_dispatch(dispatch.busy_seconds, dispatch.capacity_seconds());
             // Stitch executor results back into selection order around the
             // skipped slots (dispatched jobs kept their relative order, so
             // a single in-order walk suffices).
@@ -710,6 +723,8 @@ impl<'a, E: Executor> Engine<'a, E> {
                 stale_weight,
                 agg_rejected: agg_stats.rejected,
                 agg_clipped: agg_stats.clipped,
+                steal_count: dispatch.steals,
+                worker_idle: dispatch.idle_seconds(),
                 coreset_clients,
                 mean_compression,
             });

@@ -28,7 +28,13 @@
 //! arithmetic as the sequential path, so a `RunResult` is **bit-identical
 //! for any worker count** (`--workers N` on the CLI, `workers` in
 //! [`fl::RunConfig`]; 0 = auto via `FEDCORE_THREADS` /
-//! `util::pool::default_threads`).
+//! `util::pool::default_threads`). *Which* worker runs which job is a
+//! deterministic [`exec::DispatchPolicy`] (`--dispatch`, `[fl] dispatch`,
+//! `FEDCORE_DISPATCH`): round-robin dealing, or a work-stealing schedule
+//! simulated in virtual time from the plans' simulated costs — better
+//! utilization under heavy-tailed rounds, with model outputs still
+//! bit-identical and the placement ledger ([`exec::ScheduleTrace`])
+//! replayable from the seed (`rust/tests/proptest_dispatch.rs`).
 //!
 //! # Client availability scenarios
 //!

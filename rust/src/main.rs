@@ -42,6 +42,11 @@ fn cli() -> Cli {
     .opt("method", "fasterpam", "coreset solver: fasterpam | pam | random | kcenter")
     .opt("eval-cap", "512", "max test samples per evaluation (0 = all)")
     .opt("workers", "", "client-execution worker threads (0 = auto, 1 = sequential; default 1)")
+    .opt(
+        "dispatch",
+        "",
+        "job dispatch policy: round_robin (default) | work_stealing (env: FEDCORE_DISPATCH)",
+    )
     .opt("trace", "", "client-availability trace file (see examples/traces/; empty = always-on)")
     .opt("quorum", "0.8", "overlap: fraction of contributing clients to await before aggregating")
     .opt("max-staleness", "2", "overlap: discard delayed updates older than this many rounds")
@@ -90,6 +95,16 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     // reference path even over a config file's setting).
     if !a.get("workers").is_empty() {
         cfg.run.workers = a.get_usize("workers");
+    }
+    // Dispatch policy: empty = not given (like --workers), so an
+    // explicit `--dispatch round_robin` always wins — over a config
+    // file's `[fl] dispatch` and over the FEDCORE_DISPATCH environment
+    // override, which only applies to flagless, fileless runs.
+    if !a.get("dispatch").is_empty() {
+        cfg.run.dispatch = fedcore::exec::DispatchPolicy::parse(a.get("dispatch"))
+            .ok_or_else(|| anyhow!("unknown dispatch policy '{}'", a.get("dispatch")))?;
+    } else if !from_config {
+        cfg.run.dispatch = fedcore::exec::DispatchPolicy::from_env();
     }
     // A CLI trace overrides any [scenario] section from `--config`.
     if !a.get("trace").is_empty() {
@@ -250,10 +265,11 @@ fn cmd_run(a: &Args) -> Result<()> {
     );
     let engine = Engine::new(&rt, &ds, cfg.run.clone())?;
     eprintln!(
-        "fleet: deadline τ = {:.2}s, {:.0}% stragglers observed | exec workers: {}",
+        "fleet: deadline τ = {:.2}s, {:.0}% stragglers observed | exec workers: {} | dispatch: {}",
         engine.fleet.deadline,
         100.0 * engine.fleet.straggler_fraction(),
         engine.executor().workers(),
+        engine.executor().dispatch_policy().label(),
     );
     if let (Some(spec), Some(trace)) = (&cfg.run.trace, engine.trace()) {
         eprintln!(
@@ -323,6 +339,10 @@ fn cmd_run(a: &Args) -> Result<()> {
     if rejected + clipped > 0 {
         println!("aggregation: rejected {rejected} contribution-slots, clipped {clipped} updates");
     }
+    let (steals, idle) = result.dispatch_totals();
+    if steals > 0 {
+        println!("dispatch: {steals} stolen jobs | {idle:.2}s simulated worker idle");
+    }
     let out = a.get("out");
     if !out.is_empty() {
         result.write_csv(out)?;
@@ -352,11 +372,12 @@ fn cmd_sweep(a: &Args) -> Result<()> {
     // Cross-run pool reuse: one sharded pool (and its compiled per-worker
     // runtimes) serves every engine of the sweep. Results are
     // bit-identical to per-engine pools (exec determinism contract).
-    let shared = fedcore::exec::sweep_pool(base.run.workers, rt.factory());
+    let shared = fedcore::exec::sweep_pool(base.run.workers, rt.factory(), base.run.dispatch);
     if let Some(pool) = &shared {
         eprintln!(
-            "sweep: sharing one {}-worker pool across all strategies",
-            pool.workers()
+            "sweep: sharing one {}-worker pool across all strategies ({} dispatch)",
+            pool.workers(),
+            pool.policy().label(),
         );
     }
     let mut results = Vec::new();

@@ -57,6 +57,17 @@ pub struct RoundRecord {
     /// Contributions whose update norm was clipped before aggregation
     /// this round (0 without a clip-norm wrapper).
     pub agg_clipped: usize,
+    /// Jobs this round's dispatch schedule ran away from their
+    /// round-robin home worker (0 under round-robin or sequential
+    /// execution). Dispatch *diagnostics*: excluded from
+    /// [`RunResult::to_csv`] — which stays bit-identical across dispatch
+    /// policies and worker counts — and exported via
+    /// [`RunResult::to_dispatch_csv`] instead.
+    pub steal_count: usize,
+    /// Simulated idle worker-seconds of this round's client dispatch
+    /// schedule (workers × makespan − busy). Diagnostics, like
+    /// `steal_count`; never feeds `sim_time` or the model.
+    pub worker_idle: f64,
     /// Clients that trained on a coreset this round (FedCore).
     pub coreset_clients: usize,
     /// Mean coreset compression ratio b/m over coreset clients (1.0 = none).
@@ -136,6 +147,15 @@ impl RunResult {
             .fold((0, 0), |(rej, cl), r| (rej + r.agg_rejected, cl + r.agg_clipped))
     }
 
+    /// Run-wide dispatch accounting: `(total steals, total simulated
+    /// idle worker-seconds)` over all rounds (both 0 for sequential
+    /// runs; steals 0 under round-robin).
+    pub fn dispatch_totals(&self) -> (usize, f64) {
+        self.rounds
+            .iter()
+            .fold((0, 0.0), |(s, idle), r| (s + r.steal_count, idle + r.worker_idle))
+    }
+
     /// All per-client normalized round times (Fig. 4 / Fig. 7 histograms).
     pub fn client_times_normalized(&self) -> Vec<f64> {
         self.rounds
@@ -149,7 +169,10 @@ impl RunResult {
         self.rounds.iter().map(|r| (r.sim_elapsed, r.train_loss)).collect()
     }
 
-    /// Serialize the round trace as CSV (one row per round).
+    /// Serialize the round trace as CSV (one row per round). This is the
+    /// run's **model output**: bit-identical across executors, worker
+    /// counts, and dispatch policies (determinism rule 6) — the dispatch
+    /// diagnostics live in [`RunResult::to_dispatch_csv`].
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,train_loss,test_loss,test_acc,sim_time,tail_time,sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,stale_discarded,stale_weight,agg_rejected,agg_clipped,coreset_clients,mean_compression\n",
@@ -176,6 +199,21 @@ impl RunResult {
                 r.coreset_clients,
                 r.mean_compression
             );
+        }
+        out
+    }
+
+    /// Serialize the per-round dispatch ledger as CSV (one row per
+    /// round): steals and simulated idle worker-seconds of each round's
+    /// client dispatch schedule. Deterministic for a fixed config — it
+    /// replays bit-for-bit from the seed — but, unlike
+    /// [`RunResult::to_csv`], it legitimately varies with the worker
+    /// count and dispatch policy (that variation is the thing being
+    /// measured).
+    pub fn to_dispatch_csv(&self) -> String {
+        let mut out = String::from("round,steal_count,worker_idle\n");
+        for r in &self.rounds {
+            let _ = writeln!(out, "{},{},{:.6}", r.round, r.steal_count, r.worker_idle);
         }
         out
     }
@@ -307,6 +345,8 @@ mod tests {
             stale_weight: 0.0,
             agg_rejected: 0,
             agg_clipped: 0,
+            steal_count: 0,
+            worker_idle: 0.0,
             coreset_clients: 1,
             mean_compression: 0.5,
         }
@@ -350,6 +390,29 @@ mod tests {
         assert!(lines[0].contains("stale_folded"));
         assert!(lines[0].contains("agg_rejected"));
         assert!(lines[0].contains("agg_clipped"));
+        // Determinism rule 6: the model CSV carries no dispatch
+        // diagnostics — those live in to_dispatch_csv.
+        assert!(!lines[0].contains("steal_count"));
+        assert!(!lines[0].contains("worker_idle"));
+    }
+
+    #[test]
+    fn dispatch_csv_and_totals() {
+        let mut r = run();
+        r.rounds[0].steal_count = 2;
+        r.rounds[0].worker_idle = 1.5;
+        r.rounds[2].steal_count = 1;
+        r.rounds[2].worker_idle = 0.25;
+        assert_eq!(r.dispatch_totals(), (3, 1.75));
+        let csv = r.to_dispatch_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines[0], "round,steal_count,worker_idle");
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1], "0,2,1.500000");
+        assert_eq!(lines[2], "1,0,0.000000");
+        // The model CSV is untouched by dispatch diagnostics: two runs
+        // differing only in dispatch columns serialize identically.
+        assert_eq!(r.to_csv(), run().to_csv());
     }
 
     #[test]

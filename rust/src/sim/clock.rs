@@ -61,19 +61,57 @@ impl RoundTiming {
 }
 
 /// Accumulates rounds; all queries are O(1)/O(n) over stored records.
+/// Also keeps the run's **dispatch utilization ledger**: per-round busy
+/// and capacity worker-seconds from the executor's virtual-time dispatch
+/// schedule ([`crate::exec::DispatchStats`]), so run-level worker
+/// utilization is one query away. Dispatch accounting never feeds the
+/// simulated round times — it is diagnostics, not simulation state
+/// (ARCHITECTURE.md determinism rule 6).
 #[derive(Clone, Debug)]
 pub struct SimClock {
     /// τ used to normalize (1.0 ⇒ no normalization).
     pub deadline: f64,
     rounds: Vec<RoundTiming>,
     elapsed: f64,
+    dispatch_busy: f64,
+    dispatch_capacity: f64,
 }
 
 impl SimClock {
     /// A fresh clock normalizing by `deadline` (must be positive).
     pub fn new(deadline: f64) -> SimClock {
         assert!(deadline > 0.0);
-        SimClock { deadline, rounds: Vec::new(), elapsed: 0.0 }
+        SimClock {
+            deadline,
+            rounds: Vec::new(),
+            elapsed: 0.0,
+            dispatch_busy: 0.0,
+            dispatch_capacity: 0.0,
+        }
+    }
+
+    /// Record one round's dispatch accounting: `busy` worker-seconds of
+    /// simulated work over `capacity` worker-seconds of schedule span
+    /// (workers × makespan).
+    pub fn record_dispatch(&mut self, busy: f64, capacity: f64) {
+        self.dispatch_busy += busy;
+        self.dispatch_capacity += capacity;
+    }
+
+    /// Run-level worker utilization of the dispatch schedules recorded so
+    /// far: total busy over total capacity (`1.0` before any capacity is
+    /// recorded — an empty or sequential run wastes nothing).
+    pub fn dispatch_utilization(&self) -> f64 {
+        if self.dispatch_capacity <= 0.0 {
+            return 1.0;
+        }
+        self.dispatch_busy / self.dispatch_capacity
+    }
+
+    /// Total simulated idle worker-seconds across all recorded dispatch
+    /// schedules (capacity minus busy, clamped ≥ 0).
+    pub fn dispatch_idle_seconds(&self) -> f64 {
+        (self.dispatch_capacity - self.dispatch_busy).max(0.0)
     }
 
     /// Record one round; the clock advances by the **server-advance**
@@ -221,6 +259,22 @@ mod tests {
         d.push_round(t);
         assert_eq!(d.elapsed(), 2.0);
         assert_eq!(d.completion_time(), 2.0);
+    }
+
+    #[test]
+    fn dispatch_utilization_accumulates_and_defaults_to_full() {
+        let mut c = SimClock::new(1.0);
+        // Nothing recorded: a sequential run wastes nothing.
+        assert_eq!(c.dispatch_utilization(), 1.0);
+        assert_eq!(c.dispatch_idle_seconds(), 0.0);
+        // Round 1: 6 busy worker-seconds over 8 of capacity; round 2:
+        // 2 over 2 (perfectly packed).
+        c.record_dispatch(6.0, 8.0);
+        c.record_dispatch(2.0, 2.0);
+        assert_eq!(c.dispatch_utilization(), 0.8);
+        assert_eq!(c.dispatch_idle_seconds(), 2.0);
+        // The ledger never touches the simulated clock.
+        assert_eq!(c.elapsed(), 0.0);
     }
 
     #[test]

@@ -107,6 +107,25 @@ mod tests {
     }
 
     #[test]
+    fn threads_env_edge_cases() {
+        // FEDCORE_THREADS=0 never yields a zero-width pool.
+        assert_eq!(threads_from(Some("0")), 1);
+        assert_eq!(threads_from(Some(" 0 ")), 1);
+        // Non-numeric / empty / fractional / signed values fall back to
+        // the auto path (physical parallelism, capped at 8) rather than
+        // panicking or producing 0.
+        for junk in ["", "   ", "four", "2.5", "-3", "0x8", "8 threads"] {
+            let n = threads_from(Some(junk));
+            assert!((1..=8).contains(&n), "override '{junk}' resolved to {n}");
+        }
+        // A request far above any physical core count is honored
+        // verbatim — the user asked for it (uncapped by design).
+        let physical = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let huge = (physical * 64).to_string();
+        assert_eq!(threads_from(Some(&huge)), physical * 64);
+    }
+
+    #[test]
     fn heavier_work_all_items_processed() {
         let out = parallel_map((0..1000).collect(), 8, |x: u64| {
             let mut acc = x;

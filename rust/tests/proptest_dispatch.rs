@@ -1,0 +1,471 @@
+//! Differential property suite for deterministic dispatch scheduling
+//! (`exec/dispatch.rs`; seeded runner in `util::prop` — offline build,
+//! no proptest crate, see docs/testing.md).
+//!
+//! Invariants:
+//! * The work-stealing schedule is complete (every job placed exactly
+//!   once), work-conserving (busy time = total cost; Graham bound
+//!   `makespan ≤ total/W + max`), never slower than round-robin dealing,
+//!   and degenerates to round-robin exactly on homogeneous costs.
+//! * Schedules — and hence [`fedcore::exec::ScheduleTrace`] ledgers —
+//!   are pure functions of `(policy, costs, workers)`: replays are
+//!   bit-identical, including under `PROPTEST_SEED`.
+//! * The dispatch/trace Executor APIs delegate through `&E` (the shared
+//!   sweep-pool reference), and schedules are recorded at dispatch time
+//!   even when jobs fail (no runtime needed).
+//! * With a runtime (`make artifacts`): `WorkStealing` ≡ `RoundRobin` ≡
+//!   `Sequential` **bit-for-bit** — final model bytes, every round
+//!   record, the model CSV, and checkpoint files — across strategies,
+//!   every `agg` policy, churn traces, and the overlap/quorum pipeline;
+//!   schedule traces and the dispatch ledger CSV replay exactly from
+//!   the seed; and one cross-subsystem cell (work-stealing + overlap
+//!   quorum + trimmed mean + markov churn through `expt::run_cell_with`)
+//!   replays bit-for-bit.
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::agg::AggPolicy;
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark, FedDataset, Samples, Shard};
+use fedcore::exec::{
+    plan_schedule, ClientJob, DispatchPolicy, ExecContext, Executor, JobKind, OverlapConfig,
+    Sharded,
+};
+use fedcore::fl::{Checkpoint, CoresetMode, Engine, LocalPlan, RunConfig, Strategy};
+use fedcore::metrics::RunResult;
+use fedcore::runtime::{ModelInfo, Runtime, RuntimeFactory, XDtype};
+use fedcore::scenario::{ChurnModel, TraceSpec};
+use fedcore::sim::Fleet;
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+fn random_costs(rng: &mut Rng) -> Vec<f64> {
+    let n = rng.below(30);
+    (0..n)
+        .map(|_| {
+            // Occasional zero-cost (dropped-plan) jobs; otherwise a
+            // heavy-tailed mix so schedules actually differ.
+            if rng.below(6) == 0 {
+                0.0
+            } else if rng.below(4) == 0 {
+                rng.range_f64(5.0, 40.0)
+            } else {
+                rng.range_f64(0.1, 3.0)
+            }
+        })
+        .collect()
+}
+
+// ---------- pure schedule invariants ----------
+
+#[test]
+fn proptest_dispatch_work_stealing_schedule_invariants() {
+    check("dispatch-ws-invariants", env_seed(0xD15A), env_cases(200), |rng, _| {
+        let costs = random_costs(rng);
+        let workers = 1 + rng.below(6);
+        let total: f64 = costs.iter().sum();
+        let max = costs.iter().copied().fold(0.0f64, f64::max);
+        let eps = 1e-9 * (1.0 + total);
+
+        let rr = plan_schedule(DispatchPolicy::RoundRobin, &costs, workers);
+        let ws = plan_schedule(DispatchPolicy::WorkStealing, &costs, workers);
+        for s in [&rr, &ws] {
+            // Complete placement on real workers, one slot per job.
+            assert_eq!(s.assignment.len(), costs.len());
+            assert!(s.assignment.iter().all(|&w| w < workers));
+            // Each job occupies exactly its cost in virtual time.
+            for i in 0..costs.len() {
+                assert!(
+                    (s.end[i] - s.start[i] - costs[i]).abs() <= eps,
+                    "job {i} span {} != cost {}",
+                    s.end[i] - s.start[i],
+                    costs[i]
+                );
+            }
+            // Work conservation and the trivial makespan lower bounds.
+            assert!((s.busy_seconds() - total).abs() <= eps);
+            assert!(s.makespan + eps >= max, "makespan below the largest job");
+            assert!(s.makespan + eps >= total / workers as f64);
+            let u = s.utilization();
+            assert!((0.0..=1.0 + 1e-12).contains(&u), "utilization {u} out of range");
+            // Steal accounting is exactly the away-from-home count.
+            let away = s
+                .assignment
+                .iter()
+                .enumerate()
+                .filter(|(i, &w)| w != i % workers)
+                .count();
+            assert_eq!(s.steals(), away);
+        }
+        assert_eq!(rr.steals(), 0, "round-robin never steals");
+        // Work stealing is work-conserving: Graham's list-scheduling
+        // bound holds, and it never loses to round-robin dealing.
+        assert!(
+            ws.makespan <= total / workers as f64 + max + eps,
+            "ws makespan {} violates the work-conserving bound",
+            ws.makespan
+        );
+        assert!(
+            ws.makespan <= rr.makespan + eps,
+            "ws makespan {} exceeds rr {}",
+            ws.makespan,
+            rr.makespan
+        );
+        assert!(ws.idle_seconds() <= rr.idle_seconds() + workers as f64 * eps);
+    });
+}
+
+#[test]
+fn proptest_dispatch_homogeneous_costs_degenerate_to_round_robin() {
+    check("dispatch-homogeneous-degenerate", env_seed(0xD15B), env_cases(100), |rng, _| {
+        let n = rng.below(40);
+        let workers = 1 + rng.below(6);
+        let costs = vec![rng.range_f64(0.5, 5.0); n];
+        let rr = plan_schedule(DispatchPolicy::RoundRobin, &costs, workers);
+        let ws = plan_schedule(DispatchPolicy::WorkStealing, &costs, workers);
+        // A balanced batch gives stealing nothing to do: the entire
+        // schedule — placement, virtual times, accounting — is the
+        // round-robin one, bit for bit.
+        assert_eq!(ws, rr);
+        assert_eq!(ws.steals(), 0);
+    });
+}
+
+#[test]
+fn proptest_dispatch_schedule_replay_is_deterministic() {
+    check("dispatch-schedule-replay", env_seed(0xD15C), env_cases(100), |rng, _| {
+        let costs = random_costs(rng);
+        let workers = 1 + rng.below(6);
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::WorkStealing] {
+            let a = plan_schedule(policy, &costs, workers);
+            let b = plan_schedule(policy, &costs, workers);
+            // Full structural equality — assignments, virtual times,
+            // busy vectors, makespan — with f64s compared exactly: the
+            // schedule is a pure function of (policy, costs, workers).
+            assert_eq!(a, b, "{} schedule did not replay", policy.label());
+        }
+    });
+}
+
+// ---------- pool lifecycle + `&E` delegation without a runtime ----------
+
+/// A minimal context that never reaches a real runtime (the factory below
+/// points at a directory with no artifacts, so workers fail fast).
+fn tiny_ctx() -> Arc<ExecContext> {
+    let shard = Shard {
+        samples: Samples::Dense { x: vec![0.25; 8 * 4], dim: 4 },
+        labels: vec![0; 8],
+    };
+    let data = Arc::new(FedDataset {
+        model: "logreg".into(),
+        clients: vec![shard.clone(), shard.clone()],
+        test: shard,
+    });
+    let mut frng = Rng::new(1);
+    let fleet = Arc::new(Fleet::new(&mut frng, vec![8, 8], 2, 30.0));
+    let model = ModelInfo {
+        name: "logreg".into(),
+        param_size: 4,
+        num_classes: 2,
+        x_shape: vec![4],
+        x_dtype: XDtype::F32,
+        seq_len: 0,
+        init_params: vec![0.0; 4],
+        train_file: "logreg_train.hlo.txt".into(),
+        feat_file: "logreg_feat.hlo.txt".into(),
+        eval_file: "logreg_eval.hlo.txt".into(),
+    };
+    Arc::new(ExecContext { data, model, fleet, lr: 0.1, mu: 0.0, method: Method::FasterPam })
+}
+
+#[test]
+fn proptest_dispatch_trace_apis_delegate_through_shared_pool_refs() {
+    check("dispatch-ref-delegation", env_seed(0xD15D), env_cases(8), |rng, _| {
+        let workers = 2 + rng.below(3);
+        let factory = RuntimeFactory::new("/nonexistent/fedcore-artifacts");
+        let pool = Sharded::with_policy(workers, factory, DispatchPolicy::WorkStealing);
+        // Everything below goes through `&pool` — the shared sweep-pool
+        // executor — so the new dispatch/trace APIs must all delegate.
+        let by_ref: &Sharded = &pool;
+        assert_eq!(by_ref.dispatch_policy(), DispatchPolicy::WorkStealing);
+        assert_eq!(Executor::workers(&by_ref), workers);
+        by_ref.record_schedule(true);
+
+        let ctx = tiny_ctx();
+        let jobs: Vec<ClientJob> = (0..2)
+            .map(|c| ClientJob {
+                client: c,
+                plan: LocalPlan::FullSet { epochs: 2 },
+                global: Arc::new(vec![0.0; 4]),
+                static_coreset: None,
+                rng: rng.split(c as u64),
+            })
+            .collect();
+        // The jobs fail (no artifacts) — but the schedule was planned
+        // and recorded at dispatch time, so instrumentation still works.
+        assert!(by_ref.run_clients(&ctx, jobs).is_err());
+        let stats = by_ref.last_client_dispatch().expect("client batch observed");
+        assert_eq!(stats.workers, workers);
+        assert_eq!(stats.jobs, 2);
+        let trace = by_ref.take_schedule().expect("recording was on");
+        assert_eq!(trace.len(), 2);
+        assert!(trace.entries.iter().all(|e| e.kind == JobKind::Client && e.worker < workers));
+        // Draining leaves an empty ledger; turning recording off stops it.
+        assert!(by_ref.take_schedule().expect("still recording").is_empty());
+        by_ref.record_schedule(false);
+        assert!(by_ref.take_schedule().is_none());
+    });
+}
+
+// ---------- runtime-gated: the dispatch differential harness ----------
+
+fn agg_for(case: usize) -> (AggPolicy, Option<f64>) {
+    // Cycle every aggregation policy through the differential, with a
+    // norm-clip wrapper on alternating passes.
+    let clip = if case % 2 == 0 { None } else { Some(2.5) };
+    let policy = match (case / 2) % 4 {
+        0 => AggPolicy::Mean,
+        1 => AggPolicy::Buffered { k: 3, momentum: 0.2 },
+        2 => AggPolicy::TrimmedMean { trim_frac: 0.1 },
+        _ => AggPolicy::CoordinateMedian,
+    };
+    (policy, clip)
+}
+
+fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [
+        Strategy::FedCore,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: 0.1 },
+        Strategy::FedAvg,
+    ];
+    let (aggregator, clip_norm) = agg_for(case);
+    let trace = match rng.below(3) {
+        0 => None,
+        1 => Some(TraceSpec::from_model(
+            ChurnModel::Markov {
+                mean_on: rng.range_f64(2.0, 8.0),
+                mean_off: rng.range_f64(0.5, 3.0),
+                p_init_online: 0.8,
+            },
+            24.0,
+            rng.next_u64(),
+        )),
+        _ => Some(TraceSpec::from_model(
+            ChurnModel::HeavyTail {
+                mean_on: rng.range_f64(2.0, 6.0),
+                min_off: 0.5,
+                alpha: rng.range_f64(1.2, 2.5),
+            },
+            24.0,
+            rng.next_u64(),
+        )),
+    };
+    let overlap = (rng.below(2) == 0).then(|| OverlapConfig {
+        quorum: rng.range_f64(0.4, 1.0),
+        max_staleness: rng.below(3),
+        alpha: 1.0,
+    });
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 1 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 3 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: [10.0, 30.0][rng.below(2)],
+        seed: rng.next_u64(),
+        coreset_method: Method::FasterPam,
+        coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+        eval_every: 1,
+        eval_cap: 128,
+        workers: 1,
+        dispatch: DispatchPolicy::RoundRobin,
+        trace,
+        overlap,
+        aggregator,
+        clip_norm,
+        adaptive_quorum: overlap.is_some() && rng.below(2) == 0,
+        verbose: false,
+        ..RunConfig::default()
+    }
+}
+
+/// Serialized checkpoint bytes of a run's final model (written through
+/// the real `Checkpoint` writer, then read back raw).
+fn checkpoint_bytes(res: &RunResult, tag: &str) -> Vec<u8> {
+    // Unique per call: tests run concurrently in one process, so the
+    // pid alone cannot disambiguate scratch files.
+    static SCRATCH: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let nonce = SCRATCH.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "fedcore-dispatch-{}-{tag}-{nonce}.ckpt",
+        std::process::id()
+    ));
+    Checkpoint::new(res.benchmark.clone(), res.rounds.len() as u64, res.final_params.clone())
+        .save(&path)
+        .expect("writing checkpoint");
+    let bytes = std::fs::read(&path).expect("reading checkpoint back");
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// The dispatch determinism contract: model bytes, every round record,
+/// and the model CSV are bit-identical; only the dispatch diagnostics
+/// (`steal_count` / `worker_idle`, exported via `to_dispatch_csv`) may
+/// differ between executors.
+fn assert_model_outputs_bitwise_equal(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{what}: param count");
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final param {i}: {x} vs {y}");
+    }
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} round {r} loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{what} round {r} test_loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{what} round {r} test_acc");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{what} round {r} sim_time");
+        assert_eq!(x.tail_time.to_bits(), y.tail_time.to_bits(), "{what} round {r} tail_time");
+        assert_eq!(x.client_times, y.client_times, "{what} round {r} client_times");
+        assert_eq!(x.dropped, y.dropped, "{what} round {r} dropped");
+        assert_eq!(x.churn_dropped, y.churn_dropped, "{what} round {r} churn_dropped");
+        assert_eq!(x.stale_folded, y.stale_folded, "{what} round {r} stale_folded");
+        assert_eq!(x.stale_discarded, y.stale_discarded, "{what} round {r} stale_discarded");
+        assert_eq!(x.agg_rejected, y.agg_rejected, "{what} round {r} agg_rejected");
+        assert_eq!(x.agg_clipped, y.agg_clipped, "{what} round {r} agg_clipped");
+        assert_eq!(x.coreset_clients, y.coreset_clients, "{what} round {r} coreset_clients");
+    }
+    assert_eq!(a.to_csv(), b.to_csv(), "{what}: model CSV diverged");
+    assert_eq!(
+        checkpoint_bytes(a, "a"),
+        checkpoint_bytes(b, "b"),
+        "{what}: checkpoint bytes diverged"
+    );
+}
+
+/// The centerpiece: `WorkStealing` ≡ `RoundRobin` ≡ `Sequential`
+/// bit-for-bit across strategies, every aggregation policy, churn
+/// traces, and the overlap pipeline.
+#[test]
+fn proptest_dispatch_policies_bitwise_equivalent() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("dispatch-policy-equivalence", env_seed(0xD15E), env_cases(8), |rng, case| {
+        let mut cfg = differential_cfg(rng, case);
+        let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        cfg.workers = 2 + rng.below(3);
+        cfg.dispatch = DispatchPolicy::RoundRobin;
+        let rr = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        cfg.dispatch = DispatchPolicy::WorkStealing;
+        let ws = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        let what = format!(
+            "{} agg={} workers={}",
+            seq.strategy,
+            cfg.aggregator.label(),
+            cfg.workers
+        );
+        assert_model_outputs_bitwise_equal(&seq, &rr, &format!("{what} [seq vs rr]"));
+        assert_model_outputs_bitwise_equal(&seq, &ws, &format!("{what} [seq vs ws]"));
+        assert_model_outputs_bitwise_equal(&rr, &ws, &format!("{what} [rr vs ws]"));
+    });
+}
+
+/// Schedule-trace replay: the work-stealing ledger (placement, virtual
+/// times, steal counts) and the per-round dispatch CSV are pure
+/// functions of the seed.
+#[test]
+fn proptest_dispatch_trace_replays_deterministically() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("dispatch-trace-replay", env_seed(0xD15F), env_cases(4), |rng, case| {
+        let mut cfg = differential_cfg(rng, case);
+        cfg.workers = 3;
+        cfg.dispatch = DispatchPolicy::WorkStealing;
+        let one_run = || {
+            let exec =
+                Sharded::with_policy(cfg.workers, rt.factory(), DispatchPolicy::WorkStealing);
+            let engine = Engine::with_executor(&rt, &ds, cfg.clone(), exec).unwrap();
+            engine.executor().record_schedule(true);
+            let result = engine.run().unwrap();
+            let trace = engine.executor().take_schedule().expect("recording was on");
+            (result, trace)
+        };
+        let (res_a, trace_a) = one_run();
+        let (res_b, trace_b) = one_run();
+        assert_eq!(trace_a, trace_b, "schedule trace did not replay");
+        assert!(!trace_a.is_empty(), "a real run must record dispatches");
+        assert_eq!(
+            res_a.to_dispatch_csv(),
+            res_b.to_dispatch_csv(),
+            "dispatch ledger CSV did not replay"
+        );
+        assert_eq!(res_a.to_csv(), res_b.to_csv(), "model CSV did not replay");
+        // The ledger and the per-round columns agree: each round's last
+        // client entry carries that round's cumulative steal count.
+        for rec in &res_a.rounds {
+            let batch_last = trace_a
+                .entries
+                .iter()
+                .rfind(|e| e.kind == JobKind::Client && e.round == rec.round);
+            if let Some(e) = batch_last {
+                assert_eq!(
+                    e.steal_count, rec.steal_count,
+                    "round {} ledger/record steal mismatch",
+                    rec.round
+                );
+            }
+        }
+    });
+}
+
+/// Cross-subsystem composition (satellite): one cell driving
+/// work-stealing dispatch + the overlap quorum + the trimmed-mean
+/// aggregator + a markov churn trace through `expt::run_cell_with`,
+/// replayed bit-for-bit on the same seed.
+#[test]
+fn proptest_dispatch_cross_subsystem_cell_replays() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let compose = |run: &mut RunConfig| {
+        run.workers = 3;
+        run.dispatch = DispatchPolicy::WorkStealing;
+        run.overlap = Some(OverlapConfig { quorum: 0.6, max_staleness: 2, alpha: 1.0 });
+        run.aggregator = AggPolicy::TrimmedMean { trim_frac: 0.1 };
+        run.trace = Some(TraceSpec::from_model(
+            ChurnModel::Markov { mean_on: 4.0, mean_off: 1.5, p_init_online: 0.9 },
+            24.0,
+            17,
+        ));
+    };
+    let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
+    let a = fedcore::expt::run_cell_with(&rt, bench, 30.0, env_seed(21), compose).unwrap();
+    let b = fedcore::expt::run_cell_with(&rt, bench, 30.0, env_seed(21), compose).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_model_outputs_bitwise_equal(x, y, &format!("{} cell replay", x.strategy));
+        assert_eq!(
+            x.to_dispatch_csv(),
+            y.to_dispatch_csv(),
+            "{}: dispatch ledger did not replay",
+            x.strategy
+        );
+    }
+}

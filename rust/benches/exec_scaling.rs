@@ -14,7 +14,11 @@
 //! the AOT artifacts are absent.
 //!
 //! Knobs: `FEDCORE_SCALE`, `FEDCORE_ROUNDS`, `FEDCORE_CLIENTS`,
-//! `FEDCORE_BENCH_OUT` (output path, default `BENCH_exec.json`).
+//! `FEDCORE_BENCH_OUT` (output path, default `BENCH_exec.json`),
+//! `FEDCORE_OBS_OUT` (also write a schema-v1 observability trace of the
+//! virtual-time sweep — one trace round per pool width, the stealing
+//! schedule's ledger as per-job spans — so CI can validate the JSONL
+//! schema and render `fedcore report` without artifacts).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -22,10 +26,11 @@ use std::time::Instant;
 
 use fedcore::coreset::Method;
 use fedcore::data::{self, Benchmark};
-use fedcore::exec::{plan_schedule, DispatchPolicy};
+use fedcore::exec::{plan_schedule, DispatchPolicy, JobKind, ScheduleEntry, ScheduleTrace};
 use fedcore::expt;
 use fedcore::fl::{CoresetMode, Engine, RunConfig, Strategy};
 use fedcore::metrics::RunResult;
+use fedcore::obs::{Counter, Jsonl, Phase, Record, Recorder as _};
 use fedcore::sim::Fleet;
 use fedcore::util::json::{write_json, Json};
 use fedcore::util::rng::Rng;
@@ -63,10 +68,29 @@ fn dispatch_sweep() -> Vec<Json> {
         "{:>8} {:>14} {:>12} {:>12} {:>8}",
         "workers", "policy", "makespan", "util", "steals"
     );
+    // FEDCORE_OBS_OUT: trace the sweep itself. Widths become trace
+    // rounds; the stealing schedules' ledgers become per-job spans. The
+    // file passes `fedcore report --check` and renders a full report, so
+    // CI exercises the whole obs pipeline without artifacts.
+    let obs: Option<Jsonl> = std::env::var("FEDCORE_OBS_OUT").ok().map(|path| {
+        let rec = Jsonl::create(&path, "bench", fedcore::util::bench::provenance(7, 4, 1.0))
+            .expect("creating obs trace");
+        rec.record(&Record::Event {
+            name: "run_start",
+            round: 0,
+            fields: vec![("rounds", Json::Num(4.0)), ("strategy", Json::Str("sweep".into()))],
+        });
+        println!("(tracing dispatch sweep to {path})");
+        rec
+    });
+    let mut ledger = ScheduleTrace::default();
+
     let mut rows = Vec::new();
-    for workers in [1usize, 2, 4, 8] {
+    for (r, workers) in [1usize, 2, 4, 8].into_iter().enumerate() {
+        let round_w0 = obs.as_ref().map_or(0, |rec| rec.now_ns());
         let rr = plan_schedule(DispatchPolicy::RoundRobin, &costs, workers);
         let ws = plan_schedule(DispatchPolicy::WorkStealing, &costs, workers);
+        let plan_w1 = obs.as_ref().map_or(0, |rec| rec.now_ns());
         assert!(
             (rr.busy_seconds() - ws.busy_seconds()).abs() < 1e-9,
             "dispatch must conserve work"
@@ -104,6 +128,36 @@ fn dispatch_sweep() -> Vec<Json> {
                 ("steals", num(s.steals() as f64)),
             ]));
         }
+        if let Some(rec) = &obs {
+            let round_w1 = rec.now_ns();
+            let sp = |phase, wall, virt| Record::span(phase, r, wall, virt);
+            rec.record(&sp(Phase::Round, (round_w0, round_w1), (0.0, ws.makespan)));
+            rec.record(&sp(Phase::Dispatch, (round_w0, plan_w1), (0.0, 0.0)));
+            rec.record(&Record::CounterVal {
+                counter: Counter::Steals,
+                round: r,
+                value: ws.steals() as u64,
+            });
+            if let Some(m) = fedcore::obs::mem::sample() {
+                rec.record(&Record::Mem { round: r, rss_pages: m.pages, rss_bytes: m.bytes });
+            }
+            let mut stolen_so_far = 0usize;
+            for i in 0..costs.len() {
+                stolen_so_far += ws.stolen[i] as usize;
+                ledger.entries.push(ScheduleEntry {
+                    round: r,
+                    kind: JobKind::Client,
+                    job_idx: i,
+                    worker: ws.assignment[i],
+                    steal_count: stolen_so_far,
+                    start: ws.start[i],
+                    end: ws.end[i],
+                });
+            }
+        }
+    }
+    if let Some(rec) = &obs {
+        fedcore::obs::emit_schedule(rec, &ledger);
     }
     rows
 }

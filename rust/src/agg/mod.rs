@@ -59,6 +59,24 @@ pub struct AggStats {
     pub buffered: usize,
 }
 
+impl AggStats {
+    /// Nothing rejected, clipped, or buffered this round — the quiet
+    /// case the observability layer skips an event for.
+    pub fn is_quiet(&self) -> bool {
+        *self == AggStats::default()
+    }
+
+    /// The stats as named numeric fields, in emission order — the
+    /// payload of the `agg` trace event ([`crate::obs`]).
+    pub fn obs_fields(&self) -> [(&'static str, f64); 3] {
+        [
+            ("rejected", self.rejected as f64),
+            ("clipped", self.clipped as f64),
+            ("buffered", self.buffered as f64),
+        ]
+    }
+}
+
 /// One round's aggregation: fold weighted contributions (in the caller's
 /// deterministic order) into the next global model.
 ///
@@ -236,5 +254,16 @@ mod tests {
         assert_eq!(plain.label(), "mean");
         let clipped = AggPolicy::Mean.build(Some(1.0));
         assert_eq!(clipped.label(), "norm_clip");
+    }
+
+    #[test]
+    fn stats_quietness_and_obs_fields() {
+        assert!(AggStats::default().is_quiet());
+        let noisy = AggStats { rejected: 2, clipped: 1, buffered: 0 };
+        assert!(!noisy.is_quiet());
+        assert_eq!(
+            noisy.obs_fields(),
+            [("rejected", 2.0), ("clipped", 1.0), ("buffered", 0.0)]
+        );
     }
 }

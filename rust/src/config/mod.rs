@@ -101,6 +101,11 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("experiment", "data_seed").and_then(|v| v.as_i64()) {
             cfg.data_seed = v as u64;
         }
+        // Observability sink (write-only — a traced run is bit-identical
+        // to an untraced one, determinism rule 7).
+        if let Some(v) = doc.get("experiment", "obs_trace").and_then(|v| v.as_str()) {
+            cfg.run.obs = crate::obs::ObsConfig::Jsonl { path: v.to_string(), scale };
+        }
         let usize_of = |key: &str| doc.get("fl", key).and_then(|v| v.as_i64()).map(|v| v as usize);
         if let Some(v) = usize_of("rounds") {
             cfg.run.rounds = v;
@@ -386,6 +391,20 @@ dispatch = "work_stealing"
         );
         let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ndispatch = \"lifo\"\n";
         assert!(ExperimentConfig::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn obs_trace_key_selects_jsonl_sink() {
+        use crate::obs::ObsConfig;
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert_eq!(plain.run.obs, ObsConfig::Off);
+        let text = "[experiment]\nbenchmark = \"mnist\"\nscale = 0.25\n\
+                    obs_trace = \"run.jsonl\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.run.obs,
+            ObsConfig::Jsonl { path: "run.jsonl".into(), scale: 0.25 }
+        );
     }
 
     #[test]

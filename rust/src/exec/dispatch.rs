@@ -260,6 +260,17 @@ pub enum JobKind {
     Eval,
 }
 
+impl JobKind {
+    /// Canonical name (`"client"` / `"eval"`), as written by the CSV
+    /// and trace serializers.
+    pub fn label(self) -> &'static str {
+        match self {
+            JobKind::Client => "client",
+            JobKind::Eval => "eval",
+        }
+    }
+}
+
 /// One job's entry in the schedule ledger.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScheduleEntry {
@@ -330,18 +341,82 @@ impl ScheduleTrace {
         use std::fmt::Write as _;
         let mut out = String::from("round,kind,job_idx,worker,steal_count,start,end\n");
         for e in &self.entries {
-            let kind = match e.kind {
-                JobKind::Client => "client",
-                JobKind::Eval => "eval",
-            };
             let _ = writeln!(
                 out,
                 "{},{},{},{},{},{:.6},{:.6}",
-                e.round, kind, e.job_idx, e.worker, e.steal_count, e.start, e.end
+                e.round,
+                e.kind.label(),
+                e.job_idx,
+                e.worker,
+                e.steal_count,
+                e.start,
+                e.end
             );
         }
         out
     }
+
+    /// Roll the per-job ledger up to per-`(round, kind, worker)` busy
+    /// intervals — the per-worker spans the observability layer emits
+    /// ([`crate::obs::emit_schedule`]). Per-entry steal attribution is
+    /// reconstructed from the cumulative `steal_count` (batch
+    /// boundaries reset at `job_idx == 0`). Deterministic output
+    /// order: sorted by round, then kind (clients first), then worker.
+    pub fn worker_rollup(&self) -> Vec<WorkerRollup> {
+        let mut map: std::collections::BTreeMap<(usize, u8, usize), WorkerRollup> =
+            std::collections::BTreeMap::new();
+        let mut prev_steals = 0usize;
+        for e in &self.entries {
+            if e.job_idx == 0 {
+                prev_steals = 0;
+            }
+            let stolen = usize::from(e.steal_count > prev_steals);
+            prev_steals = e.steal_count;
+            let kind_ord = match e.kind {
+                JobKind::Client => 0u8,
+                JobKind::Eval => 1u8,
+            };
+            let w = map.entry((e.round, kind_ord, e.worker)).or_insert(WorkerRollup {
+                round: e.round,
+                kind: e.kind,
+                worker: e.worker,
+                jobs: 0,
+                stolen: 0,
+                busy: 0.0,
+                start: e.start,
+                end: e.end,
+            });
+            w.jobs += 1;
+            w.stolen += stolen;
+            w.busy += e.end - e.start;
+            w.start = w.start.min(e.start);
+            w.end = w.end.max(e.end);
+        }
+        map.into_values().collect()
+    }
+}
+
+/// One worker's aggregate over one dispatch batch: how many jobs it
+/// ran (and how many it stole), and its busy interval in the batch's
+/// virtual time. Produced by [`ScheduleTrace::worker_rollup`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerRollup {
+    /// Client-dispatch sequence number (see [`ScheduleEntry::round`]).
+    pub round: usize,
+    /// Client or eval batch.
+    pub kind: JobKind,
+    /// The worker index.
+    pub worker: usize,
+    /// Jobs this worker ran in the batch.
+    pub jobs: usize,
+    /// How many of those ran away from their round-robin home.
+    pub stolen: usize,
+    /// Total simulated busy seconds (sum of its jobs' costs).
+    pub busy: f64,
+    /// Virtual start of its first job within the batch.
+    pub start: f64,
+    /// Virtual end of its last job within the batch.
+    pub end: f64,
 }
 
 /// Shared schedule-instrumentation state for the built-in executors:
@@ -430,6 +505,38 @@ mod tests {
         assert!(DispatchPolicy::parse("lifo").is_none());
         for p in [DispatchPolicy::RoundRobin, DispatchPolicy::WorkStealing] {
             assert_eq!(DispatchPolicy::parse(p.label()), Some(p));
+        }
+    }
+
+    #[test]
+    fn worker_rollup_conserves_jobs_busy_and_steals() {
+        // Two batches (rounds 0, 1) over 2 workers, heavy head to force steals.
+        let recorder = TraceRecorder::default();
+        recorder.set_recording(true);
+        let costs = [[6.0, 1.0, 1.0, 1.0], [1.0, 1.0, 1.0, 1.0]];
+        for c in &costs {
+            recorder.observe(JobKind::Client, &plan_schedule(DispatchPolicy::WorkStealing, c, 2));
+        }
+        let trace = recorder.take().expect("recording on");
+        let rollup = trace.worker_rollup();
+        // Deterministic order: (round, kind, worker) ascending.
+        let keys: Vec<(usize, usize)> = rollup.iter().map(|w| (w.round, w.worker)).collect();
+        assert_eq!(keys, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+        // Conservation against the raw ledger, per round.
+        for r in 0..2 {
+            let jobs: usize = rollup.iter().filter(|w| w.round == r).map(|w| w.jobs).sum();
+            assert_eq!(jobs, 4);
+            let busy: f64 = rollup.iter().filter(|w| w.round == r).map(|w| w.busy).sum();
+            let total: f64 = costs[r].iter().sum();
+            assert!((busy - total).abs() < 1e-9);
+        }
+        let stolen: usize = rollup.iter().map(|w| w.stolen).sum();
+        assert_eq!(stolen, trace.total_steals());
+        assert!(stolen > 0, "the heavy head must force at least one steal");
+        // Busy intervals stay within the batch bounds.
+        for w in &rollup {
+            assert!(w.start >= 0.0 && w.end >= w.start);
+            assert!(w.busy <= w.end - w.start + 1e-9);
         }
     }
 

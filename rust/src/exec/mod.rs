@@ -40,6 +40,7 @@ pub mod sharded;
 
 pub use self::dispatch::{
     plan_schedule, DispatchPolicy, DispatchStats, JobKind, Schedule, ScheduleEntry, ScheduleTrace,
+    WorkerRollup,
 };
 pub use self::overlapped::{DelayedUpdate, InFlight, OverlapConfig, Overlapped};
 pub use self::sequential::Sequential;

@@ -244,11 +244,14 @@ pub fn run_cell_with(
     let mut out = Vec::new();
     for strategy in all_strategies(base.prox_mu) {
         let cfg = base.clone().with_strategy(strategy);
-        eprintln!(
-            "  [{} | {}% stragglers] {} ...",
-            bench.label(),
-            straggler_pct,
-            strategy.label()
+        crate::obs::warn_stderr(
+            "expt_cell",
+            &format!(
+                "  [{} | {}% stragglers] {} ...",
+                bench.label(),
+                straggler_pct,
+                strategy.label()
+            ),
         );
         let result = match &shared {
             Some(pool) => Engine::with_executor(rt, &ds, cfg.run.clone(), pool)?.run()?,
@@ -328,7 +331,7 @@ pub fn timing_projection(
 pub fn try_runtime() -> Option<Runtime> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        crate::obs::warn_stderr("runtime_skip", "skipping: no artifacts (run `make artifacts`)");
         return None;
     }
     match Runtime::load(&dir) {
@@ -336,7 +339,10 @@ pub fn try_runtime() -> Option<Runtime> {
         // The stub-backend build cannot execute artifacts even when they
         // exist; skip like the missing-artifacts case instead of failing.
         Err(e) if !cfg!(feature = "pjrt") => {
-            eprintln!("skipping: artifacts present but no pjrt backend ({e:#})");
+            crate::obs::warn_stderr(
+                "runtime_skip",
+                &format!("skipping: artifacts present but no pjrt backend ({e:#})"),
+            );
             None
         }
         Err(e) => panic!("runtime load: {e:#}"),

@@ -37,9 +37,11 @@ use crate::exec::{
     InFlight, OverlapConfig,
 };
 use crate::metrics::{RoundRecord, RunResult};
+use crate::obs::{Counter, ObsConfig, Phase, Record, Recorder};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
 use crate::scenario::{AvailabilityTrace, CorruptionSpec, TraceSpec};
 use crate::sim::{clock::RoundTiming, Fleet, SimClock};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 // The aggregation algebra moved to the agg subsystem; re-exported here
@@ -128,6 +130,12 @@ pub struct RunConfig {
     pub flaky_boost: f64,
     /// Print a progress line per round.
     pub verbose: bool,
+    /// Structured observability sink (see [`crate::obs`]). The default
+    /// [`ObsConfig::Off`] records nothing; `Jsonl` writes a
+    /// schema-versioned span/event/counter trace. Write-only by
+    /// contract (determinism rule 7): a traced run is bit-identical to
+    /// an untraced one (`rust/tests/proptest_obs.rs`).
+    pub obs: ObsConfig,
 }
 
 impl Default for RunConfig {
@@ -154,6 +162,7 @@ impl Default for RunConfig {
             corruption: None,
             flaky_boost: 0.0,
             verbose: false,
+            obs: ObsConfig::Off,
         }
     }
 }
@@ -253,6 +262,9 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     /// §4.3 static-coreset cache (client → coreset); budgets are constant
     /// per client, so a static coreset never needs rebuilding.
     static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
+    /// Observability sink built from `cfg.obs` (the [`crate::obs::Null`]
+    /// recorder when tracing is off). Write-only: never read back.
+    obs: Arc<dyn Recorder>,
 }
 
 impl<'a> Engine<'a> {
@@ -315,6 +327,9 @@ impl<'a, E: Executor> Engine<'a, E> {
             )),
             None => None,
         };
+        // The observability sink. Created last so a failing trace path
+        // never half-builds an engine; [`ObsConfig::Off`] is free.
+        let obs = cfg.obs.build(cfg.seed, cfg.rounds).context("observability sink")?;
         Ok(Engine {
             rt,
             model,
@@ -325,6 +340,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             trace,
             corrupted,
             static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+            obs,
         })
     }
 
@@ -445,7 +461,30 @@ impl<'a, E: Executor> Engine<'a, E> {
         let mut params = init_params;
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
 
+        // Observability (write-only — determinism rule 7): wall-clock
+        // reads flow *into* the trace and nowhere else; the untraced
+        // path never reads the clock at all ([`crate::obs::Null`]
+        // returns 0). A traced run also takes ownership of the
+        // executor's schedule ledger for the per-job/per-worker spans
+        // emitted at the end of the run; the `run_start` event keeps a
+        // multi-run trace file segmentable.
+        let obs = &*self.obs;
+        let traced = obs.enabled();
+        if traced {
+            self.exec.record_schedule(true);
+            obs.record(&Record::Event {
+                name: "run_start",
+                round: 0,
+                fields: vec![
+                    ("rounds", Json::Num(cfg.rounds as f64)),
+                    ("strategy", Json::Str(cfg.strategy.label().into())),
+                ],
+            });
+        }
+
         for r in 0..cfg.rounds {
+            let round_w0 = obs.now_ns();
+            let mut rss_peak: Option<crate::obs::mem::MemSample> = None;
             // --- Algorithm 1 line 3: sample K clients, p ∝ mᵢ, among the
             //     clients the availability trace reports online at the
             //     round's start (everyone, when no trace is configured) ---
@@ -457,6 +496,7 @@ impl<'a, E: Executor> Engine<'a, E> {
                     select_available(&mut select_rng, &weights, &online, cfg.clients_per_round)
                 }
             };
+            let select_w1 = obs.now_ns();
 
             // --- lines 5–13: local work, sharded across the executor.
             //     A selected client whose online window ends before its
@@ -475,6 +515,16 @@ impl<'a, E: Executor> Engine<'a, E> {
                     let have = trace.remaining_online(i, t_now);
                     if have < need {
                         churn_partial.push(Some(have));
+                        if traced {
+                            obs.record(&Record::Event {
+                                name: "churn_drop",
+                                round: r,
+                                fields: vec![
+                                    ("client", Json::Num(i as f64)),
+                                    ("partial_s", Json::Num(have)),
+                                ],
+                            });
+                        }
                         continue;
                     }
                 }
@@ -494,6 +544,7 @@ impl<'a, E: Executor> Engine<'a, E> {
                     rng: client_root.split((r as u64) << 20 | i as u64),
                 });
             }
+            let dispatch_w1 = obs.now_ns();
             let executed = self.exec.run_clients(&self.ctx, jobs)?;
             // Dispatch diagnostics of this round's client batch (virtual
             // time, deterministic): recorded per round and accumulated
@@ -535,6 +586,10 @@ impl<'a, E: Executor> Engine<'a, E> {
             }
             let churn_dropped = churn_partial.iter().filter(|s| s.is_some()).count();
             let partial_time: f64 = churn_partial.iter().flatten().sum();
+            let train_w1 = obs.now_ns();
+            if traced {
+                crate::obs::mem::fold_peak(&mut rss_peak);
+            }
 
             // --- timing: the synchronous server waits for its slowest
             //     participant; the overlapped server advances at the
@@ -609,17 +664,48 @@ impl<'a, E: Executor> Engine<'a, E> {
                     fold_weights.push(w);
                     stale_folded += 1;
                     stale_weight += w;
+                    if traced {
+                        obs.record(&Record::Event {
+                            name: "stale_fold",
+                            round: r,
+                            fields: vec![
+                                ("origin_round", Json::Num(u.origin_round as f64)),
+                                ("client", Json::Num(u.client as f64)),
+                                ("staleness", Json::Num(staleness as f64)),
+                                ("weight", Json::Num(w)),
+                            ],
+                        });
+                    }
                 } else {
                     stale_discarded += 1;
+                    if traced {
+                        obs.record(&Record::Event {
+                            name: "stale_discard",
+                            round: r,
+                            fields: vec![
+                                ("origin_round", Json::Num(u.origin_round as f64)),
+                                ("client", Json::Num(u.client as f64)),
+                                ("staleness", Json::Num(staleness as f64)),
+                            ],
+                        });
+                    }
                 }
             }
             if let Some(ov) = overlap {
                 // Bound the ledger: anything that can no longer fold
                 // within the staleness cap — or is still in flight after
                 // the final round — is discarded and accounted now.
-                stale_discarded += in_flight.discard_doomed(r, ov.max_staleness);
+                let mut doomed = in_flight.discard_doomed(r, ov.max_staleness);
                 if r + 1 == cfg.rounds {
-                    stale_discarded += in_flight.discard_all();
+                    doomed += in_flight.discard_all();
+                }
+                stale_discarded += doomed;
+                if traced && doomed > 0 {
+                    obs.record(&Record::Event {
+                        name: "stale_discard_doomed",
+                        round: r,
+                        fields: vec![("count", Json::Num(doomed as f64))],
+                    });
                 }
             }
             if let Some(a) = &mut adaptive {
@@ -640,7 +726,22 @@ impl<'a, E: Executor> Engine<'a, E> {
                     params = p;
                 }
             }
+            if traced && !agg_stats.is_quiet() {
+                obs.record(&Record::Event {
+                    name: "agg",
+                    round: r,
+                    fields: agg_stats
+                        .obs_fields()
+                        .iter()
+                        .map(|&(k, v)| (k, Json::Num(v)))
+                        .collect(),
+                });
+            }
             clock.push_round(timing.clone());
+            let agg_w1 = obs.now_ns();
+            if traced {
+                crate::obs::mem::fold_peak(&mut rss_peak);
+            }
 
             // --- metrics (over the round's own executed clients — a late
             //     finisher did its local training this round even though
@@ -665,8 +766,14 @@ impl<'a, E: Executor> Engine<'a, E> {
             };
 
             let do_eval = r % cfg.eval_every == 0 || r + 1 == cfg.rounds;
+            let mut eval_wall: Option<(u64, u64)> = None;
             let (test_loss, test_acc) = if do_eval {
+                let w0 = obs.now_ns();
                 let ev = self.evaluate(&params)?;
+                eval_wall = Some((w0, obs.now_ns()));
+                if traced {
+                    crate::obs::mem::fold_peak(&mut rss_peak);
+                }
                 (ev.mean_loss(), ev.accuracy())
             } else {
                 rounds
@@ -698,12 +805,62 @@ impl<'a, E: Executor> Engine<'a, E> {
                 } else {
                     String::new()
                 };
-                eprintln!(
-                    "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}{overlap_note}{agg_note}",
-                    cfg.strategy.label(),
-                    100.0 * test_acc,
-                    sim_time / self.fleet.deadline,
+                crate::obs::warn(
+                    obs,
+                    "round_progress",
+                    Some(r),
+                    &format!(
+                        "[{}] round {r:>3}: loss {train_loss:.4} | test acc {:.2}% | t/τ {:.2} | dropped {dropped} | coreset {coreset_clients}{churn_note}{overlap_note}{agg_note}",
+                        cfg.strategy.label(),
+                        100.0 * test_acc,
+                        sim_time / self.fleet.deadline,
+                    ),
                 );
+            }
+
+            if traced {
+                // Emission order is part of the trace contract: the round
+                // span first, then its lifecycle phases in wall order, the
+                // counter registry in `Counter::ALL` order, and the round's
+                // peak-RSS sample last. Phase wall windows are captured
+                // from sequential monotonic reads, so they are disjoint and
+                // contained in the round window by construction — the
+                // report's nesting check relies on exactly that.
+                let round_w1 = obs.now_ns();
+                let span = |phase, wall, virt| Record::span(phase, r, wall, virt);
+                obs.record(&span(Phase::Round, (round_w0, round_w1), (t_now, agg_instant)));
+                obs.record(&span(Phase::Select, (round_w0, select_w1), (t_now, t_now)));
+                obs.record(&span(Phase::Dispatch, (select_w1, dispatch_w1), (t_now, t_now)));
+                obs.record(&span(Phase::Train, (dispatch_w1, train_w1), (t_now, agg_instant)));
+                obs.record(&span(
+                    Phase::Aggregate,
+                    (train_w1, agg_w1),
+                    (agg_instant, agg_instant),
+                ));
+                if let Some(wall) = eval_wall {
+                    obs.record(&span(Phase::Eval, wall, (agg_instant, agg_instant)));
+                }
+                let tallies: [(Counter, usize); 9] = [
+                    (Counter::Dropped, dropped),
+                    (Counter::ChurnDropped, churn_dropped),
+                    (Counter::StaleFolded, stale_folded),
+                    (Counter::StaleDiscarded, stale_discarded),
+                    (Counter::AggRejected, agg_stats.rejected),
+                    (Counter::AggClipped, agg_stats.clipped),
+                    (Counter::AggBuffered, agg_stats.buffered),
+                    (Counter::Steals, dispatch.steals),
+                    (Counter::CoresetClients, coreset_clients),
+                ];
+                for (counter, value) in tallies {
+                    obs.record(&Record::CounterVal { counter, round: r, value: value as u64 });
+                }
+                if let Some(m) = rss_peak {
+                    obs.record(&Record::Mem {
+                        round: r,
+                        rss_pages: m.pages,
+                        rss_bytes: m.bytes,
+                    });
+                }
             }
 
             rounds.push(RoundRecord {
@@ -728,6 +885,16 @@ impl<'a, E: Executor> Engine<'a, E> {
                 coreset_clients,
                 mean_compression,
             });
+        }
+
+        if traced {
+            // Drain the executor's placement ledger into per-job and
+            // per-worker spans, then stop recording so an untraced run
+            // after this one pays nothing.
+            if let Some(sched) = self.exec.take_schedule() {
+                crate::obs::emit_schedule(obs, &sched);
+            }
+            self.exec.record_schedule(false);
         }
 
         Ok(RunResult {

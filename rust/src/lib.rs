@@ -75,6 +75,22 @@
 //! [`agg::AdaptiveQuorum`] controller can additionally tighten or relax
 //! the overlapped pipeline's quorum from the observed stale-discard
 //! rate (`--adaptive-quorum`).
+//!
+//! # Observability
+//!
+//! The [`obs`] subsystem is a structured, write-only telemetry spine
+//! ([`fl::RunConfig::obs`], `--obs-trace` on the CLI, `[experiment]
+//! obs_trace` in config files): a [`obs::Recorder`] sink records
+//! schema-versioned JSONL spans (round lifecycle phases with both
+//! virtual- and wall-time bounds, per-job/per-worker schedule spans),
+//! events (staleness folds/discards, churn dropouts, aggregation
+//! rejections), a typed per-round counter registry, rate-limited warn
+//! diagnostics, and per-round peak-RSS samples. `fedcore report`
+//! renders a trace into a phase breakdown table, a critical-path /
+//! straggler-tail summary, and an SVG timeline. Recording never feeds
+//! back into the run: a traced run is bit-identical to an untraced one
+//! (determinism rule 7, `rust/tests/proptest_obs.rs`); see
+//! `docs/observability.md`.
 
 #![warn(missing_docs)]
 
@@ -86,6 +102,7 @@ pub mod exec;
 pub mod expt;
 pub mod fl;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;

@@ -2,10 +2,13 @@
 //!
 //! Subcommands (first positional argument):
 //!
-//! * `run`   — one experiment (benchmark × strategy × straggler%), CSV out.
-//! * `sweep` — all four strategies on one benchmark (a Table 2 column pair).
-//! * `data`  — generate a benchmark and print its Table 1 statistics.
-//! * `info`  — show the artifact manifest the runtime would load.
+//! * `run`    — one experiment (benchmark × strategy × straggler%), CSV out.
+//! * `sweep`  — all four strategies on one benchmark (a Table 2 column pair).
+//! * `data`   — generate a benchmark and print its Table 1 statistics.
+//! * `info`   — show the artifact manifest the runtime would load.
+//! * `report` — render an `--obs-trace` JSONL trace: per-round phase
+//!   breakdown, critical-path / straggler-tail summary, SVG timeline
+//!   (`--out`), or schema validation only (`--check`).
 //!
 //! Example:
 //! ```text
@@ -21,13 +24,15 @@ use fedcore::data::{self, Benchmark};
 use fedcore::exec::Executor as _;
 use fedcore::fl::{all_strategies, Engine, Strategy};
 use fedcore::metrics::table2_rows;
+use fedcore::obs::Recorder as _;
 use fedcore::runtime::Runtime;
 use fedcore::util::cli::{Args, Cli};
 
 fn cli() -> Cli {
     Cli::new(
         "fedcore",
-        "straggler-free federated learning with distributed coresets (run|sweep|data|info)",
+        "straggler-free federated learning with distributed coresets \
+         (run|sweep|data|info|report)",
     )
     .opt("bench", "synthetic(1,1)", "benchmark: mnist | shakespeare | synthetic(a,b)")
     .opt("strategy", "fedcore", "fedavg | fedavg-ds | fedprox | fedcore")
@@ -64,6 +69,8 @@ fn cli() -> Cli {
     .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
     .opt("load-ckpt", "", "resume from a model checkpoint")
     .opt("save-ckpt", "", "write the final global model to this path")
+    .opt("obs-trace", "", "write a structured JSONL trace here (run); trace to render (report)")
+    .flag("check", "report: validate the trace against the schema and exit")
     .flag("overlap", "async round overlap: quorum aggregation, staleness-weighted late updates")
     .flag("adaptive-quorum", "overlap: adapt the quorum from the observed stale-discard rate")
     .flag("static-coreset", "§4.3 static input-space coresets (default: adaptive)")
@@ -236,6 +243,14 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     if a.has("static-coreset") {
         cfg.run.coreset_mode = fedcore::fl::CoresetMode::Static;
     }
+    // Observability sink (write-only — determinism rule 7). A CLI flag
+    // overrides a config file's `[experiment] obs_trace`.
+    if !a.get("obs-trace").is_empty() {
+        cfg.run.obs = fedcore::obs::ObsConfig::Jsonl {
+            path: a.get("obs-trace").to_string(),
+            scale: cfg.scale,
+        };
+    }
     Ok(cfg)
 }
 
@@ -354,8 +369,46 @@ fn cmd_run(a: &Args) -> Result<()> {
             cfg.run.rounds as u64,
             result.final_params.clone(),
         );
+        let t0 = std::time::Instant::now();
         ck.save(a.get("save-ckpt"))?;
+        let elapsed_ns = t0.elapsed().as_nanos() as u64;
+        // Post-run bookkeeping span: appended outside the engine's trace
+        // segment (round index one past the last), exempt from nesting.
+        if let Some(path) = cfg.run.obs.path() {
+            let sink = fedcore::obs::Jsonl::append(path)?;
+            sink.record(&fedcore::obs::Record::span(
+                fedcore::obs::Phase::Checkpoint,
+                cfg.run.rounds,
+                (0, elapsed_ns),
+                (0.0, 0.0),
+            ));
+        }
         eprintln!("saved checkpoint to {}", a.get("save-ckpt"));
+    }
+    if let Some(path) = cfg.run.obs.path() {
+        eprintln!("wrote trace {path} (render: fedcore report --obs-trace {path})");
+    }
+    Ok(())
+}
+
+fn cmd_report(a: &Args) -> Result<()> {
+    let path = a.get("obs-trace");
+    if path.is_empty() {
+        return Err(anyhow!("report needs --obs-trace <trace.jsonl>"));
+    }
+    let trace = fedcore::obs::report::load(path)?;
+    let records = trace.check()?;
+    if a.has("check") {
+        println!("{path}: OK ({records} records, schema v{})", fedcore::obs::SCHEMA_VERSION);
+        return Ok(());
+    }
+    print!("{}", trace.phase_table());
+    println!();
+    print!("{}", trace.summary());
+    let out = a.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, trace.timeline_svg(&format!("fedcore timeline — {path}")))?;
+        eprintln!("wrote {out}");
     }
     Ok(())
 }
@@ -456,7 +509,8 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "data" => cmd_data(&args),
         "info" => cmd_info(&args),
-        other => Err(anyhow!("unknown command '{other}' (run|sweep|data|info)")),
+        "report" => cmd_report(&args),
+        other => Err(anyhow!("unknown command '{other}' (run|sweep|data|info|report)")),
     };
     if let Err(e) = result {
         eprintln!("fedcore: {e:#}");

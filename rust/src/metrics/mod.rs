@@ -397,6 +397,23 @@ mod tests {
     }
 
     #[test]
+    fn csv_headers_are_pinned() {
+        // Golden headers: column order and count are part of the output
+        // contract (downstream notebooks, the differential harnesses'
+        // bitwise CSV comparisons, the obs counter registry's mapping
+        // onto RoundRecord columns). Appending a column is a deliberate
+        // schema change — update these strings in the same commit.
+        const GOLDEN: &str = "round,train_loss,test_loss,test_acc,sim_time,tail_time,\
+                              sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,\
+                              stale_discarded,stale_weight,agg_rejected,agg_clipped,\
+                              coreset_clients,mean_compression";
+        const GOLDEN_DISPATCH: &str = "round,steal_count,worker_idle";
+        assert_eq!(run().to_csv().lines().next().unwrap(), GOLDEN);
+        assert_eq!(GOLDEN.split(',').count(), 17);
+        assert_eq!(run().to_dispatch_csv().lines().next().unwrap(), GOLDEN_DISPATCH);
+    }
+
+    #[test]
     fn dispatch_csv_and_totals() {
         let mut r = run();
         r.rounds[0].steal_count = 2;

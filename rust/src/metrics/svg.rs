@@ -240,6 +240,100 @@ pub fn log_histogram(title: &str, xlabel: &str, edges: &[f64], series: &[Series]
     out
 }
 
+/// Render a Gantt-style timeline: one horizontal lane per row, filled
+/// with colored `[x0, x1)` segments; `legend[i]` names color `i`.
+/// Backs the `fedcore report` per-round phase timeline
+/// ([`crate::obs::report::Trace::timeline_svg`]).
+pub fn timeline(
+    title: &str,
+    xlabel: &str,
+    rows: &[(String, Vec<(f64, f64, usize)>)],
+    legend: &[&str],
+) -> String {
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    for (_, segs) in rows {
+        for &(a, b, _) in segs {
+            if finite(a) && finite(b) {
+                x0 = x0.min(a);
+                x1 = x1.max(b);
+            }
+        }
+    }
+    if x0 > x1 {
+        (x0, x1) = (0.0, 1.0);
+    } else if (x1 - x0).abs() < 1e-12 {
+        (x0, x1) = (x0 - 0.5, x1 + 0.5);
+    }
+    let sx = |x: f64| MARGIN + (x - x0) / (x1 - x0) * (W - 2.0 * MARGIN);
+    let lane_h = (H - 2.0 * MARGIN) / rows.len().max(1) as f64;
+    let bar_h = (lane_h * 0.6).min(18.0);
+
+    let mut out = header(title);
+    let _ = writeln!(
+        out,
+        "<rect x=\"{MARGIN}\" y=\"{MARGIN}\" width=\"{}\" height=\"{}\" fill=\"none\" stroke=\"#999\"/>",
+        W - 2.0 * MARGIN,
+        H - 2.0 * MARGIN
+    );
+    // x ticks
+    for i in 0..=4 {
+        let fx = i as f64 / 4.0;
+        let gx = MARGIN + fx * (W - 2.0 * MARGIN);
+        let _ = writeln!(
+            out,
+            "<text x=\"{gx:.1}\" y=\"{:.1}\" text-anchor=\"middle\" fill=\"#444\">{}</text>",
+            H - MARGIN + 16.0,
+            fmt_tick(x0 + fx * (x1 - x0))
+        );
+    }
+    for (ri, (label, segs)) in rows.iter().enumerate() {
+        let lane_top = MARGIN + ri as f64 * lane_h;
+        let bar_y = lane_top + (lane_h - bar_h) / 2.0;
+        let _ = writeln!(
+            out,
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\" fill=\"#222\">{}</text>",
+            MARGIN - 6.0,
+            bar_y + bar_h / 2.0 + 4.0,
+            xml_escape(label)
+        );
+        for &(a, b, c) in segs {
+            if !finite(a) || !finite(b) || b <= a {
+                continue;
+            }
+            let color = COLORS[c % COLORS.len()];
+            let _ = writeln!(
+                out,
+                "<rect x=\"{:.1}\" y=\"{bar_y:.1}\" width=\"{:.1}\" height=\"{bar_h:.1}\" \
+                 fill=\"{color}\" fill-opacity=\"0.85\"/>",
+                sx(a),
+                (sx(b) - sx(a)).max(0.5)
+            );
+        }
+    }
+    for (li, name) in legend.iter().enumerate() {
+        let color = COLORS[li % COLORS.len()];
+        let lx = MARGIN + 90.0 * li as f64;
+        let _ = writeln!(
+            out,
+            "<rect x=\"{lx:.1}\" y=\"{:.1}\" width=\"10\" height=\"10\" fill=\"{color}\"/>\
+             <text x=\"{:.1}\" y=\"{:.1}\" fill=\"#222\">{}</text>",
+            MARGIN - 24.0,
+            lx + 14.0,
+            MARGIN - 14.0,
+            xml_escape(name)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" fill=\"#222\">{}</text>",
+        W / 2.0,
+        H - 10.0,
+        xml_escape(xlabel)
+    );
+    out.push_str("</svg>\n");
+    out
+}
+
 /// Write an SVG next to the experiment CSVs.
 pub fn write_svg(path: impl AsRef<Path>, svg: &str) -> std::io::Result<()> {
     if let Some(dir) = path.as_ref().parent() {
@@ -293,6 +387,29 @@ mod tests {
     fn escapes_xml() {
         let svg = line_chart("a<b&c", "x", "y", &demo_series());
         assert!(svg.contains("a&lt;b&amp;c"));
+    }
+
+    #[test]
+    fn timeline_renders_lanes_and_legend() {
+        let rows = vec![
+            ("round 0".to_string(), vec![(0.0, 2.0, 0), (2.0, 5.0, 1), (5.0, 6.0, 2)]),
+            ("round 1".to_string(), vec![(6.0, 7.5, 0), (7.5, 9.0, 1)]),
+        ];
+        let svg = timeline("phases", "wall ms", &rows, &["select", "train", "eval"]);
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>\n"));
+        assert!(svg.contains("round 0") && svg.contains("round 1"));
+        assert!(svg.contains("select") && svg.contains("eval"));
+        // 5 phase bars, each with fill-opacity.
+        assert_eq!(svg.matches("fill-opacity").count(), 5);
+    }
+
+    #[test]
+    fn timeline_survives_degenerate_input() {
+        let svg = timeline("empty", "x", &[], &[]);
+        assert!(svg.ends_with("</svg>\n"));
+        let rows = vec![("r".to_string(), vec![(1.0, 1.0, 0), (f64::NAN, 2.0, 1)])];
+        let svg = timeline("flat", "x", &rows, &["a"]);
+        assert!(!svg.contains("NaN"));
     }
 
     #[test]

@@ -1,0 +1,676 @@
+//! Structured observability: spans, events, counters, and run reports.
+//!
+//! The engine's virtual-time outcomes ([`crate::metrics::RoundRecord`],
+//! `BENCH_*.json`) say nothing about where *real* time and memory go
+//! inside a round. This module adds a zero-dependency telemetry spine:
+//! a [`Recorder`] sink trait with a [`Null`] implementation (the
+//! default — no allocation, no clock reads recorded) and a [`Jsonl`]
+//! sink that appends one schema-versioned JSON object per line
+//! ([`SCHEMA_VERSION`], see `docs/observability.md` for the schema).
+//!
+//! Record taxonomy:
+//!
+//! - **span** — a named [`Phase`] with *both* virtual-time bounds
+//!   (simulated seconds, bit-replayable from the seed) and monotonic
+//!   wall-time bounds (nanoseconds since the sink's epoch). The engine
+//!   emits round-lifecycle spans (`select`/`dispatch`/`train`/
+//!   `aggregate`/`eval`, all wall-nested inside the round span) and the
+//!   CLI appends a post-run `checkpoint` span; [`emit_schedule`]
+//!   translates the executor's [`crate::exec::ScheduleTrace`] into
+//!   per-job and per-worker spans (virtual-time only).
+//! - **event** — a point occurrence with numeric/string fields:
+//!   staleness folds and discards ([`crate::exec::Overlapped`]),
+//!   scenario churn dropouts, aggregation rejection/clipping
+//!   ([`crate::agg`]), and one `run_start` marker per engine run so a
+//!   multi-run trace file stays segmentable.
+//! - **counter** — a per-round value from the typed [`Counter`]
+//!   registry; the same tallies the [`crate::metrics::RoundRecord`]
+//!   columns keep, emitted at their computation sites.
+//! - **warn** — a rate-limited diagnostic (see [`warn`]): what used to
+//!   be ad-hoc `eprintln!` lines, now structured and capped.
+//! - **mem** — per-round peak resident-set sample from
+//!   [`mem::sample`] (`/proc/self/statm`; a graceful no-op elsewhere).
+//!
+//! **Determinism rule 7 (write-only observability).** Recording must
+//! never influence the run: a `Jsonl`-traced run is bit-identical to a
+//! `Null`-recorder run in every model output (params, round records,
+//! CSV, checkpoint bytes). Wall-clock reads flow *into* the trace and
+//! nowhere else. Enforced by `rust/tests/proptest_obs.rs`.
+
+pub mod mem;
+pub mod report;
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{write_json, Json};
+
+/// Trace schema version stamped into every record's `"v"` field; bump
+/// on any breaking change to record shapes or required keys.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Max stderr lines per diagnostic key per process before [`warn`]
+/// suppresses further output (structured records keep flowing).
+pub const WARN_LIMIT: u64 = 4096;
+
+/// Named phases a span can describe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// One whole engine round (wall-brackets its lifecycle phases).
+    Round,
+    /// Client selection for the round.
+    Select,
+    /// Job construction + schedule planning.
+    Dispatch,
+    /// Client execution (`run_clients`) and outcome stitching.
+    Train,
+    /// Staleness folding + server aggregation.
+    Aggregate,
+    /// Test-set evaluation (only on eval rounds).
+    Eval,
+    /// Post-run checkpoint serialization (appended by the CLI).
+    Checkpoint,
+    /// One dispatched job, from the executor's schedule ledger
+    /// (virtual-time bounds only).
+    Job,
+    /// One worker's busy interval within a dispatch batch
+    /// (virtual-time bounds only).
+    Worker,
+}
+
+impl Phase {
+    /// The engine round-lifecycle phases the report tabulates, in
+    /// emission order. Each is wall-nested inside its round span.
+    pub const LIFECYCLE: [Phase; 5] =
+        [Phase::Select, Phase::Dispatch, Phase::Train, Phase::Aggregate, Phase::Eval];
+
+    /// Canonical span name written to the trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Round => "round",
+            Phase::Select => "select",
+            Phase::Dispatch => "dispatch",
+            Phase::Train => "train",
+            Phase::Aggregate => "aggregate",
+            Phase::Eval => "eval",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Job => "job",
+            Phase::Worker => "worker",
+        }
+    }
+}
+
+/// Typed registry of the per-round tallies the engine emits as counter
+/// records — the same quantities the [`crate::metrics::RoundRecord`]
+/// columns keep (the columns stay; the registry replaces scattered
+/// ad-hoc naming at the emission sites).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Clients past the τ deadline this round.
+    Dropped,
+    /// Clients lost to scenario churn before dispatch.
+    ChurnDropped,
+    /// Delayed updates folded into this round's aggregate.
+    StaleFolded,
+    /// Delayed updates discarded past the staleness bound.
+    StaleDiscarded,
+    /// Client updates rejected by the robust aggregator.
+    AggRejected,
+    /// Client updates clipped by the norm gate.
+    AggClipped,
+    /// Updates held in the server buffer after this round.
+    AggBuffered,
+    /// Jobs that ran away from their round-robin home worker.
+    Steals,
+    /// Selected clients that trained on a coreset this round.
+    CoresetClients,
+}
+
+impl Counter {
+    /// Every counter, in emission order.
+    pub const ALL: [Counter; 9] = [
+        Counter::Dropped,
+        Counter::ChurnDropped,
+        Counter::StaleFolded,
+        Counter::StaleDiscarded,
+        Counter::AggRejected,
+        Counter::AggClipped,
+        Counter::AggBuffered,
+        Counter::Steals,
+        Counter::CoresetClients,
+    ];
+
+    /// Canonical counter name written to the trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Dropped => "dropped",
+            Counter::ChurnDropped => "churn_dropped",
+            Counter::StaleFolded => "stale_folded",
+            Counter::StaleDiscarded => "stale_discarded",
+            Counter::AggRejected => "agg_rejected",
+            Counter::AggClipped => "agg_clipped",
+            Counter::AggBuffered => "agg_buffered",
+            Counter::Steals => "steals",
+            Counter::CoresetClients => "coreset_clients",
+        }
+    }
+}
+
+/// One trace record; serialized as a single JSON object per line with a
+/// `"t"` discriminant and the [`SCHEMA_VERSION`] in `"v"`.
+#[derive(Clone, Debug)]
+pub enum Record {
+    /// First line of a trace file: schema version, producing source
+    /// (`"engine"` / `"bench"`), and the workload provenance stamp
+    /// ([`crate::util::bench::provenance`]).
+    Header {
+        /// Who produced the trace.
+        source: &'static str,
+        /// `{seed, rounds, scale, git_sha, rustc}` workload identity.
+        provenance: Json,
+    },
+    /// A named phase with wall-time and virtual-time bounds.
+    Span {
+        /// Which phase this span measures.
+        phase: Phase,
+        /// Engine round index (the CLI's post-run checkpoint span uses
+        /// `rounds`, one past the last round).
+        round: usize,
+        /// Monotonic (start, end) nanoseconds since the sink's epoch;
+        /// `(0, 0)` for virtual-only spans (jobs, workers).
+        wall_ns: (u64, u64),
+        /// Simulated (start, end) seconds.
+        virt_s: (f64, f64),
+        /// Extra keys flattened into the record (must not collide with
+        /// the reserved span keys).
+        extra: Vec<(&'static str, Json)>,
+    },
+    /// A point occurrence with arbitrary named fields.
+    Event {
+        /// Event name (e.g. `stale_fold`, `churn_drop`, `run_start`).
+        name: &'static str,
+        /// Engine round index.
+        round: usize,
+        /// Extra keys flattened into the record.
+        fields: Vec<(&'static str, Json)>,
+    },
+    /// One per-round value from the [`Counter`] registry.
+    CounterVal {
+        /// Which counter.
+        counter: Counter,
+        /// Engine round index.
+        round: usize,
+        /// The tally.
+        value: u64,
+    },
+    /// A rate-limited diagnostic (structured twin of the stderr line).
+    Warn {
+        /// Stable diagnostic key (also the rate-limit bucket).
+        key: &'static str,
+        /// Round the diagnostic refers to, when there is one.
+        round: Option<usize>,
+        /// The human-readable message.
+        msg: String,
+    },
+    /// Per-round peak resident-set sample (Linux only; never emitted
+    /// where [`mem::sample`] returns `None`).
+    Mem {
+        /// Engine round index.
+        round: usize,
+        /// Peak resident pages observed during the round.
+        rss_pages: u64,
+        /// The same, scaled to bytes.
+        rss_bytes: u64,
+    },
+}
+
+/// Non-finite values would serialize as invalid JSON; clamp defensively
+/// (simulated times are finite by construction).
+fn num(v: f64) -> Json {
+    Json::Num(if v.is_finite() { v } else { 0.0 })
+}
+
+impl Record {
+    /// Shorthand for a lifecycle span with no extra fields.
+    pub fn span(phase: Phase, round: usize, wall_ns: (u64, u64), virt_s: (f64, f64)) -> Record {
+        Record::Span { phase, round, wall_ns, virt_s, extra: Vec::new() }
+    }
+
+    /// Serialize to the one-line JSON object form.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("v".to_string(), Json::Num(SCHEMA_VERSION as f64));
+        match self {
+            Record::Header { source, provenance } => {
+                m.insert("t".into(), Json::Str("header".into()));
+                m.insert("source".into(), Json::Str(source.to_string()));
+                m.insert("provenance".into(), provenance.clone());
+            }
+            Record::Span { phase, round, wall_ns, virt_s, extra } => {
+                m.insert("t".into(), Json::Str("span".into()));
+                m.insert("name".into(), Json::Str(phase.name().into()));
+                m.insert("round".into(), Json::Num(*round as f64));
+                m.insert("wall_start_ns".into(), Json::Num(wall_ns.0 as f64));
+                m.insert("wall_end_ns".into(), Json::Num(wall_ns.1 as f64));
+                m.insert("virt_start".into(), num(virt_s.0));
+                m.insert("virt_end".into(), num(virt_s.1));
+                for (k, v) in extra {
+                    m.insert(k.to_string(), v.clone());
+                }
+            }
+            Record::Event { name, round, fields } => {
+                m.insert("t".into(), Json::Str("event".into()));
+                m.insert("name".into(), Json::Str(name.to_string()));
+                m.insert("round".into(), Json::Num(*round as f64));
+                for (k, v) in fields {
+                    m.insert(k.to_string(), v.clone());
+                }
+            }
+            Record::CounterVal { counter, round, value } => {
+                m.insert("t".into(), Json::Str("counter".into()));
+                m.insert("name".into(), Json::Str(counter.name().into()));
+                m.insert("round".into(), Json::Num(*round as f64));
+                m.insert("value".into(), Json::Num(*value as f64));
+            }
+            Record::Warn { key, round, msg } => {
+                m.insert("t".into(), Json::Str("warn".into()));
+                m.insert("key".into(), Json::Str(key.to_string()));
+                if let Some(r) = round {
+                    m.insert("round".into(), Json::Num(*r as f64));
+                }
+                m.insert("msg".into(), Json::Str(msg.clone()));
+            }
+            Record::Mem { round, rss_pages, rss_bytes } => {
+                m.insert("t".into(), Json::Str("mem".into()));
+                m.insert("round".into(), Json::Num(*round as f64));
+                m.insert("rss_pages".into(), Json::Num(*rss_pages as f64));
+                m.insert("rss_bytes".into(), Json::Num(*rss_bytes as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
+/// A write-only trace sink. Implementations must uphold determinism
+/// rule 7: recording never feeds back into the run — no retries that
+/// block the round, no state the engine can observe. IO failures after
+/// sink creation are swallowed, never surfaced to the training loop.
+pub trait Recorder: Send + Sync {
+    /// Is this sink recording? Hot paths use this to skip record
+    /// assembly entirely (`false` for [`Null`]).
+    fn enabled(&self) -> bool;
+
+    /// Monotonic nanoseconds since the sink's epoch; `0` for [`Null`]
+    /// (the one clock the untraced path never reads).
+    fn now_ns(&self) -> u64;
+
+    /// Write one record (no-op for [`Null`]).
+    fn record(&self, rec: &Record);
+}
+
+/// The default sink: records nothing, reads no clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Null;
+
+impl Recorder for Null {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn now_ns(&self) -> u64 {
+        0
+    }
+
+    fn record(&self, _rec: &Record) {}
+}
+
+/// JSONL trace sink: one schema-versioned JSON object per line, header
+/// first. Interior mutability (`&self` recording) like the executor's
+/// `TraceRecorder`; each record is a single unbuffered `write`, so the
+/// file is line-complete at any instant and a post-run
+/// [`Jsonl::append`] handle (the CLI's checkpoint span) never splits a
+/// record.
+#[derive(Debug)]
+pub struct Jsonl {
+    epoch: Instant,
+    file: Mutex<std::fs::File>,
+}
+
+impl Jsonl {
+    /// Create (truncate) a trace file and write its header record.
+    /// `provenance` is the [`crate::util::bench::provenance`] stamp.
+    pub fn create(path: impl AsRef<Path>, source: &'static str, provenance: Json) -> Result<Jsonl> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating trace dir for {}", path.display()))?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let sink = Jsonl { epoch: Instant::now(), file: Mutex::new(file) };
+        sink.record(&Record::Header { source, provenance });
+        Ok(sink)
+    }
+
+    /// Open an existing trace for appending (no header). The epoch
+    /// restarts, so appended wall bounds are relative to this handle's
+    /// own start — post-run records only (they are exempt from the
+    /// report's round-nesting check).
+    pub fn append(path: impl AsRef<Path>) -> Result<Jsonl> {
+        let path = path.as_ref();
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("appending to trace file {}", path.display()))?;
+        Ok(Jsonl { epoch: Instant::now(), file: Mutex::new(file) })
+    }
+}
+
+impl Recorder for Jsonl {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn record(&self, rec: &Record) {
+        let mut line = String::new();
+        write_json(&rec.to_json(), &mut line);
+        line.push('\n');
+        let mut file = self.file.lock().expect("trace sink poisoned");
+        // Write-only contract: a full disk must not fail the run.
+        let _ = file.write_all(line.as_bytes());
+    }
+}
+
+/// Declarative observability config carried in
+/// [`crate::fl::RunConfig`]; [`ObsConfig::build`] turns it into the
+/// live sink (the [`crate::agg::AggPolicy`] pattern).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum ObsConfig {
+    /// No tracing (the [`Null`] recorder).
+    #[default]
+    Off,
+    /// JSONL trace sink.
+    Jsonl {
+        /// Trace file path (created/truncated at engine build).
+        path: String,
+        /// Workload scale stamped into the header provenance (the CLI
+        /// passes its resolved scale; engine-only callers use `1.0`).
+        scale: f64,
+    },
+}
+
+impl ObsConfig {
+    /// Build the recorder. `seed`/`rounds` feed the provenance stamp
+    /// in the trace header.
+    pub fn build(&self, seed: u64, rounds: usize) -> Result<std::sync::Arc<dyn Recorder>> {
+        match self {
+            ObsConfig::Off => Ok(std::sync::Arc::new(Null)),
+            ObsConfig::Jsonl { path, scale } => {
+                let prov = crate::util::bench::provenance(seed, rounds, *scale);
+                Ok(std::sync::Arc::new(Jsonl::create(path, "engine", prov)?))
+            }
+        }
+    }
+
+    /// The trace path, when tracing is on.
+    pub fn path(&self) -> Option<&str> {
+        match self {
+            ObsConfig::Off => None,
+            ObsConfig::Jsonl { path, .. } => Some(path),
+        }
+    }
+}
+
+/// How the rate limiter disposed of one diagnostic line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum WarnGate {
+    /// Under the cap: print it.
+    Emit,
+    /// First line over the cap: print the suppression notice instead.
+    Notice,
+    /// Past the cap: drop silently.
+    Suppressed,
+}
+
+fn warn_counts() -> &'static Mutex<HashMap<String, u64>> {
+    static COUNTS: OnceLock<Mutex<HashMap<String, u64>>> = OnceLock::new();
+    COUNTS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+pub(crate) fn warn_gate(key: &str, limit: u64) -> WarnGate {
+    let mut counts = warn_counts().lock().expect("warn limiter poisoned");
+    let n = counts.entry(key.to_string()).or_insert(0);
+    *n += 1;
+    if *n <= limit {
+        WarnGate::Emit
+    } else if *n == limit + 1 {
+        WarnGate::Notice
+    } else {
+        WarnGate::Suppressed
+    }
+}
+
+/// The single diagnostic API: print `msg` to stderr, rate-limited to
+/// [`WARN_LIMIT`] lines per `key` per process (one suppression notice,
+/// then silence), and mirror it as a structured warn record when the
+/// sink is recording (records are *not* rate-limited — the trace stays
+/// complete). Replaces the ad-hoc `eprintln!` diagnostics in the
+/// engine and experiment harness.
+pub fn warn(rec: &dyn Recorder, key: &'static str, round: Option<usize>, msg: &str) {
+    match warn_gate(key, WARN_LIMIT) {
+        WarnGate::Emit => eprintln!("{msg}"),
+        WarnGate::Notice => {
+            eprintln!("[obs] '{key}' hit its {WARN_LIMIT}-line cap; suppressing further output")
+        }
+        WarnGate::Suppressed => {}
+    }
+    if rec.enabled() {
+        rec.record(&Record::Warn { key, round, msg: msg.to_string() });
+    }
+}
+
+/// [`warn`] for call sites without a recorder at hand (the experiment
+/// harness): stderr only, same rate limit.
+pub fn warn_stderr(key: &'static str, msg: &str) {
+    warn(&Null, key, None, msg);
+}
+
+/// Translate the executor's schedule ledger into per-job and
+/// per-worker spans. Job/worker spans are virtual-time only (wall
+/// bounds `(0, 0)`): placement happened in simulated time on the
+/// coordinator, and per-job wall timing inside the pool would race.
+/// Virtual bounds are seconds within the job's dispatch batch.
+pub fn emit_schedule(rec: &dyn Recorder, trace: &crate::exec::ScheduleTrace) {
+    if !rec.enabled() {
+        return;
+    }
+    let mut prev_steals = 0usize;
+    for e in &trace.entries {
+        if e.job_idx == 0 {
+            prev_steals = 0;
+        }
+        let stolen = e.steal_count > prev_steals;
+        prev_steals = e.steal_count;
+        rec.record(&Record::Span {
+            phase: Phase::Job,
+            round: e.round,
+            wall_ns: (0, 0),
+            virt_s: (e.start, e.end),
+            extra: vec![
+                ("kind", Json::Str(e.kind.label().into())),
+                ("job", Json::Num(e.job_idx as f64)),
+                ("worker", Json::Num(e.worker as f64)),
+                ("stolen", Json::Bool(stolen)),
+            ],
+        });
+    }
+    for w in trace.worker_rollup() {
+        rec.record(&Record::Span {
+            phase: Phase::Worker,
+            round: w.round,
+            wall_ns: (0, 0),
+            virt_s: (w.start, w.end),
+            extra: vec![
+                ("kind", Json::Str(w.kind.label().into())),
+                ("worker", Json::Num(w.worker as f64)),
+                ("jobs", Json::Num(w.jobs as f64)),
+                ("stolen", Json::Num(w.stolen as f64)),
+                ("busy", num(w.busy)),
+            ],
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        static NONCE: AtomicUsize = AtomicUsize::new(0);
+        let n = NONCE.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("fedcore_obs_{}_{tag}_{n}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn null_recorder_is_inert() {
+        let rec = Null;
+        assert!(!rec.enabled());
+        assert_eq!(rec.now_ns(), 0);
+        rec.record(&Record::span(Phase::Round, 0, (0, 1), (0.0, 1.0)));
+    }
+
+    #[test]
+    fn jsonl_writes_header_then_valid_lines() {
+        let path = scratch("header");
+        let prov = crate::util::bench::provenance(7, 2, 1.0);
+        let sink = Jsonl::create(&path, "engine", prov).unwrap();
+        assert!(sink.enabled());
+        sink.record(&Record::span(Phase::Round, 0, (5, 9), (0.0, 1.5)));
+        sink.record(&Record::CounterVal { counter: Counter::Steals, round: 0, value: 3 });
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let head = Json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("t").and_then(|v| v.as_str()), Some("header"));
+        assert_eq!(head.get("v").and_then(|v| v.as_f64()), Some(SCHEMA_VERSION as f64));
+        assert_eq!(
+            head.get("provenance").and_then(|p| p.get("seed")).and_then(|v| v.as_f64()),
+            Some(7.0)
+        );
+        let span = Json::parse(lines[1]).unwrap();
+        assert_eq!(span.get("name").and_then(|v| v.as_str()), Some("round"));
+        assert_eq!(span.get("wall_end_ns").and_then(|v| v.as_f64()), Some(9.0));
+        let counter = Json::parse(lines[2]).unwrap();
+        assert_eq!(counter.get("name").and_then(|v| v.as_str()), Some("steals"));
+        assert_eq!(counter.get("value").and_then(|v| v.as_f64()), Some(3.0));
+    }
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let path = scratch("clock");
+        let sink = Jsonl::create(&path, "engine", Json::Obj(Default::default())).unwrap();
+        let a = sink.now_ns();
+        let b = sink.now_ns();
+        assert!(b >= a);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn warn_gate_caps_per_key() {
+        // Unique key: the limiter is process-global.
+        assert_eq!(warn_gate("test_gate_alpha", 2), WarnGate::Emit);
+        assert_eq!(warn_gate("test_gate_alpha", 2), WarnGate::Emit);
+        assert_eq!(warn_gate("test_gate_alpha", 2), WarnGate::Notice);
+        assert_eq!(warn_gate("test_gate_alpha", 2), WarnGate::Suppressed);
+        assert_eq!(warn_gate("test_gate_alpha", 2), WarnGate::Suppressed);
+        // Independent bucket per key.
+        assert_eq!(warn_gate("test_gate_beta", 2), WarnGate::Emit);
+    }
+
+    #[test]
+    fn counter_names_are_unique() {
+        let mut names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Counter::ALL.len());
+    }
+
+    #[test]
+    fn non_finite_virtual_times_are_clamped() {
+        let rec = Record::span(Phase::Train, 1, (0, 0), (f64::NAN, f64::INFINITY));
+        let mut out = String::new();
+        write_json(&rec.to_json(), &mut out);
+        assert!(!out.contains("NaN") && !out.contains("inf"));
+        Json::parse(&out).unwrap();
+    }
+
+    #[test]
+    fn obs_config_builds_the_matching_sink() {
+        assert!(!ObsConfig::Off.build(1, 1).unwrap().enabled());
+        assert_eq!(ObsConfig::Off.path(), None);
+        let path = scratch("cfg");
+        let cfg = ObsConfig::Jsonl { path: path.to_string_lossy().into_owned(), scale: 0.5 };
+        assert_eq!(cfg.path(), Some(path.to_string_lossy().as_ref()));
+        let rec = cfg.build(11, 4).unwrap();
+        assert!(rec.enabled());
+        drop(rec);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let head = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(head.get("source").and_then(|v| v.as_str()), Some("engine"));
+        let prov = head.get("provenance").unwrap();
+        assert_eq!(prov.get("rounds").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(prov.get("scale").and_then(|v| v.as_f64()), Some(0.5));
+    }
+
+    #[test]
+    fn emit_schedule_translates_jobs_and_workers() {
+        use crate::exec::{plan_schedule, DispatchPolicy, JobKind, ScheduleEntry, ScheduleTrace};
+        let sched = plan_schedule(DispatchPolicy::WorkStealing, &[5.0, 1.0, 1.0, 1.0], 2);
+        let mut entries = Vec::new();
+        let mut steals = 0;
+        for i in 0..4 {
+            steals += sched.stolen[i] as usize;
+            entries.push(ScheduleEntry {
+                round: 0,
+                kind: JobKind::Client,
+                job_idx: i,
+                worker: sched.assignment[i],
+                steal_count: steals,
+                start: sched.start[i],
+                end: sched.end[i],
+            });
+        }
+        let trace = ScheduleTrace { entries };
+        let path = scratch("sched");
+        let sink = Jsonl::create(&path, "engine", Json::Obj(Default::default())).unwrap();
+        emit_schedule(&sink, &trace);
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let spans: Vec<Json> = text.lines().skip(1).map(|l| Json::parse(l).unwrap()).collect();
+        let jobs = spans.iter().filter(|s| s.get("name").unwrap().as_str() == Some("job"));
+        assert_eq!(jobs.clone().count(), 4);
+        let stolen_jobs = jobs
+            .filter(|s| s.get("stolen").map(|v| *v == Json::Bool(true)).unwrap_or(false))
+            .count();
+        assert_eq!(stolen_jobs, trace.total_steals());
+        let workers =
+            spans.iter().filter(|s| s.get("name").unwrap().as_str() == Some("worker")).count();
+        assert_eq!(workers, 2);
+    }
+}

@@ -1,0 +1,571 @@
+//! Trace ingestion, schema validation, and run reports.
+//!
+//! Backs the `fedcore report` subcommand: load a JSONL trace
+//! ([`load`] / [`Trace::from_text`]), validate every line against the
+//! schema ([`Trace::check`] — version field, required keys per record
+//! type, well-formed span nesting), and render a per-round phase
+//! breakdown table, a critical-path/straggler-tail summary, and an SVG
+//! timeline via [`crate::metrics::svg`].
+//!
+//! A trace file may hold several engine runs (the bench sweep traces
+//! one per worker configuration): each run opens with a `run_start`
+//! event, and the reporting views use the *last* run segment while
+//! [`Trace::check`] validates all of them.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::ops::Range;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Counter, Phase, SCHEMA_VERSION};
+use crate::util::json::Json;
+
+/// A parsed trace: one [`Json`] object per line, in file order.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// The records, one per trace line.
+    pub records: Vec<Json>,
+}
+
+/// Read and parse a trace file.
+pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    Trace::from_text(&text).with_context(|| format!("parsing trace {}", path.display()))
+}
+
+/// One span, decoded from its record for the nesting/report passes.
+struct Sp {
+    line: usize,
+    name: String,
+    round: usize,
+    w0: f64,
+    w1: f64,
+    v0: f64,
+    v1: f64,
+}
+
+fn get_num(rec: &Json, line: usize, key: &str) -> Result<f64> {
+    rec.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("line {line}: missing numeric field '{key}'"))
+}
+
+fn get_str<'a>(rec: &'a Json, line: usize, key: &str) -> Result<&'a str> {
+    rec.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("line {line}: missing string field '{key}'"))
+}
+
+fn kind(rec: &Json) -> Option<&str> {
+    rec.get("t").and_then(|v| v.as_str())
+}
+
+fn name_of(rec: &Json) -> Option<&str> {
+    rec.get("name").and_then(|v| v.as_str())
+}
+
+impl Trace {
+    /// Parse trace text: one JSON object per non-empty line.
+    pub fn from_text(text: &str) -> Result<Trace> {
+        let mut records = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = Json::parse(line).map_err(|e| anyhow!("line {}: {e}", i + 1))?;
+            records.push(rec);
+        }
+        Ok(Trace { records })
+    }
+
+    /// Validate every record against the schema: version field,
+    /// required keys per record type, ordered span bounds, known
+    /// counter names, header-first, and well-formed span nesting
+    /// (every lifecycle span wall-contained in its round span, phase
+    /// wall-times summing to within the round's wall-time). Returns
+    /// the number of validated records.
+    pub fn check(&self) -> Result<usize> {
+        if self.records.is_empty() {
+            bail!("empty trace: no records");
+        }
+        if kind(&self.records[0]) != Some("header") {
+            bail!("line 1: first record must be the header");
+        }
+        for (i, rec) in self.records.iter().enumerate() {
+            let line = i + 1;
+            let v = get_num(rec, line, "v")?;
+            if v != SCHEMA_VERSION as f64 {
+                bail!("line {line}: schema version {v}, this reader expects {SCHEMA_VERSION}");
+            }
+            match get_str(rec, line, "t")? {
+                "header" => {
+                    if i != 0 {
+                        bail!("line {line}: header record past line 1");
+                    }
+                    get_str(rec, line, "source")?;
+                    let prov = rec
+                        .get("provenance")
+                        .and_then(|p| p.as_obj())
+                        .ok_or_else(|| anyhow!("line {line}: header missing provenance"))?;
+                    for key in ["seed", "rounds", "scale", "git_sha", "rustc"] {
+                        if !prov.contains_key(key) {
+                            bail!("line {line}: provenance missing '{key}'");
+                        }
+                    }
+                }
+                "span" => {
+                    let name = get_str(rec, line, "name")?;
+                    if name.is_empty() {
+                        bail!("line {line}: empty span name");
+                    }
+                    get_num(rec, line, "round")?;
+                    let w0 = get_num(rec, line, "wall_start_ns")?;
+                    let w1 = get_num(rec, line, "wall_end_ns")?;
+                    if w1 < w0 {
+                        bail!("line {line}: span '{name}' wall bounds reversed");
+                    }
+                    let v0 = get_num(rec, line, "virt_start")?;
+                    let v1 = get_num(rec, line, "virt_end")?;
+                    if !v0.is_finite() || !v1.is_finite() || v1 < v0 {
+                        bail!("line {line}: span '{name}' virtual bounds malformed");
+                    }
+                }
+                "event" => {
+                    get_str(rec, line, "name")?;
+                    get_num(rec, line, "round")?;
+                }
+                "counter" => {
+                    let name = get_str(rec, line, "name")?;
+                    if !Counter::ALL.iter().any(|c| c.name() == name) {
+                        bail!("line {line}: unknown counter '{name}'");
+                    }
+                    get_num(rec, line, "round")?;
+                    if get_num(rec, line, "value")? < 0.0 {
+                        bail!("line {line}: negative counter value");
+                    }
+                }
+                "warn" => {
+                    get_str(rec, line, "key")?;
+                    get_str(rec, line, "msg")?;
+                }
+                "mem" => {
+                    get_num(rec, line, "round")?;
+                    get_num(rec, line, "rss_pages")?;
+                    get_num(rec, line, "rss_bytes")?;
+                }
+                other => bail!("line {line}: unknown record type '{other}'"),
+            }
+        }
+        for seg in self.segments() {
+            self.check_nesting(seg)?;
+        }
+        Ok(self.records.len())
+    }
+
+    /// Run segments: each opens with a `run_start` event. A trace with
+    /// no markers is treated as one segment.
+    pub fn segments(&self) -> Vec<Range<usize>> {
+        let starts: Vec<usize> = self
+            .records
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| kind(r) == Some("event") && name_of(r) == Some("run_start"))
+            .map(|(i, _)| i)
+            .collect();
+        if starts.is_empty() {
+            return vec![0..self.records.len()];
+        }
+        starts
+            .iter()
+            .enumerate()
+            .map(|(k, &s)| s..starts.get(k + 1).copied().unwrap_or(self.records.len()))
+            .collect()
+    }
+
+    fn spans_in(&self, seg: Range<usize>) -> Vec<Sp> {
+        let base = seg.start;
+        self.records[seg]
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| kind(r) == Some("span"))
+            .filter_map(|(i, r)| {
+                Some(Sp {
+                    line: base + i + 1,
+                    name: name_of(r)?.to_string(),
+                    round: r.get("round")?.as_f64()? as usize,
+                    w0: r.get("wall_start_ns")?.as_f64()?,
+                    w1: r.get("wall_end_ns")?.as_f64()?,
+                    v0: r.get("virt_start")?.as_f64()?,
+                    v1: r.get("virt_end")?.as_f64()?,
+                })
+            })
+            .collect()
+    }
+
+    /// Lifecycle spans must be wall-contained in their round span, and
+    /// a round's phase wall-times must sum to within the round's own
+    /// measured wall-time (they are disjoint nested sub-intervals).
+    fn check_nesting(&self, seg: Range<usize>) -> Result<()> {
+        let spans = self.spans_in(seg);
+        let mut rounds: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+        for sp in spans.iter().filter(|s| s.name == Phase::Round.name()) {
+            if rounds.insert(sp.round, (sp.w0, sp.w1)).is_some() {
+                bail!("line {}: duplicate round span for round {} in one run", sp.line, sp.round);
+            }
+        }
+        let mut phase_sum: BTreeMap<usize, f64> = BTreeMap::new();
+        let lifecycle: Vec<&str> = Phase::LIFECYCLE.iter().map(|p| p.name()).collect();
+        for sp in spans.iter().filter(|s| lifecycle.contains(&s.name.as_str())) {
+            let &(rw0, rw1) = rounds.get(&sp.round).ok_or_else(|| {
+                anyhow!("line {}: '{}' span has no round {} span", sp.line, sp.name, sp.round)
+            })?;
+            if sp.w0 < rw0 || sp.w1 > rw1 {
+                bail!(
+                    "line {}: '{}' span escapes its round {} wall bounds",
+                    sp.line,
+                    sp.name,
+                    sp.round
+                );
+            }
+            *phase_sum.entry(sp.round).or_insert(0.0) += sp.w1 - sp.w0;
+        }
+        for (r, sum) in phase_sum {
+            let (rw0, rw1) = rounds[&r];
+            if sum > rw1 - rw0 {
+                bail!("round {r}: phase wall-times sum to {sum} ns > round span {} ns", rw1 - rw0);
+            }
+        }
+        Ok(())
+    }
+
+    fn last_segment_spans(&self) -> Vec<Sp> {
+        let seg = self.segments().pop().unwrap_or(0..self.records.len());
+        self.spans_in(seg)
+    }
+
+    /// Per-round phase breakdown of the last run segment: wall
+    /// milliseconds per lifecycle phase, the phases' sum, the round's
+    /// own measured wall-time, and the coverage ratio.
+    pub fn phase_table(&self) -> String {
+        let spans = self.last_segment_spans();
+        let mut rounds: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut phases: BTreeMap<usize, [f64; 5]> = BTreeMap::new();
+        for sp in &spans {
+            if sp.name == Phase::Round.name() {
+                rounds.insert(sp.round, (sp.w1 - sp.w0) / 1e6);
+            } else if let Some(i) =
+                Phase::LIFECYCLE.iter().position(|p| p.name() == sp.name.as_str())
+            {
+                phases.entry(sp.round).or_insert([0.0; 5])[i] += (sp.w1 - sp.w0) / 1e6;
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:>5} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}",
+            "round", "select", "dispatch", "train", "aggregate", "eval", "phases", "total", "cover"
+        );
+        for (r, total) in &rounds {
+            let p = phases.get(r).copied().unwrap_or_default();
+            let sum: f64 = p.iter().sum();
+            let cover = if *total > 0.0 { 100.0 * sum / total } else { 100.0 };
+            let _ = writeln!(
+                out,
+                "{r:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {sum:>10.3} {total:>10.3} \
+                 {cover:>6.1}%",
+                p[0], p[1], p[2], p[3], p[4]
+            );
+        }
+        if rounds.is_empty() {
+            out.push_str("(no round spans in the last run segment)\n");
+        }
+        out
+    }
+
+    /// Critical-path / straggler-tail summary of the last run segment,
+    /// plus counter totals and the peak resident-set sample.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        if let Some(head) = self.records.first().filter(|r| kind(r) == Some("header")) {
+            let prov = head.get("provenance");
+            let field = |k: &str| -> String {
+                prov.and_then(|p| p.get(k))
+                    .map(|v| match v {
+                        Json::Str(s) => s.clone(),
+                        other => other.as_f64().map(|n| format!("{n}")).unwrap_or_default(),
+                    })
+                    .unwrap_or_else(|| "?".into())
+            };
+            let _ = writeln!(
+                out,
+                "trace: source={} seed={} git={} rustc={}",
+                head.get("source").and_then(|v| v.as_str()).unwrap_or("?"),
+                field("seed"),
+                field("git_sha"),
+                field("rustc"),
+            );
+        }
+        let runs = self.segments().len();
+        let spans = self.last_segment_spans();
+        let round_wall: f64 = spans
+            .iter()
+            .filter(|s| s.name == Phase::Round.name())
+            .map(|s| s.w1 - s.w0)
+            .sum();
+        let n_rounds = spans.iter().filter(|s| s.name == Phase::Round.name()).count();
+        let _ = writeln!(
+            out,
+            "records: {}, runs: {runs}, last run: {n_rounds} rounds over {:.3} ms wall",
+            self.records.len(),
+            round_wall / 1e6
+        );
+        // Critical path: which lifecycle phase dominates round wall time.
+        let mut dominant = ("-", 0.0f64);
+        for p in Phase::LIFECYCLE {
+            let t: f64 =
+                spans.iter().filter(|s| s.name == p.name()).map(|s| s.w1 - s.w0).sum();
+            let _ = writeln!(
+                out,
+                "  {:<10} {:>10.3} ms  ({:>5.1}% of round wall)",
+                p.name(),
+                t / 1e6,
+                if round_wall > 0.0 { 100.0 * t / round_wall } else { 0.0 }
+            );
+            if t > dominant.1 {
+                dominant = (p.name(), t);
+            }
+        }
+        if round_wall > 0.0 {
+            let _ = writeln!(
+                out,
+                "critical path: {} ({:.1}% of round wall time)",
+                dominant.0,
+                100.0 * dominant.1 / round_wall
+            );
+        }
+        // Straggler tail, from the virtual-time job spans.
+        let jobs: Vec<&Sp> = spans.iter().filter(|s| s.name == Phase::Job.name()).collect();
+        if !jobs.is_empty() {
+            let mut tails: BTreeMap<usize, f64> = BTreeMap::new();
+            for j in &jobs {
+                let t = tails.entry(j.round).or_insert(0.0);
+                *t = t.max(j.v1);
+            }
+            let mean_tail = tails.values().sum::<f64>() / tails.len() as f64;
+            let mean_job =
+                jobs.iter().map(|j| j.v1 - j.v0).sum::<f64>() / jobs.len() as f64;
+            let _ = writeln!(
+                out,
+                "straggler tail (virtual): mean batch makespan {:.3} s, mean job {:.3} s, \
+                 tail ratio {:.2}",
+                mean_tail,
+                mean_job,
+                if mean_job > 0.0 { mean_tail / mean_job } else { 0.0 }
+            );
+        }
+        // Counter totals over the last run segment.
+        let seg = self.segments().pop().unwrap_or(0..self.records.len());
+        let mut totals: BTreeMap<&str, f64> = BTreeMap::new();
+        for rec in &self.records[seg] {
+            if kind(rec) == Some("counter") {
+                if let (Some(name), Some(v)) =
+                    (name_of(rec), rec.get("value").and_then(|v| v.as_f64()))
+                {
+                    if let Some(c) = Counter::ALL.iter().find(|c| c.name() == name) {
+                        *totals.entry(c.name()).or_insert(0.0) += v;
+                    }
+                }
+            }
+        }
+        if !totals.is_empty() {
+            let parts: Vec<String> =
+                totals.iter().map(|(k, v)| format!("{k}={}", *v as u64)).collect();
+            let _ = writeln!(out, "counters: {}", parts.join(" "));
+        }
+        // Peak RSS over the whole trace.
+        let peak = self
+            .records
+            .iter()
+            .filter(|r| kind(r) == Some("mem"))
+            .filter_map(|r| r.get("rss_bytes").and_then(|v| v.as_f64()))
+            .fold(0.0f64, f64::max);
+        if peak > 0.0 {
+            let _ = writeln!(out, "peak rss: {:.1} MiB", peak / (1024.0 * 1024.0));
+        }
+        out
+    }
+
+    /// Render the last run segment as an SVG Gantt timeline: one lane
+    /// per round, one colored bar per lifecycle phase.
+    pub fn timeline_svg(&self, title: &str) -> String {
+        let spans = self.last_segment_spans();
+        let t0 = spans
+            .iter()
+            .filter(|s| s.name == Phase::Round.name())
+            .map(|s| s.w0)
+            .fold(f64::MAX, f64::min);
+        let t0 = if t0 == f64::MAX { 0.0 } else { t0 };
+        let mut rows: BTreeMap<usize, Vec<(f64, f64, usize)>> = BTreeMap::new();
+        for sp in &spans {
+            if let Some(i) = Phase::LIFECYCLE.iter().position(|p| p.name() == sp.name.as_str())
+            {
+                rows.entry(sp.round)
+                    .or_default()
+                    .push(((sp.w0 - t0) / 1e6, (sp.w1 - t0) / 1e6, i));
+            }
+        }
+        let rows: Vec<(String, Vec<(f64, f64, usize)>)> =
+            rows.into_iter().map(|(r, segs)| (format!("round {r}"), segs)).collect();
+        let legend: Vec<&str> = Phase::LIFECYCLE.iter().map(|p| p.name()).collect();
+        crate::metrics::svg::timeline(title, "wall time since run start (ms)", &rows, &legend)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Record;
+
+    fn lifecycle_round(records: &mut Vec<Json>, r: usize, base: u64) {
+        let virt = r as f64 * 10.0;
+        let spans = [
+            (Phase::Round, base, base + 1000, virt, virt + 10.0),
+            (Phase::Select, base, base + 100, virt, virt),
+            (Phase::Dispatch, base + 100, base + 200, virt, virt),
+            (Phase::Train, base + 200, base + 800, virt, virt + 10.0),
+            (Phase::Aggregate, base + 800, base + 900, virt + 10.0, virt + 10.0),
+            (Phase::Eval, base + 900, base + 1000, virt + 10.0, virt + 10.0),
+        ];
+        for (p, w0, w1, v0, v1) in spans {
+            records.push(Record::span(p, r, (w0, w1), (v0, v1)).to_json());
+        }
+        records.push(Record::CounterVal { counter: Counter::Steals, round: r, value: 1 }.to_json());
+        records.push(Record::Mem { round: r, rss_pages: 100, rss_bytes: 409600 }.to_json());
+        records.push(
+            Record::Span {
+                phase: Phase::Job,
+                round: r,
+                wall_ns: (0, 0),
+                virt_s: (0.0, 3.0),
+                extra: vec![("kind", Json::Str("client".into())), ("worker", Json::Num(0.0))],
+            }
+            .to_json(),
+        );
+    }
+
+    fn demo_trace() -> Trace {
+        let mut records = vec![Record::Header {
+            source: "engine",
+            provenance: crate::util::bench::provenance(7, 2, 1.0),
+        }
+        .to_json()];
+        records.push(
+            Record::Event { name: "run_start", round: 0, fields: vec![] }.to_json(),
+        );
+        lifecycle_round(&mut records, 0, 0);
+        lifecycle_round(&mut records, 1, 2000);
+        Trace { records }
+    }
+
+    fn render(t: &Trace) -> String {
+        let mut text = String::new();
+        for r in &t.records {
+            crate::util::json::write_json(r, &mut text);
+            text.push('\n');
+        }
+        text
+    }
+
+    #[test]
+    fn check_accepts_an_engine_shaped_trace() {
+        let t = demo_trace();
+        assert_eq!(t.check().unwrap(), t.records.len());
+        // And survives a serialize → parse round trip.
+        let t2 = Trace::from_text(&render(&t)).unwrap();
+        assert_eq!(t2.check().unwrap(), t.records.len());
+    }
+
+    #[test]
+    fn check_rejects_malformed_traces() {
+        // Missing header.
+        let mut t = demo_trace();
+        t.records.remove(0);
+        assert!(t.check().unwrap_err().to_string().contains("first record"));
+        // Wrong schema version.
+        let mut t = demo_trace();
+        if let Json::Obj(m) = &mut t.records[2] {
+            m.insert("v".into(), Json::Num(99.0));
+        }
+        assert!(t.check().unwrap_err().to_string().contains("schema version"));
+        // Unknown counter name.
+        let mut t = demo_trace();
+        let bad = Record::CounterVal { counter: Counter::Steals, round: 0, value: 1 }.to_json();
+        let Json::Obj(mut m) = bad else { unreachable!() };
+        m.insert("name".into(), Json::Str("bogus".into()));
+        t.records.push(Json::Obj(m));
+        assert!(t.check().unwrap_err().to_string().contains("unknown counter"));
+        // A lifecycle span escaping its round's wall bounds.
+        let mut t = demo_trace();
+        t.records.push(Record::span(Phase::Train, 1, (2000, 99999), (10.0, 20.0)).to_json());
+        assert!(t.check().unwrap_err().to_string().contains("escapes"));
+        // Reversed wall bounds.
+        let mut t = demo_trace();
+        t.records.push(Record::span(Phase::Eval, 0, (500, 400), (0.0, 0.0)).to_json());
+        assert!(t.check().unwrap_err().to_string().contains("reversed"));
+    }
+
+    #[test]
+    fn duplicate_rounds_are_fine_across_run_segments_only() {
+        // Two runs, same round indexes: valid because run_start splits them.
+        let mut t = demo_trace();
+        t.records.push(Record::Event { name: "run_start", round: 0, fields: vec![] }.to_json());
+        let n = t.records.len();
+        lifecycle_round(&mut t.records, 0, 0);
+        assert!(t.check().is_ok());
+        // The same round span twice within one segment is an error.
+        let dup = t.records[n].clone();
+        t.records.push(dup);
+        assert!(t.check().unwrap_err().to_string().contains("duplicate round span"));
+    }
+
+    #[test]
+    fn phase_table_covers_the_full_round() {
+        let t = demo_trace();
+        let table = t.phase_table();
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rounds:\n{table}");
+        assert!(lines[0].contains("aggregate"));
+        // The demo rounds are fully covered by their phases.
+        assert!(lines[1].contains("100.0%"), "{table}");
+        assert!(lines[2].contains("100.0%"), "{table}");
+    }
+
+    #[test]
+    fn summary_names_the_critical_path() {
+        let s = demo_trace().summary();
+        // train is 600 of 1000 ns per round in the demo trace.
+        assert!(s.contains("critical path: train"), "{s}");
+        assert!(s.contains("straggler tail"), "{s}");
+        assert!(s.contains("steals=2"), "{s}");
+        assert!(s.contains("peak rss"), "{s}");
+    }
+
+    #[test]
+    fn timeline_svg_is_well_formed() {
+        let svg = demo_trace().timeline_svg("demo");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert!(svg.contains("round 0") && svg.contains("round 1"));
+        assert!(svg.contains("select") && svg.contains("eval"));
+    }
+
+    #[test]
+    fn from_text_rejects_garbage_lines() {
+        assert!(Trace::from_text("{\"v\":1}\nnot json\n").is_err());
+        assert!(Trace::from_text("").unwrap().records.is_empty());
+    }
+}

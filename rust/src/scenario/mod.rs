@@ -11,7 +11,9 @@
 //! [`ChurnModel`]. The FL engine consults the trace at each round's start
 //! time: only online clients are eligible for selection, and a selected
 //! client that goes offline before finishing its local plan is dropped
-//! mid-round, its partial work discarded and surfaced in the round record.
+//! mid-round, its partial work discarded and surfaced in the round record
+//! — and, on traced runs, as a per-client `churn_drop` event plus the
+//! `churn_dropped` counter in the observability trace ([`crate::obs`]).
 //!
 //! # Time units
 //!

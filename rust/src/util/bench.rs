@@ -93,12 +93,14 @@ pub fn run_group(title: &str, benches: Vec<BenchResult>) {
     }
 }
 
-/// Provenance stamp for every `BENCH_*.json` output:
-/// `{seed, rounds, scale, git_sha}` — so bench trajectories stay
-/// comparable across PRs (same seed/rounds/scale ⇒ same workload; the
-/// sha names the code that produced the numbers). The sha comes from
-/// `GITHUB_SHA` in CI, `git rev-parse HEAD` locally, `"unknown"` when
-/// neither is available.
+/// Provenance stamp for every `BENCH_*.json` output and trace-file
+/// header ([`crate::obs::Jsonl`]): `{seed, rounds, scale, git_sha,
+/// rustc}` — so bench trajectories and traces stay comparable across
+/// PRs (same seed/rounds/scale ⇒ same workload; the sha names the code
+/// and the compiler names the codegen that produced the numbers). The
+/// sha comes from `GITHUB_SHA` in CI, `git rev-parse HEAD` locally,
+/// `"unknown"` when neither is available; the compiler from `rustc -V`
+/// with the same fallback.
 pub fn provenance(seed: u64, rounds: usize, scale: f64) -> crate::util::json::Json {
     use crate::util::json::Json;
     let sha = std::env::var("GITHUB_SHA")
@@ -112,6 +114,7 @@ pub fn provenance(seed: u64, rounds: usize, scale: f64) -> crate::util::json::Js
             ("rounds".to_string(), Json::Num(rounds as f64)),
             ("scale".to_string(), Json::Num(scale)),
             ("git_sha".to_string(), Json::Str(sha)),
+            ("rustc".to_string(), Json::Str(rustc_version().unwrap_or_else(|| "unknown".into()))),
         ]
         .into_iter()
         .collect(),
@@ -125,6 +128,15 @@ fn git_head_sha() -> Option<String> {
     }
     let sha = String::from_utf8_lossy(&out.stdout).trim().to_string();
     (!sha.is_empty()).then_some(sha)
+}
+
+fn rustc_version() -> Option<String> {
+    let out = std::process::Command::new("rustc").arg("-V").output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let v = String::from_utf8_lossy(&out.stdout).trim().to_string();
+    (!v.is_empty()).then_some(v)
 }
 
 #[cfg(test)]
@@ -153,6 +165,8 @@ mod tests {
         assert_eq!(p.get("scale").and_then(|v| v.as_f64()), Some(0.25));
         let sha = p.get("git_sha").and_then(|v| v.as_str()).expect("sha present");
         assert!(!sha.is_empty());
+        let rustc = p.get("rustc").and_then(|v| v.as_str()).expect("rustc present");
+        assert!(!rustc.is_empty());
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! Differential property suite for the observability subsystem
+//! (`obs/`; seeded runner in `util::prop` — offline build, no proptest
+//! crate, see docs/testing.md).
+//!
+//! Invariants:
+//! * Observability is **write-only** (determinism rule 7): a
+//!   `Jsonl`-traced run reproduces the `Null`-recorder run bit-for-bit —
+//!   final model bytes, every round record, the model CSV, the dispatch
+//!   ledger CSV, and checkpoint files — across strategies, both dispatch
+//!   policies, and the overlap pipeline.
+//! * Every traced run's JSONL passes the schema + span-nesting checks in
+//!   `obs::report`, and renders one phase-table row per round.
+//! * Seeded trace replay: two traced runs of the same config produce the
+//!   identical record sequence modulo the wall-clock fields (span
+//!   `wall_*_ns` bounds and `mem` samples are scrubbed; everything else —
+//!   virtual times, counters, events, job/worker spans — must match).
+//! * Synthetic traces round-trip the writer → loader → checker path, and
+//!   the checker rejects tampered files (version bumps, missing header,
+//!   non-JSON lines) — no runtime needed.
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::agg::AggPolicy;
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark};
+use fedcore::exec::{DispatchPolicy, OverlapConfig};
+use fedcore::fl::{Checkpoint, CoresetMode, Engine, RunConfig, Strategy};
+use fedcore::metrics::RunResult;
+use fedcore::obs::report::Trace;
+use fedcore::obs::{Counter, Jsonl, Null, ObsConfig, Phase, Record, Recorder};
+use fedcore::runtime::Runtime;
+use fedcore::scenario::{ChurnModel, TraceSpec};
+use fedcore::util::json::{write_json, Json};
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+/// Unique scratch path (tests run concurrently in one process, so the
+/// pid alone cannot disambiguate).
+fn scratch(tag: &str) -> std::path::PathBuf {
+    static SCRATCH: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let nonce = SCRATCH.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("fedcore-obs-{}-{tag}-{nonce}.jsonl", std::process::id()))
+}
+
+// ---------- writer → loader → checker round-trip, no runtime ----------
+
+/// Emit a well-formed multi-run trace through the real `Jsonl` writer:
+/// random round counts, lifecycle spans partitioning each round's wall
+/// window, the full counter registry, occasional mem records.
+fn write_demo_trace(rec: &Jsonl, rng: &mut Rng) -> (usize, usize) {
+    let runs = 1 + rng.below(2);
+    let rounds = 1 + rng.below(3);
+    for _ in 0..runs {
+        rec.record(&Record::Event {
+            name: "run_start",
+            round: 0,
+            fields: vec![("rounds", Json::Num(rounds as f64))],
+        });
+        let mut w = 10u64;
+        for r in 0..rounds {
+            let cuts: Vec<u64> = (0..5).map(|_| 1 + rng.below(100) as u64).collect();
+            let total: u64 = cuts.iter().sum();
+            let t = r as f64;
+            rec.record(&Record::span(Phase::Round, r, (w, w + total), (t, t + 1.0)));
+            let mut edge = w;
+            for (phase, cut) in Phase::LIFECYCLE.into_iter().zip(&cuts) {
+                rec.record(&Record::span(phase, r, (edge, edge + cut), (t, t + 1.0)));
+                edge += cut;
+            }
+            for counter in Counter::ALL {
+                let value = rng.below(10) as u64;
+                rec.record(&Record::CounterVal { counter, round: r, value });
+            }
+            if rng.below(2) == 0 {
+                rec.record(&Record::Mem { round: r, rss_pages: 64, rss_bytes: 64 * 4096 });
+            }
+            w += total + rng.below(50) as u64;
+        }
+    }
+    (runs, rounds)
+}
+
+#[test]
+fn proptest_obs_jsonl_round_trips_and_checker_rejects_tampering() {
+    check("obs-jsonl-roundtrip", env_seed(0x0B51), env_cases(40), |rng, case| {
+        let path = scratch("roundtrip");
+        let rec = Jsonl::create(&path, "engine", fedcore::util::bench::provenance(7, 2, 1.0))
+            .expect("creating trace");
+        let (runs, rounds) = write_demo_trace(&rec, rng);
+        drop(rec);
+
+        let trace = fedcore::obs::report::load(&path).expect("loading trace back");
+        let n = trace.check().expect("well-formed trace must pass");
+        // header + per-run (run_start + rounds × (6 spans + 9 counters [+ mem]))
+        assert!(n >= 1 + runs * (1 + rounds * 15), "suspiciously few records: {n}");
+        assert_eq!(trace.segments().len(), runs);
+        // Every round renders a phase-table row with full wall coverage
+        // (the lifecycle spans partition each round window exactly).
+        let table = trace.phase_table();
+        assert_eq!(table.lines().count(), 1 + rounds, "table:\n{table}");
+        assert!(table.lines().skip(1).all(|l| l.trim_end().ends_with("100.0%")));
+        let summary = trace.summary();
+        assert!(summary.contains("counters:"), "summary:\n{summary}");
+        let svg = trace.timeline_svg("roundtrip");
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>\n"));
+
+        // Tamper with the file: the checker must refuse all of it.
+        let text = std::fs::read_to_string(&path).expect("trace text");
+        let _ = std::fs::remove_file(&path);
+        match case % 3 {
+            0 => {
+                // Schema version bump on a record line.
+                let tampered = text.replacen("\"v\":1,", "\"v\":99,", 2);
+                let t = Trace::from_text(&tampered).expect("still line-valid JSON");
+                assert!(t.check().is_err(), "version bump must fail the check");
+            }
+            1 => {
+                // Drop the header line.
+                let tampered: String =
+                    text.lines().skip(1).map(|l| format!("{l}\n")).collect();
+                let t = Trace::from_text(&tampered).expect("still line-valid JSON");
+                assert!(t.check().is_err(), "headerless trace must fail the check");
+            }
+            _ => {
+                // A non-JSON line fails at parse time, with its line number.
+                let tampered = format!("{text}not json\n");
+                let err = Trace::from_text(&tampered).expect_err("garbage line must not parse");
+                assert!(format!("{err:#}").contains("line"), "error names no line: {err:#}");
+            }
+        }
+    });
+}
+
+#[test]
+fn proptest_obs_null_recorder_is_inert_and_configs_build() {
+    check("obs-null-inert", env_seed(0x0B52), env_cases(20), |rng, _| {
+        assert!(!Null.enabled());
+        assert_eq!(Null.now_ns(), 0, "the untraced path never reads the clock");
+        Null.record(&Record::span(Phase::Round, rng.below(100), (0, 1), (0.0, 1.0)));
+
+        let off = ObsConfig::Off.build(7, 3).expect("Off always builds");
+        assert!(!off.enabled());
+        assert_eq!(ObsConfig::Off.path(), None);
+
+        let path = scratch("build");
+        let cfg = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.5 };
+        assert_eq!(cfg.path(), Some(path.display().to_string().as_str()));
+        let rec = cfg.build(rng.next_u64(), 1 + rng.below(5)).expect("Jsonl builds");
+        assert!(rec.enabled());
+        drop(rec);
+        // Building the sink already wrote the provenance header.
+        let trace = fedcore::obs::report::load(&path).expect("header written at build");
+        assert_eq!(trace.check().expect("header-only trace is valid"), 1);
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+// ---------- runtime-gated: the rule-7 differential harness ----------
+
+fn agg_for(case: usize) -> (AggPolicy, Option<f64>) {
+    let clip = if case % 2 == 0 { None } else { Some(2.5) };
+    let policy = match (case / 2) % 4 {
+        0 => AggPolicy::Mean,
+        1 => AggPolicy::Buffered { k: 3, momentum: 0.2 },
+        2 => AggPolicy::TrimmedMean { trim_frac: 0.1 },
+        _ => AggPolicy::CoordinateMedian,
+    };
+    (policy, clip)
+}
+
+/// Random run configuration cycling all four strategies, both dispatch
+/// policies, the aggregation policies, churn traces, and the overlap
+/// pipeline — everything the trace instruments.
+fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [
+        Strategy::FedCore,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: 0.1 },
+        Strategy::FedAvg,
+    ];
+    let (aggregator, clip_norm) = agg_for(case);
+    let trace = (rng.below(2) == 0).then(|| {
+        TraceSpec::from_model(
+            ChurnModel::Markov {
+                mean_on: rng.range_f64(2.0, 8.0),
+                mean_off: rng.range_f64(0.5, 3.0),
+                p_init_online: 0.8,
+            },
+            24.0,
+            rng.next_u64(),
+        )
+    });
+    let overlap = (rng.below(2) == 0).then(|| OverlapConfig {
+        quorum: rng.range_f64(0.4, 1.0),
+        max_staleness: rng.below(3),
+        alpha: 1.0,
+    });
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 1 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 3 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: [10.0, 30.0][rng.below(2)],
+        seed: rng.next_u64(),
+        coreset_method: Method::FasterPam,
+        coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+        eval_every: 1,
+        eval_cap: 128,
+        workers: 1 + rng.below(3),
+        dispatch: [DispatchPolicy::RoundRobin, DispatchPolicy::WorkStealing][rng.below(2)],
+        trace,
+        overlap,
+        aggregator,
+        clip_norm,
+        verbose: false,
+        ..RunConfig::default()
+    }
+}
+
+/// Serialized checkpoint bytes of a run's final model (written through
+/// the real `Checkpoint` writer, then read back raw).
+fn checkpoint_bytes(res: &RunResult, tag: &str) -> Vec<u8> {
+    let path = scratch(&format!("ckpt-{tag}"));
+    Checkpoint::new(res.benchmark.clone(), res.rounds.len() as u64, res.final_params.clone())
+        .save(&path)
+        .expect("writing checkpoint");
+    let bytes = std::fs::read(&path).expect("reading checkpoint back");
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// Rule 7: tracing must not perturb a single output bit.
+fn assert_model_outputs_bitwise_equal(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{what}: param count");
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final param {i}: {x} vs {y}");
+    }
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} round {r} loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{what} round {r} test_acc");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{what} round {r} sim_time");
+        assert_eq!(x.client_times, y.client_times, "{what} round {r} client_times");
+        assert_eq!(x.stale_folded, y.stale_folded, "{what} round {r} stale_folded");
+        assert_eq!(x.stale_discarded, y.stale_discarded, "{what} round {r} stale_discarded");
+    }
+    assert_eq!(a.to_csv(), b.to_csv(), "{what}: model CSV diverged");
+    assert_eq!(a.to_dispatch_csv(), b.to_dispatch_csv(), "{what}: dispatch CSV diverged");
+    assert_eq!(
+        checkpoint_bytes(a, "a"),
+        checkpoint_bytes(b, "b"),
+        "{what}: checkpoint bytes diverged"
+    );
+}
+
+/// The centerpiece: `Jsonl`-traced ≡ `Null`-recorder **bit-for-bit**
+/// across strategies, both dispatch policies, and overlap — and the
+/// trace itself passes the schema + nesting checks with one phase-table
+/// row per round.
+#[test]
+fn proptest_obs_traced_run_is_bitwise_identical_to_untraced() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("obs-rule7-differential", env_seed(0x0B53), env_cases(8), |rng, case| {
+        let mut cfg = differential_cfg(rng, case);
+        cfg.obs = ObsConfig::Off;
+        let plain = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        let path = scratch("rule7");
+        cfg.obs = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.15 };
+        let traced = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+
+        let what = format!(
+            "{} agg={} workers={} dispatch={}",
+            plain.strategy,
+            cfg.aggregator.label(),
+            cfg.workers,
+            cfg.dispatch.label()
+        );
+        assert_model_outputs_bitwise_equal(&plain, &traced, &what);
+
+        let trace = fedcore::obs::report::load(&path).expect("trace written");
+        trace.check().unwrap_or_else(|e| panic!("{what}: trace failed the check: {e:#}"));
+        let table = trace.phase_table();
+        assert_eq!(table.lines().count(), 1 + cfg.rounds, "{what}: table:\n{table}");
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+/// Strip the nondeterministic wall-clock surface from a trace: span
+/// `wall_*_ns` bounds go to zero and `mem` records drop; everything
+/// else (order included) must replay from the seed.
+fn scrub_wall(trace: &Trace) -> Vec<String> {
+    trace
+        .records
+        .iter()
+        .filter_map(|rec| {
+            let mut rec = rec.clone();
+            if let Json::Obj(map) = &mut rec {
+                if map.get("t") == Some(&Json::Str("mem".into())) {
+                    return None;
+                }
+                map.remove("wall_start_ns");
+                map.remove("wall_end_ns");
+            }
+            let mut line = String::new();
+            write_json(&rec, &mut line);
+            Some(line)
+        })
+        .collect()
+}
+
+/// Seeded trace replay: the same config twice gives the identical record
+/// sequence modulo wall-clock fields.
+#[test]
+fn proptest_obs_trace_replays_deterministically_modulo_wall_clock() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("obs-trace-replay", env_seed(0x0B54), env_cases(4), |rng, case| {
+        let cfg = differential_cfg(rng, case);
+        let one_run = |tag: &str| {
+            let path = scratch(tag);
+            let mut cfg = cfg.clone();
+            cfg.obs = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.15 };
+            Engine::new(&rt, &ds, cfg).unwrap().run().unwrap();
+            let trace = fedcore::obs::report::load(&path).expect("trace written");
+            let _ = std::fs::remove_file(&path);
+            trace
+        };
+        let a = one_run("replay-a");
+        let b = one_run("replay-b");
+        let (sa, sb) = (scrub_wall(&a), scrub_wall(&b));
+        assert_eq!(sa.len(), sb.len(), "record counts diverged");
+        for (i, (x, y)) in sa.iter().zip(&sb).enumerate() {
+            assert_eq!(x, y, "trace record {i} did not replay");
+        }
+    });
+}

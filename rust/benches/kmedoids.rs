@@ -2,14 +2,34 @@
 //! generating coresets for large datasets within one second."
 //!
 //! Times BUILD+FasterPAM over gradient-feature clouds of m = 256…4096
-//! points (k = m/10, the typical straggler compression), and compares
-//! against classic PAM on the sizes where PAM is feasible.
+//! points (k = m/10, the typical straggler compression), compares against
+//! classic PAM on the sizes where PAM is feasible, then runs the
+//! **parallel coreset sweep**: the sharded hot path (distance tiles +
+//! chunked BUILD + windowed SWAP) at workers ∈ {1, 2, 4, 8}, cold vs
+//! warm-started, with an in-bench sharded≡sequential assertion (medoids
+//! must match bit-for-bit before any timing row is trusted). Emits
+//! `BENCH_coreset.json` with per-width timings and speedups.
+//!
+//! Knobs: `FEDCORE_SCALE` (scales the point counts), `FEDCORE_ROUNDS`
+//! (max timed iterations per sweep row), `FEDCORE_BENCH_OUT` (output
+//! path, default `BENCH_coreset.json`).
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use fedcore::coreset::{self, distance, Method};
+use fedcore::expt;
 use fedcore::util::bench::{bench, run_group};
+use fedcore::util::json::{write_json, Json};
 use fedcore::util::rng::Rng;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
 
 fn features(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
     // Clustered cloud: 10 label-ish clusters, like softmax(z) − onehot(y).
@@ -27,9 +47,12 @@ fn main() {
     let mut rng = Rng::new(42);
     let dim = 64;
     let budget = Duration::from_secs(5);
+    let scale = expt::env_f64("FEDCORE_SCALE", 1.0);
+    let iters = expt::env_usize("FEDCORE_ROUNDS", 6).max(1);
+    let m_of = |m: usize| ((m as f64 * scale) as usize).max(64);
 
     let mut results = Vec::new();
-    for m in [256usize, 512, 1024, 2048, 4096] {
+    for m in [256usize, 512, 1024, 2048, 4096].map(m_of) {
         let f = features(&mut rng, m, dim);
         let t0 = std::time::Instant::now();
         let dist = distance::from_features_cpu(&f, m, dim);
@@ -43,7 +66,7 @@ fn main() {
             budget,
             || coreset::select(&dist, k, Method::FasterPam, &mut seed_rng),
         );
-        // The paper's engineering claim.
+        // The paper's engineering claim (asserted at full scale only).
         if m == 4096 {
             assert!(
                 r.mean_ns < 1e9,
@@ -64,13 +87,98 @@ fn main() {
     }
     run_group("k-medoids solvers (paper §4.2: FasterPAM <1s at large m)", results);
 
+    // ---- parallel coreset sweep: workers × {cold, warm} at the top m ----
+    let m = m_of(2048);
+    let k = (m / 10).max(1);
+    let f = features(&mut rng, m, dim);
+    let dist = distance::from_features_cpu(&f, m, dim);
+
+    // The differential gate, in-bench: before any timing row is recorded,
+    // every pool width must reproduce the sequential distance matrix and
+    // medoid set bit-for-bit (the same invariant
+    // tests/proptest_coreset.rs fuzzes — re-asserted here so a published
+    // speedup can never come from a divergent solver).
+    let cold_ref = coreset::select(&dist, k, Method::FasterPam, &mut Rng::new(7));
+    for workers in [2usize, 4, 8] {
+        let tiled = distance::from_features_cpu_par(&f, m, dim, workers);
+        assert!(
+            dist.d.iter().zip(&tiled.d).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "tiled distance matrix diverged at {workers} workers"
+        );
+        let par = coreset::select_par(&dist, k, Method::FasterPam, &mut Rng::new(7), workers);
+        assert_eq!(
+            cold_ref.indices, par.indices,
+            "parallel medoids diverged at {workers} workers"
+        );
+    }
+
+    println!("\n== parallel coreset sweep: m={m} k={k} dim={dim} ==");
+    println!("{:>8} {:>12} {:>12} {:>10} {:>10}", "workers", "cold_ms", "warm_ms", "speedup", "warm/cold");
+    let mut sweep_results = Vec::new();
+    let mut rows = Vec::new();
+    let mut cold_base_ns = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let cold = bench(&format!("cold w={workers}"), iters, budget, || {
+            let d = distance::from_features_cpu_par(&f, m, dim, workers);
+            coreset::select_par(&d, k, Method::FasterPam, &mut Rng::new(7), workers)
+        });
+        let warm = bench(&format!("warm w={workers}"), iters, budget, || {
+            coreset::select_warm(
+                &dist,
+                k,
+                Method::FasterPam,
+                &cold_ref.indices,
+                &mut Rng::new(7),
+                workers,
+            )
+        });
+        if workers == 1 {
+            cold_base_ns = cold.mean_ns;
+        }
+        let speedup = cold_base_ns / cold.mean_ns.max(1.0);
+        println!(
+            "{workers:>8} {:>12.2} {:>12.2} {:>10.2} {:>10.2}",
+            cold.mean_ns / 1e6,
+            warm.mean_ns / 1e6,
+            speedup,
+            warm.mean_ns / cold.mean_ns.max(1.0),
+        );
+        rows.push(obj(vec![
+            ("workers", num(workers as f64)),
+            ("cold_ns", num(cold.mean_ns)),
+            ("warm_ns", num(warm.mean_ns)),
+            ("cold_speedup", num(speedup)),
+            ("warm_over_cold", num(warm.mean_ns / cold.mean_ns.max(1.0))),
+        ]));
+        sweep_results.push(cold);
+        sweep_results.push(warm);
+    }
+    run_group("parallel coreset hot path (cold = dist + BUILD + SWAP, warm = SWAP only)", sweep_results);
+
     // Quality parity snapshot at m=512.
-    let f = features(&mut rng, 512, dim);
-    let dist = distance::from_features_cpu(&f, 512, dim);
+    let qm = m_of(512);
+    let f = features(&mut rng, qm, dim);
+    let dist = distance::from_features_cpu(&f, qm, dim);
+    let qk = (qm / 10).max(1);
     let mut qrng = Rng::new(9);
-    println!("\nsolution quality at m=512, k=51 (objective, lower is better):");
+    println!("\nsolution quality at m={qm}, k={qk} (objective, lower is better):");
     for method in [Method::FasterPam, Method::Pam, Method::GreedyKCenter, Method::Random] {
-        let cs = coreset::select(&dist, 51, method, &mut qrng);
+        let cs = coreset::select(&dist, qk, method, &mut qrng);
         println!("  {:<14} {:>10.3}", method.label(), cs.cost);
     }
+
+    let out = obj(vec![
+        ("bench", Json::Str("kmedoids".into())),
+        ("m", num(m as f64)),
+        ("k", num(k as f64)),
+        ("dim", num(dim as f64)),
+        ("provenance", fedcore::util::bench::provenance(42, iters, scale)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    let path = std::env::var("FEDCORE_BENCH_OUT").unwrap_or_else(|_| "BENCH_coreset.json".into());
+    std::fs::write(&path, text).expect("writing bench output");
+    println!("\nwrote {path}");
 }

@@ -156,6 +156,14 @@ impl ExperimentConfig {
                 other => return Err(anyhow!("unknown coreset mode '{other}'")),
             };
         }
+        if let Some(v) = usize_of("coreset_refresh") {
+            if v == 0 {
+                return Err(anyhow!(
+                    "[fl] coreset_refresh must be >= 1 (1 = rebuild every round), got 0"
+                ));
+            }
+            cfg.run.coreset_refresh = v;
+        }
         // Async round overlap: `overlap = true` (or any of the policy
         // keys) enables the quorum + delayed-gradient pipeline; missing
         // keys keep the OverlapConfig defaults, `overlap = false` forces
@@ -364,6 +372,7 @@ prox_mu = 0.05
 lr = 0.01
 straggler_pct = 10.0
 coreset_method = "pam"
+coreset_refresh = 4
 workers = 3
 dispatch = "work_stealing"
 "#;
@@ -375,8 +384,17 @@ dispatch = "work_stealing"
         assert!((cfg.run.lr - 0.01).abs() < 1e-9);
         assert_eq!(cfg.run.straggler_pct, 10.0);
         assert_eq!(cfg.run.coreset_method, Method::Pam);
+        assert_eq!(cfg.run.coreset_refresh, 4);
         assert_eq!(cfg.run.workers, 3);
         assert_eq!(cfg.run.dispatch, crate::exec::DispatchPolicy::WorkStealing);
+    }
+
+    #[test]
+    fn coreset_refresh_defaults_and_rejects_zero() {
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert_eq!(plain.run.coreset_refresh, 1, "default must rebuild every round");
+        let zero = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ncoreset_refresh = 0\n";
+        assert!(ExperimentConfig::from_toml(zero).is_err());
     }
 
     #[test]

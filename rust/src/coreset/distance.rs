@@ -13,6 +13,12 @@
 use anyhow::Result;
 
 use crate::runtime::Runtime;
+use crate::util::pool::parallel_map;
+
+/// CPU tile edge (points per side) for the blocked parallel path — the
+/// same 128×128 blocking the Pallas artifact uses (`pairwise_tile` in the
+/// manifest), so the CPU and artifact paths share one tiling plan.
+pub const CPU_TILE: usize = 128;
 
 /// Dense symmetric distance matrix, row-major `n × n`.
 #[derive(Clone, Debug)]
@@ -42,21 +48,76 @@ impl DistMatrix {
     }
 }
 
+/// One pairwise distance ‖fᵢ − fⱼ‖₂ with f64 accumulation. Every matrix
+/// entry is an independent pure function of the two feature rows, so the
+/// sequential and tiled-parallel paths produce bit-identical values.
+#[inline]
+fn pair_dist(features: &[f32], dim: usize, i: usize, j: usize) -> f32 {
+    let (fi, fj) = (&features[i * dim..(i + 1) * dim], &features[j * dim..(j + 1) * dim]);
+    let mut acc = 0.0f64;
+    for k in 0..dim {
+        let diff = (fi[k] - fj[k]) as f64;
+        acc += diff * diff;
+    }
+    acc.sqrt() as f32
+}
+
 /// Exact CPU reference: d(i,j) = ‖fᵢ − fⱼ‖₂ with f64 accumulation.
 pub fn from_features_cpu(features: &[f32], n: usize, dim: usize) -> DistMatrix {
+    from_features_cpu_par(features, n, dim, 1)
+}
+
+/// Blocked-parallel CPU path: the upper triangle is cut into the same
+/// [`CPU_TILE`]² blocks the Pallas artifact uses, the tiles are dealt to a
+/// scoped worker pool, and results reduce in tile order (each entry is
+/// written exactly once, then mirrored). `workers ≤ 1` runs the plain
+/// sequential double loop; both paths emit **bit-identical** matrices —
+/// see `tests/proptest_coreset.rs`.
+pub fn from_features_cpu_par(features: &[f32], n: usize, dim: usize, workers: usize) -> DistMatrix {
     assert_eq!(features.len(), n * dim, "features shape");
     let mut d = vec![0.0f32; n * n];
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let mut acc = 0.0f64;
-            let (fi, fj) = (&features[i * dim..(i + 1) * dim], &features[j * dim..(j + 1) * dim]);
-            for k in 0..dim {
-                let diff = (fi[k] - fj[k]) as f64;
-                acc += diff * diff;
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = pair_dist(features, dim, i, j);
+                d[i * n + j] = v;
+                d[j * n + i] = v;
             }
-            let v = acc.sqrt() as f32;
-            d[i * n + j] = v;
-            d[j * n + i] = v;
+        }
+        return DistMatrix { n, d };
+    }
+
+    let t = CPU_TILE;
+    let blocks = n.div_ceil(t);
+    // Upper-triangle tiles in (bi, bj) row-major order; `parallel_map`
+    // returns them in that same order regardless of which worker ran what.
+    let tiles: Vec<(usize, usize)> =
+        (0..blocks).flat_map(|bi| (bi..blocks).map(move |bj| (bi, bj))).collect();
+    let done = parallel_map(tiles, workers, |(bi, bj)| {
+        let rows_i = (n - bi * t).min(t);
+        let rows_j = (n - bj * t).min(t);
+        let mut block = vec![0.0f32; rows_i * rows_j];
+        for r in 0..rows_i {
+            let gi = bi * t + r;
+            // Diagonal tiles compute the strict upper triangle only
+            // (d(i,i) = 0 and the mirror fills the rest).
+            let c0 = if bi == bj { r + 1 } else { 0 };
+            for c in c0..rows_j {
+                block[r * rows_j + c] = pair_dist(features, dim, gi, bj * t + c);
+            }
+        }
+        (bi, bj, rows_i, rows_j, block)
+    });
+    for (bi, bj, rows_i, rows_j, block) in done {
+        for r in 0..rows_i {
+            let gi = bi * t + r;
+            let c0 = if bi == bj { r + 1 } else { 0 };
+            for c in c0..rows_j {
+                let gj = bj * t + c;
+                let v = block[r * rows_j + c];
+                d[gi * n + gj] = v;
+                d[gj * n + gi] = v;
+            }
         }
     }
     DistMatrix { n, d }
@@ -159,5 +220,50 @@ mod tests {
         let a = from_features_cpu(&f, 12, 4);
         let b = from_inputs_static(&f, 12, 4);
         assert_eq!(a.d, b.d);
+    }
+
+    #[test]
+    fn tiled_parallel_path_is_bitwise_sequential() {
+        // n = 300 spans 3×3 tile blocks at CPU_TILE = 128, including ragged
+        // edge tiles; every worker count must reproduce the sequential
+        // matrix bit-for-bit (each entry is an independent pure function).
+        let mut rng = Rng::new(7);
+        let (n, dim) = (300, 5);
+        let f: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let seq = from_features_cpu(&f, n, dim);
+        for workers in [2, 3, 4, 8] {
+            let par = from_features_cpu_par(&f, n, dim, workers);
+            assert_eq!(par.n, seq.n);
+            for (i, (a, b)) in par.d.iter().zip(&seq.d).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers} entry {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_parallel_path_stays_symmetric() {
+        // Regression for the mirror step of the blocked path: asymmetry
+        // must be exactly zero (the mirror writes the same f32), diagonal
+        // exactly zero, at sizes off the tile boundary on both sides.
+        let mut rng = Rng::new(8);
+        for n in [1usize, 2, 127, 128, 129] {
+            let dim = 3;
+            let f: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let d = from_features_cpu_par(&f, n, dim, 4);
+            assert_eq!(d.asymmetry(), 0.0, "n={n}");
+            for i in 0..n {
+                assert_eq!(d.get(i, i), 0.0, "n={n} diag {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_point_and_empty_parallel() {
+        let d = from_features_cpu_par(&[1.0, 2.0], 1, 2, 4);
+        assert_eq!(d.n, 1);
+        assert_eq!(d.d, vec![0.0]);
+        let e = from_features_cpu_par(&[], 0, 3, 4);
+        assert_eq!(e.n, 0);
+        assert!(e.d.is_empty());
     }
 }

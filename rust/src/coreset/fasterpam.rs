@@ -15,8 +15,28 @@
 //! Numerical hygiene: swaps are accepted only when they beat a scale-aware
 //! threshold (a 1e-6 fraction of the mean nearest-distance), so float noise
 //! on near-tied configurations cannot cause unbounded churn.
+//!
+//! **Parallel discipline.** [`solve_par`] shards the BUILD greedy scans and
+//! the eager-SWAP candidate evaluation across a scoped worker pool and is
+//! **bit-identical** to the sequential [`solve`] at any worker count:
+//!
+//! * BUILD shards the candidate range into contiguous chunks; each chunk
+//!   reports its strict-inequality local best, and chunk results merge in
+//!   chunk order with the same strict comparison — so the first index
+//!   attaining the optimum wins, exactly as in the sequential scan.
+//! * SWAP evaluates a fixed lookahead window of upcoming candidates in
+//!   parallel against the *frozen* caches (each evaluation is a pure
+//!   function of `(near, removal, row)`), then walks the window in
+//!   candidate order replaying the sequential accept/reject decisions;
+//!   the first applied swap discards the rest of the window, so the
+//!   first-improvement order is preserved verbatim.
+//!
+//! [`solve_warm`] skips initialization and re-runs only the SWAP sweeps on
+//! a cached medoid set — the incremental cross-round path (§4.3).
+//! `tests/proptest_coreset.rs` enforces all three equivalences.
 
 use super::DistMatrix;
+use crate::util::pool::parallel_map;
 use crate::util::rng::Rng;
 
 /// Nearest/second-nearest cache entry; indices are positions in the medoid
@@ -31,38 +51,71 @@ struct Near {
 
 /// Greedy BUILD initialization (shared with [`super::pam`]).
 pub(crate) fn build_init(dist: &DistMatrix, k: usize) -> Vec<usize> {
+    build_init_par(dist, k, 1)
+}
+
+/// Contiguous candidate ranges for the sharded BUILD scans: `workers`
+/// chunks covering `0..n` in index order (first chunks one longer when
+/// `n` does not divide evenly).
+fn chunk_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let workers = workers.max(1).min(n.max(1));
+    let (base, extra) = (n / workers, n % workers);
+    let mut ranges = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    ranges
+}
+
+/// Greedy BUILD with the candidate scans sharded over `workers` threads.
+///
+/// Each chunk scans its range with the sequential code's strict
+/// comparisons; chunk results merge in chunk order with the same strict
+/// comparison, so ties resolve to the lowest candidate index — the
+/// sequential answer — at every worker count.
+pub(crate) fn build_init_par(dist: &DistMatrix, k: usize, workers: usize) -> Vec<usize> {
     let n = dist.n;
     debug_assert!(k >= 1 && k < n);
     // First medoid: the point minimizing total distance.
-    let mut best = 0usize;
-    let mut best_td = f64::INFINITY;
-    for c in 0..n {
-        let td: f64 = (0..n).map(|j| dist.get(j, c) as f64).sum();
-        if td < best_td {
-            best_td = td;
-            best = c;
+    let (best, _) = chunk_best(chunk_ranges(n, workers), workers, |lo, hi| {
+        let mut best = usize::MAX;
+        let mut best_td = f64::INFINITY;
+        for c in lo..hi {
+            let td: f64 = (0..n).map(|j| dist.get(j, c) as f64).sum();
+            if td < best_td {
+                best_td = td;
+                best = c;
+            }
         }
-    }
+        (best, best_td)
+    });
     let mut medoids = vec![best];
     let mut d1: Vec<f32> = (0..n).map(|j| dist.get(j, best)).collect();
     let mut is_medoid = vec![false; n];
     is_medoid[best] = true;
 
     while medoids.len() < k {
-        let mut best = usize::MAX;
-        let mut best_gain = f64::NEG_INFINITY;
-        for c in 0..n {
-            if is_medoid[c] {
-                continue;
+        let (d1_ref, is_medoid_ref) = (&d1, &is_medoid);
+        let (best, _) = chunk_best(chunk_ranges(n, workers), workers, |lo, hi| {
+            let mut best = usize::MAX;
+            let mut best_gain = f64::NEG_INFINITY;
+            for c in lo..hi {
+                if is_medoid_ref[c] {
+                    continue;
+                }
+                let gain: f64 = (0..n)
+                    .map(|j| (d1_ref[j] - dist.get(j, c)).max(0.0) as f64)
+                    .sum();
+                if gain > best_gain {
+                    best_gain = gain;
+                    best = c;
+                }
             }
-            let gain: f64 = (0..n)
-                .map(|j| (d1[j] - dist.get(j, c)).max(0.0) as f64)
-                .sum();
-            if gain > best_gain {
-                best_gain = gain;
-                best = c;
-            }
-        }
+            (best, -best_gain)
+        });
         medoids.push(best);
         is_medoid[best] = true;
         for j in 0..n {
@@ -70,6 +123,25 @@ pub(crate) fn build_init(dist: &DistMatrix, k: usize) -> Vec<usize> {
         }
     }
     medoids
+}
+
+/// Run `scan(lo, hi)` over every chunk (in parallel when `workers > 1`) and
+/// merge the per-chunk `(index, key)` minima **in chunk order** with a
+/// strict `<`, preserving the sequential first-best-wins tie rule. Chunks
+/// that found no candidate report `usize::MAX` with an infinite key.
+fn chunk_best(
+    ranges: Vec<(usize, usize)>,
+    workers: usize,
+    scan: impl Fn(usize, usize) -> (usize, f64) + Sync,
+) -> (usize, f64) {
+    let per_chunk = parallel_map(ranges, workers, |(lo, hi)| scan(lo, hi));
+    let mut best = (usize::MAX, f64::INFINITY);
+    for (c, key) in per_chunk {
+        if key < best.1 {
+            best = (c, key);
+        }
+    }
+    best
 }
 
 /// Full O(nk) cache rebuild (used once after BUILD).
@@ -184,20 +256,38 @@ const BUILD_OPS_LIMIT: usize = 1 << 20;
 
 /// Run FasterPAM; returns the medoid indices (unordered).
 pub fn solve(dist: &DistMatrix, k: usize, rng: &mut Rng) -> Vec<usize> {
+    solve_par(dist, k, rng, 1)
+}
+
+/// [`solve`] with the BUILD scans and SWAP candidate evaluation sharded
+/// over `workers` threads — bit-identical to the sequential solver at any
+/// worker count (see the module docs for the merge discipline).
+pub fn solve_par(dist: &DistMatrix, k: usize, rng: &mut Rng, workers: usize) -> Vec<usize> {
     let n = dist.n;
     let use_build = n.saturating_mul(n).saturating_mul(k) <= BUILD_OPS_LIMIT;
-    solve_with_init(dist, k, rng, use_build)
+    solve_with_init_par(dist, k, rng, use_build, workers)
 }
 
 /// FasterPAM with an explicit initialization choice (exposed for the perf
 /// harness and ablations; [`solve`] picks automatically).
 pub fn solve_with_init(dist: &DistMatrix, k: usize, rng: &mut Rng, use_build: bool) -> Vec<usize> {
+    solve_with_init_par(dist, k, rng, use_build, 1)
+}
+
+/// [`solve_with_init`] sharded over `workers` threads.
+pub fn solve_with_init_par(
+    dist: &DistMatrix,
+    k: usize,
+    rng: &mut Rng,
+    use_build: bool,
+    workers: usize,
+) -> Vec<usize> {
     let n = dist.n;
     if k >= n {
         return (0..n).collect();
     }
-    let mut medoids = if use_build {
-        build_init(dist, k)
+    let medoids = if use_build {
+        build_init_par(dist, k, workers)
     } else {
         dsq_init(dist, k, rng)
     };
@@ -205,7 +295,72 @@ pub fn solve_with_init(dist: &DistMatrix, k: usize, rng: &mut Rng, use_build: bo
         // Every non-medoid point is the single outsider; BUILD is optimal.
         return medoids;
     }
+    swap_refine(dist, medoids, rng, workers)
+}
 
+/// Warm-start FasterPAM (§4.3 incremental path): skip initialization and
+/// re-run only the eager-SWAP sweeps on a previous round's medoid set.
+///
+/// `cached` must hold `1 ≤ k < n` distinct in-range indices — callers
+/// validate and fall back to a cold solve otherwise (see
+/// [`super::select_warm`]). Consumes one shuffle from `rng` for the
+/// candidate order, exactly like the cold SWAP phase.
+pub fn solve_warm(dist: &DistMatrix, cached: &[usize], rng: &mut Rng, workers: usize) -> Vec<usize> {
+    let n = dist.n;
+    let medoids = cached.to_vec();
+    debug_assert!(!medoids.is_empty() && medoids.iter().all(|&m| m < n));
+    if medoids.len() >= n {
+        return (0..n).collect();
+    }
+    if medoids.len() == n - 1 {
+        return medoids;
+    }
+    swap_refine(dist, medoids, rng, workers)
+}
+
+/// One eager-SWAP candidate evaluation against *frozen* caches: the swap
+/// gain of candidate `c` (whose distance row is `row`) against all k
+/// medoids. Returns `(best_i, best_delta, acc)` — a pure function of
+/// `(near, removal, row)`, so workers may evaluate candidates concurrently
+/// and still reproduce the sequential result. Tie-breaks follow
+/// `Iterator::min_by` exactly (the **last** minimal slot wins), matching
+/// the historical sequential code.
+fn eval_candidate(near: &[Near], removal: &[f64], row: &[f32]) -> (usize, f64, f64) {
+    let mut delta = removal.to_vec();
+    let mut acc = 0.0f64;
+    for (nj, &dcj) in near.iter().zip(row) {
+        if dcj < nj.d1 {
+            // j defects to c; removing j's old nearest no longer costs d2.
+            acc += (dcj - nj.d1) as f64;
+            delta[nj.n1 as usize] += (nj.d1 - nj.d2) as f64;
+        } else if dcj < nj.d2 {
+            // If j's nearest were removed, j now goes to c, not d2.
+            delta[nj.n1 as usize] += (dcj - nj.d2) as f64;
+        }
+    }
+    let (best_i, best_delta) = delta
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, &v)| (i, v))
+        .unwrap();
+    (best_i, best_delta, acc)
+}
+
+/// The eager-SWAP refinement loop shared by the cold and warm entry
+/// points. `workers ≤ 1` is the historical sequential loop verbatim;
+/// `workers > 1` evaluates a lookahead window of candidates in parallel
+/// and replays the sequential accept/reject walk over it — the first
+/// applied swap discards the rest of the window (those evaluations are
+/// stale), so the first-improvement order is preserved bit-for-bit.
+fn swap_refine(
+    dist: &DistMatrix,
+    mut medoids: Vec<usize>,
+    rng: &mut Rng,
+    workers: usize,
+) -> Vec<usize> {
+    let n = dist.n;
+    let k = medoids.len();
     let mut near = vec![Near { n1: 0, n2: 0, d1: 0.0, d2: 0.0 }; n];
     rebuild_cache(dist, &medoids, &mut near);
     let mut removal = vec![0.0f64; k];
@@ -225,7 +380,6 @@ pub fn solve_with_init(dist: &DistMatrix, k: usize, rng: &mut Rng, use_build: bo
     let mut order: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut order);
 
-    let mut delta = vec![0.0f64; k];
     let mut since_improved = 0usize;
     let mut pos = 0usize;
     // Practical swap budget: eager FasterPAM converges in O(k) swaps; the
@@ -233,47 +387,95 @@ pub fn solve_with_init(dist: &DistMatrix, k: usize, rng: &mut Rng, use_build: bo
     let max_swaps = 20 * k + 200;
     let mut swaps = 0usize;
 
-    while since_improved < n && swaps < max_swaps {
-        let c = order[pos % n];
-        pos += 1;
-        if is_medoid[c] {
-            since_improved += 1;
-            continue;
-        }
+    if workers <= 1 {
+        let mut delta = vec![0.0f64; k];
+        while since_improved < n && swaps < max_swaps {
+            let c = order[pos % n];
+            pos += 1;
+            if is_medoid[c] {
+                since_improved += 1;
+                continue;
+            }
 
-        delta.copy_from_slice(&removal);
-        let mut acc = 0.0f64;
-        // One contiguous row of the matrix: d(c, ·).
-        let row = &dist.d[c * n..(c + 1) * n];
-        for (nj, &dcj) in near.iter().zip(row) {
-            if dcj < nj.d1 {
-                // j defects to c; removing j's old nearest no longer costs d2.
-                acc += (dcj - nj.d1) as f64;
-                delta[nj.n1 as usize] += (nj.d1 - nj.d2) as f64;
-            } else if dcj < nj.d2 {
-                // If j's nearest were removed, j now goes to c, not d2.
-                delta[nj.n1 as usize] += (dcj - nj.d2) as f64;
+            delta.copy_from_slice(&removal);
+            let mut acc = 0.0f64;
+            // One contiguous row of the matrix: d(c, ·).
+            let row = &dist.d[c * n..(c + 1) * n];
+            for (nj, &dcj) in near.iter().zip(row) {
+                if dcj < nj.d1 {
+                    acc += (dcj - nj.d1) as f64;
+                    delta[nj.n1 as usize] += (nj.d1 - nj.d2) as f64;
+                } else if dcj < nj.d2 {
+                    delta[nj.n1 as usize] += (dcj - nj.d2) as f64;
+                }
+            }
+
+            let (best_i, best_delta) = delta
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, &v)| (i, v))
+                .unwrap();
+
+            if best_delta + acc < eps {
+                let old = medoids[best_i];
+                is_medoid[old] = false;
+                is_medoid[c] = true;
+                medoids[best_i] = c;
+                update_cache_after_swap(dist, &medoids, &mut near, best_i, c);
+                removal_losses(&near, &mut removal);
+                since_improved = 0;
+                swaps += 1;
+            } else {
+                since_improved += 1;
             }
         }
+        return medoids;
+    }
 
-        let (best_i, best_delta) = delta
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, &v)| (i, v))
-            .unwrap();
-
-        if best_delta + acc < eps {
-            let old = medoids[best_i];
-            is_medoid[old] = false;
-            is_medoid[c] = true;
-            medoids[best_i] = c;
-            update_cache_after_swap(dist, &medoids, &mut near, best_i, c);
-            removal_losses(&near, &mut removal);
-            since_improved = 0;
-            swaps += 1;
-        } else {
-            since_improved += 1;
+    // Parallel windowed walk. Window size only trades wasted lookahead
+    // against parallelism — the result is window-size-invariant, because
+    // candidates before the first accepted swap see exactly the state the
+    // sequential loop would, and everything after it is re-evaluated.
+    let window = workers * 4;
+    while since_improved < n && swaps < max_swaps {
+        let win: Vec<usize> = (0..window).map(|w| order[(pos + w) % n]).collect();
+        let (near_ref, removal_ref, is_medoid_ref) = (&near, &removal, &is_medoid);
+        let evals = parallel_map(win.clone(), workers, |c| {
+            if is_medoid_ref[c] {
+                None
+            } else {
+                Some(eval_candidate(near_ref, removal_ref, &dist.d[c * n..(c + 1) * n]))
+            }
+        });
+        for (c, ev) in win.into_iter().zip(evals) {
+            pos += 1;
+            let improved = match ev {
+                None => false,
+                Some((best_i, best_delta, acc)) => {
+                    if best_delta + acc < eps {
+                        let old = medoids[best_i];
+                        is_medoid[old] = false;
+                        is_medoid[c] = true;
+                        medoids[best_i] = c;
+                        update_cache_after_swap(dist, &medoids, &mut near, best_i, c);
+                        removal_losses(&near, &mut removal);
+                        since_improved = 0;
+                        swaps += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+            };
+            if !improved {
+                since_improved += 1;
+            }
+            // A swap invalidates the remaining lookahead evaluations; the
+            // termination checks mirror the sequential loop head.
+            if improved || since_improved >= n || swaps >= max_swaps {
+                break;
+            }
         }
     }
     medoids
@@ -447,5 +649,87 @@ mod tests {
         let cs = crate::coreset::select(&dist, 5, Method::FasterPam, &mut rng);
         assert_eq!(cs.len(), 5);
         assert_eq!(cs.total_weight(), 30.0);
+    }
+
+    #[test]
+    fn parallel_solver_is_bitwise_sequential() {
+        // The unit-level anchor for tests/proptest_coreset.rs: the same
+        // seed must yield identical medoids at every worker count, for
+        // both inits (BUILD on small n, D² on the forced path).
+        for seed in 0..4 {
+            for use_build in [true, false] {
+                let mut rng = Rng::new(200 + seed);
+                let dist = random_dist(&mut rng, 70, 4);
+                let mut seq_rng = Rng::new(300 + seed);
+                let seq = solve_with_init(&dist, 7, &mut seq_rng, use_build);
+                for workers in [2, 4, 8] {
+                    let mut par_rng = Rng::new(300 + seed);
+                    let par = solve_with_init_par(&dist, 7, &mut par_rng, use_build, workers);
+                    assert_eq!(seq, par, "seed {seed} build {use_build} workers {workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_chunk_merge_preserves_first_best_ties() {
+        // All-zero distances: every candidate ties on total distance and
+        // gain, so the sequential scan keeps index 0 then ascending — the
+        // chunk-order merge must reproduce exactly that at any width.
+        let dist = DistMatrix { n: 9, d: vec![0.0; 81] };
+        let seq = build_init(&dist, 4);
+        for workers in [2, 3, 4, 8] {
+            assert_eq!(build_init_par(&dist, 4, workers), seq, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn identical_points_do_not_churn_in_parallel() {
+        // Pins the 1e-6 scale-aware threshold on the windowed path: with
+        // all-zero distances every swap "gain" is float noise, so the
+        // parallel walk must terminate without churn like the sequential
+        // one (see duplicate_points_are_harmless).
+        let dist = DistMatrix { n: 6, d: vec![0.0; 36] };
+        let mut seq_rng = Rng::new(8);
+        let seq = solve(&dist, 2, &mut seq_rng);
+        let mut par_rng = Rng::new(8);
+        let par = solve_par(&dist, 2, &mut par_rng, 4);
+        assert_eq!(seq, par);
+        assert_eq!(objective(&dist, &par), 0.0);
+    }
+
+    #[test]
+    fn k1_and_single_point_edges() {
+        let mut rng = Rng::new(13);
+        let dist = random_dist(&mut rng, 20, 3);
+        // k = 1: the medoid is the point minimizing total distance, at
+        // every worker count.
+        let mut a = Rng::new(14);
+        let mut b = Rng::new(14);
+        assert_eq!(solve(&dist, 1, &mut a), solve_par(&dist, 1, &mut b, 4));
+        // Single-point client: k ≥ n short-circuits to the identity.
+        let one = DistMatrix { n: 1, d: vec![0.0] };
+        let mut rng = Rng::new(15);
+        assert_eq!(solve_par(&one, 1, &mut rng, 4), vec![0]);
+    }
+
+    #[test]
+    fn warm_start_refines_cached_medoids() {
+        let mut rng = Rng::new(21);
+        let dist = random_dist(&mut rng, 50, 4);
+        let cold = solve(&dist, 5, &mut Rng::new(22));
+        // Warm from the cold answer: SWAP finds no improvement, so the
+        // set is stable (as a set — slots may permute through finalize).
+        let warm = solve_warm(&dist, &cold, &mut Rng::new(23), 2);
+        let (mut c, mut w) = (cold.clone(), warm.clone());
+        c.sort_unstable();
+        w.sort_unstable();
+        assert!(objective(&dist, &warm) <= objective(&dist, &cold) + 1e-9);
+        assert_eq!(c, w, "a converged set must be a SWAP fixed point");
+        // Warm from a deliberately bad seed still ends ≤ the seed's cost.
+        let bad: Vec<usize> = (0..5).collect();
+        let refined = solve_warm(&dist, &bad, &mut Rng::new(24), 4);
+        assert!(objective(&dist, &refined) <= objective(&dist, &bad) + 1e-9);
+        assert_eq!(refined.len(), 5);
     }
 }

@@ -104,6 +104,19 @@ impl Method {
 /// Returns the full-set identity when `k ≥ n` (no compression needed) and
 /// clamps `k` to ≥ 1 otherwise.
 pub fn select(dist: &DistMatrix, k: usize, method: Method, rng: &mut Rng) -> Coreset {
+    select_par(dist, k, method, rng, 1)
+}
+
+/// [`select`] with the FasterPAM hot path sharded over `workers` threads —
+/// bit-identical to the sequential selection at any worker count (the
+/// ablation baselines stay sequential; they are not on the hot path).
+pub fn select_par(
+    dist: &DistMatrix,
+    k: usize,
+    method: Method,
+    rng: &mut Rng,
+    workers: usize,
+) -> Coreset {
     let n = dist.n;
     if n == 0 {
         return Coreset { indices: vec![], deltas: vec![], cost: 0.0 };
@@ -113,12 +126,43 @@ pub fn select(dist: &DistMatrix, k: usize, method: Method, rng: &mut Rng) -> Cor
     }
     let k = k.max(1);
     let medoids = match method {
-        Method::FasterPam => fasterpam::solve(dist, k, rng),
+        Method::FasterPam => fasterpam::solve_par(dist, k, rng, workers),
         Method::Pam => pam::solve(dist, k, rng),
         Method::Random => random::solve(dist, k, rng),
         Method::GreedyKCenter => greedy_kcenter::solve(dist, k, rng),
     };
     finalize(dist, medoids)
+}
+
+/// Warm-start selection (§4.3 incremental path): re-run only the FasterPAM
+/// SWAP sweeps on a cached medoid set from a previous round.
+///
+/// Falls back to a cold [`select_par`] whenever the cache is unusable —
+/// wrong method, out-of-range or duplicate indices (the client's shard
+/// shrank), or a cached size that no longer matches the budget `k`.
+pub fn select_warm(
+    dist: &DistMatrix,
+    k: usize,
+    method: Method,
+    cached: &[usize],
+    rng: &mut Rng,
+    workers: usize,
+) -> Coreset {
+    let n = dist.n;
+    if n == 0 {
+        return Coreset { indices: vec![], deltas: vec![], cost: 0.0 };
+    }
+    if k >= n {
+        return Coreset::identity(n);
+    }
+    let k = k.max(1);
+    let mut seed: Vec<usize> = cached.iter().copied().filter(|&i| i < n).collect();
+    seed.sort_unstable();
+    seed.dedup();
+    if method != Method::FasterPam || seed.len() != k {
+        return select_par(dist, k, method, rng, workers);
+    }
+    finalize(dist, fasterpam::solve_warm(dist, &seed, rng, workers))
 }
 
 /// Assign every point to its nearest medoid and compute (δ*, cost).
@@ -233,6 +277,53 @@ mod tests {
         let dist = DistMatrix { n: 0, d: vec![] };
         let mut rng = Rng::new(3);
         let cs = select(&dist, 4, Method::FasterPam, &mut rng);
+        assert!(cs.is_empty());
+    }
+
+    #[test]
+    fn select_par_identity_when_budget_covers_set() {
+        // b ≥ m short-circuits to the identity on the parallel path too.
+        let (dist, _) = clustered_dist();
+        let mut rng = Rng::new(4);
+        let cs = select_par(&dist, 9, Method::FasterPam, &mut rng, 4);
+        assert_eq!(cs.len(), 9);
+        assert_eq!(cs.cost, 0.0);
+    }
+
+    #[test]
+    fn select_warm_reuses_a_valid_cache() {
+        let (dist, want) = clustered_dist();
+        let warm = select_warm(&dist, 3, Method::FasterPam, &[1, 4, 7], &mut Rng::new(5), 2);
+        // The planted centers are optimal: SWAP keeps them.
+        assert_eq!(warm.indices, want);
+        assert_eq!(warm.total_weight(), 9.0);
+    }
+
+    #[test]
+    fn select_warm_falls_back_cold_on_bad_cache() {
+        let (dist, _) = clustered_dist();
+        for cached in [vec![], vec![1, 4], vec![1, 1, 4], vec![1, 4, 99]] {
+            // Wrong size / duplicates / out-of-range ⇒ a cold solve, which
+            // must match select_par exactly (same RNG consumption).
+            let warm =
+                select_warm(&dist, 3, Method::FasterPam, &cached, &mut Rng::new(6), 2);
+            let cold = select_par(&dist, 3, Method::FasterPam, &mut Rng::new(6), 2);
+            assert_eq!(warm.indices, cold.indices, "cache {cached:?}");
+            assert_eq!(warm.cost.to_bits(), cold.cost.to_bits(), "cache {cached:?}");
+        }
+        // Non-FasterPAM methods never warm-start.
+        let warm = select_warm(&dist, 3, Method::Pam, &[1, 4, 7], &mut Rng::new(7), 1);
+        let cold = select_par(&dist, 3, Method::Pam, &mut Rng::new(7), 1);
+        assert_eq!(warm.indices, cold.indices);
+    }
+
+    #[test]
+    fn select_warm_identity_and_empty_edges() {
+        let (dist, _) = clustered_dist();
+        let id = select_warm(&dist, 100, Method::FasterPam, &[1, 4, 7], &mut Rng::new(8), 4);
+        assert_eq!(id.len(), 9);
+        let empty = DistMatrix { n: 0, d: vec![] };
+        let cs = select_warm(&empty, 3, Method::FasterPam, &[0], &mut Rng::new(9), 4);
         assert!(cs.is_empty());
     }
 }

@@ -76,6 +76,10 @@ pub struct ExecContext {
     pub mu: f32,
     /// k-medoids solver for adaptive coreset construction.
     pub method: Method,
+    /// Threads sharding each job's coreset hot path (distance tiles +
+    /// FasterPAM scans). Follows the executor's worker count; results are
+    /// bit-identical at any value (`tests/proptest_coreset.rs`).
+    pub coreset_workers: usize,
 }
 
 /// One selected client's work for one round. The RNG stream is split by
@@ -90,6 +94,9 @@ pub struct ClientJob {
     pub global: Arc<Vec<f32>>,
     /// §4.3 static coreset, precomputed by the engine's per-client cache.
     pub static_coreset: Option<Coreset>,
+    /// Cached medoids from this client's previous adaptive coreset — the
+    /// warm-start seed on non-refresh rounds (`RunConfig::coreset_refresh`).
+    pub warm_medoids: Option<Vec<usize>>,
     /// This job's pre-split RNG stream (minibatch shuffles, tie-breaks).
     pub rng: Rng,
 }
@@ -253,7 +260,7 @@ pub(crate) fn exec_client(
     ctx: &ExecContext,
     job: ClientJob,
 ) -> Result<ClientOutcome> {
-    let ClientJob { client, plan, global, static_coreset, mut rng } = job;
+    let ClientJob { client, plan, global, static_coreset, warm_medoids, mut rng } = job;
     run_client(
         rt,
         &ctx.model,
@@ -266,6 +273,8 @@ pub(crate) fn exec_client(
         ctx.mu,
         ctx.method,
         static_coreset.as_ref(),
+        warm_medoids.as_deref(),
+        ctx.coreset_workers,
         &mut rng,
     )
 }

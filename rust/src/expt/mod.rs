@@ -14,6 +14,8 @@
 //!   `work_stealing`)
 //! * `FEDCORE_QUORUM` / `FEDCORE_MAX_STALENESS` / `FEDCORE_ALPHA` —
 //!   overlap policy for [`bench_overlap`] (defaults 0.7 / 2 / 1.0)
+//! * `FEDCORE_CORESET_REFRESH` — adaptive-coreset rebuild interval
+//!   (default 1 = rebuild every round; N > 1 warm-starts in between)
 
 use std::sync::Arc;
 
@@ -99,6 +101,7 @@ fn bench_cfg(bench: Benchmark, straggler_pct: f64, seed: u64) -> ExperimentConfi
     cfg.run.eval_every = 2;
     cfg.run.workers = env_usize("FEDCORE_WORKERS", 1);
     cfg.run.dispatch = crate::exec::DispatchPolicy::from_env();
+    cfg.run.coreset_refresh = env_usize("FEDCORE_CORESET_REFRESH", 1).max(1);
     cfg
 }
 

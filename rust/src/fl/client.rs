@@ -36,6 +36,12 @@ pub struct ClientOutcome {
     pub compression: f64,
     /// k-medoids objective of the built coreset (0 when unused).
     pub coreset_cost: f64,
+    /// Medoid indices of an adaptively built coreset — the engine caches
+    /// them per client to warm-start the next round's SWAP sweeps (§4.3
+    /// incremental path). `None` when no adaptive coreset was built.
+    pub coreset_medoids: Option<Vec<usize>>,
+    /// Whether this round's coreset warm-started from cached medoids.
+    pub coreset_warm: bool,
 }
 
 /// One epoch of minibatch SGD over `idxs` (with optional per-sample δ
@@ -101,6 +107,12 @@ pub fn gather_features(
 
 /// Build the round's coreset: features → pairwise distances (Pallas-tiled
 /// when the set is big enough to fill tiles) → k-medoids.
+///
+/// `warm` re-runs only the SWAP sweeps on a cached medoid set (falling
+/// back to a cold solve when the cache is unusable); `workers` shards the
+/// CPU distance path and the FasterPAM scans — both bit-identical to the
+/// sequential path at any count.
+#[allow(clippy::too_many_arguments)]
 pub fn build_coreset(
     rt: &Runtime,
     model: &ModelInfo,
@@ -108,21 +120,37 @@ pub fn build_coreset(
     params: &[f32],
     budget: usize,
     method: Method,
+    warm: Option<&[usize]>,
+    workers: usize,
     rng: &mut Rng,
 ) -> Result<Coreset> {
     let m = shard.len();
     let features = gather_features(rt, model, shard, params)?;
-    let dist = build_dist(rt, &features, m)?;
-    Ok(coreset::select(&dist, budget, method, rng))
+    let dist = build_dist_par(rt, &features, m, workers)?;
+    Ok(match warm {
+        Some(cached) => coreset::select_warm(&dist, budget, method, cached, rng, workers),
+        None => coreset::select_par(&dist, budget, method, rng, workers),
+    })
 }
 
 /// Distance-matrix dispatch: Pallas tile path for large sets, CPU otherwise.
 pub fn build_dist(rt: &Runtime, features: &[f32], m: usize) -> Result<DistMatrix> {
+    build_dist_par(rt, features, m, 1)
+}
+
+/// [`build_dist`] with the CPU fallback path blocked into the same 128²
+/// tiles the Pallas artifact uses and sharded over `workers` threads.
+pub fn build_dist_par(
+    rt: &Runtime,
+    features: &[f32],
+    m: usize,
+    workers: usize,
+) -> Result<DistMatrix> {
     let c = rt.manifest().feature_dim;
     if m >= TILED_DIST_MIN {
         coreset::distance::from_features_tiled(rt, features, m)
     } else {
-        Ok(coreset::distance::from_features_cpu(features, m, c))
+        Ok(coreset::distance::from_features_cpu_par(features, m, c, workers))
     }
 }
 
@@ -165,11 +193,27 @@ pub fn build_static_coreset(
     coreset::select(&dist, budget, method, rng)
 }
 
+/// Whether a cached medoid set can actually warm-start [`build_coreset`]
+/// (mirrors the [`coreset::select_warm`] fallback conditions), so the
+/// engine's `coreset_warm` diagnostics count true warm starts only.
+pub fn warm_cache_usable(cached: &[usize], budget: usize, m: usize, method: Method) -> bool {
+    if method != Method::FasterPam || m == 0 || budget >= m {
+        return false;
+    }
+    let mut seed: Vec<usize> = cached.iter().copied().filter(|&i| i < m).collect();
+    seed.sort_unstable();
+    seed.dedup();
+    seed.len() == budget.max(1)
+}
+
 /// Execute `plan` for one client and return its round outcome.
 ///
 /// `precomputed` short-circuits coreset construction with a cached §4.3
 /// static coreset (the engine owns the per-client cache); `None` runs the
 /// paper's default adaptive path — fresh gradient features every round.
+/// `warm_medoids` (adaptive path only) seeds the solver with the client's
+/// previous medoids so only SWAP sweeps re-run; `coreset_workers` shards
+/// the distance/solver hot path (bit-identical at any count).
 #[allow(clippy::too_many_arguments)]
 pub fn run_client(
     rt: &Runtime,
@@ -183,6 +227,8 @@ pub fn run_client(
     mu: f32,
     method: Method,
     precomputed: Option<&Coreset>,
+    warm_medoids: Option<&[usize]>,
+    coreset_workers: usize,
     rng: &mut Rng,
 ) -> Result<ClientOutcome> {
     let m = shard.len();
@@ -202,6 +248,8 @@ pub fn run_client(
                 used_coreset: false,
                 compression: 1.0,
                 coreset_cost: 0.0,
+                coreset_medoids: None,
+                coreset_warm: false,
             });
         }
         LocalPlan::FullSet { epochs: e } => {
@@ -233,10 +281,16 @@ pub fn run_client(
                 rng.shuffle(&mut shuffled);
                 loss = run_epoch(rt, model, shard, global, &mut params, &shuffled, None, lr, mu, None)?;
             }
+            // Warm seeds only count when they would actually be used (the
+            // solver falls back cold otherwise — same RNG, same result).
+            let warm = warm_medoids.filter(|w| warm_cache_usable(w, budget, m, method));
             let cs = match precomputed {
                 Some(c) => c.clone(),
-                None => build_coreset(rt, model, shard, &params, budget, method, rng)?,
+                None => build_coreset(
+                    rt, model, shard, &params, budget, method, warm, coreset_workers, rng,
+                )?,
             };
+            let adaptive = precomputed.is_none();
             // δ-weighted SGD on the coreset for the remaining epochs.
             let remaining = if full_first { epochs - 1 } else { epochs };
             let mut order: Vec<usize> = (0..cs.indices.len()).collect();
@@ -255,6 +309,8 @@ pub fn run_client(
                 used_coreset: true,
                 compression: (cs.len() as f64 / m.max(1) as f64).min(1.0),
                 coreset_cost: cs.cost,
+                coreset_medoids: adaptive.then(|| cs.indices.clone()),
+                coreset_warm: adaptive && warm.is_some(),
             });
         }
     }
@@ -266,5 +322,7 @@ pub fn run_client(
         used_coreset: false,
         compression: 1.0,
         coreset_cost: 0.0,
+        coreset_medoids: None,
+        coreset_warm: false,
     })
 }

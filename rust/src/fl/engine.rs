@@ -80,6 +80,14 @@ pub struct RunConfig {
     pub coreset_method: Method,
     /// Adaptive (per-round, gradient-space) vs static (once, input-space).
     pub coreset_mode: CoresetMode,
+    /// Rebuild adaptive coresets from scratch every this many rounds; on
+    /// the rounds in between, FasterPAM warm-starts from the client's
+    /// previous medoids (SWAP-only refinement — generalizes the §4.3
+    /// static cache to the adaptive path). `1` (the default) rebuilds
+    /// every round, bit-identical to the pre-warm-start engine
+    /// (`rust/tests/proptest_coreset.rs`). Ignored for
+    /// [`CoresetMode::Static`] and for non-FasterPAM methods.
+    pub coreset_refresh: usize,
     /// Evaluate the global model every this many rounds (1 = each round).
     pub eval_every: usize,
     /// Cap on test samples per evaluation (0 = use the full test set).
@@ -150,6 +158,7 @@ impl Default for RunConfig {
             seed: 7,
             coreset_method: Method::FasterPam,
             coreset_mode: CoresetMode::Adaptive,
+            coreset_refresh: 1,
             eval_every: 1,
             eval_cap: 512,
             workers: 1,
@@ -262,6 +271,14 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     /// §4.3 static-coreset cache (client → coreset); budgets are constant
     /// per client, so a static coreset never needs rebuilding.
     static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
+    /// Warm-start medoid cache for the *adaptive* path (client → medoids
+    /// of that client's last built coreset). Consulted only on
+    /// non-refresh rounds (`cfg.coreset_refresh > 1`); with the default
+    /// refresh of 1 it is written but never read, so the engine is
+    /// bit-identical to the pre-warm-start one. Cleared at the start of
+    /// every run (unlike the static cache, its contents depend on round
+    /// history, not just the seed).
+    warm_cache: std::cell::RefCell<std::collections::HashMap<usize, Vec<usize>>>,
     /// Observability sink built from `cfg.obs` (the [`crate::obs::Null`]
     /// recorder when tracing is off). Write-only: never read back.
     obs: Arc<dyn Recorder>,
@@ -299,6 +316,9 @@ impl<'a, E: Executor> Engine<'a, E> {
         if !(cfg.flaky_boost >= 0.0 && cfg.flaky_boost.is_finite()) {
             return Err(anyhow!("flaky boost must be finite and >= 0, got {}", cfg.flaky_boost));
         }
+        if cfg.coreset_refresh == 0 {
+            return Err(anyhow!("coreset refresh must be >= 1 (1 = rebuild every round)"));
+        }
         let corrupted = match &cfg.corruption {
             Some(spec) => {
                 spec.validate().context("corruption scenario")?;
@@ -317,6 +337,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             lr: cfg.lr,
             mu: cfg.strategy.mu(),
             method: cfg.coreset_method,
+            coreset_workers: exec.workers().max(1),
         });
         // Traces are written fleet-independently (often in deadline units);
         // materialize now that the fleet size and τ are known.
@@ -340,6 +361,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             trace,
             corrupted,
             static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+            warm_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
             obs,
         })
     }
@@ -429,6 +451,10 @@ impl<'a, E: Executor> Engine<'a, E> {
             ));
         }
         let cfg = &self.cfg;
+        // A fresh run must not inherit warm medoids from a previous run on
+        // the same engine: unlike static coresets (a pure function of seed
+        // and client), warm seeds depend on the previous run's history.
+        self.warm_cache.borrow_mut().clear();
         let weights = self.ctx.data.client_weights();
         // Availability-aware selection policy: boost flaky clients'
         // weights from the trace's per-client uptime. Off (or traceless)
@@ -536,11 +562,25 @@ impl<'a, E: Executor> Engine<'a, E> {
                     }
                     _ => None,
                 };
+                // Warm start (adaptive mode only): on non-refresh rounds,
+                // seed FasterPAM from this client's previous medoids.
+                // Refresh rounds — every round at the default refresh of 1
+                // — never consult the cache, so the cold path is bitwise
+                // untouched.
+                let warm = match (&plan, cfg.coreset_mode) {
+                    (LocalPlan::Coreset { .. }, CoresetMode::Adaptive)
+                        if cfg.coreset_refresh > 1 && r % cfg.coreset_refresh != 0 =>
+                    {
+                        self.warm_cache.borrow().get(&i).cloned()
+                    }
+                    _ => None,
+                };
                 jobs.push(ClientJob {
                     client: i,
                     plan,
                     global: Arc::clone(&global),
                     static_coreset: static_cs,
+                    warm_medoids: warm,
                     rng: client_root.split((r as u64) << 20 | i as u64),
                 });
             }
@@ -566,6 +606,8 @@ impl<'a, E: Executor> Engine<'a, E> {
                         used_coreset: false,
                         compression: 1.0,
                         coreset_cost: 0.0,
+                        coreset_medoids: None,
+                        coreset_warm: false,
                     },
                     None => executed.next().expect("one outcome per dispatched job"),
                 })
@@ -582,6 +624,19 @@ impl<'a, E: Executor> Engine<'a, E> {
                             spec.apply(p, &global, r, client);
                         }
                     }
+                }
+            }
+            // Warm-start bookkeeping: remember each adaptive client's
+            // medoids for the next non-refresh round, and count this
+            // round's warm-started coresets (a dispatch-style diagnostic —
+            // never feeds timing, aggregation, or the model CSV).
+            let mut coreset_warm = 0usize;
+            for (slot, o) in outcomes.iter().enumerate() {
+                if let Some(medoids) = &o.coreset_medoids {
+                    self.warm_cache.borrow_mut().insert(selected[slot], medoids.clone());
+                }
+                if o.coreset_warm {
+                    coreset_warm += 1;
                 }
             }
             let churn_dropped = churn_partial.iter().filter(|s| s.is_some()).count();
@@ -832,6 +887,17 @@ impl<'a, E: Executor> Engine<'a, E> {
                 obs.record(&span(Phase::Select, (round_w0, select_w1), (t_now, t_now)));
                 obs.record(&span(Phase::Dispatch, (select_w1, dispatch_w1), (t_now, t_now)));
                 obs.record(&span(Phase::Train, (dispatch_w1, train_w1), (t_now, agg_instant)));
+                if coreset_clients > 0 {
+                    // Coreset construction happens on the workers inside
+                    // the Train window; this span is a non-lifecycle
+                    // overlay (the report's nesting check only constrains
+                    // the five lifecycle phases).
+                    obs.record(&span(
+                        Phase::CoresetBuild,
+                        (dispatch_w1, train_w1),
+                        (t_now, t_now),
+                    ));
+                }
                 obs.record(&span(
                     Phase::Aggregate,
                     (train_w1, agg_w1),
@@ -840,7 +906,7 @@ impl<'a, E: Executor> Engine<'a, E> {
                 if let Some(wall) = eval_wall {
                     obs.record(&span(Phase::Eval, wall, (agg_instant, agg_instant)));
                 }
-                let tallies: [(Counter, usize); 9] = [
+                let tallies: [(Counter, usize); 10] = [
                     (Counter::Dropped, dropped),
                     (Counter::ChurnDropped, churn_dropped),
                     (Counter::StaleFolded, stale_folded),
@@ -850,6 +916,7 @@ impl<'a, E: Executor> Engine<'a, E> {
                     (Counter::AggBuffered, agg_stats.buffered),
                     (Counter::Steals, dispatch.steals),
                     (Counter::CoresetClients, coreset_clients),
+                    (Counter::CoresetWarm, coreset_warm),
                 ];
                 for (counter, value) in tallies {
                     obs.record(&Record::CounterVal { counter, round: r, value: value as u64 });
@@ -883,6 +950,7 @@ impl<'a, E: Executor> Engine<'a, E> {
                 steal_count: dispatch.steals,
                 worker_idle: dispatch.idle_seconds(),
                 coreset_clients,
+                coreset_warm,
                 mean_compression,
             });
         }

@@ -45,6 +45,11 @@ fn cli() -> Cli {
     .opt("mu", "-1", "override FedProx mu (-1 = preset)")
     .opt("seed", "7", "root seed")
     .opt("method", "fasterpam", "coreset solver: fasterpam | pam | random | kcenter")
+    .opt(
+        "coreset-refresh",
+        "0",
+        "rebuild adaptive coresets every N rounds, warm-starting in between (0 = preset; 1 = every round)",
+    )
     .opt("eval-cap", "512", "max test samples per evaluation (0 = all)")
     .opt("workers", "", "client-execution worker threads (0 = auto, 1 = sequential; default 1)")
     .opt(
@@ -242,6 +247,9 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     }
     if a.has("static-coreset") {
         cfg.run.coreset_mode = fedcore::fl::CoresetMode::Static;
+    }
+    if a.get_usize("coreset-refresh") > 0 {
+        cfg.run.coreset_refresh = a.get_usize("coreset-refresh");
     }
     // Observability sink (write-only — determinism rule 7). A CLI flag
     // overrides a config file's `[experiment] obs_trace`.

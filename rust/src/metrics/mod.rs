@@ -70,6 +70,13 @@ pub struct RoundRecord {
     pub worker_idle: f64,
     /// Clients that trained on a coreset this round (FedCore).
     pub coreset_clients: usize,
+    /// Coreset clients whose k-medoids solve warm-started from cached
+    /// medoids this round (non-refresh rounds under
+    /// `coreset_refresh > 1`; always 0 at the default refresh of 1).
+    /// A diagnostic like `steal_count`: excluded from
+    /// [`RunResult::to_csv`], so the model CSV is byte-identical to the
+    /// pre-warm-start engine's.
+    pub coreset_warm: usize,
     /// Mean coreset compression ratio b/m over coreset clients (1.0 = none).
     pub mean_compression: f64,
 }
@@ -348,6 +355,7 @@ mod tests {
             steal_count: 0,
             worker_idle: 0.0,
             coreset_clients: 1,
+            coreset_warm: 0,
             mean_compression: 0.5,
         }
     }
@@ -394,6 +402,10 @@ mod tests {
         // diagnostics — those live in to_dispatch_csv.
         assert!(!lines[0].contains("steal_count"));
         assert!(!lines[0].contains("worker_idle"));
+        // ... nor the warm-start diagnostic (same rule: the model CSV is
+        // identical across refresh intervals only because the count
+        // stays out of it).
+        assert!(!lines[0].contains("coreset_warm"));
     }
 
     #[test]

@@ -75,6 +75,10 @@ pub enum Phase {
     Eval,
     /// Post-run checkpoint serialization (appended by the CLI).
     Checkpoint,
+    /// Adaptive coreset construction (distance matrix + k-medoids) on
+    /// the round's workers. A non-lifecycle overlay of the Train window
+    /// — emitted only on rounds with at least one coreset client.
+    CoresetBuild,
     /// One dispatched job, from the executor's schedule ledger
     /// (virtual-time bounds only).
     Job,
@@ -99,6 +103,7 @@ impl Phase {
             Phase::Aggregate => "aggregate",
             Phase::Eval => "eval",
             Phase::Checkpoint => "checkpoint",
+            Phase::CoresetBuild => "coreset_build",
             Phase::Job => "job",
             Phase::Worker => "worker",
         }
@@ -129,11 +134,14 @@ pub enum Counter {
     Steals,
     /// Selected clients that trained on a coreset this round.
     CoresetClients,
+    /// Coreset clients whose k-medoids solve warm-started from cached
+    /// medoids (non-refresh rounds under `coreset_refresh > 1`).
+    CoresetWarm,
 }
 
 impl Counter {
     /// Every counter, in emission order.
-    pub const ALL: [Counter; 9] = [
+    pub const ALL: [Counter; 10] = [
         Counter::Dropped,
         Counter::ChurnDropped,
         Counter::StaleFolded,
@@ -143,6 +151,7 @@ impl Counter {
         Counter::AggBuffered,
         Counter::Steals,
         Counter::CoresetClients,
+        Counter::CoresetWarm,
     ];
 
     /// Canonical counter name written to the trace.

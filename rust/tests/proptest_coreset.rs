@@ -1,0 +1,359 @@
+//! Property suites for the parallel coreset hot path (seeded runner in
+//! `util::prop`; offline build, no proptest crate — see DESIGN.md
+//! "Offline-build note"). Pure CPU: none of these need runtime artifacts.
+//!
+//! These are the gate for the exec-sharded coreset pipeline: the engine
+//! hands every client job `coreset_workers` threads, and the contract is
+//! that the sharded construction is **bit-identical** to the sequential
+//! one at any worker count (determinism rule: worker count never reaches
+//! model outputs).
+//!
+//! Invariants:
+//! * `from_features_cpu_par` equals the sequential distance builder
+//!   bitwise at any worker count — each entry is an independent
+//!   f64-accumulated function of two feature rows, so the T×T tiling
+//!   only reorders writes, never operands.
+//! * Parallel FasterPAM (chunk-sharded BUILD + windowed SWAP) returns
+//!   bit-identical medoids, deltas, and cost for workers ∈ {1, 2, 4, 8}
+//!   and k ∈ {1, m/10, m−1}.
+//! * `select_warm` falls back to the cold path bitwise whenever the
+//!   cache is unusable (wrong method or stale size), is a fixed point on
+//!   an already-converged medoid set, and stays within a small cost
+//!   slack of a cold solve under feature drift.
+//!
+//! Knobs (proptest-compatible, per the testing-strategy doc):
+//! `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays a run.
+
+use std::sync::Arc;
+
+use fedcore::coreset::{self, distance, fasterpam, DistMatrix, Method};
+use fedcore::data::{self, Benchmark};
+use fedcore::exec::Sharded;
+use fedcore::fl::{Engine, RunConfig, Strategy};
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+/// Clustered feature matrix (n × dim, row-major): well-separated centers
+/// plus per-point noise, the shape the gradient-space coresets see.
+fn features(rng: &mut Rng, n: usize, dim: usize, clusters: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n * dim);
+    for i in 0..n {
+        let c = i % clusters.max(1);
+        for d in 0..dim {
+            let center = if d % clusters.max(1) == c { 1.5 } else { -0.5 };
+            out.push(center + 0.15 * rng.normal() as f32);
+        }
+    }
+    out
+}
+
+/// Random symmetric distance matrix with a zero diagonal (exercises the
+/// solver on geometry the feature generator can't reach, e.g. ties).
+fn random_dist(rng: &mut Rng, n: usize) -> DistMatrix {
+    let mut d = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            // Quantized values so exact ties occur regularly — the merge
+            // rule's first-best-wins discipline is what's under test.
+            let v = (rng.below(32) as f32) * 0.125;
+            d[i * n + j] = v;
+            d[j * n + i] = v;
+        }
+    }
+    DistMatrix { n, d }
+}
+
+/// The k grid the issue pins: degenerate, paper-shaped (b = m/10), and
+/// the largest non-trivial budget.
+fn k_grid(n: usize) -> [usize; 3] {
+    [1, (n / 10).max(1), n.saturating_sub(1).max(1)]
+}
+
+// ---------- distance tiling ----------
+
+#[test]
+fn proptest_coreset_parallel_distance_is_bitwise_sequential() {
+    check("coreset-dist-tiling", env_seed(0xD157), env_cases(24), |rng, _| {
+        // Straddle the 128-wide tile boundary often: single tile, exact
+        // multiple, and ragged edge all occur across the case budget.
+        let n = 1 + rng.below(300);
+        let dim = 1 + rng.below(24);
+        let feats = features(rng, n, dim, 1 + rng.below(6));
+        let seq = distance::from_features_cpu(&feats, n, dim);
+        for workers in [2, 3, 4, 8] {
+            let par = distance::from_features_cpu_par(&feats, n, dim, workers);
+            assert_eq!(seq.n, par.n);
+            for (i, (a, b)) in seq.d.iter().zip(&par.d).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "entry {i} diverged at n={n} dim={dim} workers={workers}"
+                );
+            }
+            assert_eq!(par.asymmetry(), 0.0, "tiled mirror broke symmetry");
+        }
+    });
+}
+
+// ---------- FasterPAM: parallel ≡ sequential, bitwise ----------
+
+#[test]
+fn proptest_coreset_parallel_solver_is_bitwise_sequential() {
+    check("coreset-solver-par", env_seed(0xFA57), env_cases(20), |rng, case| {
+        // Alternate clustered geometry and tie-heavy random matrices.
+        let n = 12 + rng.below(90);
+        let dist = if case % 2 == 0 {
+            let dim = 2 + rng.below(12);
+            let feats = features(rng, n, dim, 2 + rng.below(5));
+            distance::from_features_cpu(&feats, n, dim)
+        } else {
+            random_dist(rng, n)
+        };
+        let seed = rng.next_u64();
+        for k in k_grid(n) {
+            let cold = coreset::select(&dist, k, Method::FasterPam, &mut Rng::new(seed));
+            for workers in [1, 2, 4, 8] {
+                let par = coreset::select_par(
+                    &dist,
+                    k,
+                    Method::FasterPam,
+                    &mut Rng::new(seed),
+                    workers,
+                );
+                assert_eq!(
+                    cold.indices, par.indices,
+                    "medoids diverged at n={n} k={k} workers={workers}"
+                );
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(
+                    bits(&cold.deltas),
+                    bits(&par.deltas),
+                    "deltas diverged at n={n} k={k} workers={workers}"
+                );
+                assert_eq!(
+                    cold.cost.to_bits(),
+                    par.cost.to_bits(),
+                    "cost diverged at n={n} k={k} workers={workers}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn proptest_coreset_build_init_matches_across_workers() {
+    // BUILD in isolation (no SWAP noise): the chunk-merge rule must pick
+    // the same greedy medoid sequence as the linear scan, including on
+    // exact-tie matrices where first-best-wins is the whole contract.
+    check("coreset-build-par", env_seed(0xB11D), env_cases(16), |rng, _| {
+        let n = 5 + rng.below(120);
+        let dist = random_dist(rng, n);
+        let k = 1 + rng.below(n.min(12));
+        let seed = rng.next_u64();
+        let seq = fasterpam::solve_with_init(&dist, k, &mut Rng::new(seed), true);
+        for workers in [2, 3, 4, 8] {
+            let par = fasterpam::solve_with_init_par(
+                &dist,
+                k,
+                &mut Rng::new(seed),
+                true,
+                workers,
+            );
+            assert_eq!(seq, par, "BUILD+SWAP diverged at n={n} k={k} workers={workers}");
+        }
+    });
+}
+
+// ---------- warm start ----------
+
+#[test]
+fn proptest_coreset_warm_unusable_cache_is_bitwise_cold() {
+    // The fallback conditions mirror the engine's `warm_cache_usable`
+    // gate: wrong method, wrong cache size (shard grew/shrank), or
+    // out-of-range indices must reproduce the cold selection *bitwise* —
+    // including identical RNG consumption.
+    check("coreset-warm-fallback", env_seed(0x3A11), env_cases(16), |rng, _| {
+        let n = 10 + rng.below(60);
+        let dim = 2 + rng.below(8);
+        let feats = features(rng, n, dim, 3);
+        let dist = distance::from_features_cpu(&feats, n, dim);
+        let k = 2 + rng.below(n / 2);
+        let seed = rng.next_u64();
+        let workers = 1 + rng.below(4);
+        let cold = coreset::select_par(&dist, k, Method::FasterPam, &mut Rng::new(seed), workers);
+        // Wrong size (one medoid short) and out-of-range entries.
+        let bad_caches: [Vec<usize>; 3] = [
+            cold.indices[..k - 1].to_vec(),
+            vec![n + 5; k],
+            vec![0; k], // duplicates dedup to a single survivor
+        ];
+        for cache in &bad_caches {
+            let warm = coreset::select_warm(
+                &dist,
+                k,
+                Method::FasterPam,
+                cache,
+                &mut Rng::new(seed),
+                workers,
+            );
+            assert_eq!(cold.indices, warm.indices, "fallback not bitwise cold");
+            assert_eq!(cold.cost.to_bits(), warm.cost.to_bits());
+        }
+        // Non-FasterPAM methods never warm-start.
+        let r_cold = coreset::select_par(&dist, k, Method::Random, &mut Rng::new(seed), workers);
+        let r_warm = coreset::select_warm(
+            &dist,
+            k,
+            Method::Random,
+            &cold.indices,
+            &mut Rng::new(seed),
+            workers,
+        );
+        assert_eq!(r_cold.indices, r_warm.indices, "Random method must ignore the cache");
+    });
+}
+
+#[test]
+fn proptest_coreset_warm_is_fixed_point_on_converged_medoids() {
+    // Warm-starting from a converged cold solution must return the same
+    // medoid set for any worker count: no improving swap exists, so the
+    // SWAP-only sweep terminates without churn.
+    check("coreset-warm-fixed-point", env_seed(0xF1CE), env_cases(12), |rng, _| {
+        let n = 10 + rng.below(80);
+        let dim = 2 + rng.below(10);
+        let feats = features(rng, n, dim, 4);
+        let dist = distance::from_features_cpu(&feats, n, dim);
+        let k = 2 + rng.below((n / 3).max(1));
+        let cold = coreset::select(&dist, k, Method::FasterPam, &mut Rng::new(rng.next_u64()));
+        for workers in [1, 2, 4, 8] {
+            let warm = coreset::select_warm(
+                &dist,
+                k.min(cold.indices.len()),
+                Method::FasterPam,
+                &cold.indices,
+                &mut Rng::new(rng.next_u64()),
+                workers,
+            );
+            assert_eq!(
+                cold.indices, warm.indices,
+                "converged medoids churned at workers={workers}"
+            );
+            assert_eq!(cold.cost.to_bits(), warm.cost.to_bits());
+        }
+    });
+}
+
+#[test]
+fn proptest_coreset_warm_cost_tracks_cold_under_drift() {
+    // The engine's non-refresh rounds warm-start on *drifted* features
+    // (the gradient space moves a little each round). Both warm and cold
+    // land on local optima of the same landscape, so no strict ordering
+    // exists — but under small drift the warm solve must stay within a
+    // generous slack of the cold one, in both directions.
+    check("coreset-warm-drift", env_seed(0xD81F), env_cases(12), |rng, _| {
+        let n = 30 + rng.below(80);
+        let dim = 4 + rng.below(8);
+        let mut feats = features(rng, n, dim, 4);
+        let dist0 = distance::from_features_cpu(&feats, n, dim);
+        let k = 3 + rng.below(n / 8);
+        let cached = coreset::select(&dist0, k, Method::FasterPam, &mut Rng::new(rng.next_u64()));
+        // Drift every feature slightly (≪ cluster separation).
+        for f in feats.iter_mut() {
+            *f += 0.02 * rng.normal() as f32;
+        }
+        let dist1 = distance::from_features_cpu(&feats, n, dim);
+        let seed = rng.next_u64();
+        let workers = 1 + rng.below(4);
+        let cold = coreset::select_par(&dist1, k, Method::FasterPam, &mut Rng::new(seed), workers);
+        let warm = coreset::select_warm(
+            &dist1,
+            k.min(cached.indices.len()),
+            Method::FasterPam,
+            &cached.indices,
+            &mut Rng::new(seed),
+            workers,
+        );
+        assert!(warm.cost.is_finite() && cold.cost.is_finite());
+        let slack = 1.25 * (cold.cost + 1e-9);
+        assert!(
+            warm.cost <= slack,
+            "warm cost {:.6} blew past cold {:.6} at n={n} k={k}",
+            warm.cost,
+            cold.cost
+        );
+        assert!(
+            cold.cost <= 1.25 * (warm.cost + 1e-9),
+            "cold cost {:.6} blew past warm {:.6} at n={n} k={k}",
+            cold.cost,
+            warm.cost
+        );
+        // Weights always repartition the full set.
+        assert_eq!(warm.total_weight(), n as f64);
+    });
+}
+
+// ---------- engine-level gate (runtime-backed; skips without artifacts) ----------
+
+#[test]
+fn proptest_coreset_engine_warm_rounds_are_worker_count_invariant() {
+    let Some(rt) = fedcore::expt::try_runtime() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        17,
+    ));
+    check("coreset-engine-warm", env_seed(0xE17A), env_cases(3), |rng, _| {
+        let cfg = RunConfig {
+            strategy: Strategy::FedCore,
+            rounds: 3 + rng.below(2),
+            epochs: 2,
+            clients_per_round: 3 + rng.below(3),
+            lr: 0.01,
+            straggler_pct: 30.0,
+            seed: rng.next_u64(),
+            coreset_method: Method::FasterPam,
+            coreset_refresh: 2 + rng.below(2),
+            eval_every: 1,
+            eval_cap: 128,
+            workers: 1,
+            verbose: false,
+            ..RunConfig::default()
+        };
+        // Warm-started rounds must not leak the worker count into model
+        // outputs: sequential and sharded engines agree byte-for-byte
+        // (coreset_workers follows the executor, so this drives the
+        // sharded hot path end-to-end).
+        let seq = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        let workers = 2 + rng.below(3);
+        let par = Engine::with_executor(&rt, &ds, cfg.clone(), Sharded::new(workers, rt.factory()))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(
+            seq.final_params, par.final_params,
+            "warm rounds diverged at {workers} workers"
+        );
+        assert_eq!(seq.to_csv(), par.to_csv(), "model CSV diverged at {workers} workers");
+        // Refresh rounds rebuild cold by definition.
+        for rec in &par.rounds {
+            if rec.round % cfg.coreset_refresh == 0 {
+                assert_eq!(rec.coreset_warm, 0, "refresh round {} warm-started", rec.round);
+            }
+        }
+        // refresh = 1 must be byte-identical to the untouched default
+        // config — the degenerate-warm-start contract the acceptance
+        // criterion pins (`--coreset-refresh 1` ≡ today's engine).
+        let mut one = cfg.clone();
+        one.coreset_refresh = 1;
+        let a = Engine::new(&rt, &ds, one).unwrap().run().unwrap();
+        let mut untouched = cfg.clone();
+        untouched.coreset_refresh = RunConfig::default().coreset_refresh;
+        let b = Engine::new(&rt, &ds, untouched).unwrap().run().unwrap();
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.to_csv(), b.to_csv());
+        for rec in &a.rounds {
+            assert_eq!(rec.coreset_warm, 0, "refresh = 1 must never warm-start");
+        }
+    });
+}

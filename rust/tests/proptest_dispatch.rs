@@ -181,7 +181,15 @@ fn tiny_ctx() -> Arc<ExecContext> {
         feat_file: "logreg_feat.hlo.txt".into(),
         eval_file: "logreg_eval.hlo.txt".into(),
     };
-    Arc::new(ExecContext { data, model, fleet, lr: 0.1, mu: 0.0, method: Method::FasterPam })
+    Arc::new(ExecContext {
+        data,
+        model,
+        fleet,
+        lr: 0.1,
+        mu: 0.0,
+        method: Method::FasterPam,
+        coreset_workers: 1,
+    })
 }
 
 #[test]
@@ -204,6 +212,7 @@ fn proptest_dispatch_trace_apis_delegate_through_shared_pool_refs() {
                 plan: LocalPlan::FullSet { epochs: 2 },
                 global: Arc::new(vec![0.0; 4]),
                 static_coreset: None,
+                warm_medoids: None,
                 rng: rng.split(c as u64),
             })
             .collect();

@@ -83,7 +83,15 @@ fn tiny_ctx() -> Arc<ExecContext> {
         feat_file: "logreg_feat.hlo.txt".into(),
         eval_file: "logreg_eval.hlo.txt".into(),
     };
-    Arc::new(ExecContext { data, model, fleet, lr: 0.1, mu: 0.0, method: Method::FasterPam })
+    Arc::new(ExecContext {
+        data,
+        model,
+        fleet,
+        lr: 0.1,
+        mu: 0.0,
+        method: Method::FasterPam,
+        coreset_workers: 1,
+    })
 }
 
 #[test]
@@ -108,6 +116,7 @@ fn proptest_exec_pool_lifecycle_without_artifacts() {
             plan: LocalPlan::FullSet { epochs: 2 },
             global: Arc::new(vec![0.0; 4]),
             static_coreset: None,
+            warm_medoids: None,
             rng: rng.split(7),
         };
         assert!(pool.run_clients(&ctx, vec![job]).is_err());

@@ -97,8 +97,8 @@ fn proptest_obs_jsonl_round_trips_and_checker_rejects_tampering() {
 
         let trace = fedcore::obs::report::load(&path).expect("loading trace back");
         let n = trace.check().expect("well-formed trace must pass");
-        // header + per-run (run_start + rounds × (6 spans + 9 counters [+ mem]))
-        assert!(n >= 1 + runs * (1 + rounds * 15), "suspiciously few records: {n}");
+        // header + per-run (run_start + rounds × (6 spans + 10 counters [+ mem]))
+        assert!(n >= 1 + runs * (1 + rounds * 16), "suspiciously few records: {n}");
         assert_eq!(trace.segments().len(), runs);
         // Every round renders a phase-table row with full wall coverage
         // (the lifecycle spans partition each round window exactly).
@@ -211,6 +211,9 @@ fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         seed: rng.next_u64(),
         coreset_method: Method::FasterPam,
         coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+        // Exercise the warm-start rounds too: the traced≡untraced gate
+        // must hold when coresets are rebuilt only every few rounds.
+        coreset_refresh: 1 + rng.below(3),
         eval_every: 1,
         eval_cap: 128,
         workers: 1 + rng.below(3),

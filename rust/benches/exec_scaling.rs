@@ -56,7 +56,7 @@ fn dispatch_sweep() -> Vec<Json> {
     let fleet = Fleet::new(&mut fleet_rng, sizes, 6, 30.0);
     // FedAvg ignores τ, so its plans carry the fleet's raw heavy-tailed
     // round times (the Fig. 4 tail) — the workload dispatch is about.
-    let costs: Vec<f64> = (0..fleet.sizes.len())
+    let costs: Vec<f64> = (0..fleet.num_clients())
         .map(|i| Strategy::FedAvg.plan(&fleet, i).sim_time(&fleet, i))
         .collect();
 

@@ -1,0 +1,232 @@
+//! Coordinator-path memory scaling: the O(cohort) round loop at fleet
+//! sizes the data-backed engine never sees (default 10^5 and 10^6
+//! clients), under heavy-tail churn. Each row drives the *real*
+//! coordinator pieces — a lazy [`Fleet`], a generated (never
+//! materialized) availability trace, the streamed weighted selection,
+//! per-client FedCore planning, and the two-tier aggregation seam — and
+//! records wall time per round plus peak RSS, so the gate "round memory
+//! scales with the cohort, not the fleet" is a measured number, not a
+//! code-review claim.
+//!
+//! Asserts the tentpole's equivalence gate in-bench before any row is
+//! trusted: every round's Mean/Mean tree aggregate must equal the flat
+//! mean **bit-for-bit**.
+//!
+//! Emits `BENCH_scale.json` (provenance-stamped): one row per
+//! fleet × cohort with `secs_per_round`, `peak_rss_bytes`,
+//! `rss_delta_bytes` (peak minus the sweep-entry resident set — the
+//! fairer per-row signal, since a process's peak RSS is monotone),
+//! `online_fraction`, and `dropped` counts.
+//!
+//! Knobs: `FEDCORE_SCALE_FLEETS` (comma-separated fleet sizes, default
+//! `100000,1000000`), `FEDCORE_SCALE_COHORTS` (default `128,1024`),
+//! `FEDCORE_ROUNDS` (rounds per row, default 5), `FEDCORE_BENCH_OUT`
+//! (output path, default `BENCH_scale.json`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use fedcore::agg::{AggPolicy, Aggregator, TreeSpec};
+use fedcore::fl::{select_available_streamed, Strategy};
+use fedcore::obs::mem;
+use fedcore::scenario::{AvailabilityTrace, ChurnModel, EdgePolicy};
+use fedcore::sim::{Fleet, SizeLaw};
+use fedcore::util::json::{write_json, Json};
+use fedcore::util::rng::Rng;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+}
+
+fn env_usize_list(key: &str, default: &[usize]) -> Vec<usize> {
+    match std::env::var(key) {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|&n| n > 0)
+            .collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Synthetic model dimension: big enough that the aggregation fold does
+/// real work, small enough that O(cohort · dim) stays cohort-bound.
+const DIM: usize = 64;
+const SEED: u64 = 7;
+/// Edge fan-out for the in-bench tree≡flat gate.
+const FANOUT: usize = 16;
+
+struct Row {
+    clients: usize,
+    cohort: usize,
+    rounds: usize,
+    secs_per_round: f64,
+    peak_rss_bytes: f64,
+    rss_delta_bytes: f64,
+    online_frac: f64,
+    dropped: usize,
+    deadline: f64,
+}
+
+/// One fleet × cohort sweep row. `entry_rss` is the resident set at
+/// sweep entry, subtracted out so each row reports its own growth.
+fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Row {
+    // The real coordinator state: O(1) lazy fleet, O(1) generated churn
+    // trace (the engine's fleet/churn salts, so the workload is the same
+    // family the scenario suites gate).
+    let fleet = Fleet::lazy(Rng::new(SEED).split(0xF1EE7), clients, SizeLaw::default(), 5, 30.0);
+    let model = ChurnModel::HeavyTail { mean_on: 4.0, min_off: 0.5, alpha: 1.5 };
+    let trace = AvailabilityTrace::generated(
+        model,
+        Rng::new(SEED ^ 0x5CA1E),
+        clients,
+        (rounds + 2) as f64,
+        EdgePolicy::Wrap,
+    )
+    .expect("heavy-tail churn trace")
+    .scaled(fleet.deadline)
+    .expect("scaling the trace to τ");
+
+    let mut select_rng = Rng::new(SEED).split(0x5E1EC7);
+    let mut flat = AggPolicy::Mean.build(None);
+    let mut tree = TreeSpec::mean(FANOUT).build(None);
+    let mut params = vec![0.0f32; DIM];
+    let mut peak = None;
+    let mut dropped = 0usize;
+    let mut online_sum = 0.0f64;
+
+    mem::fold_peak(&mut peak);
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        let t_now = r as f64 * fleet.deadline;
+        // Streamed selection: two O(fleet) passes of lazy trace/size
+        // queries, O(cohort) resident.
+        let selected = select_available_streamed(
+            &mut select_rng,
+            |i| fleet.size(i) as f64,
+            |i| trace.is_online(i, t_now),
+            clients,
+            cohort,
+        );
+        // Streamed online census (`online_fraction` would materialize an
+        // O(fleet) index vector — exactly what this bench must not do).
+        let online = (0..clients).filter(|&i| trace.is_online(i, t_now)).count();
+        online_sum += online as f64 / clients.max(1) as f64;
+
+        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
+        let mut weights: Vec<f64> = Vec::with_capacity(selected.len());
+        let urng = Rng::new(SEED ^ r as u64);
+        for &i in &selected {
+            // Real per-client planning against the lazy accessors; churn
+            // drops clients whose plan outlives their online window.
+            let plan = Strategy::FedCore.plan(&fleet, i);
+            let t = plan.sim_time(&fleet, i);
+            if trace.remaining_online(i, t_now) < t {
+                dropped += 1;
+                continue;
+            }
+            let mut cr = urng.split(i as u64);
+            locals.push((0..DIM).map(|_| cr.f32() - 0.5).collect());
+            weights.push(1.0);
+        }
+
+        let refs: Vec<&[f32]> = locals.iter().map(|l| l.as_slice()).collect();
+        let (a, _) = flat.aggregate_round(&params, &refs, &weights);
+        let (b, _) = tree.aggregate_round(&params, &refs, &weights);
+        // The tentpole gate, asserted on every benched round.
+        match (&a, &b) {
+            (Some(x), Some(y)) => {
+                for (d, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "round {r}: tree diverged from flat mean at dim {d}"
+                    );
+                }
+            }
+            (None, None) => {}
+            _ => panic!("round {r}: tree/flat applicability diverged"),
+        }
+        if let Some(p) = a {
+            params = p;
+        }
+        mem::fold_peak(&mut peak);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    let peak_bytes = peak.map(|s| s.bytes).unwrap_or(0);
+    Row {
+        clients,
+        cohort,
+        rounds,
+        secs_per_round: secs / rounds.max(1) as f64,
+        peak_rss_bytes: peak_bytes as f64,
+        rss_delta_bytes: peak_bytes.saturating_sub(entry_rss) as f64,
+        online_frac: online_sum / rounds.max(1) as f64,
+        dropped,
+        deadline: fleet.deadline,
+    }
+}
+
+fn main() {
+    let fleets = env_usize_list("FEDCORE_SCALE_FLEETS", &[100_000, 1_000_000]);
+    let cohorts = env_usize_list("FEDCORE_SCALE_COHORTS", &[128, 1024]);
+    let rounds = env_usize("FEDCORE_ROUNDS", 5);
+    let entry_rss = mem::sample().map(|s| s.bytes).unwrap_or(0);
+
+    println!("== fleet scale: O(cohort) coordinator rounds under heavy-tail churn ==");
+    println!(
+        "{:>10} {:>8} {:>14} {:>14} {:>14} {:>8} {:>8}",
+        "clients", "cohort", "s/round", "peak RSS", "RSS delta", "online", "dropped"
+    );
+    let mut rows = Vec::new();
+    for &clients in &fleets {
+        for &cohort in &cohorts {
+            let row = scale_row(clients, cohort, rounds, entry_rss);
+            println!(
+                "{:>10} {:>8} {:>13.3}s {:>11.1} MiB {:>11.1} MiB {:>7.0}% {:>8}",
+                row.clients,
+                row.cohort,
+                row.secs_per_round,
+                row.peak_rss_bytes / (1024.0 * 1024.0),
+                row.rss_delta_bytes / (1024.0 * 1024.0),
+                100.0 * row.online_frac,
+                row.dropped,
+            );
+            rows.push(obj(vec![
+                ("clients", num(row.clients as f64)),
+                ("cohort", num(row.cohort as f64)),
+                ("rounds", num(row.rounds as f64)),
+                ("secs_per_round", num(row.secs_per_round)),
+                ("peak_rss_bytes", num(row.peak_rss_bytes)),
+                ("rss_delta_bytes", num(row.rss_delta_bytes)),
+                ("online_fraction", num(row.online_frac)),
+                ("dropped", num(row.dropped as f64)),
+                ("deadline", num(row.deadline)),
+                ("dim", num(DIM as f64)),
+                ("tree_fanout", num(FANOUT as f64)),
+            ]));
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", Json::Str("fleet_scale".into())),
+        ("churn", Json::Str("heavy_tail(mean_on=4, min_off=0.5, alpha=1.5)".into())),
+        ("provenance", fedcore::util::bench::provenance(SEED, rounds, 1.0)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    let path = std::env::var("FEDCORE_BENCH_OUT").unwrap_or_else(|_| "BENCH_scale.json".into());
+    std::fs::write(&path, text).expect("writing bench output");
+    println!("\nwrote {path}");
+}

@@ -18,6 +18,10 @@
 //!   aggregators that survive corrupted or adversarial client updates
 //!   (sign flips, noise injection — see [`crate::scenario::corruption`]);
 //!   [`NormClip`] wraps any of the above with update-norm clipping.
+//! * [`TreeAggregator`] — hierarchical two-tier composition ([`tree`]):
+//!   up to E edge aggregators over contiguous cohort shards, one root
+//!   policy composing the edge aggregates. The Mean/Mean tree *relays*
+//!   and reproduces the flat fold bit-for-bit at any fanout.
 //! * [`AdaptiveQuorum`] — a controller that tightens the overlapped
 //!   pipeline's quorum when the stale-discard rate rises and relaxes it
 //!   back when the pipeline runs clean.
@@ -33,11 +37,13 @@ pub mod buffered;
 pub mod mean;
 pub mod quorum;
 pub mod robust;
+pub mod tree;
 
 pub use buffered::Buffered;
 pub use mean::{aggregate, aggregate_weighted, Mean};
 pub use quorum::AdaptiveQuorum;
 pub use robust::{CoordinateMedian, NormClip, TrimmedMean};
+pub use tree::{TreeAggregator, TreeSpec};
 
 use anyhow::{anyhow, Result};
 

@@ -1,0 +1,323 @@
+//! Hierarchical two-tier aggregation: E edge aggregators over contiguous
+//! cohort shards, composed by one root aggregator.
+//!
+//! Cross-device FL servers rarely fold a whole cohort in one place — a
+//! tier of edge aggregators (regional relays, parameter-server shards)
+//! each reduces its slice of the cohort and the root composes the edge
+//! aggregates. [`TreeAggregator`] reproduces that topology over the
+//! engine's existing aggregation seam: the round's deterministic
+//! contribution list is split into up to `fanout` contiguous shards, each
+//! shard folds through a fresh instance of the *edge* policy (any
+//! stateless [`AggPolicy`]), and the per-shard aggregates — weighted by
+//! their shard's total contribution weight — fold through the persistent
+//! *root* policy. Robust-at-edge/mean-at-root screens outliers close to
+//! the clients; mean-at-edge/robust-at-root screens whole regions.
+//!
+//! # Determinism (tier-composition rule)
+//!
+//! The tree is part of the *model function* only through the policies it
+//! composes, never through placement: shards are contiguous, in
+//! selection order, and every edge folds its shard in that order, so the
+//! output depends only on `(contribution sequence, edge policy, root
+//! policy, fanout)` — never on worker count, dispatch, or wall clock
+//! (the same rule 6 that governs [`crate::exec`]).
+//!
+//! f32 summation is non-associative, so a *reducing* edge tier is a
+//! different (hierarchical) estimator from the flat fold. The degenerate
+//! configuration is therefore explicit: a [`AggPolicy::Mean`] edge tier
+//! with no norm clipping **relays** its shards' `(update, weight)` pairs
+//! to the root unchanged — contiguous in-order shards concatenate back to
+//! the original list — so a Mean/Mean tree reproduces the flat engine
+//! **bit-for-bit** at any fanout (`rust/tests/proptest_tree.rs`). Norm
+//! clipping ([`NormClip`]) composes at the edge tier, where client
+//! updates are still individually visible.
+//!
+//! [`NormClip`]: crate::agg::NormClip
+
+use anyhow::{anyhow, Result};
+
+use super::{AggPolicy, AggStats, Aggregator};
+
+/// Declarative two-tier aggregation topology: what
+/// [`crate::fl::RunConfig::agg_tree`] carries and `--agg-tree` /
+/// `[fl] agg_tree` select.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TreeSpec {
+    /// E — number of edge aggregators. The cohort splits into up to `E`
+    /// contiguous shards of `ceil(K / E)` contributions; `1` is a single
+    /// edge over the whole cohort.
+    pub fanout: usize,
+    /// Per-shard edge policy. Must be stateless across rounds
+    /// ([`AggPolicy::Buffered`] is rejected — edge instances are rebuilt
+    /// every round, and cross-round edge state would couple the model to
+    /// shard composition).
+    pub edge: AggPolicy,
+    /// Root policy composing the edge aggregates. Persistent across
+    /// rounds, so buffered policies are allowed here.
+    pub root: AggPolicy,
+}
+
+impl TreeSpec {
+    /// A tree with `fanout` Mean edges and a Mean root — the degenerate
+    /// relay topology that reproduces the flat engine bit-for-bit.
+    pub fn mean(fanout: usize) -> TreeSpec {
+        TreeSpec { fanout, edge: AggPolicy::Mean, root: AggPolicy::Mean }
+    }
+
+    /// Human-readable topology summary for banners and trace events.
+    pub fn describe(&self) -> String {
+        format!(
+            "tree(fanout={}, edge={}, root={})",
+            self.fanout,
+            self.edge.label(),
+            self.root.label()
+        )
+    }
+
+    /// Reject meaningless topologies: zero fanout, a stateful edge
+    /// policy, or invalid tier policy knobs.
+    pub fn validate(&self) -> Result<()> {
+        if self.fanout == 0 {
+            return Err(anyhow!("aggregation tree fanout must be >= 1, got 0"));
+        }
+        if matches!(self.edge, AggPolicy::Buffered { .. }) {
+            return Err(anyhow!(
+                "buffered aggregation cannot run at the edge tier: edges are \
+                 rebuilt per round, so cross-round buffers would silently drop \
+                 updates (use it at the root instead)"
+            ));
+        }
+        self.edge.validate()?;
+        self.root.validate()
+    }
+
+    /// Build the concrete two-tier aggregator. `clip_norm` composes at
+    /// the edge tier (see the module docs).
+    pub fn build(&self, clip_norm: Option<f64>) -> TreeAggregator {
+        TreeAggregator {
+            spec: *self,
+            clip_norm,
+            root: self.root.build(None),
+        }
+    }
+}
+
+/// The two-tier [`Aggregator`]: per-round edge instances over contiguous
+/// shards, one persistent root. See the module docs for the relay
+/// discipline that makes the Mean/Mean tree exactly the flat fold.
+pub struct TreeAggregator {
+    spec: TreeSpec,
+    /// Edge-tier norm clipping bound (`None` = no clipping).
+    clip_norm: Option<f64>,
+    /// Root policy instance, persistent across rounds (carries buffered
+    /// state); built without clipping — it sees edge aggregates, not
+    /// client updates.
+    root: Box<dyn Aggregator>,
+}
+
+impl TreeAggregator {
+    /// The topology this aggregator was built from.
+    pub fn spec(&self) -> &TreeSpec {
+        &self.spec
+    }
+
+    /// Mean edges with no clipping relay their shards unchanged: folding
+    /// each pair through the root in order is bit-identical to the flat
+    /// fold, so the edge tier vanishes from the model function entirely.
+    fn relays(&self) -> bool {
+        self.spec.edge == AggPolicy::Mean && self.clip_norm.is_none()
+    }
+}
+
+impl Aggregator for TreeAggregator {
+    fn label(&self) -> &'static str {
+        "tree"
+    }
+
+    fn aggregate_round(
+        &mut self,
+        current: &[f32],
+        locals: &[&[f32]],
+        weights: &[f64],
+    ) -> (Option<Vec<f32>>, AggStats) {
+        // Relay discipline (and the trivial empty round): the root sees
+        // the original contribution sequence, bitwise.
+        if locals.is_empty() || self.relays() {
+            return self.root.aggregate_round(current, locals, weights);
+        }
+        // Contiguous shards of ceil(K / E) contributions, in fold order.
+        let shard = locals.len().div_ceil(self.spec.fanout);
+        let mut edge_updates: Vec<Vec<f32>> = Vec::with_capacity(self.spec.fanout);
+        let mut edge_weights: Vec<f64> = Vec::with_capacity(self.spec.fanout);
+        let mut stats = AggStats::default();
+        for (ls, ws) in locals.chunks(shard).zip(weights.chunks(shard)) {
+            // Fresh edge instance per shard per round: edges hold no
+            // cross-round state (TreeSpec::validate rejects Buffered).
+            let mut edge = self.spec.edge.build(self.clip_norm);
+            let (out, s) = edge.aggregate_round(current, ls, ws);
+            stats.rejected += s.rejected;
+            stats.clipped += s.clipped;
+            stats.buffered += s.buffered;
+            if let Some(update) = out {
+                // The shard's aggregate enters the root fold at the
+                // shard's total contribution weight, so a weighted-mean
+                // root recovers the cohort-weighted composition.
+                edge_updates.push(update);
+                edge_weights.push(ws.iter().sum());
+            }
+        }
+        let refs: Vec<&[f32]> = edge_updates.iter().map(|u| u.as_slice()).collect();
+        let (out, root_stats) = self.root.aggregate_round(current, &refs, &edge_weights);
+        stats.rejected += root_stats.rejected;
+        stats.clipped += root_stats.clipped;
+        stats.buffered += root_stats.buffered;
+        (out, stats)
+    }
+
+    fn flush(&mut self, current: &[f32]) -> Option<Vec<f32>> {
+        // Edges are per-round and hold nothing; only the root can.
+        self.root.flush(current)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A random round: `n` contributions of dimension `dim` with mixed
+    /// positive weights.
+    fn round(rng: &mut Rng, n: usize, dim: usize) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f64>) {
+        let current: Vec<f32> = (0..dim).map(|_| rng.f32() - 0.5).collect();
+        let locals: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..dim).map(|_| 4.0 * (rng.f32() - 0.5)).collect()).collect();
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.25, 3.0)).collect();
+        (current, locals, weights)
+    }
+
+    #[test]
+    fn mean_mean_tree_is_flat_mean_bitwise_at_any_fanout() {
+        let mut rng = Rng::new(0x7EE1);
+        for &n in &[1usize, 2, 5, 9, 16] {
+            let (current, locals, weights) = round(&mut rng, n, 17);
+            let refs: Vec<&[f32]> = locals.iter().map(|l| l.as_slice()).collect();
+            let (flat, flat_stats) =
+                AggPolicy::Mean.build(None).aggregate_round(&current, &refs, &weights);
+            let flat = flat.expect("flat mean yields params");
+            for fanout in [1, 2, 3, n, n + 4] {
+                let mut tree = TreeSpec::mean(fanout).build(None);
+                let (out, stats) = tree.aggregate_round(&current, &refs, &weights);
+                let out = out.expect("tree yields params");
+                assert_eq!(stats, flat_stats, "fanout {fanout}: stats diverged");
+                for (i, (a, b)) in flat.iter().zip(&out).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "n={n} fanout={fanout}: param {i} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reducing_edges_are_a_different_estimator() {
+        // A trimmed-mean edge tier actually reduces per shard: the result
+        // is deterministic but deliberately NOT the flat fold.
+        let mut rng = Rng::new(0x7EE2);
+        let (current, locals, weights) = round(&mut rng, 12, 9);
+        let refs: Vec<&[f32]> = locals.iter().map(|l| l.as_slice()).collect();
+        let spec = TreeSpec {
+            fanout: 3,
+            edge: AggPolicy::TrimmedMean { trim_frac: 0.25 },
+            root: AggPolicy::Mean,
+        };
+        let (a, stats_a) = spec.build(None).aggregate_round(&current, &refs, &weights);
+        let (b, stats_b) = spec.build(None).aggregate_round(&current, &refs, &weights);
+        assert_eq!(a, b, "tree aggregation must be deterministic");
+        assert_eq!(stats_a, stats_b);
+        assert!(stats_a.rejected > 0, "trimmed edges must report rejections");
+        let (flat, _) = AggPolicy::Mean.build(None).aggregate_round(&current, &refs, &weights);
+        assert_ne!(a, flat, "a robust edge tier should not equal the flat mean");
+    }
+
+    #[test]
+    fn clipping_composes_at_the_edge_tier() {
+        let mut rng = Rng::new(0x7EE3);
+        let (current, locals, weights) = round(&mut rng, 8, 6);
+        let refs: Vec<&[f32]> = locals.iter().map(|l| l.as_slice()).collect();
+        // A tiny bound clips every update; the tree must count them all.
+        let (out, stats) = TreeSpec::mean(4).build(Some(1e-3)).aggregate_round(
+            &current,
+            &refs,
+            &weights,
+        );
+        assert!(out.is_some());
+        assert_eq!(stats.clipped, 8, "every client update should clip at the edges");
+        // And a clipped Mean tree is NOT the relay path.
+        let (relay, _) = TreeSpec::mean(4).build(None).aggregate_round(&current, &refs, &weights);
+        assert_ne!(out, relay);
+    }
+
+    #[test]
+    fn buffered_root_flushes_through_the_tree() {
+        let mut rng = Rng::new(0x7EE4);
+        let (current, locals, weights) = round(&mut rng, 6, 5);
+        let refs: Vec<&[f32]> = locals.iter().map(|l| l.as_slice()).collect();
+        let spec = TreeSpec {
+            fanout: 2,
+            edge: AggPolicy::Mean,
+            root: AggPolicy::Buffered { k: 100, momentum: 0.0 },
+        };
+        let mut tree = spec.build(None);
+        let (out, stats) = tree.aggregate_round(&current, &refs, &weights);
+        assert!(out.is_none(), "a far-from-full buffer applies nothing");
+        assert!(stats.buffered > 0);
+        assert!(tree.flush(&current).is_some(), "flush must drain the root buffer");
+    }
+
+    #[test]
+    fn empty_round_behaves_like_flat() {
+        let current = vec![0.5f32; 4];
+        let mut tree = TreeSpec::mean(3).build(None);
+        let (t_out, t_stats) = tree.aggregate_round(&current, &[], &[]);
+        let (f_out, f_stats) = AggPolicy::Mean.build(None).aggregate_round(&current, &[], &[]);
+        assert_eq!(t_out, f_out);
+        assert_eq!(t_stats, f_stats);
+    }
+
+    #[test]
+    fn validation_rejects_bad_topologies() {
+        assert!(TreeSpec::mean(0).validate().is_err(), "zero fanout");
+        let buffered_edge = TreeSpec {
+            fanout: 2,
+            edge: AggPolicy::Buffered { k: 4, momentum: 0.0 },
+            root: AggPolicy::Mean,
+        };
+        assert!(buffered_edge.validate().is_err(), "buffered edge tier");
+        let bad_knob = TreeSpec {
+            fanout: 2,
+            edge: AggPolicy::TrimmedMean { trim_frac: 0.7 },
+            root: AggPolicy::Mean,
+        };
+        assert!(bad_knob.validate().is_err(), "invalid edge knob");
+        let buffered_root = TreeSpec {
+            fanout: 2,
+            edge: AggPolicy::Mean,
+            root: AggPolicy::Buffered { k: 4, momentum: 0.5 },
+        };
+        assert!(buffered_root.validate().is_ok(), "buffered root is legitimate");
+        assert!(TreeSpec::mean(1).validate().is_ok());
+    }
+
+    #[test]
+    fn describe_names_the_topology() {
+        let spec = TreeSpec {
+            fanout: 4,
+            edge: AggPolicy::CoordinateMedian,
+            root: AggPolicy::Mean,
+        };
+        assert_eq!(spec.describe(), "tree(fanout=4, edge=median, root=mean)");
+        assert_eq!(spec.build(None).label(), "tree");
+    }
+}

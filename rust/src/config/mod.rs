@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::agg::AggPolicy;
+use crate::agg::{AggPolicy, TreeSpec};
 use crate::coreset::Method;
 use crate::data::Benchmark;
 use crate::exec::OverlapConfig;
@@ -250,6 +250,28 @@ impl ExperimentConfig {
                 return Err(anyhow!("[fl] clip_norm must be positive, got {v}"));
             }
             cfg.run.clip_norm = Some(v);
+        }
+        // Hierarchical aggregation: `agg_tree = <fanout>` replaces the flat
+        // seam with a two-tier tree whose edge tier runs the `agg` policy
+        // and whose root runs `agg_root` (default mean). An `agg_root` key
+        // without `agg_tree` is a config bug, not a silent no-op.
+        let tree_fanout = usize_of("agg_tree");
+        let tree_root = doc.get("fl", "agg_root").and_then(|v| v.as_str());
+        match (tree_fanout, tree_root) {
+            (Some(fanout), root) => {
+                let root = match root {
+                    Some(name) => AggPolicy::parse(name)
+                        .ok_or_else(|| anyhow!("unknown aggregation policy '{name}'"))?,
+                    None => AggPolicy::Mean,
+                };
+                let spec = TreeSpec { fanout, edge: cfg.run.aggregator, root };
+                spec.validate().map_err(|e| anyhow!("[fl] aggregation tree: {e}"))?;
+                cfg.run.agg_tree = Some(spec);
+            }
+            (None, Some(_)) => {
+                return Err(anyhow!("[fl] agg_root only applies when agg_tree is set"));
+            }
+            (None, None) => {}
         }
         if let Some(v) = doc.get("fl", "adaptive_quorum").and_then(|v| v.as_bool()) {
             cfg.run.adaptive_quorum = v;
@@ -535,6 +557,44 @@ dispatch = "work_stealing"
         let ambiguous = "[experiment]\nbenchmark = \"mnist\"\n\
                          [fl]\nserver_momentum = 0.5\ntrim_frac = 0.2\n";
         assert!(ExperimentConfig::from_toml(ambiguous).is_err());
+    }
+
+    #[test]
+    fn agg_tree_section_roundtrip() {
+        // `agg_tree` alone: edge = the (default) mean policy, root = mean.
+        let text = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nagg_tree = 8\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.run.agg_tree, Some(TreeSpec::mean(8)));
+
+        // Edge tier follows `agg`, root follows `agg_root`.
+        let text = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [fl]\nagg = \"median\"\nagg_tree = 4\nagg_root = \"trimmed_mean\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.run.agg_tree,
+            Some(TreeSpec {
+                fanout: 4,
+                edge: AggPolicy::CoordinateMedian,
+                root: AggPolicy::TrimmedMean { trim_frac: 0.1 },
+            })
+        );
+
+        // No tree keys ⇒ the flat seam.
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert!(plain.run.agg_tree.is_none());
+
+        // Hard errors: zero fanout, buffered edges, orphaned agg_root,
+        // unknown root policy.
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nagg_tree = 0\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n\
+                   [fl]\nagg = \"buffered\"\nagg_tree = 4\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nagg_root = \"mean\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n\
+                   [fl]\nagg_tree = 4\nagg_root = \"nope\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::client::ClientOutcome;
 use super::plan::{LocalPlan, Strategy};
-use crate::agg::{AdaptiveQuorum, AggPolicy};
+use crate::agg::{AdaptiveQuorum, AggPolicy, Aggregator, TreeSpec};
 use crate::coreset::Method;
 use crate::data::FedDataset;
 use crate::exec::{
@@ -119,6 +119,17 @@ pub struct RunConfig {
     /// [`AggPolicy::Mean`] is the classic weighted FedAvg mean,
     /// bit-identical to the pre-policy engine.
     pub aggregator: AggPolicy,
+    /// Hierarchical two-tier aggregation (see [`crate::agg::tree`]):
+    /// `Some(spec)` folds each round's contribution sequence through up
+    /// to `spec.fanout` edge aggregators over contiguous shards and
+    /// composes the edge aggregates at the root. `None` (default) keeps
+    /// the flat single-tier fold; a Mean-edge tree with no clipping
+    /// relays and reproduces `None` bit-for-bit
+    /// (`rust/tests/proptest_tree.rs`). When set, the tree's tier
+    /// policies replace `aggregator` at the seam (the CLI builds
+    /// `spec.edge` from `--agg`, so the flag keeps meaning "the policy
+    /// that sees client updates").
+    pub agg_tree: Option<TreeSpec>,
     /// Clip client update L2 norms to this bound before aggregating
     /// (`None` = no clipping; see [`crate::agg::NormClip`]).
     pub clip_norm: Option<f64>,
@@ -166,6 +177,7 @@ impl Default for RunConfig {
             trace: None,
             overlap: None,
             aggregator: AggPolicy::Mean,
+            agg_tree: None,
             clip_norm: None,
             adaptive_quorum: false,
             corruption: None,
@@ -229,6 +241,142 @@ pub fn select_available(
     rng.weighted_with_replacement(&w, k).into_iter().map(|j| online[j]).collect()
 }
 
+/// Streamed availability-aware selection: bit-identical to
+/// [`select_available`] over `online = (0..n).filter(is_online)` with
+/// `weights[i] = weight_of(i)`, but without ever materializing the
+/// fleet-sized online list or its weight/CDF vectors — per-round memory
+/// is O(k), not O(fleet).
+///
+/// How the replication works: the flat sampler builds the online cohort's
+/// cumulative weight sums in index order and draws one `f64` threshold
+/// per pick against the total. Here the total comes from a first
+/// streaming pass, the `k` thresholds are drawn up-front **in the same
+/// RNG order**, sorted (carrying their draw positions), and resolved in
+/// one second pass that accumulates the identical running sums — each
+/// threshold selects the first online client whose cumulative weight
+/// exceeds it, which is exactly the flat path's binary-search answer.
+/// The `< k` online fallback (everyone once, in index order, RNG
+/// untouched) and the all-non-positive-weight uniform fallback carry
+/// over unchanged (`select_streamed_matches_flat` in this module's
+/// tests is the differential gate).
+pub fn select_available_streamed(
+    rng: &mut Rng,
+    weight_of: impl Fn(usize) -> f64,
+    is_online: impl Fn(usize) -> bool,
+    n: usize,
+    k: usize,
+) -> Vec<usize> {
+    // Pass 1: cohort size and total (clamped) weight, in index order —
+    // the same `acc` the flat path's CDF construction ends on.
+    let mut count = 0usize;
+    let mut total = 0.0f64;
+    for i in 0..n {
+        if is_online(i) {
+            count += 1;
+            total += weight_of(i).max(0.0);
+        }
+    }
+    if count == 0 {
+        return Vec::new();
+    }
+    if count < k {
+        // Deterministic fallback: every online client exactly once, in
+        // index order, without consuming the RNG.
+        return (0..n).filter(|&i| is_online(i)).collect();
+    }
+    // Degenerate weights: the flat path substitutes uniform 1.0 weights.
+    let uniform = total <= 0.0;
+    if uniform {
+        total = count as f64;
+    }
+    // Draw the k thresholds in the flat sampler's order (one `f64` per
+    // pick), then sort by (threshold, draw position) so one in-order
+    // sweep over the clients can resolve them all.
+    let mut draws: Vec<(f64, usize)> = (0..k).map(|slot| (rng.f64() * total, slot)).collect();
+    draws.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).expect("finite selection thresholds").then(a.1.cmp(&b.1))
+    });
+    let mut out = vec![0usize; k];
+    let mut acc = 0.0f64;
+    let mut next = 0usize; // first unresolved draw
+    let mut last_online = 0usize;
+    for i in 0..n {
+        if next >= k {
+            break;
+        }
+        if !is_online(i) {
+            continue;
+        }
+        last_online = i;
+        acc += if uniform { 1.0 } else { weight_of(i).max(0.0) };
+        while next < k && draws[next].0 < acc {
+            out[draws[next].1] = i;
+            next += 1;
+        }
+    }
+    // Thresholds at or past the final cumulative sum (f64 rounding can
+    // push a draw to exactly `total`): the flat path clamps these to the
+    // last online index.
+    for d in &draws[next..] {
+        out[d.1] = last_online;
+    }
+    out
+}
+
+/// Mean train loss over a round's outcomes that actually contributed
+/// parameters (churn-dropped slots carry `params: None` and a NaN
+/// placeholder loss; non-finite losses from divergent clients are also
+/// excluded). `None` when nobody contributed — an all-dropped round has
+/// no training loss, and folding the empty set through `stats::mean`
+/// would report a fake perfect `0.0` (the original bug). The engine
+/// carries the previous round's value forward instead, mirroring the
+/// eval-metric carry-forward on non-eval rounds.
+pub(crate) fn round_train_loss(outcomes: &[ClientOutcome]) -> Option<f64> {
+    let losses: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.params.is_some())
+        .map(|o| o.train_loss)
+        .filter(|l| l.is_finite())
+        .collect();
+    if losses.is_empty() {
+        None
+    } else {
+        Some(crate::util::stats::mean(&losses))
+    }
+}
+
+/// Interior-mutable cache keyed by `(client, budget)` — the §4.3 static
+/// coreset store. The budget is part of the key because the same client
+/// is asked at different budgets across strategies/configs sharing an
+/// engine; a client-only key (the original bug) silently served the
+/// first budget's value at every later budget.
+pub(crate) struct BudgetKeyedCache<V> {
+    map: std::cell::RefCell<std::collections::HashMap<(usize, usize), V>>,
+}
+
+impl<V: Clone> BudgetKeyedCache<V> {
+    pub(crate) fn new() -> BudgetKeyedCache<V> {
+        BudgetKeyedCache { map: std::cell::RefCell::new(std::collections::HashMap::new()) }
+    }
+
+    /// Return the cached value for `(client, budget)`, building and
+    /// memoizing it on first use.
+    pub(crate) fn fetch(&self, client: usize, budget: usize, build: impl FnOnce() -> V) -> V {
+        if let Some(v) = self.map.borrow().get(&(client, budget)) {
+            return v.clone();
+        }
+        let v = build();
+        self.map.borrow_mut().insert((client, budget), v.clone());
+        v
+    }
+
+    /// Number of distinct `(client, budget)` entries held.
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+}
+
 /// The engine: owns the fleet simulation and the executor, borrows the
 /// runtime, shares the dataset (`Arc`, so sharded workers can hold it).
 ///
@@ -268,9 +416,12 @@ pub struct Engine<'a, E: Executor = ExecutorImpl<'a>> {
     /// Materialized corruption membership (`corrupted[i]` = client i is
     /// corrupted; None = every update honest).
     corrupted: Option<Vec<bool>>,
-    /// §4.3 static-coreset cache (client → coreset); budgets are constant
-    /// per client, so a static coreset never needs rebuilding.
-    static_cache: std::cell::RefCell<std::collections::HashMap<usize, crate::coreset::Coreset>>,
+    /// §4.3 static-coreset cache, keyed by `(client, budget)`. A static
+    /// coreset is a pure function of `(seed, client, budget)` — and the
+    /// budget genuinely varies per strategy/config, so keying by client
+    /// alone (the original bug) served the first budget's coreset at
+    /// every later budget.
+    static_cache: BudgetKeyedCache<crate::coreset::Coreset>,
     /// Warm-start medoid cache for the *adaptive* path (client → medoids
     /// of that client's last built coreset). Consulted only on
     /// non-refresh rounds (`cfg.coreset_refresh > 1`); with the default
@@ -308,6 +459,9 @@ impl<'a, E: Executor> Engine<'a, E> {
             ov.validate().context("overlap configuration")?;
         }
         cfg.aggregator.validate().context("aggregation policy")?;
+        if let Some(tree) = &cfg.agg_tree {
+            tree.validate().context("aggregation tree")?;
+        }
         if let Some(c) = cfg.clip_norm {
             if !(c > 0.0) {
                 return Err(anyhow!("clip norm must be positive, got {c}"));
@@ -360,7 +514,7 @@ impl<'a, E: Executor> Engine<'a, E> {
             ctx,
             trace,
             corrupted,
-            static_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+            static_cache: BudgetKeyedCache::new(),
             warm_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
             obs,
         })
@@ -370,19 +524,16 @@ impl<'a, E: Executor> Engine<'a, E> {
     /// Static coresets are input-space (no runtime involved), so they are
     /// built on the coordinator thread and shipped to workers inside jobs.
     fn static_coreset(&self, i: usize, budget: usize) -> crate::coreset::Coreset {
-        if let Some(c) = self.static_cache.borrow().get(&i) {
-            return c.clone();
-        }
-        let mut rng = Rng::new(self.cfg.seed).split(0x57A7 ^ i as u64);
-        let cs = super::client::build_static_coreset(
-            &self.ctx.data.clients[i],
-            self.rt.manifest().vocab.len(),
-            budget,
-            self.cfg.coreset_method,
-            &mut rng,
-        );
-        self.static_cache.borrow_mut().insert(i, cs.clone());
-        cs
+        self.static_cache.fetch(i, budget, || {
+            let mut rng = Rng::new(self.cfg.seed).split(0x57A7 ^ i as u64);
+            super::client::build_static_coreset(
+                &self.ctx.data.clients[i],
+                self.rt.manifest().vocab.len(),
+                budget,
+                self.cfg.coreset_method,
+                &mut rng,
+            )
+        })
     }
 
     /// The run configuration this engine was built with.
@@ -481,8 +632,13 @@ impl<'a, E: Executor> Engine<'a, E> {
         };
 
         // The aggregation seam: one policy instance per run (buffered
-        // policies carry cross-round state). RNG-free by contract.
-        let mut agg = cfg.aggregator.build(cfg.clip_norm);
+        // policies carry cross-round state). RNG-free by contract. A
+        // configured tree replaces the flat fold with the two-tier
+        // edge/root composition ([`crate::agg::tree`]).
+        let mut agg: Box<dyn Aggregator> = match &cfg.agg_tree {
+            Some(tree) => Box::new(tree.build(cfg.clip_norm)),
+            None => cfg.aggregator.build(cfg.clip_norm),
+        };
 
         let mut params = init_params;
         let mut rounds: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
@@ -506,6 +662,20 @@ impl<'a, E: Executor> Engine<'a, E> {
                     ("strategy", Json::Str(cfg.strategy.label().into())),
                 ],
             });
+            if let Some(tree) = &cfg.agg_tree {
+                // Topology is config, not per-round state: one event at
+                // the head of the trace, not a counter (the registry is
+                // pinned to `Counter::ALL`).
+                obs.record(&Record::Event {
+                    name: "agg_tree",
+                    round: 0,
+                    fields: vec![
+                        ("fanout", Json::Num(tree.fanout as f64)),
+                        ("edge", Json::Str(tree.edge.label().into())),
+                        ("root", Json::Str(tree.root.label().into())),
+                    ],
+                });
+            }
         }
 
         for r in 0..cfg.rounds {
@@ -517,10 +687,16 @@ impl<'a, E: Executor> Engine<'a, E> {
             let t_now = clock.now();
             let selected = match &self.trace {
                 None => select_rng.weighted_with_replacement(&weights, cfg.clients_per_round),
-                Some(trace) => {
-                    let online = self.fleet.online_clients(trace, t_now);
-                    select_available(&mut select_rng, &weights, &online, cfg.clients_per_round)
-                }
+                // Streamed over the trace — no fleet-sized online list is
+                // ever built; bit-identical to the materialized
+                // `online_clients` + `select_available` pipeline.
+                Some(trace) => select_available_streamed(
+                    &mut select_rng,
+                    |i| weights[i],
+                    |i| trace.is_online(i, t_now),
+                    self.fleet.num_clients(),
+                    cfg.clients_per_round,
+                ),
             };
             let select_w1 = obs.now_ns();
 
@@ -801,12 +977,13 @@ impl<'a, E: Executor> Engine<'a, E> {
             // --- metrics (over the round's own executed clients — a late
             //     finisher did its local training this round even though
             //     its parameters fold later) ---
-            let losses: Vec<f64> = contributing
-                .iter()
-                .map(|(_, o)| o.train_loss)
-                .filter(|l| l.is_finite())
-                .collect();
-            let train_loss = crate::util::stats::mean(&losses);
+            // All-dropped rounds have no loss to report: carry the
+            // previous round's value forward (NaN only when round 0
+            // itself had no contributor) instead of averaging an empty
+            // set into a fake 0.0.
+            let train_loss = round_train_loss(&outcomes).unwrap_or_else(|| {
+                rounds.last().map(|p: &RoundRecord| p.train_loss).unwrap_or(f64::NAN)
+            });
             let coreset_clients =
                 contributing.iter().filter(|(_, o)| o.used_coreset).count();
             let compressions: Vec<f64> = contributing
@@ -1109,5 +1286,156 @@ mod tests {
         let weights = vec![0.0, 0.0];
         let out = boost_flaky_weights(&weights, &[0.5, 0.5], 2.0);
         assert_eq!(out, weights);
+    }
+
+    // ---------- streamed selection ≡ materialized selection ----------
+    // (the differential gate behind the O(cohort) selection path)
+
+    #[test]
+    fn select_streamed_matches_flat() {
+        let mut rng = Rng::new(0x57E0);
+        for case in 0..300usize {
+            let n = 1 + rng.below(60);
+            let weights: Vec<f64> = (0..n)
+                .map(|_| match rng.below(8) {
+                    0 => 0.0,
+                    1 => -1.0, // clamped to 0 by both paths
+                    _ => rng.range_f64(0.05, 9.0),
+                })
+                .collect();
+            let online_mask: Vec<bool> = (0..n).map(|_| rng.f64() < 0.7).collect();
+            let online: Vec<usize> = (0..n).filter(|&i| online_mask[i]).collect();
+            let k = 1 + rng.below(16);
+
+            let mut flat_rng = rng.split(case as u64);
+            let flat = select_available(&mut flat_rng, &weights, &online, k);
+            let mut stream_rng = rng.split(case as u64);
+            let streamed = select_available_streamed(
+                &mut stream_rng,
+                |i| weights[i],
+                |i| online_mask[i],
+                n,
+                k,
+            );
+            assert_eq!(streamed, flat, "case {case}: selections diverged");
+            // And the RNG streams must end in the same state (same number
+            // of draws consumed) so everything downstream stays aligned.
+            assert_eq!(
+                flat_rng.next_u64(),
+                stream_rng.next_u64(),
+                "case {case}: RNG consumption diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn select_streamed_all_online_matches_unrestricted_sampler() {
+        let mut rng = Rng::new(0x57E1);
+        for case in 0..100usize {
+            let n = 2 + rng.below(40);
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 4.0)).collect();
+            let k = 1 + rng.below(n);
+            let mut a = rng.split(case as u64);
+            let unrestricted = a.weighted_with_replacement(&weights, k);
+            let mut b = rng.split(case as u64);
+            let streamed =
+                select_available_streamed(&mut b, |i| weights[i], |_| true, n, k);
+            assert_eq!(streamed, unrestricted, "case {case}");
+        }
+    }
+
+    #[test]
+    fn select_streamed_fallback_is_rng_free_and_index_ordered() {
+        let mut rng = Rng::new(4);
+        let before = rng.clone();
+        let picked = select_available_streamed(
+            &mut rng,
+            |_| 1.0,
+            |i| i % 2 == 0,
+            7, // online: 0, 2, 4, 6
+            9,
+        );
+        assert_eq!(picked, vec![0, 2, 4, 6]);
+        let mut a = rng;
+        let mut b = before;
+        assert_eq!(a.next_u64(), b.next_u64(), "fallback consumed the RNG");
+        let mut r = Rng::new(5);
+        assert!(select_available_streamed(&mut r, |_| 1.0, |_| false, 10, 3).is_empty());
+    }
+
+    // ---------- round_train_loss: the all-dropped NaN/0.0 bug ----------
+
+    fn outcome(train_loss: f64, contributed: bool) -> ClientOutcome {
+        ClientOutcome {
+            params: contributed.then(|| vec![0.0f32; 3]),
+            train_loss,
+            sim_time: 1.0,
+            used_coreset: false,
+            compression: 1.0,
+            coreset_cost: 0.0,
+            coreset_medoids: None,
+            coreset_warm: false,
+        }
+    }
+
+    #[test]
+    fn round_loss_survives_all_but_one_churn_dropped() {
+        // Five selection slots, four churn-dropped (NaN placeholder, no
+        // params): the round's loss is the lone contributor's, exactly.
+        let mut outcomes: Vec<ClientOutcome> =
+            (0..4).map(|_| outcome(f64::NAN, false)).collect();
+        outcomes.push(outcome(0.625, true));
+        assert_eq!(round_train_loss(&outcomes), Some(0.625));
+    }
+
+    #[test]
+    fn round_loss_is_none_when_nobody_contributes() {
+        let outcomes: Vec<ClientOutcome> = (0..3).map(|_| outcome(f64::NAN, false)).collect();
+        assert_eq!(round_train_loss(&outcomes), None, "all churn-dropped");
+        assert_eq!(round_train_loss(&[]), None, "empty selection");
+        // A contributor with a non-finite loss is excluded too — it must
+        // not poison the mean, and alone it leaves nothing to average.
+        let divergent = vec![outcome(f64::INFINITY, true)];
+        assert_eq!(round_train_loss(&divergent), None);
+    }
+
+    #[test]
+    fn round_loss_filters_non_finite_contributors() {
+        let outcomes = vec![
+            outcome(2.0, true),
+            outcome(f64::NAN, true), // divergent client
+            outcome(4.0, true),
+            outcome(100.0, false), // dropped: params never arrived
+        ];
+        assert_eq!(round_train_loss(&outcomes), Some(3.0));
+    }
+
+    // ---------- static-coreset cache keying (regression) ----------
+
+    #[test]
+    fn budget_cache_keys_by_client_and_budget() {
+        let cache: BudgetKeyedCache<usize> = BudgetKeyedCache::new();
+        let builds = std::cell::Cell::new(0usize);
+        let fetch = |client: usize, budget: usize| {
+            cache.fetch(client, budget, || {
+                builds.set(builds.get() + 1);
+                budget * 1000 + client
+            })
+        };
+        // The regression: same client at two budgets must build twice and
+        // return budget-specific values (the old client-only key returned
+        // the first budget's coreset for both).
+        assert_eq!(fetch(3, 10), 10_003);
+        assert_eq!(fetch(3, 25), 25_003);
+        assert_eq!(builds.get(), 2, "distinct budgets must not share a cache entry");
+        // Hits: same (client, budget) never rebuilds.
+        assert_eq!(fetch(3, 10), 10_003);
+        assert_eq!(fetch(3, 25), 25_003);
+        assert_eq!(builds.get(), 2);
+        assert_eq!(cache.len(), 2);
+        // Distinct clients stay distinct at the same budget.
+        assert_eq!(fetch(4, 10), 10_004);
+        assert_eq!(builds.get(), 3);
+        assert_eq!(cache.len(), 3);
     }
 }

@@ -15,8 +15,8 @@ pub use checkpoint::Checkpoint;
 
 pub use client::{run_client, ClientOutcome};
 pub use engine::{
-    aggregate, aggregate_weighted, boost_flaky_weights, select_available, CoresetMode, Engine,
-    RunConfig,
+    aggregate, aggregate_weighted, boost_flaky_weights, select_available,
+    select_available_streamed, CoresetMode, Engine, RunConfig,
 };
 pub use plan::{LocalPlan, Strategy};
 

@@ -59,13 +59,13 @@ impl LocalPlan {
     /// The §4.4 fallback's forward-only feature pass costs a fraction
     /// [`FEATURE_PASS_COST`] of a training pass over the full set.
     pub fn sim_time(&self, fleet: &Fleet, i: usize) -> f64 {
-        let m = fleet.sizes[i];
+        let m = fleet.size(i);
         let visits = self.training_samples(m, fleet.epochs) as f64;
         let feature_pass = match *self {
             LocalPlan::Coreset { full_first: false, .. } => FEATURE_PASS_COST * m as f64,
             _ => 0.0,
         };
-        (visits + feature_pass) / fleet.profiles[i].capability
+        (visits + feature_pass) / fleet.profile(i).capability
     }
 }
 
@@ -134,8 +134,8 @@ impl Strategy {
                 // budget slack, which is why its Table 2 round times sit
                 // below FedCore's. A client too slow for even one epoch
                 // contributes the partial work that fits (γ-inexact).
-                let cap = fleet.profiles[i].capability * fleet.deadline;
-                let m = fleet.sizes[i];
+                let cap = fleet.profile(i).capability * fleet.deadline;
+                let m = fleet.size(i);
                 let full = ((cap / m as f64).floor() as usize).min(e);
                 if full >= 1 {
                     LocalPlan::Truncated { epochs: full, tail_samples: 0 }
@@ -174,7 +174,7 @@ mod tests {
             Strategy::FedProx { mu: 0.1 },
             Strategy::FedCore,
         ] {
-            for i in 0..f.sizes.len() {
+            for i in 0..f.num_clients() {
                 if !f.is_straggler(i) {
                     assert_eq!(s.plan(&f, i), LocalPlan::FullSet { epochs: 10 });
                 }
@@ -186,7 +186,7 @@ mod tests {
     fn fedavg_ignores_deadline() {
         let f = fleet();
         let mut exceeded = 0;
-        for i in 0..f.sizes.len() {
+        for i in 0..f.num_clients() {
             let p = Strategy::FedAvg.plan(&f, i);
             let t = p.sim_time(&f, i);
             if t > f.deadline {
@@ -201,7 +201,7 @@ mod tests {
     fn deadline_aware_plans_fit_tau() {
         let f = fleet();
         for s in [Strategy::FedAvgDS, Strategy::FedProx { mu: 0.1 }, Strategy::FedCore] {
-            for i in 0..f.sizes.len() {
+            for i in 0..f.num_clients() {
                 let p = s.plan(&f, i);
                 let t = p.sim_time(&f, i);
                 // flooring slack (one sample per epoch), plus the clamped
@@ -210,12 +210,12 @@ mod tests {
                 // insist on a floor of useful work, like the paper's §4.4.
                 let min_work = match p {
                     LocalPlan::Coreset { full_first: false, .. } => {
-                        (f.epochs as f64 + FEATURE_PASS_COST * f.sizes[i] as f64)
-                            / f.profiles[i].capability
+                        (f.epochs as f64 + FEATURE_PASS_COST * f.size(i) as f64)
+                            / f.profile(i).capability
                     }
                     _ => 0.0,
                 };
-                let slack = f.epochs as f64 / f.profiles[i].capability;
+                let slack = f.epochs as f64 / f.profile(i).capability;
                 assert!(
                     t <= (f.deadline + slack).max(min_work + 1e-9),
                     "{}: client {i} time {t} > τ {} (min_work {min_work})",
@@ -230,16 +230,16 @@ mod tests {
     fn fedcore_stragglers_get_compressed_coresets() {
         let f = fleet();
         let mut coreset_count = 0;
-        for i in 0..f.sizes.len() {
+        for i in 0..f.num_clients() {
             if let LocalPlan::Coreset { budget, full_first } = Strategy::FedCore.plan(&f, i) {
                 coreset_count += 1;
                 assert!(budget >= 1);
                 if full_first {
-                    assert!(budget < f.sizes[i]);
+                    assert!(budget < f.size(i));
                 }
             }
         }
-        let frac = coreset_count as f64 / f.sizes.len() as f64;
+        let frac = coreset_count as f64 / f.num_clients() as f64;
         assert!((frac - 0.3).abs() < 0.05, "coreset fraction {frac}");
     }
 
@@ -247,12 +247,12 @@ mod tests {
     fn fedprox_partial_epochs_monotone_in_capability() {
         let f = fleet();
         // A straggler's planned visits never exceed the full-set visits.
-        for i in 0..f.sizes.len() {
+        for i in 0..f.num_clients() {
             let p = Strategy::FedProx { mu: 0.1 }.plan(&f, i);
-            let v = p.training_samples(f.sizes[i], f.epochs);
-            assert!(v <= f.epochs * f.sizes[i]);
+            let v = p.training_samples(f.size(i), f.epochs);
+            assert!(v <= f.epochs * f.size(i));
             if f.is_straggler(i) {
-                assert!(v < f.epochs * f.sizes[i], "straggler {i} not truncated");
+                assert!(v < f.epochs * f.size(i), "straggler {i} not truncated");
             }
         }
     }

@@ -65,6 +65,12 @@ fn cli() -> Cli {
     .opt("server-momentum", "0", "buffered: server momentum beta in [0, 1)")
     .opt("buffer-k", "0", "buffered: updates per server-buffer flush (0 = every round)")
     .opt("trim-frac", "0.1", "trimmed_mean: fraction trimmed from each tail per coordinate")
+    .opt(
+        "agg-tree",
+        "0",
+        "two-tier aggregation: edge fan-out E (0 = flat seam; env: FEDCORE_AGG_TREE)",
+    )
+    .opt("agg-root", "mean", "tree root aggregator: mean | buffered | trimmed_mean | median")
     .opt("clip-norm", "0", "clip client update L2 norms before aggregating (0 = off)")
     .opt("corrupt", "", "scenario: corrupt a client fraction's updates: noise | sign_flip")
     .opt("corrupt-frac", "0.1", "scenario: fraction of clients corrupted")
@@ -211,6 +217,39 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
         pol.validate()?;
         cfg.run.aggregator = pol;
     }
+    // Hierarchical aggregation: `--agg-tree E` replaces the flat seam
+    // with a two-tier tree — the --agg policy runs at E-wide edge shards,
+    // --agg-root composes the edge aggregates. FEDCORE_AGG_TREE seeds the
+    // fan-out for flagless, fileless runs (like FEDCORE_DISPATCH); an
+    // explicit `--agg-tree 0` forces the flat seam over any config file.
+    let tree_fanout = if explicit("agg-tree", "0") {
+        Some(a.get_usize("agg-tree"))
+    } else if !from_config && cfg.run.agg_tree.is_none() {
+        std::env::var("FEDCORE_AGG_TREE").ok().and_then(|v| v.trim().parse::<usize>().ok())
+    } else {
+        None
+    };
+    match tree_fanout {
+        Some(0) => cfg.run.agg_tree = None,
+        Some(fanout) => {
+            cfg.run.agg_tree = Some(fedcore::agg::TreeSpec::mean(fanout));
+        }
+        None => {}
+    }
+    if explicit("agg-root", "mean") && cfg.run.agg_tree.is_none() {
+        return Err(anyhow!("--agg-root only applies with --agg-tree (or a config file's tree)"));
+    }
+    if let Some(spec) = &mut cfg.run.agg_tree {
+        // The edge tier stays in lockstep with the flat policy selection
+        // (--agg or the [fl] agg key); an explicit --agg-root overrides
+        // the root, which a fresh --agg-tree defaults to mean.
+        spec.edge = cfg.run.aggregator;
+        if explicit("agg-root", "mean") || matches!(tree_fanout, Some(f) if f > 0) {
+            spec.root = fedcore::agg::AggPolicy::parse(a.get("agg-root"))
+                .ok_or_else(|| anyhow!("unknown aggregation policy '{}'", a.get("agg-root")))?;
+        }
+        spec.validate()?;
+    }
     if a.get_f64("clip-norm") > 0.0 {
         cfg.run.clip_norm = Some(a.get_f64("clip-norm"));
     }
@@ -311,7 +350,16 @@ fn cmd_run(a: &Args) -> Result<()> {
             if cfg.run.adaptive_quorum { " | adaptive" } else { "" },
         );
     }
-    if cfg.run.aggregator != fedcore::agg::AggPolicy::Mean || cfg.run.clip_norm.is_some() {
+    if let Some(spec) = &cfg.run.agg_tree {
+        eprintln!(
+            "aggregation: {}{}",
+            spec.describe(),
+            cfg.run
+                .clip_norm
+                .map(|c| format!(" | clip norm {c} at the edge tier"))
+                .unwrap_or_default(),
+        );
+    } else if cfg.run.aggregator != fedcore::agg::AggPolicy::Mean || cfg.run.clip_norm.is_some() {
         eprintln!(
             "aggregation: {:?}{}",
             cfg.run.aggregator,

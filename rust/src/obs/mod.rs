@@ -166,6 +166,7 @@ impl Counter {
             Counter::AggBuffered => "agg_buffered",
             Counter::Steals => "steals",
             Counter::CoresetClients => "coreset_clients",
+            Counter::CoresetWarm => "coreset_warm",
         }
     }
 }

@@ -185,8 +185,11 @@ impl ChurnModel {
     }
 
     /// One client's online intervals over `[0, horizon)` (unnormalized —
-    /// [`AvailabilityTrace::from_intervals`] sorts/merges/clamps).
-    fn client_intervals(&self, r: &mut Rng, horizon: f64) -> Vec<(f64, f64)> {
+    /// [`AvailabilityTrace::from_intervals`] sorts/merges/clamps). Exposed
+    /// to the trace layer so the generated (lazy) representation can
+    /// re-derive a single client's schedule on demand, bit-identically to
+    /// [`ChurnModel::generate`].
+    pub(crate) fn client_intervals(&self, r: &mut Rng, horizon: f64) -> Vec<(f64, f64)> {
         match *self {
             ChurnModel::AlwaysOn => vec![(0.0, horizon)],
             ChurnModel::Periodic { period, duty } => {

@@ -238,15 +238,25 @@ impl TraceSpec {
     /// clients whose round deadline is `deadline` simulated seconds
     /// (used only when the spec is in deadline units). Deterministic:
     /// identical inputs yield the bit-identical trace.
+    ///
+    /// Model sources materialize into the *generated* representation
+    /// ([`AvailabilityTrace::generated`]): schedules are re-derived per
+    /// query instead of stored, so a churn trace over a million-client
+    /// fleet costs O(1) resident memory. Queries are bit-identical to the
+    /// dense table [`TraceSpec::materialize_dense`] builds.
     pub fn materialize(&self, clients: usize, deadline: f64) -> Result<AvailabilityTrace> {
         let scale = match self.unit {
             TraceUnit::Seconds => 1.0,
             TraceUnit::Deadlines => deadline,
         };
         let unit_trace = match &self.source {
-            TraceSource::Model { model, seed } => {
-                model.generate(&Rng::new(*seed), clients, self.horizon, self.policy)?
-            }
+            TraceSource::Model { model, seed } => AvailabilityTrace::generated(
+                *model,
+                Rng::new(*seed),
+                clients,
+                self.horizon,
+                self.policy,
+            )?,
             TraceSource::Explicit { clients: listed } => {
                 // Unlisted clients are always online; listed ids past the
                 // fleet are ignored.
@@ -260,6 +270,24 @@ impl TraceSpec {
             }
         };
         unit_trace.scaled(scale)
+    }
+
+    /// [`TraceSpec::materialize`], but forcing the dense (explicit
+    /// interval table) representation — O(fleet) memory, identical query
+    /// results. Builds the table through [`ChurnModel::generate`] (the
+    /// pre-lazy pipeline), so it doubles as the independent differential
+    /// baseline the generated representation is gated against.
+    pub fn materialize_dense(&self, clients: usize, deadline: f64) -> Result<AvailabilityTrace> {
+        let scale = match self.unit {
+            TraceUnit::Seconds => 1.0,
+            TraceUnit::Deadlines => deadline,
+        };
+        match &self.source {
+            TraceSource::Model { model, seed } => model
+                .generate(&Rng::new(*seed), clients, self.horizon, self.policy)?
+                .scaled(scale),
+            TraceSource::Explicit { .. } => self.materialize(clients, deadline),
+        }
     }
 }
 
@@ -513,5 +541,38 @@ after = "clamp"
         let a = spec.materialize(3, 10.0).unwrap();
         let b = spec.materialize(3, 9999.0).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lazy_materialize_matches_dense_baseline() {
+        // Model specs now materialize lazily; every query must agree
+        // bit-for-bit with the dense table the pre-lazy pipeline builds.
+        for kind in ["always_on", "periodic", "markov", "heavy_tail"] {
+            let spec = TraceSpec::from_model(ChurnModel::parse(kind).unwrap(), 16.0, 33);
+            let n = 24;
+            let lazy = spec.materialize(n, 41.5).unwrap();
+            let dense = spec.materialize_dense(n, 41.5).unwrap();
+            assert_eq!(lazy.densified(), dense, "{kind}: densified lazy != dense baseline");
+            assert_eq!(lazy.horizon().to_bits(), dense.horizon().to_bits());
+            for c in 0..n + 2 {
+                assert_eq!(lazy.intervals(c), dense.intervals(c), "{kind} client {c}");
+                assert_eq!(lazy.uptime(c).to_bits(), dense.uptime(c).to_bits());
+                for t in [0.0, 7.25, 16.0 * 41.5 - 1.0, 16.0 * 41.5, 1e6] {
+                    assert_eq!(
+                        lazy.remaining_online(c, t).to_bits(),
+                        dense.remaining_online(c, t).to_bits(),
+                        "{kind} client {c} at t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_specs_stay_dense() {
+        let spec = TraceSpec::from_toml(EXPLICIT_TOML).unwrap();
+        let t = spec.materialize(4, 10.0).unwrap();
+        assert_eq!(t, spec.materialize_dense(4, 10.0).unwrap());
+        assert_eq!(t.densified(), t, "explicit traces are already dense");
     }
 }

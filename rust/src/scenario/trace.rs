@@ -1,10 +1,22 @@
 //! Per-client availability traces: who is online at a given simulated time.
 //!
-//! An [`AvailabilityTrace`] stores, for every client, a sorted list of
-//! half-open online intervals `[start, end)` on a finite timeline
+//! An [`AvailabilityTrace`] answers, for every client, "is it online at
+//! time `t` and for how much longer" over a finite timeline
 //! `[0, horizon)`. Time past the horizon is handled by an [`EdgePolicy`]:
 //! either the trace repeats cyclically (diurnal patterns) or the state at
 //! the end of the trace persists (steady-state tails).
+//!
+//! Two representations back the same query API:
+//!
+//! * **Dense** ([`AvailabilityTrace::from_intervals`]) — explicit sorted
+//!   interval lists per client, what explicit trace files produce.
+//! * **Generated** ([`AvailabilityTrace::generated`]) — a
+//!   [`ChurnModel`] plus its seed; a client's schedule is re-derived on
+//!   demand from its private RNG split, so a million-client churn trace
+//!   costs O(1) resident memory instead of an O(fleet) interval table.
+//!   Queries are bit-identical to the dense trace the same model/seed
+//!   would generate ([`AvailabilityTrace::densified`] materializes the
+//!   dense twin; the unit suite gates the equivalence).
 //!
 //! Clients beyond the trace's own client count are treated as always
 //! online — an explicit trace that lists only the flaky clients composes
@@ -12,6 +24,9 @@
 //! always-available FL setting.
 
 use anyhow::{anyhow, Result};
+
+use super::churn::ChurnModel;
+use crate::util::rng::Rng;
 
 /// What the trace reports for times at or past its horizon.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,10 +57,52 @@ impl EdgePolicy {
     }
 }
 
+/// Where a trace's per-client schedules live (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+enum Schedules {
+    /// `0[i]` = sorted, disjoint online intervals of client `i`.
+    Dense(Vec<Vec<(f64, f64)>>),
+    /// Schedules re-derived per query from the model and its seed.
+    Generated {
+        /// The churn regime.
+        model: ChurnModel,
+        /// Root stream; client `i` reads `base.split(i)`.
+        base: Rng,
+        /// Number of clients the trace describes.
+        clients: usize,
+        /// Horizon in the model's native unit (pre-scaling).
+        unit_horizon: f64,
+        /// Accumulated time scale applied to generated intervals.
+        scale: f64,
+    },
+}
+
+/// One client's schedule as a query borrows it: dense traces lend their
+/// stored slice, generated traces hand over a freshly derived list, and
+/// clients beyond either representation are always online.
+enum Sched<'a> {
+    Borrowed(&'a [(f64, f64)]),
+    Owned(Vec<(f64, f64)>),
+    AlwaysOn,
+}
+
+impl Sched<'_> {
+    /// The interval list, or `None` for the always-online case.
+    fn as_slice(&self) -> Option<&[(f64, f64)]> {
+        match self {
+            Sched::Borrowed(s) => Some(s),
+            Sched::Owned(v) => Some(v.as_slice()),
+            Sched::AlwaysOn => None,
+        }
+    }
+}
+
 /// Per-client online/offline schedule over simulated time.
 ///
-/// Interval lists are normalized at construction (sorted, merged,
-/// clamped to `[0, horizon]`), so every query is a binary search.
+/// Interval lists are normalized (sorted, merged, clamped to
+/// `[0, horizon]`) — at construction for dense traces, per query for
+/// generated ones — so every query is a binary search over disjoint
+/// intervals.
 ///
 /// ```
 /// use fedcore::scenario::{AvailabilityTrace, EdgePolicy};
@@ -66,8 +123,8 @@ impl EdgePolicy {
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct AvailabilityTrace {
-    /// `clients[i]` = sorted, disjoint online intervals of client `i`.
-    clients: Vec<Vec<(f64, f64)>>,
+    /// Dense interval table or generated-on-demand schedules.
+    schedules: Schedules,
     /// Trace length in simulated seconds.
     horizon: f64,
     /// Behaviour for `t >= horizon`.
@@ -75,8 +132,8 @@ pub struct AvailabilityTrace {
 }
 
 impl AvailabilityTrace {
-    /// Build a trace from raw per-client interval lists. Intervals are
-    /// clamped to `[0, horizon]`, sorted, and merged; empty (or fully
+    /// Build a dense trace from raw per-client interval lists. Intervals
+    /// are clamped to `[0, horizon]`, sorted, and merged; empty (or fully
     /// out-of-range) intervals are dropped. Errors when `horizon <= 0` or
     /// an interval has `start > end`.
     pub fn from_intervals(
@@ -89,35 +146,49 @@ impl AvailabilityTrace {
         }
         let mut normalized = Vec::with_capacity(clients.len());
         for (c, raw) in clients.into_iter().enumerate() {
-            let mut ivs: Vec<(f64, f64)> = Vec::with_capacity(raw.len());
-            for (s, e) in raw {
+            for &(s, e) in &raw {
                 if !s.is_finite() || !e.is_finite() || s > e {
                     return Err(anyhow!("client {c}: bad interval [{s}, {e})"));
                 }
-                let (s, e) = (s.max(0.0), e.min(horizon));
-                if s < e {
-                    ivs.push((s, e));
-                }
             }
-            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite interval starts"));
-            // Merge touching/overlapping intervals so queries see disjoint,
-            // maximal online stretches.
-            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(ivs.len());
-            for (s, e) in ivs {
-                match merged.last_mut() {
-                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
-                    _ => merged.push((s, e)),
-                }
-            }
-            normalized.push(merged);
+            normalized.push(normalize_intervals(raw, horizon));
         }
-        Ok(AvailabilityTrace { clients: normalized, horizon, policy })
+        Ok(AvailabilityTrace { schedules: Schedules::Dense(normalized), horizon, policy })
+    }
+
+    /// Build a generated trace: per-client schedules are re-derived on
+    /// demand from `model` and `base` (client `i` reads `base.split(i)`),
+    /// bit-identical to the dense trace [`ChurnModel::generate`] would
+    /// produce from the same inputs — without ever holding the O(fleet)
+    /// interval table. Errors on invalid model parameters or horizon.
+    pub fn generated(
+        model: ChurnModel,
+        base: Rng,
+        clients: usize,
+        horizon: f64,
+        policy: EdgePolicy,
+    ) -> Result<AvailabilityTrace> {
+        if !(horizon > 0.0) {
+            return Err(anyhow!("trace horizon must be positive, got {horizon}"));
+        }
+        model.validate()?;
+        Ok(AvailabilityTrace {
+            schedules: Schedules::Generated {
+                model,
+                base,
+                clients,
+                unit_horizon: horizon,
+                scale: 1.0,
+            },
+            horizon,
+            policy,
+        })
     }
 
     /// A trace on which all `n` clients are online at every time.
     pub fn always_on(n: usize) -> AvailabilityTrace {
         AvailabilityTrace {
-            clients: vec![vec![(0.0, 1.0)]; n],
+            schedules: Schedules::Dense(vec![vec![(0.0, 1.0)]; n]),
             horizon: 1.0,
             policy: EdgePolicy::Wrap,
         }
@@ -126,7 +197,10 @@ impl AvailabilityTrace {
     /// Number of clients the trace describes (callers may query beyond
     /// this; such clients count as always online).
     pub fn num_clients(&self) -> usize {
-        self.clients.len()
+        match &self.schedules {
+            Schedules::Dense(clients) => clients.len(),
+            Schedules::Generated { clients, .. } => *clients,
+        }
     }
 
     /// Trace length in simulated seconds.
@@ -140,24 +214,82 @@ impl AvailabilityTrace {
     }
 
     /// Client `i`'s normalized online intervals (sorted, disjoint).
-    pub fn intervals(&self, client: usize) -> &[(f64, f64)] {
-        self.clients.get(client).map(|v| v.as_slice()).unwrap_or(&[])
+    /// Dense traces copy the stored list; generated traces derive it.
+    /// Clients beyond the trace yield an empty list (as before — their
+    /// always-online treatment lives in the queries, not the listing).
+    pub fn intervals(&self, client: usize) -> Vec<(f64, f64)> {
+        match self.schedule(client) {
+            Sched::Borrowed(s) => s.to_vec(),
+            Sched::Owned(v) => v,
+            Sched::AlwaysOn => Vec::new(),
+        }
+    }
+
+    /// The dense twin of this trace: identical query results, explicit
+    /// interval table. Identity for dense traces; the unit suite uses it
+    /// to gate generated-vs-dense equivalence.
+    pub fn densified(&self) -> AvailabilityTrace {
+        match &self.schedules {
+            Schedules::Dense(_) => self.clone(),
+            Schedules::Generated { .. } => {
+                let all: Vec<Vec<(f64, f64)>> =
+                    (0..self.num_clients()).map(|c| self.intervals(c)).collect();
+                AvailabilityTrace {
+                    schedules: Schedules::Dense(all),
+                    horizon: self.horizon,
+                    policy: self.policy,
+                }
+            }
+        }
     }
 
     /// Rescale every timestamp (and the horizon) by `scale` — used to
-    /// convert deadline-unit traces into simulated seconds.
+    /// convert deadline-unit traces into simulated seconds. Dense traces
+    /// rescale their stored intervals; generated traces accumulate the
+    /// factor and apply it per query (the identical per-interval multiply,
+    /// so the representations stay bit-equal).
     pub fn scaled(mut self, scale: f64) -> Result<AvailabilityTrace> {
         if !scale.is_finite() || scale <= 0.0 {
             return Err(anyhow!("trace time scale must be positive and finite, got {scale}"));
         }
-        for ivs in &mut self.clients {
-            for iv in ivs.iter_mut() {
-                iv.0 *= scale;
-                iv.1 *= scale;
+        match &mut self.schedules {
+            Schedules::Dense(clients) => {
+                for ivs in clients.iter_mut() {
+                    for iv in ivs.iter_mut() {
+                        iv.0 *= scale;
+                        iv.1 *= scale;
+                    }
+                }
             }
+            Schedules::Generated { scale: s, .. } => *s *= scale,
         }
         self.horizon *= scale;
         Ok(self)
+    }
+
+    /// Client `i`'s schedule under whichever representation backs it.
+    fn schedule(&self, client: usize) -> Sched<'_> {
+        match &self.schedules {
+            Schedules::Dense(clients) => match clients.get(client) {
+                Some(ivs) => Sched::Borrowed(ivs),
+                None => Sched::AlwaysOn,
+            },
+            Schedules::Generated { model, base, clients, unit_horizon, scale } => {
+                if client >= *clients {
+                    return Sched::AlwaysOn;
+                }
+                let mut r = base.split(client as u64);
+                let raw = model.client_intervals(&mut r, *unit_horizon);
+                let mut ivs = normalize_intervals(raw, *unit_horizon);
+                if *scale != 1.0 {
+                    for iv in ivs.iter_mut() {
+                        iv.0 *= scale;
+                        iv.1 *= scale;
+                    }
+                }
+                Sched::Owned(ivs)
+            }
+        }
     }
 
     /// Is client `i` online at simulated time `t`?
@@ -172,42 +304,11 @@ impl AvailabilityTrace {
     /// clients, wrap traces whose cycle is fully online, clamp traces
     /// whose final state is online).
     pub fn remaining_online(&self, client: usize, t: f64) -> f64 {
-        let Some(ivs) = self.clients.get(client) else {
+        let sched = self.schedule(client);
+        let Some(ivs) = sched.as_slice() else {
             return f64::INFINITY; // beyond the trace ⇒ always online
         };
-        if ivs.is_empty() {
-            return 0.0; // never online
-        }
-        // Fully-online cycle: no boundary to ever cross.
-        if ivs.len() == 1 && ivs[0].0 <= 0.0 && ivs[0].1 >= self.horizon {
-            return f64::INFINITY;
-        }
-        match self.policy {
-            EdgePolicy::Wrap => {
-                let tw = t.rem_euclid(self.horizon);
-                let Some(&(_, end)) = containing(ivs, tw) else { return 0.0 };
-                let mut rem = end - tw;
-                // The online stretch continues across the cycle boundary
-                // when it touches the horizon and the first interval starts
-                // at 0 (full coverage was excluded above, so this is finite).
-                if end >= self.horizon && ivs[0].0 <= 0.0 {
-                    rem += ivs[0].1;
-                }
-                rem
-            }
-            EdgePolicy::Clamp => {
-                let final_online = ivs.last().map(|&(_, e)| e >= self.horizon).unwrap_or(false);
-                if t >= self.horizon {
-                    return if final_online { f64::INFINITY } else { 0.0 };
-                }
-                let Some(&(_, end)) = containing(ivs, t) else { return 0.0 };
-                if end >= self.horizon {
-                    f64::INFINITY // clamp: the final online state persists
-                } else {
-                    end - t
-                }
-            }
-        }
+        remaining_in(ivs, self.horizon, self.policy, t)
     }
 
     /// Client `i`'s uptime fraction over one trace horizon: total online
@@ -217,7 +318,8 @@ impl AvailabilityTrace {
     /// boost in [`crate::fl::boost_flaky_weights`]) can precompute it
     /// once per run.
     pub fn uptime(&self, client: usize) -> f64 {
-        let Some(ivs) = self.clients.get(client) else {
+        let sched = self.schedule(client);
+        let Some(ivs) = sched.as_slice() else {
             return 1.0;
         };
         let on: f64 = ivs.iter().map(|&(s, e)| e - s).sum();
@@ -226,16 +328,79 @@ impl AvailabilityTrace {
 
     /// Indices of all trace clients online at time `t`, ascending.
     pub fn online_at(&self, t: f64) -> Vec<usize> {
-        (0..self.clients.len()).filter(|&c| self.is_online(c, t)).collect()
+        (0..self.num_clients()).filter(|&c| self.is_online(c, t)).collect()
     }
 
     /// Fraction of the trace's clients online at time `t` (1.0 for an
     /// empty trace — no client is ever marked offline).
     pub fn online_fraction(&self, t: f64) -> f64 {
-        if self.clients.is_empty() {
+        if self.num_clients() == 0 {
             return 1.0;
         }
-        self.online_at(t).len() as f64 / self.clients.len() as f64
+        self.online_at(t).len() as f64 / self.num_clients() as f64
+    }
+}
+
+/// Clamp to `[0, horizon]`, drop empties, sort, and merge — the shared
+/// normalization both representations run, in the same order, so a
+/// generated schedule is bit-identical to its densely stored twin.
+/// Assumes interval validity (finite, `start <= end`) was checked by the
+/// caller where the input is untrusted.
+fn normalize_intervals(raw: Vec<(f64, f64)>, horizon: f64) -> Vec<(f64, f64)> {
+    let mut ivs: Vec<(f64, f64)> = Vec::with_capacity(raw.len());
+    for (s, e) in raw {
+        let (s, e) = (s.max(0.0), e.min(horizon));
+        if s < e {
+            ivs.push((s, e));
+        }
+    }
+    ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite interval starts"));
+    // Merge touching/overlapping intervals so queries see disjoint,
+    // maximal online stretches.
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(ivs.len());
+    for (s, e) in ivs {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    merged
+}
+
+/// The remaining-online query over one normalized schedule.
+fn remaining_in(ivs: &[(f64, f64)], horizon: f64, policy: EdgePolicy, t: f64) -> f64 {
+    if ivs.is_empty() {
+        return 0.0; // never online
+    }
+    // Fully-online cycle: no boundary to ever cross.
+    if ivs.len() == 1 && ivs[0].0 <= 0.0 && ivs[0].1 >= horizon {
+        return f64::INFINITY;
+    }
+    match policy {
+        EdgePolicy::Wrap => {
+            let tw = t.rem_euclid(horizon);
+            let Some(&(_, end)) = containing(ivs, tw) else { return 0.0 };
+            let mut rem = end - tw;
+            // The online stretch continues across the cycle boundary
+            // when it touches the horizon and the first interval starts
+            // at 0 (full coverage was excluded above, so this is finite).
+            if end >= horizon && ivs[0].0 <= 0.0 {
+                rem += ivs[0].1;
+            }
+            rem
+        }
+        EdgePolicy::Clamp => {
+            let final_online = ivs.last().map(|&(_, e)| e >= horizon).unwrap_or(false);
+            if t >= horizon {
+                return if final_online { f64::INFINITY } else { 0.0 };
+            }
+            let Some(&(_, end)) = containing(ivs, t) else { return 0.0 };
+            if end >= horizon {
+                f64::INFINITY // clamp: the final online state persists
+            } else {
+                end - t
+            }
+        }
     }
 }
 
@@ -456,5 +621,81 @@ mod tests {
         assert_eq!(t.uptime(1), 0.0, "never-online client");
         assert_eq!(t.uptime(2), 1.0, "fully-online client");
         assert_eq!(t.uptime(99), 1.0, "clients beyond the trace are always on");
+    }
+
+    // ---------- generated (lazy) representation ----------
+
+    #[test]
+    fn generated_matches_dense_generation_bitwise() {
+        for (name, policy) in [
+            ("markov", EdgePolicy::Wrap),
+            ("heavy_tail", EdgePolicy::Clamp),
+            ("periodic", EdgePolicy::Wrap),
+            ("always_on", EdgePolicy::Wrap),
+        ] {
+            let model = ChurnModel::parse(name).unwrap();
+            let n = 40;
+            let horizon = 60.0;
+            let base = Rng::new(17);
+            let lazy = AvailabilityTrace::generated(model, base.clone(), n, horizon, policy)
+                .unwrap()
+                .scaled(33.5)
+                .unwrap();
+            let dense =
+                model.generate(&base, n, horizon, policy).unwrap().scaled(33.5).unwrap();
+            assert_eq!(lazy.densified(), dense, "{name}: interval tables diverged");
+            for c in (0..n + 3).step_by(3) {
+                assert_eq!(lazy.intervals(c), dense.intervals(c), "{name} client {c}");
+                assert_eq!(
+                    lazy.uptime(c).to_bits(),
+                    dense.uptime(c).to_bits(),
+                    "{name} client {c} uptime"
+                );
+                for t in [0.0, 12.3, 59.9, 60.0 * 33.5, 1e4] {
+                    assert_eq!(
+                        lazy.remaining_online(c, t).to_bits(),
+                        dense.remaining_online(c, t).to_bits(),
+                        "{name} client {c} at {t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generated_is_deterministic_and_seed_sensitive() {
+        let model = ChurnModel::parse("heavy_tail").unwrap();
+        let a =
+            AvailabilityTrace::generated(model, Rng::new(5), 10, 40.0, EdgePolicy::Wrap).unwrap();
+        let b =
+            AvailabilityTrace::generated(model, Rng::new(5), 10, 40.0, EdgePolicy::Wrap).unwrap();
+        assert_eq!(a, b);
+        let c =
+            AvailabilityTrace::generated(model, Rng::new(6), 10, 40.0, EdgePolicy::Wrap).unwrap();
+        assert_ne!(a.intervals(0), c.intervals(0), "different seeds should differ");
+    }
+
+    #[test]
+    fn generated_rejects_bad_inputs() {
+        let bad_model = ChurnModel::Periodic { period: 0.0, duty: 0.5 };
+        assert!(
+            AvailabilityTrace::generated(bad_model, Rng::new(1), 4, 10.0, EdgePolicy::Wrap)
+                .is_err()
+        );
+        let ok = ChurnModel::AlwaysOn;
+        assert!(
+            AvailabilityTrace::generated(ok, Rng::new(1), 4, 0.0, EdgePolicy::Wrap).is_err(),
+            "non-positive horizon"
+        );
+    }
+
+    #[test]
+    fn generated_clients_beyond_trace_always_online() {
+        let model = ChurnModel::parse("markov").unwrap();
+        let t =
+            AvailabilityTrace::generated(model, Rng::new(2), 5, 30.0, EdgePolicy::Wrap).unwrap();
+        assert_eq!(t.remaining_online(7, 3.0), f64::INFINITY);
+        assert_eq!(t.uptime(7), 1.0);
+        assert_eq!(t.intervals(7), Vec::<(f64, f64)>::new());
     }
 }

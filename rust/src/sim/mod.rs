@@ -10,6 +10,24 @@
 //! The simulated clock is what reproduces the paper's *normalized* time
 //! metrics (deadline = 1.0); wall-clock perf of our own stack is measured
 //! separately in EXPERIMENTS.md §Perf.
+//!
+//! # Dense vs lazy fleets
+//!
+//! A [`Fleet`] stores its per-client state in one of two ways:
+//!
+//! * **Dense** ([`Fleet::new`]) — explicit profile/size vectors, used by
+//!   every data-backed run (the dataset already owns O(fleet) memory).
+//! * **Lazy** ([`Fleet::lazy`]) — profiles and sizes are *derived on
+//!   demand* from a keyed split of the fleet's base RNG, so a
+//!   million-client fleet costs O(1) resident memory. The deadline is
+//!   calibrated by a streaming order-statistic search that reproduces
+//!   [`calibrate_deadline`]'s percentile **bit-for-bit** without ever
+//!   materializing the full-round-time vector ([`Fleet::materialize`]
+//!   turns a lazy fleet into its dense twin; the sim unit suite gates
+//!   the equivalence).
+//!
+//! Callers go through the accessors ([`Fleet::profile`], [`Fleet::size`],
+//! [`Fleet::num_clients`]) and never see which representation backs them.
 
 pub mod clock;
 
@@ -34,6 +52,12 @@ pub const MIN_CAPABILITY: f64 = 0.25;
 /// forward, so forward-only ≈ 1/3 of a training visit).
 pub const FEATURE_PASS_COST: f64 = 1.0 / 3.0;
 
+/// Stream salt for lazily derived capabilities (xor'd with the client
+/// index; disjoint from every other salt in the crate).
+const LAZY_PROFILE_SALT: u64 = 0x0F11E5;
+/// Stream salt for lazily derived dataset sizes.
+const LAZY_SIZE_SALT: u64 = 0x517E5;
+
 /// Per-client hardware profile.
 #[derive(Clone, Copy, Debug)]
 pub struct ClientProfile {
@@ -48,18 +72,96 @@ impl ClientProfile {
     }
 
     /// Max samples processable within `budget` simulated seconds.
+    ///
+    /// The product is saturated explicitly at the `usize` edges: a NaN
+    /// budget yields 0 samples and an over-range product yields
+    /// `usize::MAX`, each surfaced once through the rate-limited warn
+    /// channel rather than relying on the silent `as` cast semantics.
     pub fn samples_within(&self, budget: f64) -> usize {
-        (self.capability * budget).floor().max(0.0) as usize
+        let raw = self.capability * budget;
+        if raw.is_nan() {
+            crate::obs::warn_stderr(
+                "sim_budget_nan",
+                &format!("samples_within: capability × budget is NaN (budget {budget}); treating as 0 samples"),
+            );
+            return 0;
+        }
+        if raw >= usize::MAX as f64 {
+            crate::obs::warn_stderr(
+                "sim_budget_saturated",
+                &format!("samples_within: capability × budget = {raw:e} exceeds usize::MAX; saturating"),
+            );
+            return usize::MAX;
+        }
+        raw.floor().max(0.0) as usize
     }
+}
+
+/// Dataset-size law for lazily generated fleets: one independent
+/// Pareto(1, α) draw per client, mean-normalized analytically, clamped at
+/// `max_mult ×` the target mean and floored at `min` — the same shape as
+/// [`crate::data::partition::power_law_sizes`], but with **no fleet-wide
+/// normalization pass**, so any client's size is a pure function of the
+/// fleet seed and its own index (adding clients never perturbs existing
+/// sizes, the independence contract churn generation already follows).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SizeLaw {
+    /// Target (pre-clamp) mean dataset size.
+    pub mean: f64,
+    /// Pareto tail index α (> 1 for a finite mean).
+    pub alpha: f64,
+    /// Per-client floor.
+    pub min: usize,
+    /// Clamp sizes at `max_mult × mean`.
+    pub max_mult: f64,
+}
+
+impl Default for SizeLaw {
+    /// The synthetic-benchmark regime (mean ≈ 69 samples, α = 1.4,
+    /// floor 8, 8× cap — the `power_law_sizes` defaults used across the
+    /// benches).
+    fn default() -> SizeLaw {
+        SizeLaw { mean: 69.0, alpha: 1.4, min: 8, max_mult: crate::data::partition::MAX_MEAN_MULT }
+    }
+}
+
+impl SizeLaw {
+    /// One client's size from its private stream.
+    fn sample(&self, r: &mut Rng) -> usize {
+        let raw = r.power_law(1.0, self.alpha);
+        // E[Pareto(1, α)] = α/(α−1); dividing it out makes `mean` the
+        // expected (pre-clamp) size without a fleet-wide pass.
+        let norm = if self.alpha > 1.0 { self.alpha / (self.alpha - 1.0) } else { 1.0 };
+        ((raw / norm).min(self.max_mult) * self.mean).round().max(self.min as f64) as usize
+    }
+}
+
+/// Where the per-client state lives (see the module docs).
+#[derive(Clone, Debug)]
+enum ClientSource {
+    /// Explicit vectors (data-backed runs).
+    Dense {
+        /// Per-client hardware profiles (cᵢ).
+        profiles: Vec<ClientProfile>,
+        /// mᵢ — per-client training-set sizes.
+        sizes: Vec<usize>,
+    },
+    /// Seed-derived on demand (scale benches, million-client fleets).
+    Lazy {
+        /// Base stream; client `i` reads `base.split(SALT ^ i)`.
+        base: Rng,
+        /// Size distribution.
+        law: SizeLaw,
+        /// Fleet size.
+        clients: usize,
+    },
 }
 
 /// The simulated fleet: capabilities + dataset sizes + the round deadline.
 #[derive(Clone, Debug)]
 pub struct Fleet {
-    /// Per-client hardware profiles (cᵢ).
-    pub profiles: Vec<ClientProfile>,
-    /// mᵢ — per-client training-set sizes.
-    pub sizes: Vec<usize>,
+    /// Per-client profiles and sizes, dense or derived.
+    source: ClientSource,
     /// E — local epochs per round.
     pub epochs: usize,
     /// τ — per-round training deadline (simulated seconds).
@@ -82,12 +184,71 @@ impl Fleet {
             })
             .collect();
         let deadline = calibrate_deadline(&profiles, &sizes, epochs, straggler_pct);
-        Fleet { profiles, sizes, epochs, deadline, straggler_pct }
+        Fleet { source: ClientSource::Dense { profiles, sizes }, epochs, deadline, straggler_pct }
+    }
+
+    /// A fleet whose per-client state is derived from `base` on demand —
+    /// O(1) resident memory regardless of `clients`. The deadline is the
+    /// same (100−s)-th percentile of full-round times as [`Fleet::new`],
+    /// found by a streaming order-statistic bisection instead of a sort
+    /// (bit-identical to [`calibrate_deadline`] over the materialized
+    /// vectors).
+    pub fn lazy(base: Rng, clients: usize, law: SizeLaw, epochs: usize, straggler_pct: f64) -> Fleet {
+        assert!(epochs >= 1);
+        assert!((0.0..100.0).contains(&straggler_pct));
+        assert!(clients > 0, "lazy fleet needs at least one client");
+        let deadline = lazy_deadline(&base, law, clients, epochs, straggler_pct);
+        Fleet { source: ClientSource::Lazy { base, law, clients }, epochs, deadline, straggler_pct }
+    }
+
+    /// Number of clients in the fleet.
+    pub fn num_clients(&self) -> usize {
+        match &self.source {
+            ClientSource::Dense { sizes, .. } => sizes.len(),
+            ClientSource::Lazy { clients, .. } => *clients,
+        }
+    }
+
+    /// Client `i`'s hardware profile.
+    pub fn profile(&self, i: usize) -> ClientProfile {
+        match &self.source {
+            ClientSource::Dense { profiles, .. } => profiles[i],
+            ClientSource::Lazy { base, .. } => lazy_profile(base, i),
+        }
+    }
+
+    /// Client `i`'s training-set size mᵢ.
+    pub fn size(&self, i: usize) -> usize {
+        match &self.source {
+            ClientSource::Dense { sizes, .. } => sizes[i],
+            ClientSource::Lazy { base, law, .. } => lazy_size(base, law, i),
+        }
+    }
+
+    /// The dense twin of this fleet: identical per-client profiles,
+    /// sizes, and deadline, backed by explicit vectors. Identity for
+    /// dense fleets; for lazy fleets this is the O(fleet) materialization
+    /// the unit suite uses to gate the streaming calibration.
+    pub fn materialize(&self) -> Fleet {
+        match &self.source {
+            ClientSource::Dense { .. } => self.clone(),
+            ClientSource::Lazy { .. } => {
+                let n = self.num_clients();
+                let profiles: Vec<ClientProfile> = (0..n).map(|i| self.profile(i)).collect();
+                let sizes: Vec<usize> = (0..n).map(|i| self.size(i)).collect();
+                Fleet {
+                    source: ClientSource::Dense { profiles, sizes },
+                    epochs: self.epochs,
+                    deadline: self.deadline,
+                    straggler_pct: self.straggler_pct,
+                }
+            }
+        }
     }
 
     /// Full-round (E-epoch, full-set) simulated time of client `i`.
     pub fn full_round_time(&self, i: usize) -> f64 {
-        self.profiles[i].time_for(self.epochs * self.sizes[i])
+        self.profile(i).time_for(self.epochs * self.size(i))
     }
 
     /// Is client `i` a straggler (cannot finish the full round by τ)?
@@ -97,8 +258,8 @@ impl Fleet {
 
     /// Observed straggler fraction (should track `straggler_pct`).
     pub fn straggler_fraction(&self) -> f64 {
-        let n = self.sizes.len().max(1);
-        (0..self.sizes.len()).filter(|&i| self.is_straggler(i)).count() as f64 / n as f64
+        let n = self.num_clients().max(1);
+        (0..self.num_clients()).filter(|&i| self.is_straggler(i)).count() as f64 / n as f64
     }
 
     /// The paper's coreset budget bᵢ = ⌊(cᵢτ − mᵢ)/(E−1)⌋ (section 4.2):
@@ -106,13 +267,13 @@ impl Fleet {
     /// Returns None when even one full epoch does not fit (cᵢτ < mᵢ —
     /// the §4.4 extreme-straggler regime).
     pub fn coreset_budget(&self, i: usize) -> Option<usize> {
-        let cap = self.profiles[i].capability * self.deadline;
-        let m = self.sizes[i] as f64;
+        let cap = self.profile(i).capability * self.deadline;
+        let m = self.size(i) as f64;
         if cap < m {
             return None;
         }
         if self.epochs == 1 {
-            return Some(self.sizes[i]); // nothing left to shrink
+            return Some(self.size(i)); // nothing left to shrink
         }
         Some(((cap - m) / (self.epochs - 1) as f64).floor().max(1.0) as usize)
     }
@@ -122,12 +283,17 @@ impl Fleet {
     /// treated as always online (see
     /// [`crate::scenario::AvailabilityTrace`]), so a partial trace
     /// composes with any fleet size.
+    ///
+    /// This materializes an O(fleet) vector, so the engine's selection
+    /// path streams `trace.is_online` per candidate instead
+    /// ([`crate::fl::select_available_streamed`]); this form remains for
+    /// tests and diagnostics.
     pub fn online_clients(
         &self,
         trace: &crate::scenario::AvailabilityTrace,
         t: f64,
     ) -> Vec<usize> {
-        (0..self.sizes.len()).filter(|&i| trace.is_online(i, t)).collect()
+        (0..self.num_clients()).filter(|&i| trace.is_online(i, t)).collect()
     }
 
     /// §4.4 fallback budget when even epoch 1 does not fit: d̂ features come
@@ -135,12 +301,37 @@ impl Fleet {
     /// [`FEATURE_PASS_COST`]·mᵢ visits), then all E epochs run on the
     /// coreset: bᵢ = ⌊(cᵢτ − mᵢ/3)/E⌋, clamped to ≥ 1 so pathologically
     /// slow clients still contribute *something* (like FedProx's minimum
-    /// partial work).
+    /// partial work). A client so slow that even the feature pass alone
+    /// exceeds τ (cᵢτ < mᵢ/3, i.e. the pre-clamp budget goes negative) is
+    /// outside the §4.4 operating regime; the clamp still applies, but the
+    /// case is surfaced once through the rate-limited warn channel.
     pub fn fallback_budget(&self, i: usize) -> usize {
-        let cap = self.profiles[i].capability * self.deadline;
-        let feat = FEATURE_PASS_COST * self.sizes[i] as f64;
+        let cap = self.profile(i).capability * self.deadline;
+        let feat = FEATURE_PASS_COST * self.size(i) as f64;
+        if cap < feat {
+            crate::obs::warn_stderr(
+                "sim_fallback_floor",
+                &format!(
+                    "client {i}: feature pass alone exceeds τ (cᵢτ = {cap:.3} < {feat:.3}); clamping §4.4 budget to 1"
+                ),
+            );
+        }
         ((cap - feat) / self.epochs as f64).floor().max(1.0) as usize
     }
+}
+
+/// Client `i`'s capability stream, derived from the fleet base.
+fn lazy_profile(base: &Rng, i: usize) -> ClientProfile {
+    let mut r = base.split(LAZY_PROFILE_SALT ^ i as u64);
+    ClientProfile {
+        capability: r.normal_scaled(1.0, CAPABILITY_VAR.sqrt()).max(MIN_CAPABILITY),
+    }
+}
+
+/// Client `i`'s dataset size, derived from the fleet base.
+fn lazy_size(base: &Rng, law: &SizeLaw, i: usize) -> usize {
+    let mut r = base.split(LAZY_SIZE_SALT ^ i as u64);
+    law.sample(&mut r)
 }
 
 /// τ = (100−s)-th percentile of full-round times: exactly s% of clients
@@ -159,6 +350,77 @@ pub fn calibrate_deadline(
     stats::percentile(&times, 100.0 - straggler_pct)
 }
 
+/// The lazy fleet's τ: [`stats::percentile`]'s linear interpolation
+/// reproduced from streamed order statistics — `rank = q/100·(n−1)`,
+/// `s[⌊rank⌋]·(1−frac) + s[⌈rank⌉]·frac` — where each order statistic
+/// comes from [`kth_smallest`] instead of a sorted O(fleet) vector.
+fn lazy_deadline(base: &Rng, law: SizeLaw, n: usize, epochs: usize, straggler_pct: f64) -> f64 {
+    let time_of = |i: usize| {
+        let p = lazy_profile(base, i);
+        p.time_for(epochs * lazy_size(base, &law, i))
+    };
+    let q = 100.0 - straggler_pct;
+    let rank = (q / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let v_lo = kth_smallest(n, lo, &time_of);
+    if lo == hi {
+        return v_lo;
+    }
+    let v_hi = next_order_stat(n, lo, v_lo, &time_of);
+    let frac = rank - lo as f64;
+    v_lo * (1.0 - frac) + v_hi * frac
+}
+
+/// Exact `r`-th (0-indexed) smallest of `{time_of(0), …, time_of(n−1)}`
+/// in O(1) memory: bisection over the monotone `f64 → u64` bit encoding
+/// (valid because full-round times are non-negative), counting values at
+/// or below the probe each step. ~64 streaming passes worst case.
+fn kth_smallest(n: usize, r: usize, time_of: &impl Fn(usize) -> f64) -> f64 {
+    debug_assert!(r < n);
+    let mut lo_k = u64::MAX;
+    let mut hi_k = 0u64;
+    for i in 0..n {
+        let t = time_of(i);
+        debug_assert!(t >= 0.0, "bit-order bisection needs non-negative times");
+        let k = t.to_bits();
+        lo_k = lo_k.min(k);
+        hi_k = hi_k.max(k);
+    }
+    while lo_k < hi_k {
+        let mid = lo_k + (hi_k - lo_k) / 2;
+        let at_or_below = (0..n).filter(|&i| time_of(i).to_bits() <= mid).count();
+        if at_or_below >= r + 1 {
+            hi_k = mid;
+        } else {
+            lo_k = mid + 1;
+        }
+    }
+    f64::from_bits(lo_k)
+}
+
+/// The `(r+1)`-th order statistic given `v_r` (the `r`-th): `v_r` itself
+/// when duplicated past rank `r`, otherwise the smallest value strictly
+/// above it. One extra streaming pass.
+fn next_order_stat(n: usize, r: usize, v_r: f64, time_of: &impl Fn(usize) -> f64) -> f64 {
+    let key = v_r.to_bits();
+    let mut at_or_below = 0usize;
+    let mut above = f64::INFINITY;
+    for i in 0..n {
+        let t = time_of(i);
+        if t.to_bits() <= key {
+            at_or_below += 1;
+        } else if t < above {
+            above = t;
+        }
+    }
+    if at_or_below >= r + 2 {
+        v_r
+    } else {
+        above
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,7 +434,7 @@ mod tests {
     #[test]
     fn capability_moments() {
         let f = fleet(4000, 10.0);
-        let caps: Vec<f64> = f.profiles.iter().map(|p| p.capability).collect();
+        let caps: Vec<f64> = (0..f.num_clients()).map(|i| f.profile(i).capability).collect();
         let mean = stats::mean(&caps);
         // Truncation at MIN_CAPABILITY pulls the mean slightly above 1.
         assert!((mean - 1.0).abs() < 0.1, "mean {mean}");
@@ -208,15 +470,15 @@ mod tests {
             if let Some(b) = f.coreset_budget(i) {
                 // epoch1 full + (E-1) coreset epochs must fit τ (up to the
                 // floor's one-sample slack per epoch).
-                let work = f.sizes[i] + (f.epochs - 1) * b;
-                let t = f.profiles[i].time_for(work);
+                let work = f.size(i) + (f.epochs - 1) * b;
+                let t = f.profile(i).time_for(work);
                 assert!(
-                    t <= f.deadline + f.profiles[i].time_for(1) * (f.epochs - 1) as f64,
+                    t <= f.deadline + f.profile(i).time_for(1) * (f.epochs - 1) as f64,
                     "client {i}: {t} vs τ {}",
                     f.deadline
                 );
                 if f.is_straggler(i) {
-                    assert!(b < f.sizes[i], "straggler budget {b} >= m {}", f.sizes[i]);
+                    assert!(b < f.size(i), "straggler budget {b} >= m {}", f.size(i));
                 }
             }
         }
@@ -227,9 +489,9 @@ mod tests {
         let f = fleet(300, 30.0);
         for i in 0..300 {
             let b = f.fallback_budget(i);
-            let t = f.profiles[i].time_for(f.epochs * b);
+            let t = f.profile(i).time_for(f.epochs * b);
             // ≤ τ up to one sample of flooring slack per epoch.
-            assert!(t <= f.deadline + f.profiles[i].time_for(f.epochs), "client {i}");
+            assert!(t <= f.deadline + f.profile(i).time_for(f.epochs), "client {i}");
         }
     }
 
@@ -267,5 +529,123 @@ mod tests {
             .filter(|&&m| (10 * m) as f64 > tau)
             .count();
         assert_eq!(over, 1, "tau {tau}");
+    }
+
+    // ---------- numeric edges (satellite audit) ----------
+
+    #[test]
+    fn samples_within_saturates_explicitly() {
+        let p = ClientProfile { capability: 2.0 };
+        assert_eq!(p.samples_within(f64::NAN), 0, "NaN budget yields no samples");
+        assert_eq!(p.samples_within(f64::INFINITY), usize::MAX, "infinite budget saturates");
+        assert_eq!(p.samples_within(1e300), usize::MAX, "over-range product saturates");
+        assert_eq!(p.samples_within(-5.0), 0, "negative budget clamps to 0");
+        // The ordinary path is untouched by the guards.
+        assert_eq!(p.samples_within(5.25), 10);
+    }
+
+    #[test]
+    fn fallback_budget_floor_is_explicit() {
+        // A client so slow that cᵢτ < mᵢ/3: the pre-clamp budget is
+        // negative and the clamp must hold it at 1 (the §4.4 minimum
+        // contribution), not wrap or drop to 0.
+        let mut rng = Rng::new(5);
+        let mut f = Fleet::new(&mut rng, vec![100_000, 50], 4, 30.0);
+        f.deadline = 1.0; // force cᵢτ ≪ mᵢ/3 for client 0
+        assert_eq!(f.fallback_budget(0), 1);
+        // And a comfortable client keeps its analytic budget.
+        let roomy = Fleet::new(&mut Rng::new(5), vec![10, 10], 1, 10.0);
+        assert!(roomy.fallback_budget(0) >= 1);
+    }
+
+    // ---------- lazy fleets ----------
+
+    #[test]
+    fn lazy_fleet_matches_materialized_twin() {
+        let base = Rng::new(42).split(0xF1EE7);
+        let law = SizeLaw::default();
+        let lazy = Fleet::lazy(base.clone(), 600, law, 6, 30.0);
+        let dense = lazy.materialize();
+        assert_eq!(
+            lazy.deadline.to_bits(),
+            dense.deadline.to_bits(),
+            "materialization must not move τ"
+        );
+        // The dense twin recalibrated from scratch lands on the same τ:
+        // the streaming bisection is bit-identical to sort+percentile.
+        let profiles: Vec<ClientProfile> = (0..600).map(|i| lazy.profile(i)).collect();
+        let sizes: Vec<usize> = (0..600).map(|i| lazy.size(i)).collect();
+        let tau = calibrate_deadline(&profiles, &sizes, 6, 30.0);
+        assert_eq!(tau.to_bits(), lazy.deadline.to_bits(), "streamed τ diverged from sorted τ");
+        for i in (0..600).step_by(37) {
+            assert_eq!(lazy.size(i), dense.size(i));
+            assert_eq!(
+                lazy.profile(i).capability.to_bits(),
+                dense.profile(i).capability.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_clients_independent_of_fleet_size() {
+        let base = Rng::new(9).split(0xF1EE7);
+        let law = SizeLaw::default();
+        let small = Fleet::lazy(base.clone(), 50, law, 4, 30.0);
+        let big = Fleet::lazy(base, 5_000, law, 4, 30.0);
+        for i in 0..50 {
+            assert_eq!(small.size(i), big.size(i), "client {i} size moved with fleet growth");
+            assert_eq!(
+                small.profile(i).capability.to_bits(),
+                big.profile(i).capability.to_bits(),
+                "client {i} capability moved with fleet growth"
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_straggler_fraction_tracks_setting() {
+        for s in [10.0, 30.0] {
+            let f = Fleet::lazy(Rng::new(3), 2_000, SizeLaw::default(), 6, s);
+            let frac = f.straggler_fraction();
+            assert!((frac - s / 100.0).abs() < 0.03, "s={s}: fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn size_law_respects_floor_and_cap() {
+        let law = SizeLaw { mean: 100.0, alpha: 1.2, min: 10, max_mult: 4.0 };
+        let base = Rng::new(77);
+        for i in 0..2_000 {
+            let s = lazy_size(&base, &law, i);
+            assert!(s >= 10, "client {i}: {s} under floor");
+            assert!(s as f64 <= 4.0 * 100.0 + 0.5, "client {i}: {s} over cap");
+        }
+    }
+
+    #[test]
+    fn kth_smallest_matches_sort() {
+        let mut rng = Rng::new(31);
+        for _ in 0..20 {
+            let n = 1 + rng.below(40);
+            let vals: Vec<f64> = (0..n).map(|_| rng.f64() * 50.0).collect();
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let time_of = |i: usize| vals[i];
+            for r in 0..n {
+                assert_eq!(
+                    kth_smallest(n, r, &time_of).to_bits(),
+                    sorted[r].to_bits(),
+                    "rank {r} of {n}"
+                );
+            }
+            for r in 0..n - 1 {
+                let v = kth_smallest(n, r, &time_of);
+                assert_eq!(
+                    next_order_stat(n, r, v, &time_of).to_bits(),
+                    sorted[r + 1].to_bits(),
+                    "next after rank {r}"
+                );
+            }
+        }
     }
 }

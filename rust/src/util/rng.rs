@@ -9,7 +9,7 @@
 //! cross-coupling between subsystems.
 
 /// xoshiro256** generator.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Rng {
     s: [u64; 4],
 }

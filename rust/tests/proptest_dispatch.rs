@@ -26,7 +26,7 @@
 
 use std::sync::Arc;
 
-use fedcore::agg::AggPolicy;
+use fedcore::agg::{AggPolicy, TreeSpec};
 use fedcore::coreset::Method;
 use fedcore::data::{self, Benchmark, FedDataset, Samples, Shard};
 use fedcore::exec::{
@@ -281,6 +281,19 @@ fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         max_staleness: rng.below(3),
         alpha: 1.0,
     });
+    // Hierarchical aggregation at a random fanout on half the cases: the
+    // dispatch differential must hold through the tree seam too (shards
+    // are contiguous in fold order, so worker count cannot leak in).
+    // Buffered tiers may only run at the root (edges rebuild every round).
+    let agg_tree = (rng.below(2) == 0).then(|| {
+        let fanout = 1 + rng.below(6);
+        match aggregator {
+            AggPolicy::Buffered { .. } => {
+                TreeSpec { fanout, edge: AggPolicy::Mean, root: aggregator }
+            }
+            edge => TreeSpec { fanout, edge, root: AggPolicy::Mean },
+        }
+    });
     RunConfig {
         strategy: strategies[case % strategies.len()],
         rounds: 1 + rng.below(2),
@@ -299,6 +312,7 @@ fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         overlap,
         aggregator,
         clip_norm,
+        agg_tree,
         adaptive_quorum: overlap.is_some() && rng.below(2) == 0,
         verbose: false,
         ..RunConfig::default()

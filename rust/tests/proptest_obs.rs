@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use fedcore::agg::AggPolicy;
+use fedcore::agg::{AggPolicy, TreeSpec};
 use fedcore::coreset::Method;
 use fedcore::data::{self, Benchmark};
 use fedcore::exec::{DispatchPolicy, OverlapConfig};
@@ -201,6 +201,19 @@ fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         max_staleness: rng.below(3),
         alpha: 1.0,
     });
+    // Hierarchical aggregation at a random fanout on half the cases: the
+    // tree topology is config, never observable, so the traced≡untraced
+    // gate must hold through it too. Buffered tiers may only run at the
+    // root (edges rebuild every round).
+    let agg_tree = (rng.below(2) == 0).then(|| {
+        let fanout = 1 + rng.below(6);
+        match aggregator {
+            AggPolicy::Buffered { .. } => {
+                TreeSpec { fanout, edge: AggPolicy::Mean, root: aggregator }
+            }
+            edge => TreeSpec { fanout, edge, root: AggPolicy::Mean },
+        }
+    });
     RunConfig {
         strategy: strategies[case % strategies.len()],
         rounds: 1 + rng.below(2),
@@ -222,6 +235,7 @@ fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
         overlap,
         aggregator,
         clip_norm,
+        agg_tree,
         verbose: false,
         ..RunConfig::default()
     }

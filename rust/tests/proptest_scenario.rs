@@ -116,7 +116,7 @@ fn proptest_scenario_trace_invariants() {
 
         for c in 0..clients {
             let ivs = trace.intervals(c);
-            for iv in ivs {
+            for iv in &ivs {
                 assert!(iv.0 >= 0.0 && iv.1 <= horizon, "client {c}: {iv:?} out of range");
                 assert!(iv.0 < iv.1, "client {c}: empty interval {iv:?}");
             }

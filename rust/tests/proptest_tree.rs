@@ -1,0 +1,242 @@
+//! Differential property suite for the hierarchical two-tier aggregation
+//! tree (`agg/tree.rs`; seeded runner in `util::prop` — offline build, no
+//! proptest crate, see docs/testing.md).
+//!
+//! Invariants (the tentpole's equivalence gate):
+//! * The Mean/Mean tree *relays*: at every fanout, over random shapes and
+//!   weights, it reproduces the flat `aggregate_weighted` fold
+//!   **bit-for-bit** — the edge tier vanishes from the model function.
+//! * The relay discipline composes with a buffered root across rounds:
+//!   a `Buffered` root behind Mean edges equals the flat `Buffered`
+//!   aggregator bitwise, including held/flushed rounds.
+//! * Reducing edge tiers (trimmed mean, median, norm clipping) are
+//!   deterministic and replay bit-for-bit, but are deliberately NOT the
+//!   flat fold — the degenerate case is explicit, not accidental.
+//! * With a runtime (`make artifacts`): a `--agg-tree` Mean/Mean engine
+//!   run equals the flat engine bit-for-bit (all `RoundRecord` fields via
+//!   `to_bits` + CSV), at a fanout randomized per case — tree topology is
+//!   config, never observable in model outputs (determinism rule 6's
+//!   tier-composition analogue).
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::agg::{aggregate_weighted, AggPolicy, Aggregator, TreeSpec};
+use fedcore::data::{self, Benchmark};
+use fedcore::fl::{Engine, RunConfig, Strategy};
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn gen_locals(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| (0..dim).map(|_| rng.normal() as f32).collect()).collect()
+}
+
+fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+    v.iter().map(|x| x.as_slice()).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: dim {i}: {x} vs {y}");
+    }
+}
+
+// ---------- the relay gate: Mean/Mean tree is the flat fold ----------
+
+#[test]
+fn proptest_tree_mean_mean_is_bitwise_flat_at_any_fanout() {
+    check("tree-relay-bitwise", env_seed(0x73EE), env_cases(150), |rng, _| {
+        let n = 1 + rng.below(24);
+        let dim = 1 + rng.below(48);
+        let locals = gen_locals(rng, n, dim);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 3.0)).collect();
+        let current: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let want = aggregate_weighted(&refs(&locals), &weights).unwrap();
+        // Random fanout plus the structural extremes (1, n, > n).
+        for fanout in [1, 1 + rng.below(n + 3), n.max(1), n + 7] {
+            let mut tree = TreeSpec::mean(fanout).build(None);
+            let (out, stats) = tree.aggregate_round(&current, &refs(&locals), &weights);
+            assert_bits_eq(&want, &out.unwrap(), &format!("fanout {fanout}"));
+            assert!(stats.is_quiet(), "a relay tree must report quiet stats");
+        }
+    });
+}
+
+/// Relay composition across rounds: Mean edges in front of a buffered
+/// root must behave exactly like the flat buffered aggregator — holds,
+/// flushes, momentum, and all — because the root sees the identical
+/// contribution sequence.
+#[test]
+fn proptest_tree_relay_composes_with_buffered_root() {
+    check("tree-buffered-root", env_seed(0x73EF), env_cases(100), |rng, _| {
+        let dim = 1 + rng.below(16);
+        let k = rng.below(7);
+        let momentum = [0.0, 0.5][rng.below(2)];
+        let root = AggPolicy::Buffered { k, momentum };
+        let rounds: Vec<Vec<Vec<f32>>> =
+            (0..2 + rng.below(5)).map(|_| gen_locals(rng, 1 + rng.below(4), dim)).collect();
+
+        let mut flat = root.build(None);
+        let mut tree = TreeSpec { fanout: 1 + rng.below(6), edge: AggPolicy::Mean, root }
+            .build(None);
+        let mut flat_params: Vec<f32> = vec![0.0; dim];
+        let mut tree_params: Vec<f32> = vec![0.0; dim];
+        for contributions in &rounds {
+            let w = vec![1.0; contributions.len()];
+            let (a, sa) = flat.aggregate_round(&flat_params, &refs(contributions), &w);
+            let (b, sb) = tree.aggregate_round(&tree_params, &refs(contributions), &w);
+            assert_eq!(sa, sb, "buffered stats diverged");
+            assert_eq!(a.is_some(), b.is_some(), "flush rounds diverged");
+            if let (Some(a), Some(b)) = (a, b) {
+                assert_bits_eq(&a, &b, "buffered-root flush");
+                flat_params = a;
+                tree_params = b;
+            }
+        }
+        match (flat.flush(&flat_params), tree.flush(&tree_params)) {
+            (Some(a), Some(b)) => assert_bits_eq(&a, &b, "end-of-run flush"),
+            (None, None) => {}
+            _ => panic!("end-of-run flush presence diverged"),
+        }
+    });
+}
+
+// ---------- reducing tiers: deterministic, replayable, distinct ----------
+
+#[test]
+fn proptest_tree_reducing_edges_replay_and_differ_from_flat() {
+    check("tree-reducing-replay", env_seed(0x73F0), env_cases(100), |rng, _| {
+        // Shards of >= 4 contributions so both robust policies do real
+        // per-shard rejection work (a 2-wide shard trims/rejects nothing).
+        let fanout = 2 + rng.below(3);
+        let n = 4 * fanout + rng.below(8);
+        let dim = 2 + rng.below(16);
+        let locals = gen_locals(rng, n, dim);
+        let weights = vec![1.0; n];
+        let current: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let edge = [
+            AggPolicy::TrimmedMean { trim_frac: 0.25 },
+            AggPolicy::CoordinateMedian,
+        ][rng.below(2)];
+        let spec = TreeSpec { fanout, edge, root: AggPolicy::Mean };
+        let (a, sa) = spec.build(None).aggregate_round(&current, &refs(&locals), &weights);
+        let (b, sb) = spec.build(None).aggregate_round(&current, &refs(&locals), &weights);
+        assert_bits_eq(&a.clone().unwrap(), &b.unwrap(), "reducing-tree replay");
+        assert_eq!(sa, sb);
+        assert!(sa.rejected > 0, "robust edges must report per-shard rejections");
+        let flat = aggregate_weighted(&refs(&locals), &weights).unwrap();
+        assert_ne!(a.unwrap(), flat, "a reducing edge tier should not equal the flat fold");
+    });
+}
+
+#[test]
+fn proptest_tree_edge_clipping_counts_every_client() {
+    check("tree-edge-clip", env_seed(0x73F1), env_cases(100), |rng, _| {
+        let n = 1 + rng.below(12);
+        let dim = 1 + rng.below(12);
+        // Updates with norms well above the bound: every one must clip,
+        // regardless of which shard it lands in.
+        let current = vec![0.0f32; dim];
+        let locals: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| 10.0 + rng.f32()).collect())
+            .collect();
+        let weights = vec![1.0; n];
+        let spec = TreeSpec::mean(1 + rng.below(n + 2));
+        let (out, stats) =
+            spec.build(Some(1e-3)).aggregate_round(&current, &refs(&locals), &weights);
+        assert!(out.is_some());
+        assert_eq!(stats.clipped, n, "edge-tier clipping must see every client update");
+    });
+}
+
+// ---------- engine differentials (runtime-backed) ----------
+
+fn runtime_or_skip() -> Option<fedcore::runtime::Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+fn engine_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [Strategy::FedAvg, Strategy::FedCore];
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 2 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 3 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: 30.0,
+        seed: rng.next_u64(),
+        eval_every: 1,
+        eval_cap: 128,
+        ..RunConfig::default()
+    }
+}
+
+fn assert_rounds_bitwise_equal(a: &fedcore::metrics::RunResult, b: &fedcore::metrics::RunResult) {
+    assert_eq!(a.final_params, b.final_params, "final params diverged");
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {r} train_loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "round {r} test_loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {r} test_acc");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "round {r} sim_time");
+        assert_eq!(x.tail_time.to_bits(), y.tail_time.to_bits(), "round {r} tail_time");
+        assert_eq!(x.client_times, y.client_times, "round {r} client_times");
+        assert_eq!(x.dropped, y.dropped, "round {r} dropped");
+        assert_eq!(x.agg_rejected, y.agg_rejected, "round {r} agg_rejected");
+        assert_eq!(x.agg_clipped, y.agg_clipped, "round {r} agg_clipped");
+        assert_eq!(x.coreset_clients, y.coreset_clients, "round {r} coreset_clients");
+    }
+    assert_eq!(a.to_csv(), b.to_csv(), "CSV serializations diverged");
+}
+
+/// The tentpole gate: a Mean/Mean `--agg-tree` engine run equals the flat
+/// engine bit-for-bit (every round field + CSV), with the fanout
+/// randomized per case — the tree topology never reaches the model.
+#[test]
+fn proptest_tree_engine_mean_mean_equals_flat_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("tree-engine-relay", env_seed(0x73E0), env_cases(4), |rng, case| {
+        let flat_cfg = engine_cfg(rng, case);
+        let fanout = 1 + rng.below(8);
+        let mut tree_cfg = flat_cfg.clone();
+        tree_cfg.agg_tree = Some(TreeSpec::mean(fanout));
+
+        let flat = Engine::new(&rt, &ds, flat_cfg).unwrap().run().unwrap();
+        let tree = Engine::new(&rt, &ds, tree_cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&flat, &tree);
+    });
+}
+
+/// Robust-at-edge engine runs are deterministic: a median-edge tree
+/// replays bit-for-bit from its seed, and two different fanouts are two
+/// different (hierarchical) estimators.
+#[test]
+fn proptest_tree_engine_robust_edges_replay() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("tree-engine-robust", env_seed(0x73E1), env_cases(3), |rng, case| {
+        let mut cfg = engine_cfg(rng, case);
+        cfg.agg_tree = Some(TreeSpec {
+            fanout: 2,
+            edge: AggPolicy::CoordinateMedian,
+            root: AggPolicy::Mean,
+        });
+        let a = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        let b = Engine::new(&rt, &ds, cfg).unwrap().run().unwrap();
+        assert_rounds_bitwise_equal(&a, &b);
+    });
+}

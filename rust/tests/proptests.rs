@@ -231,16 +231,16 @@ fn prop_deadline_aware_plans_fit_tau_modulo_floors() {
     check("plans-tau", 0xE1, 25, |rng, _| {
         let fleet = random_fleet(rng);
         for strategy in [Strategy::FedAvgDS, Strategy::FedProx { mu: 0.1 }, Strategy::FedCore] {
-            for i in 0..fleet.sizes.len() {
+            for i in 0..fleet.num_clients() {
                 let p = strategy.plan(&fleet, i);
                 let t = p.sim_time(&fleet, i);
-                let per_sample = 1.0 / fleet.profiles[i].capability;
+                let per_sample = 1.0 / fleet.profile(i).capability;
                 // floors: one sample per epoch of rounding slack, plus the
                 // clamped minimum work of pathological clients.
                 let min_work = match p {
                     LocalPlan::Coreset { full_first: false, budget } => {
                         (fleet.epochs * budget) as f64 * per_sample
-                            + fedcore::sim::FEATURE_PASS_COST * fleet.sizes[i] as f64 * per_sample
+                            + fedcore::sim::FEATURE_PASS_COST * fleet.size(i) as f64 * per_sample
                     }
                     LocalPlan::Truncated { epochs: 0, tail_samples } => {
                         tail_samples as f64 * per_sample
@@ -263,10 +263,10 @@ fn prop_deadline_aware_plans_fit_tau_modulo_floors() {
 fn prop_fedcore_plan_work_never_exceeds_fullset() {
     check("fedcore-work", 0xE2, 25, |rng, _| {
         let fleet = random_fleet(rng);
-        for i in 0..fleet.sizes.len() {
+        for i in 0..fleet.num_clients() {
             let p = Strategy::FedCore.plan(&fleet, i);
-            let visits = p.training_samples(fleet.sizes[i], fleet.epochs);
-            assert!(visits <= fleet.epochs * fleet.sizes[i] + fleet.epochs);
+            let visits = p.training_samples(fleet.size(i), fleet.epochs);
+            assert!(visits <= fleet.epochs * fleet.size(i) + fleet.epochs);
         }
     });
 }

@@ -12,23 +12,34 @@
 //! trusted: every round's Mean/Mean tree aggregate must equal the flat
 //! mean **bit-for-bit**.
 //!
+//! Every row also feeds a [`HealthLedger`] (top-K heavy-hitter table +
+//! quantile sketches) from the same selection/drop stream, so the
+//! O(cohort + K) bound on the straggler-forensics state is measured in
+//! the same RSS numbers: the `rss_delta_bytes` flatness across 10^5 vs
+//! 10^6 clients now covers the health path too.
+//!
 //! Emits `BENCH_scale.json` (provenance-stamped): one row per
 //! fleet × cohort with `secs_per_round`, `peak_rss_bytes`,
 //! `rss_delta_bytes` (peak minus the sweep-entry resident set — the
 //! fairer per-row signal, since a process's peak RSS is monotone),
-//! `online_fraction`, and `dropped` counts.
+//! `online_fraction`, `dropped` counts, and `health_tracked` (ledger
+//! rows — capped at the configured K regardless of fleet size).
 //!
 //! Knobs: `FEDCORE_SCALE_FLEETS` (comma-separated fleet sizes, default
 //! `100000,1000000`), `FEDCORE_SCALE_COHORTS` (default `128,1024`),
 //! `FEDCORE_ROUNDS` (rounds per row, default 5), `FEDCORE_BENCH_OUT`
-//! (output path, default `BENCH_scale.json`).
+//! (output path, default `BENCH_scale.json`), `FEDCORE_OBS_OUT` (when
+//! set, write a schema-v2 JSONL trace there — one run segment per row
+//! with round/aggregate spans, `round_path` events, and health
+//! `snapshot` records, ready for `fedcore report --health --check`).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use fedcore::agg::{AggPolicy, Aggregator, TreeSpec};
 use fedcore::fl::{select_available_streamed, Strategy};
-use fedcore::obs::mem;
+use fedcore::obs::health::{HealthConfig, HealthLedger};
+use fedcore::obs::{mem, Jsonl, Phase, Record, Recorder as _};
 use fedcore::scenario::{AvailabilityTrace, ChurnModel, EdgePolicy};
 use fedcore::sim::{Fleet, SizeLaw};
 use fedcore::util::json::{write_json, Json};
@@ -74,11 +85,19 @@ struct Row {
     online_frac: f64,
     dropped: usize,
     deadline: f64,
+    health_tracked: usize,
 }
 
 /// One fleet × cohort sweep row. `entry_rss` is the resident set at
 /// sweep entry, subtracted out so each row reports its own growth.
-fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Row {
+/// `sink` (the `FEDCORE_OBS_OUT` trace) gets one run segment per row.
+fn scale_row(
+    clients: usize,
+    cohort: usize,
+    rounds: usize,
+    entry_rss: u64,
+    sink: Option<&Jsonl>,
+) -> Row {
     // The real coordinator state: O(1) lazy fleet, O(1) generated churn
     // trace (the engine's fleet/churn salts, so the workload is the same
     // family the scenario suites gate).
@@ -102,10 +121,26 @@ fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Ro
     let mut peak = None;
     let mut dropped = 0usize;
     let mut online_sum = 0.0f64;
+    // Always-on health ledger at the default K: its O(cohort + K) state
+    // must be invisible in the fleet-size RSS delta, so it lives inside
+    // the measured window even when no trace is written.
+    let mut ledger = HealthLedger::new(HealthConfig::default());
+    if let Some(s) = sink {
+        s.record(&Record::Event {
+            name: "run_start",
+            round: 0,
+            fields: vec![
+                ("clients", num(clients as f64)),
+                ("cohort", num(cohort as f64)),
+                ("rounds", num(rounds as f64)),
+            ],
+        });
+    }
 
     mem::fold_peak(&mut peak);
     let t0 = Instant::now();
     for r in 0..rounds {
+        let round_w0 = t0.elapsed().as_nanos() as u64;
         let t_now = r as f64 * fleet.deadline;
         // Streamed selection: two O(fleet) passes of lazy trace/size
         // queries, O(cohort) resident.
@@ -124,6 +159,9 @@ fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Ro
         let mut locals: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
         let mut weights: Vec<f64> = Vec::with_capacity(selected.len());
         let urng = Rng::new(SEED ^ r as u64);
+        // The round's critical-path attribution: slowest surviving
+        // client (ties to the smaller id) and the virtual tail.
+        let mut bound: Option<(usize, f64)> = None;
         for &i in &selected {
             // Real per-client planning against the lazy accessors; churn
             // drops clients whose plan outlives their online window.
@@ -131,16 +169,24 @@ fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Ro
             let t = plan.sim_time(&fleet, i);
             if trace.remaining_online(i, t_now) < t {
                 dropped += 1;
+                ledger.observe_drop(i, fleet.deadline, Some(trace.remaining_online(i, t_now)));
                 continue;
+            }
+            ledger.observe_train(i, t);
+            if bound.map_or(true, |(bc, bt)| t > bt || (t == bt && i < bc)) {
+                bound = Some((i, t));
             }
             let mut cr = urng.split(i as u64);
             locals.push((0..DIM).map(|_| cr.f32() - 0.5).collect());
             weights.push(1.0);
         }
+        ledger.observe_round_end(bound.map(|(c, _)| c), bound.map(|(_, t)| t));
 
         let refs: Vec<&[f32]> = locals.iter().map(|l| l.as_slice()).collect();
+        let agg_w0 = t0.elapsed().as_nanos() as u64;
         let (a, _) = flat.aggregate_round(&params, &refs, &weights);
         let (b, _) = tree.aggregate_round(&params, &refs, &weights);
+        let agg_w1 = t0.elapsed().as_nanos() as u64;
         // The tentpole gate, asserted on every benched round.
         match (&a, &b) {
             (Some(x), Some(y)) => {
@@ -159,6 +205,30 @@ fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Ro
             params = p;
         }
         mem::fold_peak(&mut peak);
+        if let Some(s) = sink {
+            let round_w1 = t0.elapsed().as_nanos() as u64;
+            let virt = bound.map(|(_, t)| t).unwrap_or(0.0);
+            s.record(&Record::span(Phase::Round, r, (round_w0, round_w1), (t_now, t_now + virt)));
+            s.record(&Record::span(
+                Phase::Aggregate,
+                r,
+                (agg_w0, agg_w1),
+                (t_now + virt, t_now + virt),
+            ));
+            s.record(&Record::Event {
+                name: "round_path",
+                round: r,
+                fields: vec![
+                    ("client", num(bound.map(|(c, _)| c as f64).unwrap_or(-1.0))),
+                    ("client_s", num(virt)),
+                    ("quorum_s", num(virt)),
+                    ("tail_s", num(virt)),
+                ],
+            });
+            if ledger.snapshot_due(r, rounds) {
+                s.record(&ledger.snapshot(r));
+            }
+        }
     }
     let secs = t0.elapsed().as_secs_f64();
 
@@ -173,6 +243,7 @@ fn scale_row(clients: usize, cohort: usize, rounds: usize, entry_rss: u64) -> Ro
         online_frac: online_sum / rounds.max(1) as f64,
         dropped,
         deadline: fleet.deadline,
+        health_tracked: ledger.tracked(),
     }
 }
 
@@ -181,18 +252,24 @@ fn main() {
     let cohorts = env_usize_list("FEDCORE_SCALE_COHORTS", &[128, 1024]);
     let rounds = env_usize("FEDCORE_ROUNDS", 5);
     let entry_rss = mem::sample().map(|s| s.bytes).unwrap_or(0);
+    // Optional health trace: one schema-v2 JSONL file, one run segment
+    // per sweep row, consumable by `fedcore report --health --check`.
+    let sink = std::env::var("FEDCORE_OBS_OUT").ok().map(|path| {
+        let prov = fedcore::util::bench::provenance(SEED, rounds, 1.0);
+        Jsonl::create(&path, "bench", prov).expect("creating FEDCORE_OBS_OUT trace")
+    });
 
     println!("== fleet scale: O(cohort) coordinator rounds under heavy-tail churn ==");
     println!(
-        "{:>10} {:>8} {:>14} {:>14} {:>14} {:>8} {:>8}",
-        "clients", "cohort", "s/round", "peak RSS", "RSS delta", "online", "dropped"
+        "{:>10} {:>8} {:>14} {:>14} {:>14} {:>8} {:>8} {:>8}",
+        "clients", "cohort", "s/round", "peak RSS", "RSS delta", "online", "dropped", "tracked"
     );
     let mut rows = Vec::new();
     for &clients in &fleets {
         for &cohort in &cohorts {
-            let row = scale_row(clients, cohort, rounds, entry_rss);
+            let row = scale_row(clients, cohort, rounds, entry_rss, sink.as_ref());
             println!(
-                "{:>10} {:>8} {:>13.3}s {:>11.1} MiB {:>11.1} MiB {:>7.0}% {:>8}",
+                "{:>10} {:>8} {:>13.3}s {:>11.1} MiB {:>11.1} MiB {:>7.0}% {:>8} {:>8}",
                 row.clients,
                 row.cohort,
                 row.secs_per_round,
@@ -200,6 +277,7 @@ fn main() {
                 row.rss_delta_bytes / (1024.0 * 1024.0),
                 100.0 * row.online_frac,
                 row.dropped,
+                row.health_tracked,
             );
             rows.push(obj(vec![
                 ("clients", num(row.clients as f64)),
@@ -213,9 +291,16 @@ fn main() {
                 ("deadline", num(row.deadline)),
                 ("dim", num(DIM as f64)),
                 ("tree_fanout", num(FANOUT as f64)),
+                ("health_tracked", num(row.health_tracked as f64)),
+                ("health_top_k", num(HealthConfig::default().top_k as f64)),
             ]));
         }
     }
+    // Flush the buffered trace before the bench reports success.
+    if let Some(s) = &sink {
+        s.flush();
+    }
+    drop(sink);
 
     let out = obj(vec![
         ("bench", Json::Str("fleet_scale".into())),

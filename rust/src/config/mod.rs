@@ -102,9 +102,23 @@ impl ExperimentConfig {
             cfg.data_seed = v as u64;
         }
         // Observability sink (write-only — a traced run is bit-identical
-        // to an untraced one, determinism rule 7).
+        // to an untraced one, determinism rule 7). `obs_health` layers
+        // per-client health sampling onto the sink and needs one.
         if let Some(v) = doc.get("experiment", "obs_trace").and_then(|v| v.as_str()) {
-            cfg.run.obs = crate::obs::ObsConfig::Jsonl { path: v.to_string(), scale };
+            cfg.run.obs =
+                crate::obs::ObsConfig::Jsonl { path: v.to_string(), scale, health: None };
+        }
+        if doc.get("experiment", "obs_health").and_then(|v| v.as_bool()).unwrap_or(false) {
+            match &mut cfg.run.obs {
+                crate::obs::ObsConfig::Jsonl { health, .. } => {
+                    *health = Some(crate::obs::health::HealthConfig::default());
+                }
+                crate::obs::ObsConfig::Off => {
+                    return Err(anyhow!(
+                        "[experiment] obs_health = true needs obs_trace to name a sink"
+                    ));
+                }
+            }
         }
         let usize_of = |key: &str| doc.get("fl", key).and_then(|v| v.as_i64()).map(|v| v as usize);
         if let Some(v) = usize_of("rounds") {
@@ -443,8 +457,22 @@ dispatch = "work_stealing"
         let cfg = ExperimentConfig::from_toml(text).unwrap();
         assert_eq!(
             cfg.run.obs,
-            ObsConfig::Jsonl { path: "run.jsonl".into(), scale: 0.25 }
+            ObsConfig::Jsonl { path: "run.jsonl".into(), scale: 0.25, health: None }
         );
+
+        // obs_health layers health sampling onto the sink...
+        let healthy = format!("{text}obs_health = true\n");
+        let cfg = ExperimentConfig::from_toml(&healthy).unwrap();
+        assert_eq!(
+            cfg.run.obs.health(),
+            Some(&crate::obs::health::HealthConfig::default())
+        );
+        // ...and is rejected without one.
+        let orphan = "[experiment]\nbenchmark = \"mnist\"\nobs_health = true\n";
+        assert!(ExperimentConfig::from_toml(orphan).is_err());
+        // `obs_health = false` with no sink stays Off without erroring.
+        let off = "[experiment]\nbenchmark = \"mnist\"\nobs_health = false\n";
+        assert_eq!(ExperimentConfig::from_toml(off).unwrap().run.obs, ObsConfig::Off);
     }
 
     #[test]

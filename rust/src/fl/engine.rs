@@ -677,6 +677,15 @@ impl<'a, E: Executor> Engine<'a, E> {
                 });
             }
         }
+        // Straggler-forensics ledger (schema v2 `snapshot` records):
+        // O(cohort + K) state, fed only from deterministic run outcomes
+        // below — health sampling writes to the trace and nowhere else,
+        // so rule 7 holds with it on (`proptest_obs.rs` differential).
+        let mut health = if traced {
+            cfg.obs.health().map(|h| crate::obs::health::HealthLedger::new(h.clone()))
+        } else {
+            None
+        };
 
         for r in 0..cfg.rounds {
             let round_w0 = obs.now_ns();
@@ -895,6 +904,9 @@ impl<'a, E: Executor> Engine<'a, E> {
                     fold_weights.push(w);
                     stale_folded += 1;
                     stale_weight += w;
+                    if let Some(led) = health.as_mut() {
+                        led.observe_stale(u.client, staleness);
+                    }
                     if traced {
                         obs.record(&Record::Event {
                             name: "stale_fold",
@@ -909,6 +921,9 @@ impl<'a, E: Executor> Engine<'a, E> {
                     }
                 } else {
                     stale_discarded += 1;
+                    if let Some(led) = health.as_mut() {
+                        led.observe_stale(u.client, staleness);
+                    }
                     if traced {
                         obs.record(&Record::Event {
                             name: "stale_discard",
@@ -1107,6 +1122,60 @@ impl<'a, E: Executor> Engine<'a, E> {
                 }
             }
 
+            // Health sampling (after the counters, before the next round's
+            // records — `snapshot` position is part of the trace contract).
+            // Everything fed here is a deterministic run outcome; nothing
+            // the ledger computes flows back into the run.
+            if let Some(led) = health.as_mut() {
+                for (slot, o) in outcomes.iter().enumerate() {
+                    let c = selected[slot];
+                    if o.params.is_some() {
+                        led.observe_train(c, o.sim_time);
+                        if o.used_coreset {
+                            led.observe_coreset(c, o.coreset_warm);
+                        }
+                    } else {
+                        // Both churn and deadline drops cost the server
+                        // the full τ wait (the timing rule above).
+                        led.observe_drop(c, self.fleet.deadline, churn_partial[slot]);
+                    }
+                }
+                // Critical path: the last arrival the server actually
+                // waited for (max on-time sim_time; ties break to the
+                // smaller client id). Idle rounds have no bounding client.
+                let mut bound: Option<(usize, f64)> = None;
+                for (slot, o) in &contributing {
+                    if o.sim_time > sim_time {
+                        continue;
+                    }
+                    let c = selected[*slot];
+                    let better = match bound {
+                        None => true,
+                        Some((bc, bt)) => o.sim_time > bt || (o.sim_time == bt && c < bc),
+                    };
+                    if better {
+                        bound = Some((c, o.sim_time));
+                    }
+                }
+                obs.record(&Record::Event {
+                    name: "round_path",
+                    round: r,
+                    fields: vec![
+                        ("client", Json::Num(bound.map_or(-1.0, |(c, _)| c as f64))),
+                        ("client_s", Json::Num(bound.map_or(0.0, |(_, t)| t))),
+                        ("quorum_s", Json::Num(sim_time)),
+                        ("tail_s", Json::Num(timing.tail_time)),
+                    ],
+                });
+                led.observe_round_end(
+                    bound.map(|(c, _)| c),
+                    (dispatch.jobs > 0).then_some(dispatch.makespan),
+                );
+                if led.snapshot_due(r, cfg.rounds) {
+                    obs.record(&led.snapshot(r));
+                }
+            }
+
             rounds.push(RoundRecord {
                 round: r,
                 train_loss,
@@ -1140,6 +1209,10 @@ impl<'a, E: Executor> Engine<'a, E> {
                 crate::obs::emit_schedule(obs, &sched);
             }
             self.exec.record_schedule(false);
+            // Push the buffered tail to disk before anyone reopens the
+            // trace — the CLI appends its checkpoint span through a
+            // second handle while this sink is still alive.
+            obs.flush();
         }
 
         Ok(RunResult {

@@ -8,7 +8,9 @@
 //! * `info`   — show the artifact manifest the runtime would load.
 //! * `report` — render an `--obs-trace` JSONL trace: per-round phase
 //!   breakdown, critical-path / straggler-tail summary, SVG timeline
-//!   (`--out`), or schema validation only (`--check`).
+//!   (`--out`), straggler-forensics health report (`--health`, needs a
+//!   trace recorded with `--obs-health`), or schema validation only
+//!   (`--check`).
 //!
 //! Example:
 //! ```text
@@ -81,7 +83,9 @@ fn cli() -> Cli {
     .opt("load-ckpt", "", "resume from a model checkpoint")
     .opt("save-ckpt", "", "write the final global model to this path")
     .opt("obs-trace", "", "write a structured JSONL trace here (run); trace to render (report)")
+    .flag("obs-health", "run: sample per-client health + sketches into the trace (snapshot records)")
     .flag("check", "report: validate the trace against the schema and exit")
+    .flag("health", "report: straggler leaderboard, critical-path attribution, anomaly flags")
     .flag("overlap", "async round overlap: quorum aggregation, staleness-weighted late updates")
     .flag("adaptive-quorum", "overlap: adapt the quorum from the observed stale-discard rate")
     .flag("static-coreset", "§4.3 static input-space coresets (default: adaptive)")
@@ -291,12 +295,27 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
         cfg.run.coreset_refresh = a.get_usize("coreset-refresh");
     }
     // Observability sink (write-only — determinism rule 7). A CLI flag
-    // overrides a config file's `[experiment] obs_trace`.
+    // overrides a config file's `[experiment] obs_trace`; `--obs-health`
+    // turns on health sampling for whichever source configured the sink.
     if !a.get("obs-trace").is_empty() {
         cfg.run.obs = fedcore::obs::ObsConfig::Jsonl {
             path: a.get("obs-trace").to_string(),
             scale: cfg.scale,
+            health: None,
         };
+    }
+    if a.has("obs-health") {
+        match &mut cfg.run.obs {
+            fedcore::obs::ObsConfig::Jsonl { health, .. } => {
+                *health = Some(fedcore::obs::health::HealthConfig::default());
+            }
+            fedcore::obs::ObsConfig::Off => {
+                return Err(anyhow!(
+                    "--obs-health needs a trace sink: pass --obs-trace <path> \
+                     (or set [experiment] obs_trace)"
+                ));
+            }
+        }
     }
     Ok(cfg)
 }
@@ -456,6 +475,14 @@ fn cmd_report(a: &Args) -> Result<()> {
     let records = trace.check()?;
     if a.has("check") {
         println!("{path}: OK ({records} records, schema v{})", fedcore::obs::SCHEMA_VERSION);
+        if !a.has("health") {
+            return Ok(());
+        }
+    }
+    if a.has("health") {
+        // Forensics view: leaderboard + critical path + anomaly flags
+        // (composable with --check: validate, then render the table).
+        print!("{}", trace.health_report());
         return Ok(());
     }
     print!("{}", trace.phase_table());

@@ -1,0 +1,395 @@
+//! Per-client straggler-health ledger, bounded to O(cohort + K) memory.
+//!
+//! At the 10⁵–10⁶-client lazy fleets of `benches/fleet_scale.rs`, dense
+//! per-client stats are exactly the O(fleet) state the coordinator must
+//! not hold. The [`HealthLedger`] keeps:
+//!
+//! - a **top-K heavy-hitter table** ([Space-Saving][ss]) over integer
+//!   *tail-cost* scores — the virtual microseconds each client made the
+//!   server wait (train time for contributors, the full τ deadline for
+//!   drops). Eviction picks the (smallest score, **largest id**) entry —
+//!   an explicit tie-break, so the table's contents are a pure function
+//!   of the observation stream and never of iteration order. The
+//!   admitted client inherits the evicted score (`err_us` records the
+//!   inherited, possibly-overestimated part — the standard Space-Saving
+//!   error bound).
+//! - four O(1) [`Sketch`]es (train time, dispatch makespan, staleness,
+//!   churn gaps) for cohort-wide quantiles and the MAD anomaly band.
+//!
+//! Everything the ledger ingests is a deterministic output of the run
+//! (virtual times, drop/stale outcomes), and nothing flows back into
+//! the engine — determinism rule 7 (write-only observability) holds
+//! with health sampling on, enforced by `proptest_obs.rs`.
+//!
+//! [ss]: https://dl.acm.org/doi/10.1007/978-3-540-30570-5_27 "Metwally, Agrawal, El Abbadi: Efficient computation of frequent and top-k elements in data streams"
+
+use crate::util::json::Json;
+
+use super::sketch::Sketch;
+use super::Record;
+
+/// Ledger knobs carried in [`super::ObsConfig::Jsonl`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthConfig {
+    /// Heavy-hitter table capacity (clients tracked exactly; everyone
+    /// else is summarized by the sketches). Clamped to ≥ 1.
+    pub top_k: usize,
+    /// Emit a `snapshot` record every this many rounds (the final round
+    /// always snapshots). Clamped to ≥ 1.
+    pub snapshot_every: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { top_k: 64, snapshot_every: 8 }
+    }
+}
+
+/// Tracked per-client stats (one heavy-hitter table row).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientHealth {
+    /// Fleet client id.
+    pub id: usize,
+    /// Tail-cost score in virtual microseconds (integer, so merges and
+    /// comparisons are exact): train time while contributing plus the
+    /// τ deadline per drop.
+    pub score_us: u64,
+    /// Score inherited on admission from the evicted row (Space-Saving
+    /// overestimation bound: the true score is `score_us − err_us ..= score_us`).
+    pub err_us: u64,
+    /// Rounds this client was observed in the cohort (since admission).
+    pub seen: u64,
+    /// Virtual microseconds spent training while contributing.
+    pub train_us: u64,
+    /// Rounds where this client bounded the round critical path.
+    pub bounded: u64,
+    /// Rounds dropped (churn or past-deadline).
+    pub drops: u64,
+    /// Delayed updates that arrived stale (folded or discarded).
+    pub stale: u64,
+    /// Coreset builds that warm-started from cached medoids.
+    pub warm: u64,
+    /// Coreset builds total (warm-hit rate = `warm / builds`).
+    pub builds: u64,
+}
+
+impl ClientHealth {
+    fn fresh(id: usize, score_us: u64, err_us: u64) -> ClientHealth {
+        ClientHealth {
+            id,
+            score_us,
+            err_us,
+            seen: 0,
+            train_us: 0,
+            bounded: 0,
+            drops: 0,
+            stale: 0,
+            warm: 0,
+            builds: 0,
+        }
+    }
+}
+
+/// Virtual seconds → integer microseconds (the ledger's score unit;
+/// integer so accumulation order can never change a comparison).
+fn us(secs: f64) -> u64 {
+    if secs.is_finite() && secs > 0.0 {
+        (secs * 1e6).round() as u64
+    } else {
+        0
+    }
+}
+
+/// The streaming straggler-forensics state (see the module docs).
+#[derive(Clone, Debug)]
+pub struct HealthLedger {
+    cfg: HealthConfig,
+    /// Heavy-hitter rows, ≤ `cfg.top_k`, admission-ordered (the
+    /// snapshot sorts; in-memory order is irrelevant to the output).
+    clients: Vec<ClientHealth>,
+    /// Contributing clients' virtual train seconds.
+    train: Sketch,
+    /// Per-round dispatch makespan seconds (rounds with jobs).
+    dispatch: Sketch,
+    /// Staleness (in rounds) of every delayed update that arrived.
+    staleness: Sketch,
+    /// Online seconds a churn-dropped client had trained before cutoff.
+    churn_gap: Sketch,
+    rounds_observed: u64,
+}
+
+impl HealthLedger {
+    /// Fresh ledger (config clamped to sane minimums).
+    pub fn new(cfg: HealthConfig) -> HealthLedger {
+        let cfg =
+            HealthConfig { top_k: cfg.top_k.max(1), snapshot_every: cfg.snapshot_every.max(1) };
+        HealthLedger {
+            cfg,
+            clients: Vec::new(),
+            train: Sketch::new(),
+            dispatch: Sketch::new(),
+            staleness: Sketch::new(),
+            churn_gap: Sketch::new(),
+            rounds_observed: 0,
+        }
+    }
+
+    /// Number of clients currently tracked exactly (≤ `top_k`).
+    pub fn tracked(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// The cohort-wide train-time sketch (for external gates/benches).
+    pub fn train_sketch(&self) -> &Sketch {
+        &self.train
+    }
+
+    /// Space-Saving credit: bump `id`'s score, admitting (and possibly
+    /// evicting) as needed. Zero-credit observations go through
+    /// [`Self::tracked_mut`] instead — they must not evict.
+    fn credit(&mut self, id: usize, credit_us: u64) -> &mut ClientHealth {
+        if let Some(pos) = self.clients.iter().position(|c| c.id == id) {
+            self.clients[pos].score_us += credit_us;
+            return &mut self.clients[pos];
+        }
+        if self.clients.len() < self.cfg.top_k {
+            self.clients.push(ClientHealth::fresh(id, credit_us, 0));
+            let last = self.clients.len() - 1;
+            return &mut self.clients[last];
+        }
+        // Evict the (smallest score, largest id) row — deterministic
+        // even when scores tie.
+        let mut evict = 0usize;
+        for i in 1..self.clients.len() {
+            let (a, b) = (&self.clients[i], &self.clients[evict]);
+            if (a.score_us, std::cmp::Reverse(a.id)) < (b.score_us, std::cmp::Reverse(b.id)) {
+                evict = i;
+            }
+        }
+        let inherited = self.clients[evict].score_us;
+        self.clients[evict] = ClientHealth::fresh(id, inherited + credit_us, inherited);
+        &mut self.clients[evict]
+    }
+
+    fn tracked_mut(&mut self, id: usize) -> Option<&mut ClientHealth> {
+        self.clients.iter_mut().find(|c| c.id == id)
+    }
+
+    /// A selected client contributed an update after `secs` of virtual
+    /// training.
+    pub fn observe_train(&mut self, client: usize, secs: f64) {
+        self.train.insert(secs);
+        let credit = us(secs);
+        let e = self.credit(client, credit);
+        e.seen += 1;
+        e.train_us += credit;
+    }
+
+    /// A selected client produced nothing this round; the server paid
+    /// `cost_secs` (the τ deadline) waiting. `churn_gap` is the online
+    /// time a churn-dropped client had banked before its window closed.
+    pub fn observe_drop(&mut self, client: usize, cost_secs: f64, churn_gap: Option<f64>) {
+        if let Some(g) = churn_gap {
+            self.churn_gap.insert(g);
+        }
+        let e = self.credit(client, us(cost_secs));
+        e.seen += 1;
+        e.drops += 1;
+    }
+
+    /// A delayed update from `client` arrived `staleness` rounds late
+    /// (folded or discarded — both count; zero-credit, never evicts).
+    pub fn observe_stale(&mut self, client: usize, staleness: usize) {
+        self.staleness.insert(staleness as f64);
+        if let Some(e) = self.tracked_mut(client) {
+            e.stale += 1;
+        }
+    }
+
+    /// A contributing client trained on a coreset this round
+    /// (`warm` = its k-medoids solve warm-started from cached medoids).
+    pub fn observe_coreset(&mut self, client: usize, warm: bool) {
+        if let Some(e) = self.tracked_mut(client) {
+            e.builds += 1;
+            e.warm += warm as u64;
+        }
+    }
+
+    /// Close a round: `bound` is the client whose arrival bounded the
+    /// server's advance (the critical path), `makespan` the dispatch
+    /// schedule's virtual makespan (rounds with jobs).
+    pub fn observe_round_end(&mut self, bound: Option<usize>, makespan: Option<f64>) {
+        self.rounds_observed += 1;
+        if let Some(m) = makespan {
+            self.dispatch.insert(m);
+        }
+        if let Some(b) = bound {
+            if let Some(e) = self.tracked_mut(b) {
+                e.bounded += 1;
+            }
+        }
+    }
+
+    /// Should round `r` (of `total_rounds`) emit a snapshot? Every
+    /// `snapshot_every` rounds, plus always the final round.
+    pub fn snapshot_due(&self, r: usize, total_rounds: usize) -> bool {
+        (r + 1) % self.cfg.snapshot_every == 0 || r + 1 == total_rounds
+    }
+
+    /// Render the ledger as a schema-v2 `snapshot` record: the client
+    /// table sorted by (score desc, id asc) plus the four sketches.
+    pub fn snapshot(&self, round: usize) -> Record {
+        let mut rows = self.clients.clone();
+        rows.sort_by(|a, b| b.score_us.cmp(&a.score_us).then(a.id.cmp(&b.id)));
+        let clients: Vec<Json> = rows
+            .iter()
+            .map(|c| {
+                let mut m = std::collections::BTreeMap::new();
+                let mut put = |k: &str, v: u64| {
+                    m.insert(k.to_string(), Json::Num(v as f64));
+                };
+                put("id", c.id as u64);
+                put("score_us", c.score_us);
+                put("err_us", c.err_us);
+                put("seen", c.seen);
+                put("train_us", c.train_us);
+                put("bounded", c.bounded);
+                put("drops", c.drops);
+                put("stale", c.stale);
+                put("warm", c.warm);
+                put("builds", c.builds);
+                Json::Obj(m)
+            })
+            .collect();
+        let sketches = {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("train_s".to_string(), self.train.to_json());
+            m.insert("dispatch_s".to_string(), self.dispatch.to_json());
+            m.insert("staleness_rounds".to_string(), self.staleness.to_json());
+            m.insert("churn_gap_s".to_string(), self.churn_gap.to_json());
+            Json::Obj(m)
+        };
+        Record::Snapshot {
+            round,
+            fields: vec![
+                ("clients", Json::Arr(clients)),
+                ("rounds_observed", Json::Num(self.rounds_observed as f64)),
+                ("sketches", sketches),
+                ("top_k", Json::Num(self.cfg.top_k as f64)),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::write_json;
+
+    fn snapshot_text(l: &HealthLedger, round: usize) -> String {
+        let mut t = String::new();
+        write_json(&l.snapshot(round).to_json(), &mut t);
+        t
+    }
+
+    #[test]
+    fn table_stays_bounded_and_keeps_the_heavy_hitter() {
+        let mut l = HealthLedger::new(HealthConfig { top_k: 8, snapshot_every: 1 });
+        for r in 0..50 {
+            for c in 0..100usize {
+                // Client 13 is pathologically slow; the rest are light.
+                let secs = if c == 13 { 40.0 } else { 0.5 + (c % 7) as f64 * 0.1 };
+                l.observe_train(c, secs);
+            }
+            l.observe_round_end(Some(13), Some(40.0));
+            assert!(l.tracked() <= 8, "round {r}: table overflowed");
+        }
+        let snap = l.snapshot(49).to_json();
+        let rows = snap.get("clients").unwrap().as_arr().unwrap();
+        assert!(!rows.is_empty());
+        // Leaderboard is score-descending and the heavy hitter leads.
+        assert_eq!(rows[0].get("id").unwrap().as_f64(), Some(13.0));
+        let scores: Vec<f64> =
+            rows.iter().map(|r| r.get("score_us").unwrap().as_f64().unwrap()).collect();
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]), "leaderboard not sorted");
+        assert_eq!(rows[0].get("bounded").unwrap().as_f64(), Some(50.0));
+    }
+
+    #[test]
+    fn eviction_tie_break_is_by_largest_id() {
+        let mut l = HealthLedger::new(HealthConfig { top_k: 2, snapshot_every: 1 });
+        l.observe_train(5, 1.0);
+        l.observe_train(9, 1.0); // same score as 5
+        l.observe_train(2, 1.0); // table full: evicts id 9 (largest id at min score)
+        let ids: Vec<usize> = l.clients.iter().map(|c| c.id).collect();
+        assert!(ids.contains(&5) && ids.contains(&2), "kept {ids:?}");
+        // The admitted row inherited the evicted score (Space-Saving).
+        let admitted = l.clients.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(admitted.score_us, 2_000_000);
+        assert_eq!(admitted.err_us, 1_000_000);
+    }
+
+    #[test]
+    fn zero_credit_observations_never_evict() {
+        let mut l = HealthLedger::new(HealthConfig { top_k: 1, snapshot_every: 1 });
+        l.observe_train(3, 2.0);
+        l.observe_stale(4, 1); // untracked: sketch only
+        l.observe_coreset(4, true);
+        l.observe_round_end(Some(4), None);
+        assert_eq!(l.tracked(), 1);
+        assert_eq!(l.clients[0].id, 3);
+        assert_eq!(l.staleness.count(), 1);
+    }
+
+    #[test]
+    fn drops_and_warm_rates_accumulate() {
+        let mut l = HealthLedger::new(HealthConfig::default());
+        l.observe_train(1, 3.0);
+        l.observe_coreset(1, true);
+        l.observe_train(1, 3.0);
+        l.observe_coreset(1, false);
+        l.observe_drop(1, 30.0, Some(12.5));
+        l.observe_stale(1, 2);
+        let c = &l.clients[0];
+        assert_eq!(c.seen, 3);
+        assert_eq!(c.drops, 1);
+        assert_eq!(c.builds, 2);
+        assert_eq!(c.warm, 1);
+        assert_eq!(c.stale, 1);
+        assert_eq!(c.score_us, 36_000_000); // 3s + 3s + 30s deadline
+        assert_eq!(c.train_us, 6_000_000);
+        assert_eq!(l.churn_gap.count(), 1);
+    }
+
+    #[test]
+    fn identical_feeds_produce_identical_snapshots() {
+        let feed = |l: &mut HealthLedger| {
+            for r in 0..20 {
+                for c in 0..30usize {
+                    if (c + r) % 5 == 0 {
+                        l.observe_drop(c, 30.0, Some(c as f64));
+                    } else {
+                        l.observe_train(c, 1.0 + (c as f64) * 0.3);
+                    }
+                }
+                l.observe_stale(r % 30, 1 + r % 3);
+                l.observe_round_end(Some(29), Some(9.7));
+            }
+        };
+        let mut a = HealthLedger::new(HealthConfig { top_k: 6, snapshot_every: 4 });
+        let mut b = HealthLedger::new(HealthConfig { top_k: 6, snapshot_every: 4 });
+        feed(&mut a);
+        feed(&mut b);
+        assert_eq!(snapshot_text(&a, 19), snapshot_text(&b, 19));
+    }
+
+    #[test]
+    fn snapshot_cadence_includes_the_final_round() {
+        let l = HealthLedger::new(HealthConfig { top_k: 4, snapshot_every: 8 });
+        assert!(!l.snapshot_due(0, 10));
+        assert!(l.snapshot_due(7, 10)); // every 8th round
+        assert!(l.snapshot_due(9, 10)); // final round
+        let every = HealthLedger::new(HealthConfig { top_k: 4, snapshot_every: 0 });
+        assert!(every.snapshot_due(0, 10)); // clamped to 1
+    }
+}

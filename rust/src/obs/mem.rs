@@ -23,11 +23,33 @@ pub struct MemSample {
 pub const PAGE_BYTES: u64 = 4096;
 
 /// Sample the process's current resident set. `None` where
-/// `/proc/self/statm` is unreadable (non-Linux, restricted procfs).
+/// `/proc/self/statm` is unreadable (non-Linux, restricted procfs) or
+/// nonsensical — the engine then *skips* the `mem` record rather than
+/// logging a zero that would read as "no memory used". The first
+/// failure emits one rate-limited [`super::warn_stderr`]-style notice
+/// so a silently mem-less trace is explainable.
 pub fn sample() -> Option<MemSample> {
-    let text = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let s = sample_path("/proc/self/statm");
+    if s.is_none() {
+        // Once per process: `mem` records will be absent, say why.
+        if super::warn_gate("mem_sample_unavailable", 1) == super::WarnGate::Emit {
+            eprintln!("[obs] /proc/self/statm unreadable; mem records disabled for this run");
+        }
+    }
+    s
+}
+
+/// The testable core of [`sample`]: parse resident pages from a
+/// `statm`-format file. `None` on read failure, parse failure, or a
+/// zero page count (a live process is never zero-resident; a `0` here
+/// means the probe, not the process, is broken).
+fn sample_path(path: &str) -> Option<MemSample> {
+    let text = std::fs::read_to_string(path).ok()?;
     let pages: u64 = text.split_whitespace().nth(1)?.parse().ok()?;
-    Some(MemSample { pages, bytes: pages * PAGE_BYTES })
+    if pages == 0 {
+        return None;
+    }
+    Some(MemSample { pages, bytes: pages.saturating_mul(PAGE_BYTES) })
 }
 
 /// Fold the current sample into a running per-round peak (keeps the
@@ -57,6 +79,34 @@ mod tests {
                 let statm = std::path::Path::new("/proc/self/statm");
                 assert!(!cfg!(target_os = "linux") || !statm.exists());
             }
+        }
+    }
+
+    #[test]
+    fn bogus_path_yields_none_not_zero() {
+        // Unreadable path: no sample (and no zero-page MemSample).
+        assert_eq!(sample_path("/definitely/not/a/real/statm"), None);
+
+        // Readable but malformed / zero-resident inputs are rejected too.
+        let dir = std::env::temp_dir();
+        let write = |tag: &str, body: &str| {
+            let p = dir.join(format!("fedcore_statm_{}_{tag}", std::process::id()));
+            std::fs::write(&p, body).unwrap();
+            p
+        };
+        let garbage = write("garbage", "not numbers at all\n");
+        assert_eq!(sample_path(garbage.to_str().unwrap()), None);
+        let short = write("short", "1234\n");
+        assert_eq!(sample_path(short.to_str().unwrap()), None);
+        let zero = write("zero", "500 0 40 1 0 300 0\n");
+        assert_eq!(sample_path(zero.to_str().unwrap()), None, "zero pages must not sample");
+        let good = write("good", "500 123 40 1 0 300 0\n");
+        assert_eq!(
+            sample_path(good.to_str().unwrap()),
+            Some(MemSample { pages: 123, bytes: 123 * PAGE_BYTES })
+        );
+        for p in [garbage, short, zero, good] {
+            std::fs::remove_file(p).ok();
         }
     }
 

@@ -30,15 +30,23 @@
 //!   be ad-hoc `eprintln!` lines, now structured and capped.
 //! - **mem** — per-round peak resident-set sample from
 //!   [`mem::sample`] (`/proc/self/statm`; a graceful no-op elsewhere).
+//! - **snapshot** (schema v2) — a periodic straggler-forensics dump
+//!   from the [`health::HealthLedger`]: the top-K client health table
+//!   plus the cohort-wide [`sketch::Sketch`] quantile sketches. Enabled
+//!   by [`ObsConfig::Jsonl`]'s `health` knob; rendered by
+//!   `fedcore report --health`.
 //!
 //! **Determinism rule 7 (write-only observability).** Recording must
-//! never influence the run: a `Jsonl`-traced run is bit-identical to a
-//! `Null`-recorder run in every model output (params, round records,
-//! CSV, checkpoint bytes). Wall-clock reads flow *into* the trace and
-//! nowhere else. Enforced by `rust/tests/proptest_obs.rs`.
+//! never influence the run: a `Jsonl`-traced run — with or without
+//! health sampling — is bit-identical to a `Null`-recorder run in every
+//! model output (params, round records, CSV, checkpoint bytes).
+//! Wall-clock reads flow *into* the trace and nowhere else. Enforced by
+//! `rust/tests/proptest_obs.rs`.
 
+pub mod health;
 pub mod mem;
 pub mod report;
+pub mod sketch;
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -52,7 +60,15 @@ use crate::util::json::{write_json, Json};
 
 /// Trace schema version stamped into every record's `"v"` field; bump
 /// on any breaking change to record shapes or required keys.
-pub const SCHEMA_VERSION: u32 = 1;
+///
+/// History: **v1** (PR 6) header/span/event/counter/warn/mem; **v2**
+/// adds the `snapshot` record (health ledger + sketches). v2 is a pure
+/// superset, so the reader ([`report::Trace::check`]) accepts both —
+/// v1 traces still load.
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// Oldest schema version [`report::Trace::check`] still accepts.
+pub const MIN_SCHEMA_VERSION: u32 = 1;
 
 /// Max stderr lines per diagnostic key per process before [`warn`]
 /// suppresses further output (structured records keep flowing).
@@ -237,6 +253,17 @@ pub enum Record {
         /// The same, scaled to bytes.
         rss_bytes: u64,
     },
+    /// Periodic straggler-forensics dump from the
+    /// [`health::HealthLedger`] (schema v2): the sorted top-K client
+    /// table under `"clients"` and the quantile sketches under
+    /// `"sketches"` (see `docs/observability.md` for the field table).
+    Snapshot {
+        /// Engine round index the snapshot closes.
+        round: usize,
+        /// Snapshot body, flattened into the record
+        /// (`clients`/`sketches`/`rounds_observed`/`top_k`).
+        fields: Vec<(&'static str, Json)>,
+    },
 }
 
 /// Non-finite values would serialize as invalid JSON; clamp defensively
@@ -301,6 +328,13 @@ impl Record {
                 m.insert("rss_pages".into(), Json::Num(*rss_pages as f64));
                 m.insert("rss_bytes".into(), Json::Num(*rss_bytes as f64));
             }
+            Record::Snapshot { round, fields } => {
+                m.insert("t".into(), Json::Str("snapshot".into()));
+                m.insert("round".into(), Json::Num(*round as f64));
+                for (k, v) in fields {
+                    m.insert(k.to_string(), v.clone());
+                }
+            }
         }
         Json::Obj(m)
     }
@@ -321,6 +355,13 @@ pub trait Recorder: Send + Sync {
 
     /// Write one record (no-op for [`Null`]).
     fn record(&self, rec: &Record);
+
+    /// Push buffered records to durable storage (no-op by default).
+    /// The engine calls this once at end of run, and the CLI relies on
+    /// it before reopening the trace with [`Jsonl::append`] — a
+    /// buffered sink that skipped this could interleave its tail with
+    /// the appended records. Failures are swallowed (rule 7).
+    fn flush(&self) {}
 }
 
 /// The default sink: records nothing, reads no clock.
@@ -341,14 +382,15 @@ impl Recorder for Null {
 
 /// JSONL trace sink: one schema-versioned JSON object per line, header
 /// first. Interior mutability (`&self` recording) like the executor's
-/// `TraceRecorder`; each record is a single unbuffered `write`, so the
-/// file is line-complete at any instant and a post-run
-/// [`Jsonl::append`] handle (the CLI's checkpoint span) never splits a
-/// record.
+/// `TraceRecorder`. Records go through a [`std::io::BufWriter`] — one
+/// tiny syscall per record was measurable drag on job/worker span
+/// emission — which flushes on drop, and [`Recorder::flush`] flushes
+/// explicitly so the CLI's post-run [`Jsonl::append`] handle (the
+/// checkpoint span) never interleaves with a buffered tail.
 #[derive(Debug)]
 pub struct Jsonl {
     epoch: Instant,
-    file: Mutex<std::fs::File>,
+    file: Mutex<std::io::BufWriter<std::fs::File>>,
 }
 
 impl Jsonl {
@@ -364,7 +406,7 @@ impl Jsonl {
         }
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating trace file {}", path.display()))?;
-        let sink = Jsonl { epoch: Instant::now(), file: Mutex::new(file) };
+        let sink = Jsonl { epoch: Instant::now(), file: Mutex::new(std::io::BufWriter::new(file)) };
         sink.record(&Record::Header { source, provenance });
         Ok(sink)
     }
@@ -379,7 +421,7 @@ impl Jsonl {
             .append(true)
             .open(path)
             .with_context(|| format!("appending to trace file {}", path.display()))?;
-        Ok(Jsonl { epoch: Instant::now(), file: Mutex::new(file) })
+        Ok(Jsonl { epoch: Instant::now(), file: Mutex::new(std::io::BufWriter::new(file)) })
     }
 }
 
@@ -400,6 +442,11 @@ impl Recorder for Jsonl {
         // Write-only contract: a full disk must not fail the run.
         let _ = file.write_all(line.as_bytes());
     }
+
+    fn flush(&self) {
+        let mut file = self.file.lock().expect("trace sink poisoned");
+        let _ = file.flush();
+    }
 }
 
 /// Declarative observability config carried in
@@ -417,6 +464,10 @@ pub enum ObsConfig {
         /// Workload scale stamped into the header provenance (the CLI
         /// passes its resolved scale; engine-only callers use `1.0`).
         scale: f64,
+        /// When `Some`, the engine also runs a per-client
+        /// [`health::HealthLedger`] and emits periodic `snapshot`
+        /// records (schema v2 straggler forensics).
+        health: Option<health::HealthConfig>,
     },
 }
 
@@ -426,7 +477,7 @@ impl ObsConfig {
     pub fn build(&self, seed: u64, rounds: usize) -> Result<std::sync::Arc<dyn Recorder>> {
         match self {
             ObsConfig::Off => Ok(std::sync::Arc::new(Null)),
-            ObsConfig::Jsonl { path, scale } => {
+            ObsConfig::Jsonl { path, scale, .. } => {
                 let prov = crate::util::bench::provenance(seed, rounds, *scale);
                 Ok(std::sync::Arc::new(Jsonl::create(path, "engine", prov)?))
             }
@@ -438,6 +489,14 @@ impl ObsConfig {
         match self {
             ObsConfig::Off => None,
             ObsConfig::Jsonl { path, .. } => Some(path),
+        }
+    }
+
+    /// The health-ledger knobs, when health sampling is on.
+    pub fn health(&self) -> Option<&health::HealthConfig> {
+        match self {
+            ObsConfig::Off => None,
+            ObsConfig::Jsonl { health, .. } => health.as_ref(),
         }
     }
 }
@@ -633,8 +692,19 @@ mod tests {
         assert!(!ObsConfig::Off.build(1, 1).unwrap().enabled());
         assert_eq!(ObsConfig::Off.path(), None);
         let path = scratch("cfg");
-        let cfg = ObsConfig::Jsonl { path: path.to_string_lossy().into_owned(), scale: 0.5 };
+        let cfg = ObsConfig::Jsonl {
+            path: path.to_string_lossy().into_owned(),
+            scale: 0.5,
+            health: None,
+        };
         assert_eq!(cfg.path(), Some(path.to_string_lossy().as_ref()));
+        assert_eq!(cfg.health(), None);
+        let with_health = ObsConfig::Jsonl {
+            path: path.to_string_lossy().into_owned(),
+            scale: 0.5,
+            health: Some(health::HealthConfig::default()),
+        };
+        assert_eq!(with_health.health(), Some(&health::HealthConfig::default()));
         let rec = cfg.build(11, 4).unwrap();
         assert!(rec.enabled());
         drop(rec);
@@ -645,6 +715,44 @@ mod tests {
         let prov = head.get("provenance").unwrap();
         assert_eq!(prov.get("rounds").and_then(|v| v.as_f64()), Some(4.0));
         assert_eq!(prov.get("scale").and_then(|v| v.as_f64()), Some(0.5));
+    }
+
+    #[test]
+    fn buffered_sink_flushes_explicitly_and_on_drop() {
+        let path = scratch("flush");
+        let sink = Jsonl::create(&path, "engine", Json::Obj(Default::default())).unwrap();
+        // Many more records than one BufWriter capacity's worth, so a
+        // lost buffer would be visible as truncation.
+        for r in 0..512 {
+            sink.record(&Record::span(Phase::Round, r, (r as u64, r as u64 + 1), (0.0, 1.0)));
+        }
+        // Explicit flush (the pre-`append` barrier): every line durable
+        // while the sink is still alive.
+        Recorder::flush(&sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 513, "explicit flush left records buffered");
+        sink.record(&Record::span(Phase::Checkpoint, 512, (0, 1), (0.0, 0.0)));
+        drop(sink);
+        // Drop flushed the tail; every line is complete JSON.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(text.lines().count(), 514, "drop lost buffered records");
+        assert!(text.ends_with('\n'));
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn snapshot_record_serializes_with_discriminant() {
+        let ledger = health::HealthLedger::new(health::HealthConfig::default());
+        let rec = ledger.snapshot(3);
+        let j = rec.to_json();
+        assert_eq!(j.get("t").and_then(|v| v.as_str()), Some("snapshot"));
+        assert_eq!(j.get("v").and_then(|v| v.as_f64()), Some(SCHEMA_VERSION as f64));
+        assert_eq!(j.get("round").and_then(|v| v.as_f64()), Some(3.0));
+        assert!(j.get("clients").and_then(|v| v.as_arr()).is_some());
+        assert!(j.get("sketches").and_then(|v| v.as_obj()).is_some());
     }
 
     #[test]

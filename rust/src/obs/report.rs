@@ -19,8 +19,14 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{Counter, Phase, SCHEMA_VERSION};
+use super::sketch::Sketch;
+use super::{Counter, Phase, MIN_SCHEMA_VERSION, SCHEMA_VERSION};
 use crate::util::json::Json;
+
+/// Anomaly band width for [`Trace::health_report`]: a client is
+/// flagged `SLOW` when its mean train time exceeds the cohort sketch's
+/// `median + ANOMALY_MAD_K · MAD`.
+pub const ANOMALY_MAD_K: f64 = 3.0;
 
 /// A parsed trace: one [`Json`] object per line, in file order.
 #[derive(Clone, Debug)]
@@ -82,11 +88,14 @@ impl Trace {
         Ok(Trace { records })
     }
 
-    /// Validate every record against the schema: version field,
-    /// required keys per record type, ordered span bounds, known
-    /// counter names, header-first, and well-formed span nesting
-    /// (every lifecycle span wall-contained in its round span, phase
-    /// wall-times summing to within the round's wall-time). Returns
+    /// Validate every record against the schema: version field (the
+    /// [`MIN_SCHEMA_VERSION`]`..=`[`SCHEMA_VERSION`] window — v1 traces
+    /// still load), required keys per record type (including the v2
+    /// `snapshot` body: client-row ordering and sketch encodings),
+    /// ordered span bounds, known counter names, header-first, and
+    /// well-formed span nesting (every lifecycle span wall-contained in
+    /// its round span, phase wall-times summing to within the round's
+    /// wall-time). Every rejection names the offending line. Returns
     /// the number of validated records.
     pub fn check(&self) -> Result<usize> {
         if self.records.is_empty() {
@@ -98,8 +107,13 @@ impl Trace {
         for (i, rec) in self.records.iter().enumerate() {
             let line = i + 1;
             let v = get_num(rec, line, "v")?;
-            if v != SCHEMA_VERSION as f64 {
-                bail!("line {line}: schema version {v}, this reader expects {SCHEMA_VERSION}");
+            // v2 is a pure superset of v1 (it adds `snapshot`), so the
+            // reader accepts the whole window — v1 traces still load.
+            if v.fract() != 0.0 || v < MIN_SCHEMA_VERSION as f64 || v > SCHEMA_VERSION as f64 {
+                bail!(
+                    "line {line}: schema version {v}, this reader expects \
+                     {MIN_SCHEMA_VERSION}..={SCHEMA_VERSION}"
+                );
             }
             match get_str(rec, line, "t")? {
                 "header" => {
@@ -157,6 +171,51 @@ impl Trace {
                     get_num(rec, line, "rss_pages")?;
                     get_num(rec, line, "rss_bytes")?;
                 }
+                "snapshot" => {
+                    get_num(rec, line, "round")?;
+                    get_num(rec, line, "rounds_observed")?;
+                    let clients = rec.get("clients").and_then(|v| v.as_arr()).ok_or_else(
+                        || anyhow!("line {line}: snapshot missing 'clients' array"),
+                    )?;
+                    // The emitter sorts by (score desc, id asc); hold
+                    // readers of partial traces to the same contract.
+                    let mut prev: Option<(u64, u64)> = None;
+                    for c in clients {
+                        for key in [
+                            "id", "score_us", "err_us", "seen", "train_us", "bounded", "drops",
+                            "stale", "warm", "builds",
+                        ] {
+                            let v = c.get(key).and_then(|v| v.as_f64()).ok_or_else(|| {
+                                anyhow!("line {line}: snapshot client missing numeric '{key}'")
+                            })?;
+                            if v < 0.0 || v.fract() != 0.0 {
+                                bail!(
+                                    "line {line}: snapshot client '{key}' is not a \
+                                     non-negative integer"
+                                );
+                            }
+                        }
+                        let score = get_num(c, line, "score_us")? as u64;
+                        let id = get_num(c, line, "id")? as u64;
+                        if let Some((ps, pid)) = prev {
+                            if (score, std::cmp::Reverse(id)) > (ps, std::cmp::Reverse(pid)) {
+                                bail!(
+                                    "line {line}: snapshot clients not sorted by \
+                                     (score desc, id asc)"
+                                );
+                            }
+                        }
+                        prev = Some((score, id));
+                    }
+                    let sketches = rec
+                        .get("sketches")
+                        .and_then(|v| v.as_obj())
+                        .ok_or_else(|| anyhow!("line {line}: snapshot missing 'sketches'"))?;
+                    for (name, j) in sketches {
+                        Sketch::validate_json(j)
+                            .map_err(|e| anyhow!("line {line}: sketch '{name}': {e}"))?;
+                    }
+                }
                 other => bail!("line {line}: unknown record type '{other}'"),
             }
         }
@@ -211,16 +270,16 @@ impl Trace {
     /// measured wall-time (they are disjoint nested sub-intervals).
     fn check_nesting(&self, seg: Range<usize>) -> Result<()> {
         let spans = self.spans_in(seg);
-        let mut rounds: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+        let mut rounds: BTreeMap<usize, (f64, f64, usize)> = BTreeMap::new();
         for sp in spans.iter().filter(|s| s.name == Phase::Round.name()) {
-            if rounds.insert(sp.round, (sp.w0, sp.w1)).is_some() {
+            if rounds.insert(sp.round, (sp.w0, sp.w1, sp.line)).is_some() {
                 bail!("line {}: duplicate round span for round {} in one run", sp.line, sp.round);
             }
         }
         let mut phase_sum: BTreeMap<usize, f64> = BTreeMap::new();
         let lifecycle: Vec<&str> = Phase::LIFECYCLE.iter().map(|p| p.name()).collect();
         for sp in spans.iter().filter(|s| lifecycle.contains(&s.name.as_str())) {
-            let &(rw0, rw1) = rounds.get(&sp.round).ok_or_else(|| {
+            let &(rw0, rw1, _) = rounds.get(&sp.round).ok_or_else(|| {
                 anyhow!("line {}: '{}' span has no round {} span", sp.line, sp.name, sp.round)
             })?;
             if sp.w0 < rw0 || sp.w1 > rw1 {
@@ -234,9 +293,12 @@ impl Trace {
             *phase_sum.entry(sp.round).or_insert(0.0) += sp.w1 - sp.w0;
         }
         for (r, sum) in phase_sum {
-            let (rw0, rw1) = rounds[&r];
+            let (rw0, rw1, rline) = rounds[&r];
             if sum > rw1 - rw0 {
-                bail!("round {r}: phase wall-times sum to {sum} ns > round span {} ns", rw1 - rw0);
+                bail!(
+                    "line {rline}: round {r}: phase wall-times sum to {sum} ns > round span {} ns",
+                    rw1 - rw0
+                );
             }
         }
         Ok(())
@@ -423,6 +485,172 @@ impl Trace {
         let legend: Vec<&str> = Phase::LIFECYCLE.iter().map(|p| p.name()).collect();
         crate::metrics::svg::timeline(title, "wall time since run start (ms)", &rows, &legend)
     }
+
+    /// Straggler-forensics report over the last run segment (schema v2
+    /// `snapshot` records, `fedcore report --health`): cohort sketch
+    /// quantiles, the top-K leaderboard with anomaly flags, and the
+    /// per-round critical-path attribution table.
+    pub fn health_report(&self) -> String {
+        let seg = self.segments().pop().unwrap_or(0..self.records.len());
+        let mut out = String::new();
+        let Some(snap) =
+            self.records[seg].iter().rev().find(|r| kind(r) == Some("snapshot"))
+        else {
+            out.push_str(
+                "(no health snapshots in the last run segment — trace with health \
+                 sampling on, e.g. `fedcore run --obs-trace t.jsonl --obs-health`)\n",
+            );
+            return out;
+        };
+        let round = snap.get("round").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        let rounds_observed =
+            snap.get("rounds_observed").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "health snapshot: round {round:.0}, {rounds_observed:.0} rounds observed"
+        );
+
+        // Cohort-wide sketch quantiles; the train sketch also yields the
+        // (median, MAD) anomaly band.
+        let mut band: Option<(f64, f64)> = None;
+        if let Some(sketches) = snap.get("sketches").and_then(|v| v.as_obj()) {
+            out.push_str("cohort sketches (approximate quantiles):\n");
+            for (name, j) in sketches {
+                match Sketch::from_json(j) {
+                    Ok(s) if !s.is_empty() => {
+                        let q = |x: f64| s.quantile(x).unwrap_or(0.0);
+                        let _ = writeln!(
+                            out,
+                            "  {name:<16} n={:<8} p50={:<9.3} p90={:<9.3} p99={:<9.3} max={:.3}",
+                            s.count(),
+                            q(0.5),
+                            q(0.9),
+                            q(0.99),
+                            q(1.0)
+                        );
+                        if name == "train_s" {
+                            band = s.median_mad();
+                        }
+                    }
+                    Ok(_) => {
+                        let _ = writeln!(out, "  {name:<16} (empty)");
+                    }
+                    Err(e) => {
+                        let _ = writeln!(out, "  {name:<16} (unreadable: {e})");
+                    }
+                }
+            }
+        }
+        if let Some((med, mad)) = band {
+            let _ = writeln!(
+                out,
+                "anomaly band: train > {:.3} s (median {med:.3} + {ANOMALY_MAD_K}·MAD {mad:.3})",
+                med + ANOMALY_MAD_K * mad
+            );
+        }
+
+        // Leaderboard: the snapshot's client rows are already sorted by
+        // (score desc, id asc).
+        let clients = snap.get("clients").and_then(|v| v.as_arr()).unwrap_or(&[]);
+        let _ = writeln!(out, "straggler leaderboard ({} clients tracked):", clients.len());
+        let _ = writeln!(
+            out,
+            "{:>5} {:>8} {:>10} {:>8} {:>6} {:>8} {:>6} {:>6} {:>6} {:<6}",
+            "rank", "client", "score_s", "±err_s", "seen", "bounded", "drops", "stale", "warm%",
+            "flags"
+        );
+        for (rank, c) in clients.iter().enumerate() {
+            let f = |k: &str| c.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let seen = f("seen");
+            let drops = f("drops");
+            let builds = f("builds");
+            let contribs = (seen - drops).max(0.0);
+            let mean_train = if contribs > 0.0 { f("train_us") / 1e6 / contribs } else { 0.0 };
+            let mut flags = Vec::new();
+            if let Some((med, mad)) = band {
+                if contribs > 0.0 && mean_train > med + ANOMALY_MAD_K * mad {
+                    flags.push("SLOW");
+                }
+            }
+            if seen > 0.0 && drops * 2.0 > seen {
+                flags.push("FLAKY");
+            }
+            let warm_pct =
+                if builds > 0.0 { format!("{:.0}", 100.0 * f("warm") / builds) } else { "-".into() };
+            let _ = writeln!(
+                out,
+                "{:>5} {:>8.0} {:>10.3} {:>8.3} {:>6.0} {:>8.0} {:>6.0} {:>6.0} {:>6} {:<6}",
+                rank + 1,
+                f("id"),
+                f("score_us") / 1e6,
+                f("err_us") / 1e6,
+                seen,
+                f("bounded"),
+                drops,
+                f("stale"),
+                warm_pct,
+                flags.join("+")
+            );
+        }
+
+        out.push_str(&self.critical_path_table());
+        out
+    }
+
+    /// Per-round critical-path attribution of the last run segment,
+    /// from the `round_path` events health sampling emits: which client
+    /// bounded the round, the server's quorum wait, the straggler-tail
+    /// overhang past it, and the aggregation wall time.
+    pub fn critical_path_table(&self) -> String {
+        let seg = self.segments().pop().unwrap_or(0..self.records.len());
+        let spans = self.spans_in(seg.clone());
+        let mut agg_ms: BTreeMap<usize, f64> = BTreeMap::new();
+        for sp in spans.iter().filter(|s| s.name == Phase::Aggregate.name()) {
+            *agg_ms.entry(sp.round).or_insert(0.0) += (sp.w1 - sp.w0) / 1e6;
+        }
+        let paths: Vec<&Json> = self.records[seg]
+            .iter()
+            .filter(|r| kind(r) == Some("event") && name_of(r) == Some("round_path"))
+            .collect();
+        let mut out = String::new();
+        if paths.is_empty() {
+            out.push_str("(no round_path events — critical-path attribution unavailable)\n");
+            return out;
+        }
+        out.push_str("critical path per round (virtual seconds; agg is wall ms):\n");
+        let _ = writeln!(
+            out,
+            "{:>5} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            "round", "client", "client_s", "quorum_s", "overhang_s", "agg_ms"
+        );
+        let (mut tot_q, mut tot_o, mut tot_a) = (0.0f64, 0.0f64, 0.0f64);
+        for p in &paths {
+            let f = |k: &str| p.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let round = f("round");
+            let quorum = f("quorum_s");
+            let overhang = (f("tail_s") - quorum).max(0.0);
+            let agg = agg_ms.get(&(round as usize)).copied().unwrap_or(0.0);
+            tot_q += quorum;
+            tot_o += overhang;
+            tot_a += agg;
+            let client = p.get("client").and_then(|v| v.as_f64());
+            let client = match client {
+                Some(c) if c >= 0.0 => format!("{c:.0}"),
+                _ => "-".into(),
+            };
+            let _ = writeln!(
+                out,
+                "{round:>5.0} {client:>8} {:>10.3} {quorum:>10.3} {overhang:>10.3} {agg:>10.3}",
+                f("client_s")
+            );
+        }
+        let _ = writeln!(
+            out,
+            "decomposition: quorum wait {tot_q:.3} s, straggler overhang {tot_o:.3} s, \
+             aggregation {tot_a:.3} ms wall"
+        );
+        out
+    }
 }
 
 #[cfg(test)]
@@ -567,5 +795,173 @@ mod tests {
     fn from_text_rejects_garbage_lines() {
         assert!(Trace::from_text("{\"v\":1}\nnot json\n").is_err());
         assert!(Trace::from_text("").unwrap().records.is_empty());
+    }
+
+    #[test]
+    fn v1_traces_still_load() {
+        // A v1 trace is exactly a v2 trace without snapshots; rewriting
+        // the version field must keep the checker green (migration
+        // note in docs/observability.md).
+        let text = render(&demo_trace()).replace("\"v\":2", "\"v\":1");
+        let t = Trace::from_text(&text).unwrap();
+        assert_eq!(t.check().unwrap(), t.records.len());
+    }
+
+    /// The satellite rejection corpus: every malformed shape is
+    /// rejected *and* the error names the offending line.
+    #[test]
+    fn malformed_trace_corpus_rejects_with_line_numbers() {
+        let base = render(&demo_trace());
+        let n_lines = base.lines().count();
+
+        // 1. Truncated line: the file was cut mid-record (a crashed
+        //    writer without the BufWriter drop-flush).
+        let truncated = &base[..base.len() - 25];
+        let err = Trace::from_text(truncated).unwrap_err().to_string();
+        assert!(err.contains(&format!("line {n_lines}")), "truncation: {err}");
+
+        // 2. Wrong schema version on one record (line 5).
+        let lines: Vec<&str> = base.lines().collect();
+        let mut doctored: Vec<String> = lines.iter().map(|l| l.to_string()).collect();
+        doctored[4] = doctored[4].replace("\"v\":2", "\"v\":7");
+        let t = Trace::from_text(&doctored.join("\n")).unwrap();
+        let err = t.check().unwrap_err().to_string();
+        assert!(err.contains("line 5") && err.contains("schema version"), "{err}");
+
+        // 3. Span end-before-start.
+        let mut t = demo_trace();
+        t.records.push(Record::span(Phase::Eval, 1, (900, 200), (0.0, 0.0)).to_json());
+        let err = t.check().unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("line {}", n_lines + 1)) && err.contains("reversed"),
+            "{err}"
+        );
+
+        // 4. Counter with an unknown key.
+        let mut t = demo_trace();
+        let counter =
+            Record::CounterVal { counter: Counter::Dropped, round: 0, value: 2 }.to_json();
+        let Json::Obj(mut m) = counter else { unreachable!() };
+        m.insert("name".into(), Json::Str("not_a_counter".into()));
+        t.records.push(Json::Obj(m));
+        let err = t.check().unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("line {}", n_lines + 1)) && err.contains("unknown counter"),
+            "{err}"
+        );
+
+        // 5. Interleaved run segments: a lifecycle span after a new
+        //    run_start whose round span lives in the *previous*
+        //    segment — the segment split makes it an orphan.
+        let mut t = demo_trace();
+        t.records.push(Record::Event { name: "run_start", round: 0, fields: vec![] }.to_json());
+        t.records.push(Record::span(Phase::Train, 0, (10, 20), (0.0, 1.0)).to_json());
+        let err = t.check().unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("line {}", n_lines + 2)) && err.contains("no round 0 span"),
+            "{err}"
+        );
+
+        // 6. A snapshot with a corrupted sketch encoding.
+        let mut t = demo_trace();
+        let ledger = crate::obs::health::HealthLedger::new(Default::default());
+        let snap = ledger.snapshot(1).to_json();
+        let Json::Obj(mut m) = snap else { unreachable!() };
+        m.insert(
+            "sketches".into(),
+            Json::parse("{\"train_s\":{\"buckets\":[[5,2]],\"count\":1}}").unwrap(),
+        );
+        t.records.push(Json::Obj(m));
+        let err = t.check().unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("line {}", n_lines + 1)) && err.contains("train_s"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn snapshot_records_validate_and_health_report_renders() {
+        use crate::obs::health::{HealthConfig, HealthLedger};
+        let mut ledger = HealthLedger::new(HealthConfig { top_k: 8, snapshot_every: 1 });
+        for r in 0..4 {
+            for c in 0..20usize {
+                let secs = if c == 13 { 40.0 } else { 1.0 };
+                ledger.observe_train(c, secs);
+            }
+            ledger.observe_drop(19, 30.0, Some(3.0));
+            ledger.observe_stale(2, 1 + r % 2);
+            ledger.observe_round_end(Some(13), Some(40.0));
+        }
+        let mut t = demo_trace();
+        t.records.push(
+            Record::Event {
+                name: "round_path",
+                round: 1,
+                fields: vec![
+                    ("client", Json::Num(13.0)),
+                    ("client_s", Json::Num(40.0)),
+                    ("quorum_s", Json::Num(40.0)),
+                    ("tail_s", Json::Num(46.5)),
+                ],
+            }
+            .to_json(),
+        );
+        t.records.push(ledger.snapshot(3).to_json());
+        assert_eq!(t.check().unwrap(), t.records.len());
+        // And the round trip through text survives.
+        let t2 = Trace::from_text(&render(&t)).unwrap();
+        t2.check().unwrap();
+
+        let report = t.health_report();
+        assert!(report.contains("straggler leaderboard"), "{report}");
+        // Client 13 leads the leaderboard and is anomaly-flagged: mean
+        // train 40 s vs a cohort median of ~1 s.
+        let lead = report.lines().find(|l| l.trim_start().starts_with("1 ")).unwrap();
+        assert!(lead.contains("13"), "{report}");
+        assert!(lead.contains("SLOW"), "{report}");
+        // Critical-path attribution found the round_path event.
+        assert!(report.contains("critical path per round"), "{report}");
+        assert!(report.contains("decomposition: quorum wait"), "{report}");
+        // Overhang = tail 46.5 − quorum 40.
+        assert!(report.contains("6.500"), "{report}");
+    }
+
+    #[test]
+    fn health_report_without_snapshots_says_so() {
+        let report = demo_trace().health_report();
+        assert!(report.contains("no health snapshots"), "{report}");
+    }
+
+    /// Satellite: a dropped (never explicitly flushed) buffered sink
+    /// must leave a complete, `--check`-clean trace behind.
+    #[test]
+    fn dropped_sink_leaves_a_check_clean_trace() {
+        use crate::obs::health::{HealthConfig, HealthLedger};
+        use crate::obs::{Jsonl, Recorder as _};
+        let path = std::env::temp_dir()
+            .join(format!("fedcore_obs_dropflush_{}.jsonl", std::process::id()));
+        let sink =
+            Jsonl::create(&path, "engine", crate::util::bench::provenance(3, 60, 1.0)).unwrap();
+        sink.record(&Record::Event { name: "run_start", round: 0, fields: vec![] });
+        let mut ledger = HealthLedger::new(HealthConfig { top_k: 16, snapshot_every: 8 });
+        for r in 0..60usize {
+            let base = r as u64 * 1000;
+            sink.record(&Record::span(Phase::Round, r, (base, base + 1000), (0.0, 1.0)));
+            sink.record(&Record::span(Phase::Train, r, (base, base + 700), (0.0, 1.0)));
+            sink.record(&Record::span(Phase::Aggregate, r, (base + 700, base + 900), (1.0, 1.0)));
+            for c in 0..10usize {
+                ledger.observe_train(c, 1.0 + c as f64);
+            }
+            ledger.observe_round_end(Some(9), Some(10.0));
+            if ledger.snapshot_due(r, 60) {
+                sink.record(&ledger.snapshot(r));
+            }
+        }
+        // No explicit flush: drop must push the buffered tail out.
+        drop(sink);
+        let t = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        t.check().unwrap();
+        assert!(t.health_report().contains("straggler leaderboard"));
     }
 }

@@ -1,0 +1,417 @@
+//! Deterministic, mergeable log-histogram quantile sketches.
+//!
+//! The health ledger ([`super::health`]) needs streaming quantiles over
+//! per-round/per-client quantities (train time, dispatch makespan,
+//! staleness, churn gaps) at fleet scale — without keeping the samples
+//! and without breaking determinism rule 7. A [`Sketch`] is an
+//! HdrHistogram-style fixed-bucket log histogram:
+//!
+//! - **Bucketing is pure integer bit-twiddling** on the IEEE-754
+//!   representation (exponent + top mantissa bits), no `log`/`powf`
+//!   calls on the insert path — the same value lands in the same bucket
+//!   on every platform, so traced runs stay replayable.
+//! - **Counts are integers**, and [`Sketch::merge`] is an elementwise
+//!   integer add plus `min`/`max` folds. Integer addition and f64
+//!   min/max are associative and commutative, so merging per-worker
+//!   shards in *any* fold order yields the identical sketch, bitwise —
+//!   the sharded ≡ sequential gate `proptest_obs.rs` enforces. (A
+//!   floating-point *sum* would not be fold-order invariant, which is
+//!   why the sketch deliberately does not keep one.)
+//! - **Memory is O(1)**: [`NUM_BUCKETS`] `u64` counts (~8 KiB dense;
+//!   serialization is sparse).
+//!
+//! Resolution: [`SUB`] sub-buckets per octave ⇒ relative quantile error
+//! ≤ `1/(2·SUB)` ≈ 3.1 %. Range: `[2⁻²⁰, 2⁴⁴)` seconds (≈ microsecond
+//! to ~557 000 years); values at or below zero land in the underflow
+//! bucket, values above the range in the overflow bucket, and
+//! non-finite values are skipped.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Sub-buckets per power-of-two octave (16 ⇒ ≤ ~3.1 % relative error).
+pub const SUB: usize = 16;
+/// Number of mantissa bits that index the sub-bucket (`2^SUB_BITS == SUB`).
+const SUB_BITS: u32 = 4;
+/// Smallest binary exponent with its own octave; values in `(0, 2^E_MIN)`
+/// fall into the underflow bucket 0.
+pub const E_MIN: i32 = -20;
+/// One-past-largest binary exponent; values `≥ 2^E_MAX` fall into the
+/// overflow bucket.
+pub const E_MAX: i32 = 44;
+/// Total bucket count: underflow + (E_MAX − E_MIN)·SUB + overflow.
+pub const NUM_BUCKETS: usize = 2 + (E_MAX - E_MIN) as usize * SUB;
+
+/// A fixed-layout streaming log-histogram (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sketch {
+    /// Per-bucket observation counts (dense; index by [`bucket_index`]).
+    counts: Vec<u64>,
+    /// Total observations (== sum of `counts`).
+    count: u64,
+    /// Smallest inserted value (`+inf` when empty — never serialized).
+    min: f64,
+    /// Largest inserted value (`-inf` when empty — never serialized).
+    max: f64,
+}
+
+impl Default for Sketch {
+    fn default() -> Self {
+        Sketch::new()
+    }
+}
+
+/// Deterministic bucket index for a value (total function: underflow
+/// bucket 0 for `v ≤ 0` or tiny values, the last bucket for overflow).
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) || v < f64::from_bits(((E_MIN + 1023) as u64) << 52) {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7FF) as i32 - 1023;
+    if exp >= E_MAX {
+        return NUM_BUCKETS - 1;
+    }
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    1 + (exp - E_MIN) as usize * SUB + sub
+}
+
+/// Representative value for a bucket (its geometric-ish midpoint):
+/// `0` for underflow, `2^E_MAX` for overflow.
+pub fn bucket_value(idx: usize) -> f64 {
+    if idx == 0 {
+        return 0.0;
+    }
+    if idx >= NUM_BUCKETS - 1 {
+        return f64::from_bits(((E_MAX + 1023) as u64) << 52);
+    }
+    let exp = E_MIN + ((idx - 1) / SUB) as i32;
+    let sub = (idx - 1) % SUB;
+    let base = f64::from_bits(((exp + 1023) as u64) << 52);
+    base * (1.0 + (sub as f64 + 0.5) / SUB as f64)
+}
+
+impl Sketch {
+    /// An empty sketch.
+    pub fn new() -> Sketch {
+        Sketch { counts: vec![0; NUM_BUCKETS], count: 0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Record one observation (non-finite values are skipped — they
+    /// carry no quantile information and would poison min/max).
+    pub fn insert(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been inserted.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest observation (`None` when empty).
+    pub fn min(&self) -> Option<f64> {
+        (!self.is_empty()).then_some(self.min)
+    }
+
+    /// Largest observation (`None` when empty).
+    pub fn max(&self) -> Option<f64> {
+        (!self.is_empty()).then_some(self.max)
+    }
+
+    /// Fold another sketch in. Elementwise integer adds plus min/max
+    /// folds only, so the result is independent of merge order and of
+    /// how the observations were sharded across workers.
+    pub fn merge(&mut self, other: &Sketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Approximate `q`-quantile (`q` clamped to `[0, 1]`): the
+    /// representative value of the bucket holding the rank-`⌈q·n⌉`
+    /// observation, sharpened to the exact `min`/`max` at the ends.
+    /// `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.is_empty() {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if q <= 0.0 {
+            return Some(self.min);
+        }
+        if q >= 1.0 {
+            return Some(self.max);
+        }
+        // Rank walk over integer counts: deterministic by construction.
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Some(bucket_value(idx).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// Weighted median and median-absolute-deviation over bucket
+    /// representatives — the robust center/spread pair the anomaly flag
+    /// (`train > median + k·MAD`) uses. `None` when empty.
+    pub fn median_mad(&self) -> Option<(f64, f64)> {
+        if self.is_empty() {
+            return None;
+        }
+        let med = self.quantile(0.5)?;
+        // MAD: weighted median of |repr − med| over occupied buckets.
+        let mut dev: Vec<(f64, u64)> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(idx, &c)| ((bucket_value(idx) - med).abs(), c))
+            .collect();
+        dev.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite deviations"));
+        let target = (self.count).div_ceil(2);
+        let mut seen = 0u64;
+        for (d, c) in dev {
+            seen += c;
+            if seen >= target {
+                return Some((med, d));
+            }
+        }
+        Some((med, 0.0))
+    }
+
+    /// Serialize to the trace encoding: sparse ascending
+    /// `[bucket, count]` pairs plus `count`/`min`/`max` (layout
+    /// constants are part of the schema, see `docs/observability.md`).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(idx, &c)| Json::Arr(vec![Json::Num(idx as f64), Json::Num(c as f64)]))
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("buckets".to_string(), Json::Arr(buckets));
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        if !self.is_empty() {
+            m.insert("min".to_string(), Json::Num(self.min));
+            m.insert("max".to_string(), Json::Num(self.max));
+        }
+        Json::Obj(m)
+    }
+
+    /// Validate a serialized sketch without building it: bucket indices
+    /// strictly ascending and in range, counts positive integers, and
+    /// the `count` field equal to their sum. The checker
+    /// ([`super::report::Trace::check`]) calls this per snapshot.
+    pub fn validate_json(j: &Json) -> Result<()> {
+        let total = j.get("count").and_then(|v| v.as_f64());
+        let Some(total) = total else { bail!("sketch missing numeric 'count'") };
+        if total < 0.0 || total.fract() != 0.0 {
+            bail!("sketch 'count' {total} is not a non-negative integer");
+        }
+        let Some(buckets) = j.get("buckets").and_then(|v| v.as_arr()) else {
+            bail!("sketch missing 'buckets' array")
+        };
+        let mut sum = 0.0;
+        let mut prev: i64 = -1;
+        for b in buckets {
+            let pair = b.as_arr().filter(|p| p.len() == 2);
+            let Some(pair) = pair else { bail!("sketch bucket is not a [index, count] pair") };
+            let (Some(idx), Some(c)) = (pair[0].as_f64(), pair[1].as_f64()) else {
+                bail!("sketch bucket pair is not numeric")
+            };
+            if idx.fract() != 0.0 || idx < 0.0 || idx as usize >= NUM_BUCKETS {
+                bail!("sketch bucket index {idx} outside [0, {NUM_BUCKETS})");
+            }
+            if (idx as i64) <= prev {
+                bail!("sketch bucket indices not strictly ascending at {idx}");
+            }
+            prev = idx as i64;
+            if c < 1.0 || c.fract() != 0.0 {
+                bail!("sketch bucket count {c} is not a positive integer");
+            }
+            sum += c;
+        }
+        if sum != total {
+            bail!("sketch bucket counts sum to {sum}, 'count' field says {total}");
+        }
+        if total > 0.0 {
+            for key in ["min", "max"] {
+                if j.get(key).and_then(|v| v.as_f64()).is_none() {
+                    bail!("non-empty sketch missing numeric '{key}'");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild a sketch from its trace encoding (validates first).
+    pub fn from_json(j: &Json) -> Result<Sketch> {
+        Self::validate_json(j)?;
+        let mut s = Sketch::new();
+        if let Some(buckets) = j.get("buckets").and_then(|v| v.as_arr()) {
+            for b in buckets {
+                let pair = b.as_arr().expect("validated bucket pair");
+                let idx = pair[0].as_f64().expect("validated index") as usize;
+                let c = pair[1].as_f64().expect("validated count") as u64;
+                s.counts[idx] = c;
+                s.count += c;
+            }
+        }
+        if let Some(v) = j.get("min").and_then(|v| v.as_f64()) {
+            s.min = v;
+        }
+        if let Some(v) = j.get("max").and_then(|v| v.as_f64()) {
+            s.max = v;
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::write_json;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_index_is_monotone_and_total() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.5), 0);
+        assert_eq!(bucket_index(f64::NEG_INFINITY), 0);
+        assert_eq!(bucket_index(1e-300), 0);
+        assert_eq!(bucket_index(1e300), NUM_BUCKETS - 1);
+        let mut prev = 0usize;
+        let mut v = 1e-7;
+        while v < 1e14 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket index regressed at {v}");
+            assert!(idx < NUM_BUCKETS);
+            prev = idx;
+            v *= 1.07;
+        }
+    }
+
+    #[test]
+    fn bucket_value_lands_in_its_own_bucket() {
+        for idx in 1..NUM_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_value(idx)), idx, "repr of bucket {idx} strayed");
+        }
+    }
+
+    #[test]
+    fn quantiles_bound_relative_error() {
+        let mut s = Sketch::new();
+        let mut rng = Rng::new(42);
+        let mut vals: Vec<f64> = (0..2000).map(|_| 0.01 + 100.0 * rng.f64()).collect();
+        for &v in &vals {
+            s.insert(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let exact = vals[((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len()) - 1];
+            let approx = s.quantile(q).unwrap();
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel <= 1.0 / SUB as f64, "q{q}: {approx} vs {exact} (rel {rel})");
+        }
+        assert_eq!(s.quantile(0.0), Some(*vals.first().unwrap()));
+        assert_eq!(s.quantile(1.0), Some(*vals.last().unwrap()));
+    }
+
+    #[test]
+    fn merge_matches_sequential_insert_bitwise() {
+        let mut rng = Rng::new(7);
+        let vals: Vec<f64> = (0..500).map(|_| 1e-6 + 1e6 * rng.f64() * rng.f64()).collect();
+        let mut seq = Sketch::new();
+        for &v in &vals {
+            seq.insert(v);
+        }
+        for workers in [2usize, 3, 7] {
+            let mut shards = vec![Sketch::new(); workers];
+            for (i, &v) in vals.iter().enumerate() {
+                shards[i % workers].insert(v);
+            }
+            // Fold right-to-left — the opposite order from the shard walk.
+            let mut merged = Sketch::new();
+            for sh in shards.iter().rev() {
+                merged.merge(sh);
+            }
+            assert_eq!(merged, seq, "{workers}-way shard diverged");
+            let (mut a, mut b) = (String::new(), String::new());
+            write_json(&merged.to_json(), &mut a);
+            write_json(&seq.to_json(), &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn median_mad_flags_outliers() {
+        let mut s = Sketch::new();
+        for _ in 0..100 {
+            s.insert(1.0);
+        }
+        s.insert(50.0);
+        let (med, mad) = s.median_mad().unwrap();
+        assert!((med - 1.0).abs() / 1.0 < 0.1, "median {med} strayed from 1.0");
+        // 100 identical values: MAD is within one bucket of zero.
+        assert!(mad < 0.1, "MAD {mad} too wide");
+        assert!(50.0 > med + 3.0 * (mad + 1e-9), "outlier not flaggable");
+    }
+
+    #[test]
+    fn json_round_trip_and_validation() {
+        let mut s = Sketch::new();
+        for v in [0.5, 0.5, 2.0, 1e-30, -4.0, f64::NAN] {
+            s.insert(v);
+        }
+        assert_eq!(s.count(), 5); // NaN skipped, underflow + negatives kept
+        let j = s.to_json();
+        Sketch::validate_json(&j).unwrap();
+        let back = Sketch::from_json(&j).unwrap();
+        assert_eq!(back.count(), s.count());
+        assert_eq!(back.quantile(0.5), s.quantile(0.5));
+
+        // Corrupted encodings are rejected.
+        let text = {
+            let mut t = String::new();
+            write_json(&j, &mut t);
+            t
+        };
+        let tampered = Json::parse(&text.replace("\"count\":5", "\"count\":9")).unwrap();
+        assert!(Sketch::validate_json(&tampered).is_err());
+        let empty = Json::parse("{\"buckets\":[[2,1],[2,1]],\"count\":2}").unwrap();
+        assert!(Sketch::validate_json(&empty).is_err(), "non-ascending buckets accepted");
+        let huge = Json::parse("{\"buckets\":[[999999,1]],\"count\":1}").unwrap();
+        assert!(Sketch::validate_json(&huge).is_err(), "out-of-range bucket accepted");
+    }
+
+    #[test]
+    fn empty_sketch_is_well_behaved() {
+        let s = Sketch::new();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.5), None);
+        assert_eq!(s.median_mad(), None);
+        assert_eq!(s.min(), None);
+        Sketch::validate_json(&s.to_json()).unwrap();
+        assert_eq!(Sketch::from_json(&s.to_json()).unwrap(), s);
+    }
+}

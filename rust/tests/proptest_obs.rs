@@ -17,6 +17,9 @@
 //! * Synthetic traces round-trip the writer → loader → checker path, and
 //!   the checker rejects tampered files (version bumps, missing header,
 //!   non-JSON lines) — no runtime needed.
+//! * Quantile sketches merge worker-count- and fold-order-invariantly:
+//!   any sharding of a value stream, merged in any order, reproduces the
+//!   sequential sketch bit-for-bit (serialized JSON equality).
 //!
 //! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
 
@@ -28,7 +31,9 @@ use fedcore::data::{self, Benchmark};
 use fedcore::exec::{DispatchPolicy, OverlapConfig};
 use fedcore::fl::{Checkpoint, CoresetMode, Engine, RunConfig, Strategy};
 use fedcore::metrics::RunResult;
+use fedcore::obs::health::HealthConfig;
 use fedcore::obs::report::Trace;
+use fedcore::obs::sketch::Sketch;
 use fedcore::obs::{Counter, Jsonl, Null, ObsConfig, Phase, Record, Recorder};
 use fedcore::runtime::Runtime;
 use fedcore::scenario::{ChurnModel, TraceSpec};
@@ -116,7 +121,7 @@ fn proptest_obs_jsonl_round_trips_and_checker_rejects_tampering() {
         match case % 3 {
             0 => {
                 // Schema version bump on a record line.
-                let tampered = text.replacen("\"v\":1,", "\"v\":99,", 2);
+                let tampered = text.replacen("\"v\":2,", "\"v\":99,", 2);
                 let t = Trace::from_text(&tampered).expect("still line-valid JSON");
                 assert!(t.check().is_err(), "version bump must fail the check");
             }
@@ -149,7 +154,7 @@ fn proptest_obs_null_recorder_is_inert_and_configs_build() {
         assert_eq!(ObsConfig::Off.path(), None);
 
         let path = scratch("build");
-        let cfg = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.5 };
+        let cfg = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.5, health: None };
         assert_eq!(cfg.path(), Some(path.display().to_string().as_str()));
         let rec = cfg.build(rng.next_u64(), 1 + rng.below(5)).expect("Jsonl builds");
         assert!(rec.enabled());
@@ -278,10 +283,11 @@ fn assert_model_outputs_bitwise_equal(a: &RunResult, b: &RunResult, what: &str) 
     );
 }
 
-/// The centerpiece: `Jsonl`-traced ≡ `Null`-recorder **bit-for-bit**
-/// across strategies, both dispatch policies, and overlap — and the
-/// trace itself passes the schema + nesting checks with one phase-table
-/// row per round.
+/// The centerpiece: `Jsonl`-traced — with **health sampling on** —
+/// ≡ `Null`-recorder **bit-for-bit** across strategies, both dispatch
+/// policies, and overlap; the trace itself passes the schema + nesting
+/// checks with one phase-table row per round and carries at least one
+/// schema-v2 `snapshot` record.
 #[test]
 fn proptest_obs_traced_run_is_bitwise_identical_to_untraced() {
     let Some(rt) = runtime_or_skip() else { return };
@@ -297,7 +303,16 @@ fn proptest_obs_traced_run_is_bitwise_identical_to_untraced() {
         let plain = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
 
         let path = scratch("rule7");
-        cfg.obs = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.15 };
+        // Health sampling at a random ledger size and cadence: the
+        // straggler forensics must stay on the write-only side of rule 7.
+        cfg.obs = ObsConfig::Jsonl {
+            path: path.display().to_string(),
+            scale: 0.15,
+            health: Some(HealthConfig {
+                top_k: 1 + rng.below(8),
+                snapshot_every: 1 + rng.below(3),
+            }),
+        };
         let traced = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
 
         let what = format!(
@@ -313,6 +328,17 @@ fn proptest_obs_traced_run_is_bitwise_identical_to_untraced() {
         trace.check().unwrap_or_else(|e| panic!("{what}: trace failed the check: {e:#}"));
         let table = trace.phase_table();
         assert_eq!(table.lines().count(), 1 + cfg.rounds, "{what}: table:\n{table}");
+        // The ledger always snapshots the final round, so a health-traced
+        // run must carry at least one v2 snapshot — and the report layer
+        // must render a leaderboard from it.
+        let snapshots = trace
+            .records
+            .iter()
+            .filter(|r| r.get("t").and_then(Json::as_str) == Some("snapshot"))
+            .count();
+        assert!(snapshots >= 1, "{what}: no snapshot records in a health-traced run");
+        let health = trace.health_report();
+        assert!(health.contains("straggler leaderboard"), "{what}: report:\n{health}");
         let _ = std::fs::remove_file(&path);
     });
 }
@@ -356,7 +382,13 @@ fn proptest_obs_trace_replays_deterministically_modulo_wall_clock() {
         let one_run = |tag: &str| {
             let path = scratch(tag);
             let mut cfg = cfg.clone();
-            cfg.obs = ObsConfig::Jsonl { path: path.display().to_string(), scale: 0.15 };
+            // Snapshot records carry no wall-clock fields, so they must
+            // replay verbatim along with everything else.
+            cfg.obs = ObsConfig::Jsonl {
+                path: path.display().to_string(),
+                scale: 0.15,
+                health: Some(HealthConfig::default()),
+            };
             Engine::new(&rt, &ds, cfg).unwrap().run().unwrap();
             let trace = fedcore::obs::report::load(&path).expect("trace written");
             let _ = std::fs::remove_file(&path);
@@ -369,5 +401,80 @@ fn proptest_obs_trace_replays_deterministically_modulo_wall_clock() {
         for (i, (x, y)) in sa.iter().zip(&sb).enumerate() {
             assert_eq!(x, y, "trace record {i} did not replay");
         }
+    });
+}
+
+// ---------- sketch merge invariance, no runtime ----------
+
+/// Serialize a sketch to its canonical JSON line — bitwise comparison
+/// surface for the merge properties (covers counts, count, min, max).
+fn sketch_line(s: &Sketch) -> String {
+    let mut line = String::new();
+    write_json(&s.to_json(), &mut line);
+    line
+}
+
+/// Worker-count and fold-order invariance: any partition of a value
+/// stream into shards, with the shard sketches merged in any order,
+/// reproduces the sequential single-sketch result bit-for-bit. This is
+/// what lets the health ledger aggregate identically no matter how the
+/// executor schedules clients onto workers.
+#[test]
+fn proptest_obs_sketch_merge_is_shard_and_order_invariant() {
+    check("obs-sketch-merge", env_seed(0x0B55), env_cases(60), |rng, _| {
+        let n = 1 + rng.below(400);
+        let values: Vec<f64> = (0..n)
+            .map(|_| {
+                match rng.below(10) {
+                    // Heavy tail: decades of scale, like straggler times.
+                    0 => rng.range_f64(1e-9, 1e-3),
+                    1 => rng.range_f64(1e3, 1e12),
+                    // Pathological inputs the sketch must absorb quietly.
+                    2 => [0.0, -1.0, f64::NAN, f64::INFINITY][rng.below(4)],
+                    _ => rng.range_f64(1e-3, 1e3),
+                }
+            })
+            .collect();
+
+        let mut sequential = Sketch::new();
+        for &v in &values {
+            sequential.insert(v);
+        }
+
+        // Random shard assignment at a random worker count, merged in a
+        // random order (shuffle), folded both left-to-right and reversed.
+        let workers = 1 + rng.below(8);
+        let mut shards = vec![Sketch::new(); workers];
+        for &v in &values {
+            shards[rng.below(workers)].insert(v);
+        }
+        rng.shuffle(&mut shards);
+        let mut forward = Sketch::new();
+        for s in &shards {
+            forward.merge(s);
+        }
+        let mut reverse = Sketch::new();
+        for s in shards.iter().rev() {
+            reverse.merge(s);
+        }
+
+        let want = sketch_line(&sequential);
+        assert_eq!(sketch_line(&forward), want, "{workers}-way shard merge diverged");
+        assert_eq!(sketch_line(&reverse), want, "reverse fold order diverged");
+
+        // Quantiles and the MAD band are functions of the sketch alone,
+        // so they agree exactly too.
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                sequential.quantile(q).map(f64::to_bits),
+                forward.quantile(q).map(f64::to_bits),
+                "quantile({q}) diverged"
+            );
+        }
+        assert_eq!(
+            sequential.median_mad().map(|(m, d)| (m.to_bits(), d.to_bits())),
+            reverse.median_mad().map(|(m, d)| (m.to_bits(), d.to_bits())),
+            "median/MAD diverged"
+        );
     });
 }

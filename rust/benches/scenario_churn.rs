@@ -3,7 +3,11 @@
 //! on/off churn, heavy-tailed dropout), via the `expt::run_scenario`
 //! runner. Each scenario runs twice — the second run both warms nothing
 //! (scenarios share one runtime) and proves the determinism contract:
-//! round records must replay bit-for-bit. Emits `BENCH_scenarios.json`.
+//! round records must replay bit-for-bit. A second phase races the three
+//! selection policies (baseline / FLANP adaptive participation /
+//! uptime-forecast) on the heavy-tail trace and asserts FLANP's
+//! time-to-target-loss never exceeds the baseline's — the FLANP claim
+//! (arXiv:2012.14453) at bench scale. Emits `BENCH_scenarios.json`.
 //!
 //! Knobs: `FEDCORE_SCALE`, `FEDCORE_ROUNDS`, `FEDCORE_WORKERS`,
 //! `FEDCORE_BENCH_OUT` (output path, default `BENCH_scenarios.json`).
@@ -14,7 +18,8 @@ use std::time::Instant;
 use fedcore::data::Benchmark;
 use fedcore::expt;
 use fedcore::fl::Strategy;
-use fedcore::scenario::{ChurnModel, TraceSpec};
+use fedcore::metrics::RunResult;
+use fedcore::scenario::{ChurnModel, FlanpConfig, SelectPolicy, TraceSpec};
 use fedcore::util::json::{write_json, Json};
 
 fn num(v: f64) -> Json {
@@ -53,6 +58,35 @@ fn scenarios() -> Vec<(&'static str, TraceSpec)> {
             ),
         ),
     ]
+}
+
+/// Heavy-tail trace for the selection race — same shape as the sweep's
+/// `heavy_tail` scenario so the race rides the workload already proven
+/// deterministic above.
+fn race_trace() -> TraceSpec {
+    TraceSpec::from_model(ChurnModel::HeavyTail { mean_on: 6.0, min_off: 0.5, alpha: 1.1 }, 48.0, 11)
+}
+
+/// The three cohort policies under race, with race-tuned FLANP knobs: a
+/// small fast prefix that widens aggressively once the loss stalls.
+fn race_policies() -> Vec<(&'static str, SelectPolicy)> {
+    vec![
+        ("baseline", SelectPolicy::Baseline),
+        ("flanp", SelectPolicy::Flanp(FlanpConfig { start: 4, factor: 2.0, threshold: 0.5 })),
+        ("forecast", SelectPolicy::Forecast { bias: 1.0 }),
+    ]
+}
+
+/// Simulated seconds until `train_loss` first reaches `target`. Every
+/// racer's final loss is `<= target` by construction (the target is the
+/// worst final loss in the field), so this always lands on a round.
+fn time_to_target(result: &RunResult, target: f64) -> f64 {
+    for rec in &result.rounds {
+        if rec.train_loss <= target {
+            return rec.sim_elapsed;
+        }
+    }
+    result.rounds.last().map(|r| r.sim_elapsed).unwrap_or(0.0)
 }
 
 fn main() {
@@ -119,6 +153,52 @@ fn main() {
         ]));
     }
 
+    // Selection-policy race on the heavy-tail trace: same workload, three
+    // cohort policies, scored by simulated time to the field's worst
+    // final loss. FLANP's fastest-prefix start must not lose to the
+    // baseline in simulated time — the adaptive-participation claim.
+    println!("\n== selection race: heavy_tail ==");
+    println!("{:<12} {:>8} {:>12} {:>12} {:>11}", "policy", "seconds", "final loss", "t_target(s)", "sim total(s)");
+    let mut racers = Vec::new();
+    for (name, pol) in race_policies() {
+        let t0 = Instant::now();
+        let report =
+            expt::run_scenario_with(&rt, bench, strategy, 30.0, SEED, race_trace(), |run| {
+                run.select = pol;
+            })
+            .expect("selection race run");
+        racers.push((name, report, t0.elapsed().as_secs_f64()));
+    }
+    let target = racers
+        .iter()
+        .filter_map(|(_, r, _)| r.result.rounds.last().map(|rec| rec.train_loss))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut race_rows = Vec::new();
+    let mut times = BTreeMap::new();
+    for (name, report, secs) in &racers {
+        let rounds = &report.result.rounds;
+        let final_loss = rounds.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+        let sim_total = rounds.last().map(|r| r.sim_elapsed).unwrap_or(0.0);
+        let t_target = time_to_target(&report.result, target);
+        times.insert(*name, t_target);
+        println!("{:<12} {:>8.2} {:>12.4} {:>12.2} {:>11.2}", name, secs, final_loss, t_target, sim_total);
+        race_rows.push(obj(vec![
+            ("policy", Json::Str((*name).into())),
+            ("seconds", num(*secs)),
+            ("final_loss", num(final_loss)),
+            ("time_to_target", num(t_target)),
+            ("sim_total", num(sim_total)),
+            ("best_accuracy_pct", num(100.0 * report.result.best_accuracy())),
+            ("mean_online_fraction", num(report.mean_online_fraction)),
+        ]));
+    }
+    assert!(
+        times["flanp"] <= times["baseline"],
+        "FLANP lost the heavy_tail race: time_to_target {} > baseline {}",
+        times["flanp"],
+        times["baseline"]
+    );
+
     let out = obj(vec![
         ("bench", Json::Str("scenario_churn".into())),
         ("benchmark", Json::Str(bench.label())),
@@ -132,6 +212,14 @@ fn main() {
             ),
         ),
         ("results", Json::Arr(rows)),
+        (
+            "selection_race",
+            obj(vec![
+                ("scenario", Json::Str("heavy_tail".into())),
+                ("target_loss", num(target)),
+                ("results", Json::Arr(race_rows)),
+            ]),
+        ),
     ]);
     let mut text = String::new();
     write_json(&out, &mut text);

@@ -52,6 +52,38 @@ pub fn aggregate_weighted(locals: &[&[f32]], weights: &[f64]) -> Option<Vec<f32>
     Some(acc.into_iter().map(|a| (a / total) as f32).collect())
 }
 
+/// Straggler-distillation correction (arXiv:2403.09086 shape): blend
+/// weight-decayed past-staleness updates into the freshly aggregated
+/// model *after* the main aggregate, instead of discarding them.
+///
+/// The current model carries unit weight; each distilled update `uⱼ`
+/// carries its (already decayed) weight `λⱼ`, so the result is
+/// `(w + Σ λⱼ uⱼ) / (1 + Σ λⱼ)`, computed in f64 in caller order like
+/// [`aggregate_weighted`]. With no updates — the `distill_weight = 0`
+/// degenerate path never collects any — the input is returned
+/// **unchanged, bitwise**: not a single f32 operation runs, which is
+/// what lets the engine's drop path stay byte-identical
+/// (`rust/tests/proptest_select.rs`). Non-positive or non-finite
+/// weights contribute nothing (their updates are skipped).
+pub fn apply_distilled(current: &[f32], updates: &[(&[f32], f64)]) -> Vec<f32> {
+    if updates.is_empty() {
+        return current.to_vec();
+    }
+    let mut acc: Vec<f64> = current.iter().map(|&p| p as f64).collect();
+    let mut total = 1.0f64;
+    for (u, w) in updates {
+        assert_eq!(u.len(), acc.len(), "parameter dimension mismatch");
+        if !(*w > 0.0 && w.is_finite()) {
+            continue;
+        }
+        total += w;
+        for (a, &p) in acc.iter_mut().zip(*u) {
+            *a += w * (p as f64);
+        }
+    }
+    acc.into_iter().map(|a| (a / total) as f32).collect()
+}
+
 /// The weighted mean behind the [`Aggregator`] trait: exactly
 /// [`aggregate_weighted`], no state, no accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -126,5 +158,40 @@ mod tests {
         // Empty round: the server keeps its model.
         let (none, _) = Mean.aggregate_round(&[0.0; 3], &[], &[]);
         assert!(none.is_none());
+    }
+
+    #[test]
+    fn distilled_empty_is_bitwise_identity() {
+        let current = vec![0.1f32, -2.5, 3.75];
+        let out = apply_distilled(&current, &[]);
+        for (a, b) in current.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits(), "no updates must be a no-op");
+        }
+    }
+
+    #[test]
+    fn distilled_blends_toward_updates() {
+        let current = vec![0.0f32];
+        let u = vec![10.0f32];
+        // (0·1 + 10·0.5) / 1.5 = 10/3
+        let out = apply_distilled(&current, &[(&u, 0.5)]);
+        assert!((out[0] - 10.0 / 1.5).abs() < 1e-6);
+        // A lighter weight pulls less.
+        let lighter = apply_distilled(&current, &[(&u, 0.25)]);
+        assert!(lighter[0] < out[0]);
+    }
+
+    #[test]
+    fn distilled_skips_nonpositive_and_nonfinite_weights() {
+        let current = vec![1.0f32, 2.0];
+        let u = vec![100.0f32, 100.0];
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let out = apply_distilled(&current, &[(&u, w)]);
+            // Degenerate weights contribute nothing; the 1/1 blend is
+            // numerically the identity in f64 -> f32 round-trip.
+            for (a, b) in current.iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "weight {w} must be inert");
+            }
+        }
     }
 }

@@ -9,6 +9,10 @@
 //! * [`Mean`] — the classic weighted FedAvg mean ([`aggregate`] /
 //!   [`aggregate_weighted`] live here now; `fl` re-exports them), the
 //!   reference semantics every other policy degenerates to.
+//!   [`apply_distilled`] rides alongside: the straggler-distillation
+//!   correction that blends weight-decayed past-staleness updates into
+//!   the model *after* the main aggregate (`--distill-weight`; inert at
+//!   weight 0).
 //! * [`Buffered`] — FedBuff-style server buffering: accumulate K
 //!   (staleness-weighted) updates across rounds, apply them as one
 //!   weighted mean with server momentum β. The degenerate policy
@@ -40,7 +44,7 @@ pub mod robust;
 pub mod tree;
 
 pub use buffered::Buffered;
-pub use mean::{aggregate, aggregate_weighted, Mean};
+pub use mean::{aggregate, aggregate_weighted, apply_distilled, Mean};
 pub use quorum::AdaptiveQuorum;
 pub use robust::{CoordinateMedian, NormClip, TrimmedMean};
 pub use tree::{TreeAggregator, TreeSpec};

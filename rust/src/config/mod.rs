@@ -10,7 +10,7 @@ use crate::coreset::Method;
 use crate::data::Benchmark;
 use crate::exec::OverlapConfig;
 use crate::fl::{RunConfig, Strategy};
-use crate::scenario::{CorruptionKind, CorruptionSpec, TraceSpec};
+use crate::scenario::{CorruptionKind, CorruptionSpec, FlanpConfig, SelectPolicy, TraceSpec};
 use crate::util::toml::TomlDoc;
 
 /// One experiment = benchmark + FL hyper-parameters + generation scale.
@@ -295,6 +295,70 @@ impl ExperimentConfig {
                 return Err(anyhow!("[fl] flaky_boost must be finite and >= 0, got {v}"));
             }
             cfg.run.flaky_boost = v;
+        }
+        // Cohort-selection policy: `select = "..."` picks, the knob keys
+        // parameterize; a knob key alone implies its policy, and a knob
+        // aimed at a different policy is a config bug (mirroring the
+        // overlap/agg sections' semantics).
+        let select_name = doc.get("fl", "select").and_then(|v| v.as_str());
+        let flanp_start = usize_of("flanp_start");
+        let flanp_factor = doc.get("fl", "flanp_factor").and_then(|v| v.as_f64());
+        let flanp_threshold = doc.get("fl", "flanp_threshold").and_then(|v| v.as_f64());
+        let forecast_bias = doc.get("fl", "forecast_bias").and_then(|v| v.as_f64());
+        let any_flanp_key =
+            flanp_start.is_some() || flanp_factor.is_some() || flanp_threshold.is_some();
+        let implied_select = match (select_name, any_flanp_key, forecast_bias) {
+            (Some(name), _, _) => Some(
+                SelectPolicy::parse(name)
+                    .ok_or_else(|| anyhow!("unknown selection policy '{name}'"))?,
+            ),
+            (None, true, _) => Some(SelectPolicy::Flanp(FlanpConfig::default())),
+            (None, false, Some(_)) => Some(SelectPolicy::Forecast { bias: 1.0 }),
+            (None, false, None) => None,
+        };
+        if let Some(mut pol) = implied_select {
+            match &mut pol {
+                SelectPolicy::Flanp(fc) => {
+                    if let Some(v) = flanp_start {
+                        fc.start = v;
+                    }
+                    if let Some(v) = flanp_factor {
+                        fc.factor = v;
+                    }
+                    if let Some(v) = flanp_threshold {
+                        fc.threshold = v;
+                    }
+                }
+                SelectPolicy::Forecast { bias } => {
+                    if let Some(v) = forecast_bias {
+                        *bias = v;
+                    }
+                }
+                SelectPolicy::Baseline => {}
+            }
+            if any_flanp_key && !matches!(pol, SelectPolicy::Flanp(_)) {
+                return Err(anyhow!(
+                    "[fl] flanp_start/flanp_factor/flanp_threshold only apply to select = \"flanp\", got \"{}\"",
+                    pol.label()
+                ));
+            }
+            if forecast_bias.is_some() && !matches!(pol, SelectPolicy::Forecast { .. }) {
+                return Err(anyhow!(
+                    "[fl] forecast_bias only applies to select = \"forecast\", got \"{}\"",
+                    pol.label()
+                ));
+            }
+            pol.validate().map_err(|e| anyhow!("[fl] selection: {e}"))?;
+            cfg.run.select = pol;
+        }
+        // Straggler distillation composes with any selection policy but
+        // needs the overlapped pipeline (the engine enforces that once
+        // flags/env have had their say on `overlap`).
+        if let Some(v) = doc.get("fl", "distill_weight").and_then(|v| v.as_f64()) {
+            if !(v >= 0.0 && v.is_finite()) {
+                return Err(anyhow!("[fl] distill_weight must be finite and >= 0, got {v}"));
+            }
+            cfg.run.distill_weight = v;
         }
         // [scenario]: trace-driven client availability — either a pointer
         // to a trace file (`trace = "examples/traces/markov_churn.toml"`)
@@ -623,6 +687,55 @@ dispatch = "work_stealing"
         let bad = "[experiment]\nbenchmark = \"mnist\"\n\
                    [fl]\nagg_tree = 4\nagg_root = \"nope\"\n";
         assert!(ExperimentConfig::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn select_section_roundtrip() {
+        use crate::scenario::{FlanpConfig, SelectPolicy};
+        let text = "[experiment]\nbenchmark = \"mnist\"\n\
+                    [fl]\nselect = \"flanp\"\nflanp_start = 4\nflanp_factor = 3.0\n\
+                    flanp_threshold = 0.05\noverlap = true\ndistill_weight = 0.5\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.run.select,
+            SelectPolicy::Flanp(FlanpConfig { start: 4, factor: 3.0, threshold: 0.05 })
+        );
+        assert_eq!(cfg.run.distill_weight, 0.5);
+
+        // Knob keys alone imply their policy (like the overlap/agg keys)…
+        let implied = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nflanp_start = 16\n";
+        let cfg = ExperimentConfig::from_toml(implied).unwrap();
+        assert_eq!(
+            cfg.run.select,
+            SelectPolicy::Flanp(FlanpConfig { start: 16, ..Default::default() })
+        );
+        let implied = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nforecast_bias = 0.5\n";
+        let cfg = ExperimentConfig::from_toml(implied).unwrap();
+        assert_eq!(cfg.run.select, SelectPolicy::Forecast { bias: 0.5 });
+
+        // …no keys ⇒ the baseline sampler, distillation off.
+        let plain = ExperimentConfig::from_toml("[experiment]\nbenchmark = \"mnist\"\n").unwrap();
+        assert_eq!(plain.run.select, SelectPolicy::Baseline);
+        assert_eq!(plain.run.distill_weight, 0.0);
+
+        // Invalid values are hard errors.
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nselect = \"nope\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\nflanp_factor = 1.0\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let bad = "[experiment]\nbenchmark = \"mnist\"\n[fl]\ndistill_weight = -0.5\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // Knobs aimed at a different policy are hard errors, not silent
+        // no-ops.
+        let mismatch = "[experiment]\nbenchmark = \"mnist\"\n\
+                        [fl]\nselect = \"baseline\"\nflanp_start = 4\n";
+        assert!(ExperimentConfig::from_toml(mismatch).is_err());
+        let mismatch = "[experiment]\nbenchmark = \"mnist\"\n\
+                        [fl]\nselect = \"flanp\"\nforecast_bias = 0.5\n";
+        assert!(ExperimentConfig::from_toml(mismatch).is_err());
+        let ambiguous = "[experiment]\nbenchmark = \"mnist\"\n\
+                         [fl]\nflanp_start = 4\nforecast_bias = 0.5\n";
+        assert!(ExperimentConfig::from_toml(ambiguous).is_err());
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! ledger and are folded into a *later* round's aggregation as delayed
 //! gradients, down-weighted by staleness (`1/(1+s)^alpha`, following
 //! "Stragglers Are Not Disaster", arXiv:2102.06329) and discarded outright
-//! once staleness exceeds a hard cap. The fold itself goes through the
+//! once staleness exceeds a hard cap. (With straggler distillation enabled
+//! — `RunConfig::distill_weight > 0` — the engine replaces that discard
+//! path: past-cap updates fold into a decayed post-aggregate correction
+//! instead, see [`crate::scenario::selection`]; the ledger mechanics here
+//! are unchanged.) The fold itself goes through the
 //! engine's configured [`crate::agg::Aggregator`] — the weighted mean by
 //! default, or FedBuff-style buffering / robust policies — and
 //! [`crate::agg::AdaptiveQuorum`] can tighten or relax `quorum` per round

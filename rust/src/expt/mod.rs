@@ -176,10 +176,28 @@ pub fn run_scenario(
     seed: u64,
     spec: TraceSpec,
 ) -> Result<ScenarioReport> {
+    run_scenario_with(rt, bench, strategy, straggler_pct, seed, spec, |_| {})
+}
+
+/// [`run_scenario`] with a configuration hook: `mutate` edits the
+/// [`RunConfig`] (selection policy, distillation weight, overlap,
+/// aggregator, …) after the trace is attached and before the engine is
+/// built, so the churn bench and the selection harness can race cohort
+/// policies on one scenario without duplicating the report plumbing.
+pub fn run_scenario_with(
+    rt: &Runtime,
+    bench: Benchmark,
+    strategy: Strategy,
+    straggler_pct: f64,
+    seed: u64,
+    spec: TraceSpec,
+    mutate: impl Fn(&mut RunConfig),
+) -> Result<ScenarioReport> {
     let ds = Arc::new(data::generate(bench, bench_scale(bench), &rt.manifest().vocab, 7));
     let mut cfg = bench_cfg(bench, straggler_pct, seed).with_strategy(strategy);
     let scenario = spec.label().to_string();
     cfg.run.trace = Some(spec);
+    mutate(&mut cfg.run);
 
     let engine = Engine::new(rt, &ds, cfg.run.clone())?;
     let trace = engine.trace().cloned();

@@ -39,7 +39,9 @@ use crate::exec::{
 use crate::metrics::{RoundRecord, RunResult};
 use crate::obs::{Counter, ObsConfig, Phase, Record, Recorder};
 use crate::runtime::{EvalOutput, ModelInfo, Runtime};
-use crate::scenario::{AvailabilityTrace, CorruptionSpec, TraceSpec};
+use crate::scenario::{
+    forecast_weights, AvailabilityTrace, CorruptionSpec, FlanpState, SelectPolicy, TraceSpec,
+};
 use crate::sim::{clock::RoundTiming, Fleet, SimClock};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -147,6 +149,23 @@ pub struct RunConfig {
     /// clients so their data is not starved by churn. `0.0` (default)
     /// keeps selection byte-identical to the unboosted path.
     pub flaky_boost: f64,
+    /// Cohort-selection policy (see [`crate::scenario::selection`]):
+    /// FLANP adaptive participation samples from a cost-ranked fastest
+    /// prefix that widens on loss stalls; uptime-forecast selection
+    /// biases weights toward clients forecast to survive the round. The
+    /// default [`SelectPolicy::Baseline`] — and every policy's
+    /// degenerate knob setting (`flanp_start` ≥ fleet,
+    /// `forecast_bias = 0`) — is byte-identical to the classic sampler
+    /// (`rust/tests/proptest_select.rs`).
+    pub select: SelectPolicy,
+    /// Straggler distillation (arXiv:2403.09086 shape): with `overlap`
+    /// set and this weight > 0, delayed updates past `max_staleness`
+    /// stop taking the drop path and instead fold into an auxiliary
+    /// correction applied after the main aggregate
+    /// ([`crate::agg::apply_distilled`]), at
+    /// `distill_weight · staleness-decay` each. `0.0` (default) is the
+    /// existing drop path, bit-for-bit.
+    pub distill_weight: f64,
     /// Print a progress line per round.
     pub verbose: bool,
     /// Structured observability sink (see [`crate::obs`]). The default
@@ -182,6 +201,8 @@ impl Default for RunConfig {
             adaptive_quorum: false,
             corruption: None,
             flaky_boost: 0.0,
+            select: SelectPolicy::Baseline,
+            distill_weight: 0.0,
             verbose: false,
             obs: ObsConfig::Off,
         }
@@ -470,6 +491,18 @@ impl<'a, E: Executor> Engine<'a, E> {
         if !(cfg.flaky_boost >= 0.0 && cfg.flaky_boost.is_finite()) {
             return Err(anyhow!("flaky boost must be finite and >= 0, got {}", cfg.flaky_boost));
         }
+        cfg.select.validate().context("selection policy")?;
+        if !(cfg.distill_weight >= 0.0 && cfg.distill_weight.is_finite()) {
+            return Err(anyhow!(
+                "distill weight must be finite and >= 0, got {}",
+                cfg.distill_weight
+            ));
+        }
+        if cfg.distill_weight > 0.0 && cfg.overlap.is_none() {
+            return Err(anyhow!(
+                "distill weight only applies to the overlapped pipeline (set overlap)"
+            ));
+        }
         if cfg.coreset_refresh == 0 {
             return Err(anyhow!("coreset refresh must be >= 1 (1 = rebuild every round)"));
         }
@@ -618,6 +651,34 @@ impl<'a, E: Executor> Engine<'a, E> {
             }
             _ => weights,
         };
+        // Uptime-forecast selection (`--select forecast`): bias the
+        // weights toward clients whose availability history forecasts
+        // they will survive the round. The scoring streams one client at
+        // a time straight off the trace (it never materializes a dense
+        // schedule — the PR-8 O(cohort) discipline). Bias 0 — and
+        // traceless runs — keep the exact original weights, bitwise.
+        let weights = match (&self.trace, &cfg.select) {
+            (Some(trace), SelectPolicy::Forecast { bias }) if *bias > 0.0 => {
+                forecast_weights(&weights, |i| trace.uptime(i), *bias)
+            }
+            _ => weights,
+        };
+        // FLANP adaptive participation (`--select flanp`): rank the
+        // fleet once by the strategy's deterministic simulated plan cost
+        // — the same numbers dispatch schedules from — and sample each
+        // round from the fastest prefix only, widening it on loss
+        // stalls. A whole-fleet prefix (the degenerate `start ≥ fleet`)
+        // admits every client, and the streamed selector then consumes
+        // exactly the baseline sampler's RNG.
+        let mut flanp: Option<FlanpState> = match &cfg.select {
+            SelectPolicy::Flanp(fc) => {
+                let costs: Vec<f64> = (0..self.fleet.num_clients())
+                    .map(|i| cfg.strategy.plan(&self.fleet, i).sim_time(&self.fleet, i))
+                    .collect();
+                Some(FlanpState::new(&costs, *fc))
+            }
+            _ => None,
+        };
         let mut select_rng = Rng::new(cfg.seed).split(0x5E1EC7);
         let client_root = Rng::new(cfg.seed).split(0xC11E47);
         let mut clock = SimClock::new(self.fleet.deadline);
@@ -694,15 +755,41 @@ impl<'a, E: Executor> Engine<'a, E> {
             //     clients the availability trace reports online at the
             //     round's start (everyone, when no trace is configured) ---
             let t_now = clock.now();
-            let selected = match &self.trace {
-                None => select_rng.weighted_with_replacement(&weights, cfg.clients_per_round),
+            let selected = match (&self.trace, &flanp) {
+                (None, None) => {
+                    select_rng.weighted_with_replacement(&weights, cfg.clients_per_round)
+                }
+                // FLANP restricts the candidate set to the active
+                // fastest prefix; with no trace the prefix is the only
+                // predicate. The whole-fleet prefix makes it all-true,
+                // which the streamed selector reduces to the
+                // unrestricted sampler bit-for-bit (RNG included).
+                (None, Some(st)) => select_available_streamed(
+                    &mut select_rng,
+                    |i| weights[i],
+                    |i| st.admits(i),
+                    self.fleet.num_clients(),
+                    cfg.clients_per_round,
+                ),
                 // Streamed over the trace — no fleet-sized online list is
                 // ever built; bit-identical to the materialized
                 // `online_clients` + `select_available` pipeline.
-                Some(trace) => select_available_streamed(
+                (Some(trace), None) => select_available_streamed(
                     &mut select_rng,
                     |i| weights[i],
                     |i| trace.is_online(i, t_now),
+                    self.fleet.num_clients(),
+                    cfg.clients_per_round,
+                ),
+                // Both: a client is eligible when it is in the active
+                // prefix AND online. The prefix test is checked first
+                // (it is a vector lookup); the degenerate prefix leaves
+                // the online predicate — and the RNG draw sequence —
+                // exactly the baseline's.
+                (Some(trace), Some(st)) => select_available_streamed(
+                    &mut select_rng,
+                    |i| weights[i],
+                    |i| st.admits(i) && trace.is_online(i, t_now),
                     self.fleet.num_clients(),
                     cfg.clients_per_round,
                 ),
@@ -894,6 +981,12 @@ impl<'a, E: Executor> Engine<'a, E> {
             let mut stale_folded = 0usize;
             let mut stale_discarded = 0usize;
             let mut stale_weight = 0.0f64;
+            let mut distilled = 0usize;
+            // Straggler-distillation collection: past-staleness arrivals'
+            // (params, decayed weight) pairs, folded into the model after
+            // the main aggregate. Stays empty — zero f32 ops — on the
+            // default `distill_weight = 0` drop path.
+            let mut distill: Vec<(&[f32], f64)> = Vec::new();
             let arrived = in_flight.take_arrived(agg_instant);
             for u in &arrived {
                 let ov = overlap.expect("in-flight updates only exist in overlapped mode");
@@ -910,6 +1003,30 @@ impl<'a, E: Executor> Engine<'a, E> {
                     if traced {
                         obs.record(&Record::Event {
                             name: "stale_fold",
+                            round: r,
+                            fields: vec![
+                                ("origin_round", Json::Num(u.origin_round as f64)),
+                                ("client", Json::Num(u.client as f64)),
+                                ("staleness", Json::Num(staleness as f64)),
+                                ("weight", Json::Num(w)),
+                            ],
+                        });
+                    }
+                } else if cfg.distill_weight > 0.0 {
+                    // Straggler distillation: the update is too stale for
+                    // the main aggregate but not worthless — continue the
+                    // staleness-decay curve past the cap, scale by the
+                    // distill weight, and fold it into the post-aggregate
+                    // correction instead of dropping it.
+                    let w = cfg.distill_weight * ov.weight(staleness);
+                    distill.push((u.params.as_slice(), w));
+                    distilled += 1;
+                    if let Some(led) = health.as_mut() {
+                        led.observe_stale(u.client, staleness);
+                    }
+                    if traced {
+                        obs.record(&Record::Event {
+                            name: "distill_fold",
                             round: r,
                             fields: vec![
                                 ("origin_round", Json::Num(u.origin_round as f64)),
@@ -941,7 +1058,14 @@ impl<'a, E: Executor> Engine<'a, E> {
                 // Bound the ledger: anything that can no longer fold
                 // within the staleness cap — or is still in flight after
                 // the final round — is discarded and accounted now.
-                let mut doomed = in_flight.discard_doomed(r, ov.max_staleness);
+                // Distillation changes what "doomed" means: past-staleness
+                // arrivals fold into the correction instead of dropping,
+                // so nothing is doomed until the run ends.
+                let mut doomed = if cfg.distill_weight > 0.0 {
+                    0
+                } else {
+                    in_flight.discard_doomed(r, ov.max_staleness)
+                };
                 if r + 1 == cfg.rounds {
                     doomed += in_flight.discard_all();
                 }
@@ -963,6 +1087,14 @@ impl<'a, E: Executor> Engine<'a, E> {
             let (new_params, agg_stats) = agg.aggregate_round(&params, &locals, &fold_weights);
             if let Some(p) = new_params {
                 params = p;
+            }
+            if !distill.is_empty() {
+                // The straggler-distillation correction: blend the
+                // collected past-staleness updates into the freshly
+                // aggregated model (before any end-of-run flush). RNG-free
+                // and gated on a non-empty collection, so the default drop
+                // path never touches the parameters.
+                params = crate::agg::apply_distilled(&params, &distill);
             }
             if r + 1 == cfg.rounds {
                 // End of run: buffered policies flush whatever they still
@@ -1011,6 +1143,24 @@ impl<'a, E: Executor> Engine<'a, E> {
             } else {
                 crate::util::stats::mean(&compressions)
             };
+
+            // FLANP: widen the active prefix when this round's loss
+            // improvement stalls. Pure arithmetic on the recorded loss —
+            // no RNG — so seed replay holds; the whole-fleet prefix never
+            // widens, keeping the degenerate run's column at zero.
+            let mut cohort_widened = 0usize;
+            if let Some(st) = flanp.as_mut() {
+                if st.observe(train_loss) {
+                    cohort_widened = 1;
+                    if traced {
+                        obs.record(&Record::Event {
+                            name: "flanp_widen",
+                            round: r,
+                            fields: vec![("active", Json::Num(st.active() as f64))],
+                        });
+                    }
+                }
+            }
 
             let do_eval = r % cfg.eval_every == 0 || r + 1 == cfg.rounds;
             let mut eval_wall: Option<(u64, u64)> = None;
@@ -1098,7 +1248,7 @@ impl<'a, E: Executor> Engine<'a, E> {
                 if let Some(wall) = eval_wall {
                     obs.record(&span(Phase::Eval, wall, (agg_instant, agg_instant)));
                 }
-                let tallies: [(Counter, usize); 10] = [
+                let tallies: [(Counter, usize); 12] = [
                     (Counter::Dropped, dropped),
                     (Counter::ChurnDropped, churn_dropped),
                     (Counter::StaleFolded, stale_folded),
@@ -1109,6 +1259,8 @@ impl<'a, E: Executor> Engine<'a, E> {
                     (Counter::Steals, dispatch.steals),
                     (Counter::CoresetClients, coreset_clients),
                     (Counter::CoresetWarm, coreset_warm),
+                    (Counter::CohortWidened, cohort_widened),
+                    (Counter::Distilled, distilled),
                 ];
                 for (counter, value) in tallies {
                     obs.record(&Record::CounterVal { counter, round: r, value: value as u64 });
@@ -1198,6 +1350,8 @@ impl<'a, E: Executor> Engine<'a, E> {
                 coreset_clients,
                 coreset_warm,
                 mean_compression,
+                distilled,
+                cohort_widened,
             });
         }
 

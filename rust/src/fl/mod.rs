@@ -2,8 +2,9 @@
 //!
 //! * [`plan`] — per-strategy local-work planning (pure logic).
 //! * [`client`] — plan execution against the PJRT runtime.
-//! * [`engine`] — the round loop: selection, aggregation, metrics;
-//!   dispatches client work through a [`crate::exec::Executor`]
+//! * [`engine`] — the round loop: selection (pluggable straggler-aware
+//!   cohort policies — [`crate::scenario::selection`]), aggregation,
+//!   metrics; dispatches client work through a [`crate::exec::Executor`]
 //!   (sequential or sharded across runtime-pinned workers).
 
 pub mod checkpoint;

@@ -77,6 +77,20 @@ fn cli() -> Cli {
     .opt("corrupt", "", "scenario: corrupt a client fraction's updates: noise | sign_flip")
     .opt("corrupt-frac", "0.1", "scenario: fraction of clients corrupted")
     .opt("flaky-boost", "0", "selection: weight boost for low-uptime clients (needs --trace)")
+    .opt(
+        "select",
+        "",
+        "cohort selection policy: baseline | flanp | forecast (env: FEDCORE_SELECT)",
+    )
+    .opt("flanp-start", "0", "flanp: initial fastest-prefix size (0 = default 8)")
+    .opt("flanp-factor", "2", "flanp: geometric prefix-widening factor (> 1)")
+    .opt("flanp-threshold", "0.01", "flanp: relative loss-improvement stall threshold")
+    .opt("forecast-bias", "1", "forecast: uptime bias strength (0 = baseline weights)")
+    .opt(
+        "distill-weight",
+        "0",
+        "overlap: fold past-staleness updates at this weight instead of dropping them (0 = drop)",
+    )
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("out", "", "CSV output path (empty = stdout summary only)")
     .opt("config", "", "TOML config file (configs/*.toml); CLI flags override")
@@ -260,6 +274,78 @@ fn experiment_from_args(a: &Args) -> Result<ExperimentConfig> {
     if a.get_f64("flaky-boost") > 0.0 {
         cfg.run.flaky_boost = a.get_f64("flaky-boost");
     }
+    // Cohort selection policy: `--select` picks, the knob flags
+    // parameterize; a knob flag alone implies its policy (like the [fl]
+    // keys), and FEDCORE_SELECT seeds flagless, fileless runs (like
+    // FEDCORE_DISPATCH).
+    let flanp_given = explicit("flanp-start", "0")
+        || explicit("flanp-factor", "2")
+        || explicit("flanp-threshold", "0.01");
+    let select_given =
+        !a.get("select").is_empty() || flanp_given || explicit("forecast-bias", "1");
+    if select_given {
+        // Base policy: an explicit --select wins; otherwise a config
+        // file's [fl] select stands (so knob flags tune it rather than
+        // resetting it).
+        let mut pol = if !a.get("select").is_empty() {
+            fedcore::scenario::SelectPolicy::parse(a.get("select"))
+                .ok_or_else(|| anyhow!("unknown selection policy '{}'", a.get("select")))?
+        } else {
+            cfg.run.select
+        };
+        if pol == fedcore::scenario::SelectPolicy::Baseline && a.get("select").is_empty() {
+            if flanp_given {
+                pol = fedcore::scenario::SelectPolicy::Flanp(Default::default());
+            } else if explicit("forecast-bias", "1") {
+                pol = fedcore::scenario::SelectPolicy::Forecast { bias: 1.0 };
+            }
+        }
+        match &mut pol {
+            fedcore::scenario::SelectPolicy::Flanp(fc) => {
+                if explicit("flanp-start", "0") {
+                    fc.start = a.get_usize("flanp-start");
+                }
+                if explicit("flanp-factor", "2") {
+                    fc.factor = a.get_f64("flanp-factor");
+                }
+                if explicit("flanp-threshold", "0.01") {
+                    fc.threshold = a.get_f64("flanp-threshold");
+                }
+            }
+            fedcore::scenario::SelectPolicy::Forecast { bias } => {
+                if explicit("forecast-bias", "1") {
+                    *bias = a.get_f64("forecast-bias");
+                }
+            }
+            fedcore::scenario::SelectPolicy::Baseline => {}
+        }
+        // A knob aimed at a different policy is a config bug, not a
+        // silent no-op.
+        if flanp_given && !matches!(pol, fedcore::scenario::SelectPolicy::Flanp(_)) {
+            return Err(anyhow!(
+                "--flanp-start/--flanp-factor/--flanp-threshold only apply to the flanp \
+                 selection policy, got {}",
+                pol.label()
+            ));
+        }
+        if explicit("forecast-bias", "1")
+            && !matches!(pol, fedcore::scenario::SelectPolicy::Forecast { .. })
+        {
+            return Err(anyhow!(
+                "--forecast-bias only applies to the forecast selection policy, got {}",
+                pol.label()
+            ));
+        }
+        pol.validate()?;
+        cfg.run.select = pol;
+    } else if !from_config {
+        cfg.run.select = fedcore::scenario::SelectPolicy::from_env();
+    }
+    // Straggler distillation: composes with any selection policy; the
+    // engine rejects it without --overlap.
+    if a.get_f64("distill-weight") > 0.0 {
+        cfg.run.distill_weight = a.get_f64("distill-weight");
+    }
     if !a.get("corrupt").is_empty() {
         let kind = fedcore::scenario::CorruptionKind::parse(a.get("corrupt"))
             .ok_or_else(|| anyhow!("unknown corruption kind '{}'", a.get("corrupt")))?;
@@ -386,6 +472,22 @@ fn cmd_run(a: &Args) -> Result<()> {
                 .clip_norm
                 .map(|c| format!(" | clip norm {c}"))
                 .unwrap_or_default(),
+        );
+    }
+    match &cfg.run.select {
+        fedcore::scenario::SelectPolicy::Baseline => {}
+        fedcore::scenario::SelectPolicy::Flanp(fc) => eprintln!(
+            "selection: flanp | start prefix {} | widen ×{:.2} below {:.3} improvement",
+            fc.start, fc.factor, fc.threshold,
+        ),
+        fedcore::scenario::SelectPolicy::Forecast { bias } => {
+            eprintln!("selection: forecast | uptime bias {bias:.2}")
+        }
+    }
+    if cfg.run.distill_weight > 0.0 {
+        eprintln!(
+            "distillation: past-staleness updates fold at weight {:.2} × decay",
+            cfg.run.distill_weight,
         );
     }
     if let Some(spec) = &cfg.run.corruption {

@@ -79,6 +79,17 @@ pub struct RoundRecord {
     pub coreset_warm: usize,
     /// Mean coreset compression ratio b/m over coreset clients (1.0 = none).
     pub mean_compression: f64,
+    /// Past-staleness delayed updates folded into this round's
+    /// straggler-distillation correction instead of being discarded
+    /// (`distill_weight > 0`; always 0 on the default drop path). This
+    /// feeds the model — it appears in [`RunResult::to_csv`] like
+    /// `stale_folded` — and the degenerate config keeps it at 0, which
+    /// is what makes the model CSV selection-policy-invariant there.
+    pub distilled: usize,
+    /// 1 when FLANP widened the active cohort prefix after this round's
+    /// loss stalled (`--select flanp`), else 0. A model column like
+    /// `distilled`: the degenerate whole-fleet prefix never widens.
+    pub cohort_widened: usize,
 }
 
 /// A complete run: strategy + benchmark labels, the per-round trace, and
@@ -182,12 +193,12 @@ impl RunResult {
     /// diagnostics live in [`RunResult::to_dispatch_csv`].
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,sim_time,tail_time,sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,stale_discarded,stale_weight,agg_rejected,agg_clipped,coreset_clients,mean_compression\n",
+            "round,train_loss,test_loss,test_acc,sim_time,tail_time,sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,stale_discarded,stale_weight,agg_rejected,agg_clipped,coreset_clients,mean_compression,distilled,cohort_widened\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{:.6},{},{},{},{:.4}",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{:.6},{},{},{},{:.4},{},{}",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -204,7 +215,9 @@ impl RunResult {
                 r.agg_rejected,
                 r.agg_clipped,
                 r.coreset_clients,
-                r.mean_compression
+                r.mean_compression,
+                r.distilled,
+                r.cohort_widened
             );
         }
         out
@@ -357,6 +370,8 @@ mod tests {
             coreset_clients: 1,
             coreset_warm: 0,
             mean_compression: 0.5,
+            distilled: 0,
+            cohort_widened: 0,
         }
     }
 
@@ -392,12 +407,16 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("round,"));
-        assert_eq!(lines[1].split(',').count(), 17);
-        assert_eq!(lines[0].split(',').count(), 17);
+        assert_eq!(lines[1].split(',').count(), 19);
+        assert_eq!(lines[0].split(',').count(), 19);
         assert!(lines[0].contains("tail_time"));
         assert!(lines[0].contains("stale_folded"));
         assert!(lines[0].contains("agg_rejected"));
         assert!(lines[0].contains("agg_clipped"));
+        // Selection-suite model columns: both stay 0 under degenerate
+        // configs, which keeps the model CSV selection-policy-invariant.
+        assert!(lines[0].contains("distilled"));
+        assert!(lines[0].contains("cohort_widened"));
         // Determinism rule 6: the model CSV carries no dispatch
         // diagnostics — those live in to_dispatch_csv.
         assert!(!lines[0].contains("steal_count"));
@@ -418,10 +437,10 @@ mod tests {
         const GOLDEN: &str = "round,train_loss,test_loss,test_acc,sim_time,tail_time,\
                               sim_elapsed,dropped,churn_dropped,partial_time,stale_folded,\
                               stale_discarded,stale_weight,agg_rejected,agg_clipped,\
-                              coreset_clients,mean_compression";
+                              coreset_clients,mean_compression,distilled,cohort_widened";
         const GOLDEN_DISPATCH: &str = "round,steal_count,worker_idle";
         assert_eq!(run().to_csv().lines().next().unwrap(), GOLDEN);
-        assert_eq!(GOLDEN.split(',').count(), 17);
+        assert_eq!(GOLDEN.split(',').count(), 19);
         assert_eq!(run().to_dispatch_csv().lines().next().unwrap(), GOLDEN_DISPATCH);
     }
 

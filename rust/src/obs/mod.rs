@@ -153,11 +153,17 @@ pub enum Counter {
     /// Coreset clients whose k-medoids solve warm-started from cached
     /// medoids (non-refresh rounds under `coreset_refresh > 1`).
     CoresetWarm,
+    /// Rounds whose FLANP active prefix widened after a loss stall
+    /// (`--select flanp`; 0 or 1 per round).
+    CohortWidened,
+    /// Past-staleness updates folded into the distillation correction
+    /// instead of being discarded (`--distill-weight > 0`).
+    Distilled,
 }
 
 impl Counter {
     /// Every counter, in emission order.
-    pub const ALL: [Counter; 10] = [
+    pub const ALL: [Counter; 12] = [
         Counter::Dropped,
         Counter::ChurnDropped,
         Counter::StaleFolded,
@@ -168,6 +174,8 @@ impl Counter {
         Counter::Steals,
         Counter::CoresetClients,
         Counter::CoresetWarm,
+        Counter::CohortWidened,
+        Counter::Distilled,
     ];
 
     /// Canonical counter name written to the trace.
@@ -183,6 +191,8 @@ impl Counter {
             Counter::Steals => "steals",
             Counter::CoresetClients => "coreset_clients",
             Counter::CoresetWarm => "coreset_warm",
+            Counter::CohortWidened => "cohort_widened",
+            Counter::Distilled => "distilled",
         }
     }
 }

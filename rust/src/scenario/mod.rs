@@ -34,10 +34,12 @@
 
 pub mod churn;
 pub mod corruption;
+pub mod selection;
 pub mod trace;
 
 pub use churn::ChurnModel;
 pub use corruption::{CorruptionKind, CorruptionSpec};
+pub use selection::{forecast_rank, forecast_weights, FlanpConfig, FlanpState, SelectPolicy};
 pub use trace::{AvailabilityTrace, EdgePolicy};
 
 use std::path::Path;

@@ -1,0 +1,414 @@
+//! Straggler-aware cohort-selection policies (the ROADMAP's selection
+//! suite).
+//!
+//! The engine's cohort-choice step is availability-aware but
+//! speed-blind: every online client is sampled with the same data-sized
+//! weight no matter how slow its plan is. This module adds the
+//! selection-side treatments from the related work behind one seam:
+//!
+//! * [`SelectPolicy::Flanp`] — FLANP-style adaptive participation
+//!   (arXiv:2012.14453): rank clients once per run by their
+//!   deterministic simulated plan cost (the same costs dispatch plans
+//!   from), start rounds sampling only the fastest prefix, and widen
+//!   the prefix geometrically whenever the round-loss improvement
+//!   stalls below a threshold. Early rounds are cheap (fast clients
+//!   only); statistical accuracy pulls the slow tail in on demand.
+//! * [`SelectPolicy::Forecast`] — uptime-forecast selection: bias the
+//!   sampling weights toward clients whose availability history
+//!   forecasts they will survive the round — the mirror image of
+//!   `--flaky-boost`, which oversamples flaky clients for coverage.
+//!
+//! Straggler distillation (arXiv:2403.09086) is the third treatment in
+//! the suite; it lives on the aggregation side
+//! ([`crate::fl::RunConfig`]'s `distill_weight` +
+//! [`crate::agg::apply_distilled`]) because it changes what happens to
+//! past-staleness updates, not who gets selected.
+//!
+//! Determinism contract (the "degenerate selection knobs are bitwise
+//! inert" clause in ARCHITECTURE.md): every knob here has a degenerate
+//! setting that reproduces the baseline engine byte-for-byte —
+//! `flanp_start ≥ fleet` keeps the active prefix at the whole fleet, so
+//! the streamed selector consumes exactly the RNG of the unrestricted
+//! sampler; `forecast_bias = 0` returns the input weights unchanged;
+//! `distill_weight = 0` is the existing drop path. The selection
+//! differential harness (`rust/tests/proptest_select.rs`) pins all
+//! three against the baseline engine bit-for-bit.
+
+use anyhow::{anyhow, Result};
+
+/// Knobs for FLANP adaptive participation ([`SelectPolicy::Flanp`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlanpConfig {
+    /// Initial active-prefix size, clamped to `[1, fleet]` at run start.
+    /// Anything ≥ the fleet size is the degenerate whole-fleet prefix
+    /// (bitwise the baseline selector).
+    pub start: usize,
+    /// Geometric widening factor applied when improvement stalls
+    /// (must be > 1 so widening always makes progress).
+    pub factor: f64,
+    /// Relative round-loss improvement below which the prefix widens:
+    /// widen when `(prev - cur) / |prev| < threshold`.
+    pub threshold: f64,
+}
+
+impl Default for FlanpConfig {
+    fn default() -> Self {
+        FlanpConfig { start: 8, factor: 2.0, threshold: 0.01 }
+    }
+}
+
+/// The cohort-selection policy seam over the engine's selection step.
+///
+/// Baseline is the engine's existing availability-aware weighted
+/// sampler; the other policies compose with it (FLANP restricts the
+/// candidate set, Forecast transforms the weights) so churn handling,
+/// RNG-stream discipline, and the <k deterministic fallback are shared,
+/// not re-implemented.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectPolicy {
+    /// The existing sampler: weight ∝ client data size, online-only.
+    Baseline,
+    /// FLANP adaptive participation: fastest-prefix sampling with
+    /// stall-triggered geometric widening.
+    Flanp(FlanpConfig),
+    /// Uptime-forecast selection: weights scaled by `1 + bias · uptime`.
+    Forecast {
+        /// Strength of the uptime bias (0 = degenerate, baseline
+        /// weights untouched).
+        bias: f64,
+    },
+}
+
+impl Default for SelectPolicy {
+    fn default() -> Self {
+        SelectPolicy::Baseline
+    }
+}
+
+impl SelectPolicy {
+    /// Parse a CLI/config/env policy name. Knob-less names get the
+    /// default knobs; `--flanp-*` / `--forecast-bias` (or the `[fl]`
+    /// keys) overwrite them afterwards.
+    pub fn parse(s: &str) -> Option<SelectPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "baseline" => Some(SelectPolicy::Baseline),
+            "flanp" => Some(SelectPolicy::Flanp(FlanpConfig::default())),
+            "forecast" => Some(SelectPolicy::Forecast { bias: 1.0 }),
+            _ => None,
+        }
+    }
+
+    /// Canonical policy name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SelectPolicy::Baseline => "baseline",
+            SelectPolicy::Flanp(_) => "flanp",
+            SelectPolicy::Forecast { .. } => "forecast",
+        }
+    }
+
+    /// Validate the policy knobs (prefix ≥ 1, factor > 1, finite
+    /// threshold/bias, bias ≥ 0).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            SelectPolicy::Baseline => Ok(()),
+            SelectPolicy::Flanp(c) => {
+                if c.start == 0 {
+                    return Err(anyhow!("flanp start prefix must be >= 1, got 0"));
+                }
+                if !(c.factor > 1.0 && c.factor.is_finite()) {
+                    return Err(anyhow!(
+                        "flanp widening factor must be finite and > 1, got {}",
+                        c.factor
+                    ));
+                }
+                if !c.threshold.is_finite() {
+                    return Err(anyhow!(
+                        "flanp improvement threshold must be finite, got {}",
+                        c.threshold
+                    ));
+                }
+                Ok(())
+            }
+            SelectPolicy::Forecast { bias } => {
+                if !(*bias >= 0.0 && bias.is_finite()) {
+                    return Err(anyhow!(
+                        "forecast bias must be finite and >= 0, got {bias}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The `FEDCORE_SELECT` environment override, falling back to the
+    /// default ([`SelectPolicy::Baseline`]) when unset or unparseable.
+    /// Like `FEDCORE_DISPATCH`, it only applies to flagless, fileless
+    /// runs — an explicit `--select` or `[fl] select` always wins.
+    pub fn from_env() -> SelectPolicy {
+        std::env::var("FEDCORE_SELECT")
+            .ok()
+            .and_then(|v| SelectPolicy::parse(&v))
+            .unwrap_or_default()
+    }
+}
+
+/// Per-run FLANP state: the cost ranking (fixed for the run) and the
+/// current active-prefix size (monotonically non-decreasing, never
+/// above the fleet size).
+#[derive(Clone, Debug)]
+pub struct FlanpState {
+    /// `rank_of[i]` = position of client `i` in the cost-ascending
+    /// order (0 = fastest); O(1) prefix-membership tests.
+    rank_of: Vec<usize>,
+    m: usize,
+    factor: f64,
+    threshold: f64,
+    prev_loss: Option<f64>,
+}
+
+impl FlanpState {
+    /// Build from per-client simulated plan costs. The ranking is
+    /// deterministic and permutation-stable: ties break by client id,
+    /// and the costs are the strategy's simulated plan times — already
+    /// computed (and pinned by the dispatch harness) for scheduling.
+    pub fn new(costs: &[f64], cfg: FlanpConfig) -> FlanpState {
+        let n = costs.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            costs[a]
+                .partial_cmp(&costs[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut rank_of = vec![0usize; n];
+        for (rank, &i) in order.iter().enumerate() {
+            rank_of[i] = rank;
+        }
+        FlanpState {
+            rank_of,
+            m: cfg.start.min(n).max(1),
+            factor: cfg.factor,
+            threshold: cfg.threshold,
+            prev_loss: None,
+        }
+    }
+
+    /// Current active-prefix size.
+    pub fn active(&self) -> usize {
+        self.m
+    }
+
+    /// Whether client `i` is inside the active (fastest) prefix.
+    pub fn admits(&self, i: usize) -> bool {
+        self.rank_of[i] < self.m
+    }
+
+    /// Observe the round's training loss; widen the prefix
+    /// geometrically when the relative improvement over the previous
+    /// round stalls below the threshold. Returns `true` only when the
+    /// prefix actually grew — the whole-fleet prefix cannot widen, so
+    /// the degenerate `start ≥ fleet` config never reports a widen and
+    /// the `cohort_widened` column stays zero.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        let n = self.rank_of.len();
+        let mut widened = false;
+        if let Some(prev) = self.prev_loss {
+            if prev.is_finite() && loss.is_finite() && self.m < n {
+                let improvement = (prev - loss) / prev.abs().max(f64::MIN_POSITIVE);
+                if improvement < self.threshold {
+                    self.m = ((self.m as f64 * self.factor).ceil() as usize)
+                        .max(self.m + 1)
+                        .min(n);
+                    widened = true;
+                }
+            }
+        }
+        self.prev_loss = Some(loss);
+        widened
+    }
+}
+
+/// Uptime-forecast weight transform: scale each client's sampling
+/// weight by `1 + bias · uptime(i)` and renormalize, favoring clients
+/// whose availability history forecasts they will survive the round.
+///
+/// `bias ≤ 0` returns the input weights **unchanged** (bitwise — the
+/// degenerate gate), as does a non-positive scaled sum (all-zero
+/// weights stay in the sampler's uniform-fallback regime), mirroring
+/// [`crate::fl::boost_flaky_weights`]. `uptime_of` is a closure so the
+/// scoring streams one client at a time — O(fleet) time with O(1)
+/// resident trace state on `Schedules::Generated`; it never forces
+/// `materialize_dense` (the PR-8 discipline, pinned by
+/// `tests/proptest_scenario.rs`).
+pub fn forecast_weights(
+    weights: &[f64],
+    uptime_of: impl Fn(usize) -> f64,
+    bias: f64,
+) -> Vec<f64> {
+    if bias <= 0.0 {
+        return weights.to_vec();
+    }
+    let raw: Vec<f64> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| w.max(0.0) * (1.0 + bias * uptime_of(i).clamp(0.0, 1.0)))
+        .collect();
+    let sum: f64 = raw.iter().sum();
+    if sum <= 0.0 {
+        return weights.to_vec();
+    }
+    raw.into_iter().map(|w| w / sum).collect()
+}
+
+/// Clients ordered by forecast score: uptime descending, client id
+/// ascending on ties. Deterministic and permutation-stable — the
+/// ranking depends only on the (uptime, id) pairs, never on input
+/// order; pinned by `tests/proptest_select.rs`.
+pub fn forecast_rank(uptimes: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..uptimes.len()).collect();
+    order.sort_by(|&a, &b| {
+        uptimes[b]
+            .partial_cmp(&uptimes[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_roundtrip() {
+        for name in ["baseline", "flanp", "forecast"] {
+            let p = SelectPolicy::parse(name).unwrap();
+            assert_eq!(p.label(), name);
+            assert!(p.validate().is_ok());
+        }
+        assert_eq!(SelectPolicy::parse(" FLANP "), Some(SelectPolicy::Flanp(FlanpConfig::default())));
+        assert!(SelectPolicy::parse("fastest").is_none());
+        assert_eq!(SelectPolicy::default(), SelectPolicy::Baseline);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let bad = [
+            SelectPolicy::Flanp(FlanpConfig { start: 0, ..Default::default() }),
+            SelectPolicy::Flanp(FlanpConfig { factor: 1.0, ..Default::default() }),
+            SelectPolicy::Flanp(FlanpConfig { factor: f64::NAN, ..Default::default() }),
+            SelectPolicy::Flanp(FlanpConfig { threshold: f64::INFINITY, ..Default::default() }),
+            SelectPolicy::Forecast { bias: -0.5 },
+            SelectPolicy::Forecast { bias: f64::NAN },
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "{p:?} must be rejected");
+        }
+        assert!(SelectPolicy::Forecast { bias: 0.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn flanp_ranking_is_cost_ascending_with_id_ties() {
+        // costs: client 2 fastest, then 0 and 3 tied (id order), then 1.
+        let costs = [2.0, 9.0, 1.0, 2.0];
+        let st = FlanpState::new(&costs, FlanpConfig { start: 2, ..Default::default() });
+        assert_eq!(st.active(), 2);
+        assert!(st.admits(2) && st.admits(0), "fastest two: client 2, then id-tie winner 0");
+        assert!(!st.admits(3) && !st.admits(1));
+    }
+
+    #[test]
+    fn flanp_start_clamps_to_fleet() {
+        let st = FlanpState::new(&[1.0, 2.0, 3.0], FlanpConfig { start: 99, ..Default::default() });
+        assert_eq!(st.active(), 3);
+        let st = FlanpState::new(&[1.0, 2.0, 3.0], FlanpConfig { start: 1, ..Default::default() });
+        assert_eq!(st.active(), 1);
+    }
+
+    #[test]
+    fn flanp_widens_only_on_stall_and_is_monotone() {
+        let costs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut st = FlanpState::new(
+            &costs,
+            FlanpConfig { start: 4, factor: 2.0, threshold: 0.01 },
+        );
+        // First observation has no baseline to compare against.
+        assert!(!st.observe(10.0));
+        assert_eq!(st.active(), 4);
+        // 50% improvement: well above threshold, no widen.
+        assert!(!st.observe(5.0));
+        assert_eq!(st.active(), 4);
+        // Stall: widens geometrically, 4 -> 8.
+        assert!(st.observe(5.0));
+        assert_eq!(st.active(), 8);
+        // Keep stalling: the prefix is monotone non-decreasing, capped at n.
+        let mut last = st.active();
+        for _ in 0..10 {
+            st.observe(5.0);
+            assert!(st.active() >= last);
+            assert!(st.active() <= 100);
+            last = st.active();
+        }
+        assert_eq!(st.active(), 100);
+        // At the whole fleet, further stalls report no widen.
+        assert!(!st.observe(5.0));
+    }
+
+    #[test]
+    fn flanp_whole_fleet_prefix_never_widens() {
+        let mut st = FlanpState::new(&[3.0, 1.0], FlanpConfig { start: 2, ..Default::default() });
+        for _ in 0..5 {
+            assert!(!st.observe(1.0), "degenerate prefix must stay silent");
+            assert_eq!(st.active(), 2);
+        }
+        assert!(st.admits(0) && st.admits(1));
+    }
+
+    #[test]
+    fn flanp_widen_always_progresses() {
+        // A factor close to 1 would stall at ceil(m * f) == m without the
+        // max(m + 1) guard; validate() rejects f <= 1 but ceil can still
+        // round to m for m = 1 edge cases, so the guard is load-bearing.
+        let mut st = FlanpState::new(
+            &[0.0, 1.0, 2.0],
+            FlanpConfig { start: 1, factor: 1.5, threshold: 1.0 },
+        );
+        st.observe(1.0);
+        assert!(st.observe(1.0));
+        assert_eq!(st.active(), 2);
+    }
+
+    #[test]
+    fn forecast_weights_zero_bias_is_bitwise_input() {
+        let w = [0.3, 0.0, 0.7, 0.25];
+        let out = forecast_weights(&w, |_| panic!("bias 0 must not score"), 0.0);
+        for (a, b) in w.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn forecast_weights_favor_high_uptime() {
+        let w = [1.0, 1.0];
+        let up = [0.9, 0.1];
+        let out = forecast_weights(&w, |i| up[i], 2.0);
+        assert!(out[0] > out[1], "steady client must outweigh flaky one");
+        assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-12, "renormalized");
+    }
+
+    #[test]
+    fn forecast_weights_zero_sum_falls_back_to_input() {
+        let w = [0.0, -1.0];
+        let out = forecast_weights(&w, |_| 1.0, 1.0);
+        for (a, b) in w.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn forecast_rank_is_permutation_stable() {
+        let up = [0.5, 0.9, 0.5, 0.1];
+        assert_eq!(forecast_rank(&up), vec![1, 0, 2, 3], "ties break by id");
+    }
+}

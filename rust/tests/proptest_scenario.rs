@@ -5,9 +5,15 @@
 //! * Availability-aware selection never picks an offline client, is
 //!   deterministic under `PROPTEST_SEED`, and reduces exactly to the
 //!   unrestricted weighted sampler when every client is online.
+//! * The streamed selector agrees with the indexed one — output **and**
+//!   RNG consumption — on every edge regime (nobody online, everybody
+//!   online, K past the online count, K = fleet).
 //! * Generated traces are well-formed (sorted, disjoint, in-range
 //!   intervals) and their point queries agree with each other.
-//! * Trace generation and materialization replay bit-for-bit from a seed.
+//! * Trace generation and materialization replay bit-for-bit from a seed;
+//!   uptime read off the lazy `Generated` representation is bit-identical
+//!   to the dense interval table's (so forecast scoring never needs to
+//!   materialize).
 //! * With a runtime (`make artifacts`): an always-on trace reproduces the
 //!   traceless run exactly, and sharded equals sequential bit-for-bit
 //!   with churn enabled.
@@ -19,7 +25,9 @@ use std::sync::Arc;
 use fedcore::coreset::Method;
 use fedcore::data::{self, Benchmark};
 use fedcore::exec::Sharded;
-use fedcore::fl::{select_available, CoresetMode, Engine, RunConfig, Strategy};
+use fedcore::fl::{
+    select_available, select_available_streamed, CoresetMode, Engine, RunConfig, Strategy,
+};
 use fedcore::scenario::{AvailabilityTrace, ChurnModel, EdgePolicy, TraceSpec};
 use fedcore::sim::Fleet;
 use fedcore::util::prop::{check, env_cases, env_seed};
@@ -105,6 +113,57 @@ fn proptest_scenario_selection_reduces_to_unrestricted_sampler() {
     });
 }
 
+/// The streamed selector's edge regimes — nobody online, everybody
+/// online, K past the online count, K = fleet — each checked for output
+/// **and** RNG-consumption identity against the indexed selector, so a
+/// selection-policy predicate can route through the streamed path without
+/// perturbing anything sampled after it.
+#[test]
+fn proptest_scenario_streamed_selector_edge_cases_match_indexed() {
+    check("scenario-select-streamed-edges", env_seed(0x5CE2), env_cases(100), |rng, case| {
+        let n = 2 + rng.below(30);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+        // Regime by case: 0 = nobody online, 1 = everybody online,
+        // 2 = K exceeds the online count, 3 = K = fleet (everyone online).
+        let (mask, k): (Vec<bool>, usize) = match case % 4 {
+            0 => (vec![false; n], 1 + rng.below(8)),
+            1 => (vec![true; n], 1 + rng.below(n)),
+            2 => {
+                let mask: Vec<bool> = (0..n).map(|_| rng.f64() < 0.4).collect();
+                let online = mask.iter().filter(|&&b| b).count();
+                (mask, online + 1 + rng.below(4))
+            }
+            _ => (vec![true; n], n),
+        };
+        let online: Vec<usize> = (0..n).filter(|&i| mask[i]).collect();
+
+        let mut flat_rng = rng.split(4);
+        let flat = select_available(&mut flat_rng, &weights, &online, k);
+        let mut stream_rng = rng.split(4);
+        let streamed =
+            select_available_streamed(&mut stream_rng, |i| weights[i], |i| mask[i], n, k);
+        assert_eq!(streamed, flat, "case {case}: selections diverged");
+        assert_eq!(
+            flat_rng.next_u64(),
+            stream_rng.next_u64(),
+            "case {case}: RNG consumption diverged"
+        );
+
+        match case % 4 {
+            0 => assert!(streamed.is_empty(), "nobody online must select nobody"),
+            2 => assert_eq!(streamed, online, "short cohort: everyone once, index order"),
+            _ => assert_eq!(streamed.len(), k),
+        }
+        if case % 4 == 0 || case % 4 == 2 {
+            // Both fallbacks are RNG-free: the stream reads like untouched.
+            let mut untouched = rng.split(4);
+            let mut consumed = rng.split(4);
+            let _ = select_available_streamed(&mut consumed, |i| weights[i], |i| mask[i], n, k);
+            assert_eq!(untouched.next_u64(), consumed.next_u64(), "fallback consumed RNG");
+        }
+    });
+}
+
 // ---------- trace well-formedness ----------
 
 #[test]
@@ -160,6 +219,33 @@ fn proptest_scenario_materialize_is_deterministic() {
         let a = spec.materialize(clients, deadline).expect("materialize");
         let b = spec.materialize(clients, deadline).expect("materialize");
         assert_eq!(a, b, "materialization must replay bit-for-bit");
+    });
+}
+
+/// Uptime streamed off the lazy `Generated` representation is
+/// bit-identical to the dense interval table's — the guarantee that lets
+/// uptime-forecast selection score a fleet without ever forcing
+/// `materialize_dense` (O(fleet) interval storage).
+#[test]
+fn proptest_scenario_streamed_uptime_matches_dense() {
+    check("scenario-uptime-streamed", env_seed(0x07A1), env_cases(40), |rng, _| {
+        let spec = TraceSpec::from_model(
+            random_model(rng),
+            rng.range_f64(4.0, 40.0),
+            rng.next_u64(),
+        );
+        let clients = 1 + rng.below(25);
+        let deadline = rng.range_f64(0.5, 500.0);
+        let lazy = spec.materialize(clients, deadline).expect("materialize");
+        let dense = spec.materialize_dense(clients, deadline).expect("materialize dense");
+        // +2: clients past the trace count as always online on both paths.
+        for c in 0..clients + 2 {
+            assert_eq!(
+                lazy.uptime(c).to_bits(),
+                dense.uptime(c).to_bits(),
+                "client {c}: lazy vs dense uptime"
+            );
+        }
     });
 }
 

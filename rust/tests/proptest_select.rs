@@ -1,0 +1,485 @@
+//! Differential property suite for the straggler-aware selection policy
+//! suite (`scenario/selection.rs`; seeded runner in `util::prop` —
+//! offline build, no proptest crate, see docs/testing.md).
+//!
+//! Invariants:
+//! * FLANP's active prefix is monotone non-decreasing, never exceeds the
+//!   fleet, and always admits exactly its `active()` fastest clients;
+//!   the whole-fleet prefix routed through the streamed selector consumes
+//!   exactly the RNG of the unrestricted sampler (output and end state).
+//! * `apply_distilled` with no (or only non-positive-weight) updates is a
+//!   bitwise identity on f32 parameters — the weight-0 gate has zero
+//!   float operations on its inert path.
+//! * Forecast scoring is deterministic (bit-for-bit replay) and
+//!   permutation-stable with client-id tie-breaks.
+//! * With a runtime (`make artifacts`): each policy's **degenerate**
+//!   config — `flanp` with a whole-fleet start prefix, `forecast` with
+//!   `bias = 0`, distillation under the degenerate overlap — reproduces
+//!   the baseline engine **byte-for-byte** (final params, every round
+//!   record, the model CSV, the dispatch CSV, checkpoint files) across
+//!   Sequential/Sharded executors, aggregation policies, and churn
+//!   traces; every *active* policy replays bit-for-bit from its seed;
+//!   and FLANP wins (or ties) a time-to-target-loss race against the
+//!   baseline on a heavy-tail churn trace — the adaptive-participation
+//!   claim (arXiv:2012.14453) at test scale.
+//!
+//! Knobs: `PROPTEST_CASES` scales case counts, `PROPTEST_SEED` replays.
+
+use std::sync::Arc;
+
+use fedcore::agg::{apply_distilled, AggPolicy};
+use fedcore::coreset::Method;
+use fedcore::data::{self, Benchmark};
+use fedcore::exec::{DispatchPolicy, OverlapConfig, Sharded};
+use fedcore::fl::{
+    select_available_streamed, Checkpoint, CoresetMode, Engine, RunConfig, Strategy,
+};
+use fedcore::metrics::RunResult;
+use fedcore::scenario::{
+    forecast_rank, forecast_weights, ChurnModel, FlanpConfig, FlanpState, SelectPolicy, TraceSpec,
+};
+use fedcore::util::prop::{check, env_cases, env_seed};
+use fedcore::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<fedcore::runtime::Runtime> {
+    fedcore::expt::try_runtime()
+}
+
+// ---------- pure: FLANP prefix dynamics ----------
+
+#[test]
+fn proptest_select_flanp_prefix_monotone_and_bounded() {
+    check("select-flanp-monotone", env_seed(0x5E10), env_cases(150), |rng, _| {
+        let n = 1 + rng.below(60);
+        let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 50.0)).collect();
+        let cfg = FlanpConfig {
+            start: 1 + rng.below(2 * n),
+            factor: rng.range_f64(1.1, 3.0),
+            threshold: rng.range_f64(0.0, 0.5),
+        };
+        let mut st = FlanpState::new(&costs, cfg);
+        assert_eq!(st.active(), cfg.start.min(n).max(1));
+        let mut last = st.active();
+        // Feed a random loss walk (plateaus, drops, spikes, non-finites).
+        for _ in 0..24 {
+            let loss = match rng.below(6) {
+                0 => f64::NAN,
+                1 => rng.range_f64(-2.0, 0.0),
+                _ => rng.range_f64(0.01, 4.0),
+            };
+            let widened = st.observe(loss);
+            assert!(st.active() >= last, "prefix shrank");
+            assert!(st.active() <= n, "prefix exceeded the fleet");
+            assert_eq!(widened, st.active() > last, "widen report out of sync");
+            // The admitted set is exactly the active()-fastest clients.
+            let admitted = (0..n).filter(|&i| st.admits(i)).count();
+            assert_eq!(admitted, st.active(), "admits() disagrees with active()");
+            last = st.active();
+        }
+    });
+}
+
+#[test]
+fn proptest_select_flanp_degenerate_prefix_matches_baseline_rng() {
+    check("select-flanp-degenerate-rng", env_seed(0x5E11), env_cases(100), |rng, case| {
+        let n = 2 + rng.below(40);
+        let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 20.0)).collect();
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 4.0)).collect();
+        let k = 1 + rng.below(n);
+        // start ≥ fleet: the degenerate whole-fleet prefix. Every client
+        // is admitted, so the streamed selector must replicate the
+        // unrestricted sampler exactly — output AND RNG consumption —
+        // which is what makes the flanp-off engine path byte-identical.
+        let st = FlanpState::new(
+            &costs,
+            FlanpConfig { start: n + rng.below(9), factor: 2.0, threshold: 0.01 },
+        );
+        assert!((0..n).all(|i| st.admits(i)));
+
+        let mut base_rng = rng.split(case as u64);
+        let baseline = base_rng.weighted_with_replacement(&weights, k);
+        let mut flanp_rng = rng.split(case as u64);
+        let routed =
+            select_available_streamed(&mut flanp_rng, |i| weights[i], |i| st.admits(i), n, k);
+        assert_eq!(routed, baseline, "case {case}: selections diverged");
+        assert_eq!(
+            base_rng.next_u64(),
+            flanp_rng.next_u64(),
+            "case {case}: RNG consumption diverged"
+        );
+    });
+}
+
+// ---------- pure: distillation inertness ----------
+
+#[test]
+fn proptest_select_distill_weight_zero_is_bitwise_inert() {
+    check("select-distill-inert", env_seed(0x5E12), env_cases(100), |rng, _| {
+        let dim = 1 + rng.below(64);
+        let current: Vec<f32> = (0..dim).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+        // No updates at all: the weight-0 engine path never collects any.
+        let out = apply_distilled(&current, &[]);
+        for (a, b) in current.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits(), "empty fold must be the identity");
+        }
+        // Non-positive / non-finite weights are skipped entirely — the
+        // fold runs but no f32 changes a bit.
+        let junk: Vec<f32> = (0..dim).map(|_| rng.range_f64(-9.0, 9.0) as f32).collect();
+        let out = apply_distilled(
+            &current,
+            &[(junk.as_slice(), 0.0), (junk.as_slice(), -1.5), (junk.as_slice(), f64::NAN)],
+        );
+        for (a, b) in current.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits(), "zero-weight fold must be the identity");
+        }
+        // A real weight moves at least one parameter (sanity: the gate is
+        // the weight, not a dead code path).
+        let shifted: Vec<f32> = current.iter().map(|&p| p + 1.0).collect();
+        let out = apply_distilled(&current, &[(shifted.as_slice(), 0.5)]);
+        assert!(
+            current.iter().zip(&out).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "positive-weight fold must not be a no-op"
+        );
+    });
+}
+
+// ---------- pure: forecast determinism ----------
+
+#[test]
+fn proptest_select_forecast_scores_deterministic_and_permutation_stable() {
+    check("select-forecast-stable", env_seed(0x5E13), env_cases(100), |rng, _| {
+        let n = 2 + rng.below(40);
+        // Distinct uptimes (id tie-breaks are pinned by the unit tests);
+        // permutation stability is about value order, not input order.
+        let mut uptimes: Vec<f64> = (0..n).map(|i| rng.f64() + i as f64 * 1e-12).collect();
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+        let bias = rng.range_f64(0.1, 3.0);
+
+        // Deterministic: same inputs, bit-identical outputs.
+        let a = forecast_weights(&weights, |i| uptimes[i], bias);
+        let b = forecast_weights(&weights, |i| uptimes[i], bias);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "forecast weights did not replay");
+        }
+        assert_eq!(forecast_rank(&uptimes), forecast_rank(&uptimes));
+
+        // Permutation-stable: relabeling clients relabels the ranking,
+        // nothing else. perm[j] = original id of new client j.
+        let rank = forecast_rank(&uptimes);
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        let mut inv = vec![0usize; n];
+        for (j, &orig) in perm.iter().enumerate() {
+            inv[orig] = j;
+        }
+        let permuted: Vec<f64> = perm.iter().map(|&orig| uptimes[orig]).collect();
+        let rank_permuted = forecast_rank(&permuted);
+        let expect: Vec<usize> = rank.iter().map(|&orig| inv[orig]).collect();
+        assert_eq!(rank_permuted, expect, "ranking depends on input order");
+
+        // Zero bias never even reads the uptimes.
+        uptimes.clear();
+        let inert = forecast_weights(&weights, |_| unreachable!("bias 0 must not score"), 0.0);
+        for (x, y) in weights.iter().zip(&inert) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bias 0 must be bitwise inert");
+        }
+    });
+}
+
+// ---------- runtime-gated: the selection differential harness ----------
+
+fn agg_for(case: usize) -> (AggPolicy, Option<f64>) {
+    let clip = if case % 2 == 0 { None } else { Some(2.5) };
+    let policy = match (case / 2) % 4 {
+        0 => AggPolicy::Mean,
+        1 => AggPolicy::Buffered { k: 3, momentum: 0.2 },
+        2 => AggPolicy::TrimmedMean { trim_frac: 0.1 },
+        _ => AggPolicy::CoordinateMedian,
+    };
+    (policy, clip)
+}
+
+fn differential_cfg(rng: &mut Rng, case: usize) -> RunConfig {
+    let strategies = [
+        Strategy::FedCore,
+        Strategy::FedAvgDS,
+        Strategy::FedProx { mu: 0.1 },
+        Strategy::FedAvg,
+    ];
+    let (aggregator, clip_norm) = agg_for(case);
+    let trace = match rng.below(3) {
+        0 => None,
+        1 => Some(TraceSpec::from_model(
+            ChurnModel::Markov {
+                mean_on: rng.range_f64(2.0, 8.0),
+                mean_off: rng.range_f64(0.5, 3.0),
+                p_init_online: 0.8,
+            },
+            24.0,
+            rng.next_u64(),
+        )),
+        _ => Some(TraceSpec::from_model(
+            ChurnModel::HeavyTail {
+                mean_on: rng.range_f64(2.0, 6.0),
+                min_off: 0.5,
+                alpha: rng.range_f64(1.2, 2.5),
+            },
+            24.0,
+            rng.next_u64(),
+        )),
+    };
+    RunConfig {
+        strategy: strategies[case % strategies.len()],
+        rounds: 1 + rng.below(2),
+        epochs: 2 + rng.below(2),
+        clients_per_round: 3 + rng.below(4),
+        lr: 0.01,
+        straggler_pct: [10.0, 30.0][rng.below(2)],
+        seed: rng.next_u64(),
+        coreset_method: Method::FasterPam,
+        coreset_mode: [CoresetMode::Adaptive, CoresetMode::Static][rng.below(2)],
+        eval_every: 1,
+        eval_cap: 128,
+        workers: 1,
+        dispatch: DispatchPolicy::RoundRobin,
+        trace,
+        aggregator,
+        clip_norm,
+        verbose: false,
+        ..RunConfig::default()
+    }
+}
+
+/// The degenerate setting of each selection knob, labeled. Every one of
+/// these must leave a run byte-identical to `SelectPolicy::Baseline`.
+fn degenerate_policies() -> Vec<(&'static str, SelectPolicy)> {
+    vec![
+        // A start prefix at/above the fleet keeps every client admitted
+        // forever (the whole-fleet prefix cannot widen).
+        (
+            "flanp-whole-fleet",
+            SelectPolicy::Flanp(FlanpConfig { start: usize::MAX, factor: 2.0, threshold: 0.9 }),
+        ),
+        // Zero bias returns the sampling weights bitwise-unchanged.
+        ("forecast-bias-0", SelectPolicy::Forecast { bias: 0.0 }),
+    ]
+}
+
+/// Serialized checkpoint bytes of a run's final model (written through
+/// the real `Checkpoint` writer, then read back raw).
+fn checkpoint_bytes(res: &RunResult, tag: &str) -> Vec<u8> {
+    static SCRATCH: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let nonce = SCRATCH.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let path = std::env::temp_dir()
+        .join(format!("fedcore-select-{}-{tag}-{nonce}.ckpt", std::process::id()));
+    Checkpoint::new(res.benchmark.clone(), res.rounds.len() as u64, res.final_params.clone())
+        .save(&path)
+        .expect("writing checkpoint");
+    let bytes = std::fs::read(&path).expect("reading checkpoint back");
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// The selection determinism contract: *everything* is bit-identical —
+/// model bytes, every round record (including the new `distilled` /
+/// `cohort_widened` columns), both CSV exports, and checkpoint files.
+/// Unlike the dispatch harness, the dispatch CSV is included: a
+/// degenerate selection knob must not perturb even the diagnostics.
+fn assert_everything_bitwise_equal(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{what}: param count");
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final param {i}: {x} vs {y}");
+    }
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} round {r} loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{what} round {r} test_loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{what} round {r} test_acc");
+        assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{what} round {r} sim_time");
+        assert_eq!(x.sim_elapsed.to_bits(), y.sim_elapsed.to_bits(), "{what} round {r} elapsed");
+        assert_eq!(x.client_times, y.client_times, "{what} round {r} client_times");
+        assert_eq!(x.dropped, y.dropped, "{what} round {r} dropped");
+        assert_eq!(x.churn_dropped, y.churn_dropped, "{what} round {r} churn_dropped");
+        assert_eq!(x.stale_folded, y.stale_folded, "{what} round {r} stale_folded");
+        assert_eq!(x.stale_discarded, y.stale_discarded, "{what} round {r} stale_discarded");
+        assert_eq!(x.agg_rejected, y.agg_rejected, "{what} round {r} agg_rejected");
+        assert_eq!(x.agg_clipped, y.agg_clipped, "{what} round {r} agg_clipped");
+        assert_eq!(x.coreset_clients, y.coreset_clients, "{what} round {r} coreset_clients");
+        assert_eq!(x.distilled, y.distilled, "{what} round {r} distilled");
+        assert_eq!(x.cohort_widened, y.cohort_widened, "{what} round {r} cohort_widened");
+    }
+    assert_eq!(a.to_csv(), b.to_csv(), "{what}: model CSV diverged");
+    assert_eq!(a.to_dispatch_csv(), b.to_dispatch_csv(), "{what}: dispatch CSV diverged");
+    assert_eq!(
+        checkpoint_bytes(a, "a"),
+        checkpoint_bytes(b, "b"),
+        "{what}: checkpoint bytes diverged"
+    );
+}
+
+/// The centerpiece: every degenerate selection knob ≡ `Baseline`
+/// **byte-for-byte** across strategies, aggregation policies, churn
+/// traces, and both executors.
+#[test]
+fn proptest_select_degenerate_policies_bitwise_equal_baseline() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("select-degenerate-equivalence", env_seed(0x5E14), env_cases(4), |rng, case| {
+        let mut cfg = differential_cfg(rng, case);
+        let baseline = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        for (name, pol) in degenerate_policies() {
+            cfg.select = pol;
+            let run = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+            assert_everything_bitwise_equal(
+                &baseline,
+                &run,
+                &format!("{} [{name} vs baseline, sequential]", baseline.strategy),
+            );
+            // No degenerate run may ever report selection activity.
+            assert!(
+                run.rounds.iter().all(|r| r.cohort_widened == 0 && r.distilled == 0),
+                "{name}: degenerate run reported selection activity"
+            );
+        }
+        // Sharded executors must agree too — the policy seam sits above
+        // the dispatch seam, so the composition cannot leak either way.
+        cfg.workers = 2 + rng.below(3);
+        for (name, pol) in degenerate_policies() {
+            cfg.select = pol;
+            let exec = Sharded::new(cfg.workers, rt.factory());
+            let run = Engine::with_executor(&rt, &ds, cfg.clone(), exec).unwrap().run().unwrap();
+            assert_everything_bitwise_equal(
+                &baseline,
+                &run,
+                &format!("{} [{name} vs baseline, {} workers]", baseline.strategy, cfg.workers),
+            );
+        }
+    });
+}
+
+/// Distillation under the degenerate overlap (`quorum = 1`,
+/// `max_staleness = 0`): the in-flight ledger stays empty, nothing ever
+/// reaches the distill fold, and a positive `distill_weight` must be
+/// byte-for-byte the weight-0 run.
+#[test]
+fn proptest_select_distill_under_degenerate_overlap_is_inert() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("select-distill-degenerate", env_seed(0x5E15), env_cases(4), |rng, case| {
+        let mut cfg = differential_cfg(rng, case);
+        cfg.overlap = Some(OverlapConfig { quorum: 1.0, max_staleness: 0, alpha: 1.0 });
+        cfg.distill_weight = 0.0;
+        let plain = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        cfg.distill_weight = 0.5;
+        let distill = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        assert_everything_bitwise_equal(
+            &plain,
+            &distill,
+            &format!("{} [distill degenerate-overlap]", plain.strategy),
+        );
+        assert!(distill.rounds.iter().all(|r| r.distilled == 0), "nothing could have folded");
+    });
+}
+
+/// Seeded replay for every *active* policy: flanp with a small prefix,
+/// forecast with a real bias, distillation on a real overlap quorum —
+/// each run twice from the same seed, byte-identical both times.
+#[test]
+fn proptest_select_active_policies_replay_bitwise() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = Arc::new(data::generate(
+        Benchmark::Synthetic { alpha: 1.0, beta: 1.0 },
+        0.15,
+        &rt.manifest().vocab,
+        11,
+    ));
+    check("select-active-replay", env_seed(0x5E16), env_cases(3), |rng, case| {
+        let mut cfg = differential_cfg(rng, case);
+        match case % 3 {
+            0 => {
+                cfg.select = SelectPolicy::Flanp(FlanpConfig {
+                    start: 2,
+                    factor: 2.0,
+                    threshold: 0.5,
+                });
+            }
+            1 => {
+                cfg.select = SelectPolicy::Forecast { bias: rng.range_f64(0.5, 2.0) };
+            }
+            _ => {
+                cfg.overlap = Some(OverlapConfig {
+                    quorum: rng.range_f64(0.4, 0.8),
+                    max_staleness: rng.below(2),
+                    alpha: 1.0,
+                });
+                cfg.distill_weight = rng.range_f64(0.2, 0.8);
+            }
+        }
+        let a = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        let b = Engine::new(&rt, &ds, cfg.clone()).unwrap().run().unwrap();
+        assert_everything_bitwise_equal(
+            &a,
+            &b,
+            &format!("{} [{} replay]", a.strategy, cfg.select.label()),
+        );
+    });
+}
+
+/// The FLANP race: on a heavy-tail churn trace, the fastest-prefix start
+/// must reach the field's worst final loss in no more simulated time
+/// than the baseline sampler. (The bench-scale twin of this race — with
+/// forecast in the field and results recorded to `BENCH_scenarios.json`
+/// — lives in `benches/scenario_churn.rs`.)
+#[test]
+fn proptest_select_flanp_wins_time_to_target_race() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let bench = Benchmark::Synthetic { alpha: 1.0, beta: 1.0 };
+    let spec = || {
+        TraceSpec::from_model(
+            ChurnModel::HeavyTail { mean_on: 6.0, min_off: 0.5, alpha: 1.1 },
+            48.0,
+            11,
+        )
+    };
+    let run = |pol: SelectPolicy| {
+        fedcore::expt::run_scenario_with(&rt, bench, Strategy::FedCore, 30.0, 7, spec(), |r| {
+            r.select = pol;
+        })
+        .expect("race run")
+        .result
+    };
+    let baseline = run(SelectPolicy::Baseline);
+    let flanp =
+        run(SelectPolicy::Flanp(FlanpConfig { start: 4, factor: 2.0, threshold: 0.5 }));
+    let final_loss =
+        |r: &RunResult| r.rounds.last().map(|rec| rec.train_loss).unwrap_or(f64::NAN);
+    let target = final_loss(&baseline).max(final_loss(&flanp));
+    let time_to = |r: &RunResult| {
+        r.rounds
+            .iter()
+            .find(|rec| rec.train_loss <= target)
+            .or(r.rounds.last())
+            .map(|rec| rec.sim_elapsed)
+            .unwrap_or(0.0)
+    };
+    assert!(
+        time_to(&flanp) <= time_to(&baseline),
+        "FLANP lost the race: {} > {} (target loss {target})",
+        time_to(&flanp),
+        time_to(&baseline)
+    );
+}
